@@ -1,0 +1,20 @@
+//! Ablation bench: quantify each design ingredient's contribution on the
+//! camera pipeline and gaussian (DESIGN.md §6 design choices).
+
+mod bench_util;
+
+use cgra_dse::dse::ablation::{render, run_ablation};
+use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::AppSuite;
+
+fn main() {
+    let cfg = DseConfig::default();
+    for name in ["camera", "gaussian"] {
+        let app = AppSuite::by_name(name).unwrap();
+        let rows = run_ablation(&app, &cfg);
+        println!("{}", render(name, &rows));
+    }
+    let app = AppSuite::by_name("camera").unwrap();
+    let t = bench_util::time_ms(3, || run_ablation(&app, &cfg).len());
+    bench_util::report("ablation_camera", t);
+}

@@ -1,0 +1,26 @@
+//! Shared mini-harness for the figure benches (criterion is unavailable in
+//! this offline environment; this provides the same measure-N-times /
+//! report-median discipline).
+
+use std::time::Instant;
+
+/// Time `f` over `iters` runs; returns (median_ms, min_ms, max_ms).
+pub fn time_ms<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64, f64) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        let out = f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(out);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        samples[samples.len() / 2],
+        samples[0],
+        samples[samples.len() - 1],
+    )
+}
+
+pub fn report(name: &str, (med, min, max): (f64, f64, f64)) {
+    println!("bench {name:<28} median {med:>9.2} ms  (min {min:.2}, max {max:.2})");
+}

@@ -1,0 +1,47 @@
+//! Fig. 10 bench: regenerate the image-processing domain comparison —
+//! normalized PE-core energy and total area for all four imaging apps on
+//! {baseline, PE IP (domain PE), PE Spec (app-specialized)}.
+//!
+//! Paper shape: PE IP cuts ~30% area and ~45–65% energy vs baseline on
+//! every app; PE Spec is typically at least as good as PE IP; both beat
+//! the baseline everywhere.
+
+mod bench_util;
+
+use cgra_dse::coordinator::run_fig10;
+use cgra_dse::dse::DseConfig;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let (text, rows) = run_fig10(&cfg);
+    println!("{text}");
+
+    let mut spec_wins = 0usize;
+    for (app, base, dom, spec) in &rows {
+        let e_dom = dom.pe_energy_per_op / base.pe_energy_per_op;
+        let a_dom = dom.total_area / base.total_area;
+        let e_spec = spec.pe_energy_per_op / base.pe_energy_per_op;
+        println!(
+            "{app:<10} PE-IP energy {:.2} area {:.2} | PE-Spec energy {:.2} area {:.2}",
+            e_dom,
+            a_dom,
+            e_spec,
+            spec.total_area / base.total_area
+        );
+        // Paper: domain PE always beats the baseline on both axes.
+        assert!(e_dom < 1.0, "{app}: PE IP must cut energy");
+        assert!(a_dom < 1.0, "{app}: PE IP must cut area");
+        if e_spec <= e_dom * 1.05 {
+            spec_wins += 1;
+        }
+    }
+    // Paper: PE Spec typically (not always — Harris is the exception)
+    // yields more benefit than PE IP.
+    assert!(
+        spec_wins >= rows.len() - 1,
+        "PE Spec should match/beat PE IP on all but at most one app"
+    );
+
+    let t = bench_util::time_ms(3, || run_fig10(&cfg));
+    bench_util::report("fig10_image_domain", t);
+}

@@ -1,0 +1,40 @@
+//! Fig. 11 bench: regenerate the ML-kernel domain comparison — normalized
+//! energy and area for conv / residual block / strided conv / downsample
+//! on {baseline, PE ML, PE Spec}.
+//!
+//! Paper shape: PE ML is worse than each kernel's own PE Spec but still
+//! up to ~60% less energy than the baseline, while supporting all four
+//! kernels (the per-kernel PEs do not).
+
+mod bench_util;
+
+use cgra_dse::coordinator::run_fig11;
+use cgra_dse::dse::DseConfig;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let (text, rows) = run_fig11(&cfg);
+    println!("{text}");
+
+    let mut best_saving = 0.0f64;
+    for (app, base, dom, spec) in &rows {
+        let e_dom = dom.pe_energy_per_op / base.pe_energy_per_op;
+        let e_spec = spec.pe_energy_per_op / base.pe_energy_per_op;
+        println!(
+            "{app:<6} PE-ML energy {:.2} (saves {:.1}%) | PE-Spec energy {:.2}",
+            e_dom,
+            (1.0 - e_dom) * 100.0,
+            e_spec
+        );
+        assert!(e_dom < 1.0, "{app}: PE ML must beat the baseline");
+        best_saving = best_saving.max(1.0 - e_dom);
+    }
+    // Paper: "up to 60.15% less energy than the baseline PE".
+    assert!(
+        best_saving > 0.40,
+        "best PE ML energy saving {best_saving:.2} should be paper-scale"
+    );
+
+    let t = bench_util::time_ms(3, || run_fig11(&cfg));
+    bench_util::report("fig11_ml_domain", t);
+}

@@ -1,0 +1,57 @@
+//! Fig. 8 bench: regenerate the camera-pipeline frequency sweep — PE-core
+//! energy/op and total active-PE area for the baseline and PE variants
+//! 1..5 across synthesis frequencies — and time the end-to-end DSE that
+//! produces it.
+//!
+//! Paper shape to check in the output: energy and area fall monotonically
+//! from `base` to the knee variant, rise past it (the paper stops there);
+//! specialized variants close timing at ~2 GHz while the baseline walls at
+//! ~1.4–1.6 GHz; energy grows steeply near each variant's frequency wall.
+
+mod bench_util;
+
+use cgra_dse::coordinator::{fig8_freqs, run_fig8};
+use cgra_dse::dse::DseConfig;
+
+fn main() {
+    let cfg = DseConfig::default();
+
+    // The figure itself.
+    let (text, sweeps) = run_fig8(&cfg);
+    println!("{text}");
+
+    // Shape assertions (who wins, where the wall is).
+    let freqs = fig8_freqs();
+    let by_name = |n: &str| sweeps.iter().find(|(v, _)| v == n);
+    let (_, base) = by_name("base").expect("base variant");
+    let spec = sweeps
+        .iter()
+        .filter(|(v, _)| v.starts_with("pe") && *v != "pe1")
+        .min_by(|a, b| {
+            let ea = a.1[2].energy_per_op.unwrap_or(f64::MAX);
+            let eb = b.1[2].energy_per_op.unwrap_or(f64::MAX);
+            ea.partial_cmp(&eb).unwrap()
+        })
+        .expect("specialized variant");
+    let e_base = base[2].energy_per_op.unwrap();
+    let e_spec = spec.1[2].energy_per_op.unwrap();
+    println!(
+        "at {:.1} GHz: base {e_base:.1} fJ/op vs {} {e_spec:.1} fJ/op -> {:.1}x (paper: up to 8.3x)",
+        freqs[2],
+        spec.0,
+        e_base / e_spec
+    );
+    assert!(e_base / e_spec > 2.0, "specialization must win clearly");
+    // The baseline walls before the best specialized variant does.
+    let wall = |pts: &[cgra_dse::dse::SweepPoint]| {
+        pts.iter()
+            .filter(|p| p.energy_per_op.is_some())
+            .map(|p| p.freq_ghz)
+            .fold(0.0, f64::max)
+    };
+    assert!(wall(&spec.1) > wall(base), "specialized fmax must exceed baseline");
+
+    // Timing.
+    let t = bench_util::time_ms(3, || run_fig8(&cfg));
+    bench_util::report("fig8_camera_sweep", t);
+}

@@ -1,0 +1,83 @@
+//! Toolchain performance bench (§Perf of EXPERIMENTS.md): wall-clock of
+//! every stage of the flow on the heaviest app (camera pipeline), plus the
+//! cycle-level simulator's throughput. This is the harness used for the
+//! optimization pass — run before/after each change.
+
+mod bench_util;
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::mining::{mine, MinerConfig};
+use cgra_dse::util::SplitMix64;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let app = AppSuite::by_name("camera").unwrap();
+
+    // --- Mining.
+    let mcfg = MinerConfig::default();
+    let t = bench_util::time_ms(3, || {
+        let mut g = app.graph.clone();
+        mine(&mut g, &mcfg).len()
+    });
+    bench_util::report("mine_camera", t);
+
+    // --- Ranking (mining + MIS).
+    let t = bench_util::time_ms(3, || {
+        let mut g = app.graph.clone();
+        dse::rank_subgraphs(&mut g, &cfg).len()
+    });
+    bench_util::report("rank_camera", t);
+
+    // --- PE generation (merging, clique search).
+    let t = bench_util::time_ms(3, || dse::variant_ladder(&app, &cfg).len());
+    bench_util::report("variant_ladder_camera", t);
+
+    // --- Mapping on the most specialized PE.
+    let ladder = dse::variant_ladder(&app, &cfg);
+    let (_, pe) = ladder.last().unwrap();
+    let t = bench_util::time_ms(5, || {
+        let mut g = app.graph.clone();
+        cgra_dse::mapper::map_app(&mut g, pe).unwrap().num_pes()
+    });
+    bench_util::report("map_camera", t);
+
+    // --- Place and route.
+    let mut g = app.graph.clone();
+    let mapping = cgra_dse::mapper::map_app(&mut g, pe).unwrap();
+    let fabric = Fabric::new(FabricConfig::default());
+    let t = bench_util::time_ms(5, || {
+        cgra_dse::pnr::place_and_route(&mapping, &fabric, 1)
+            .unwrap()
+            .1
+            .total_hops
+    });
+    bench_util::report("pnr_camera", t);
+
+    // --- Simulator throughput (items/sec on gaussian, 1k pixels).
+    let gapp = AppSuite::by_name("gaussian").unwrap();
+    let gladder = dse::variant_ladder(&gapp, &cfg);
+    let (_, gpe) = gladder.last().unwrap();
+    let mut gg = gapp.graph.clone();
+    let gmap = cgra_dse::mapper::map_app(&mut gg, gpe).unwrap();
+    let (pl, rt) = cgra_dse::pnr::place_and_route(&gmap, &fabric, 2).unwrap();
+    let mut rng = SplitMix64::new(5);
+    let batch: Vec<Vec<i64>> = (0..1000)
+        .map(|_| (0..9).map(|_| rng.below(256) as i64).collect())
+        .collect();
+    let t = bench_util::time_ms(3, || {
+        cgra_dse::sim::simulate(&mut gg, gpe, &gmap, &pl, &rt, &batch)
+            .outputs
+            .len()
+    });
+    bench_util::report("simulate_1k_pixels", t);
+    println!(
+        "simulator throughput: {:.1}k pixels/s",
+        1000.0 / t.0 /* ms */
+    );
+
+    // --- End-to-end DSE (the number a user of the tool experiences).
+    let t = bench_util::time_ms(3, || dse::evaluate_ladder(&app, &cfg).len());
+    bench_util::report("evaluate_ladder_camera", t);
+}

@@ -1,0 +1,38 @@
+//! Table I bench: regenerate the CGRA-vs-ASIC comparison — overall
+//! energy/op (PE core + interconnect + MEM tiles) for the baseline CGRA,
+//! the ML-specialized CGRA, and a Simba-class ASIC reference.
+//!
+//! Paper shape: specializing the PEs reduces overall CGRA energy
+//! (paper: 22.1%) and brings the CGRA near the custom accelerator's
+//! efficiency (small single-digit multiple).
+
+mod bench_util;
+
+use cgra_dse::coordinator::run_table1;
+use cgra_dse::dse::DseConfig;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let (text, rows) = run_table1(&cfg);
+    println!("{text}");
+
+    let base = rows[0].energy_per_op_fj;
+    let ml = rows[1].energy_per_op_fj;
+    let simba = rows[2].energy_per_op_fj;
+    assert!(base > ml, "ML CGRA must beat the baseline CGRA");
+    assert!(ml > simba * 0.9, "an ASIC stays at least as efficient");
+    assert!(
+        rows[1].rel_to_simba < 4.0,
+        "specialized CGRA must come near the ASIC (got {:.2}x)",
+        rows[1].rel_to_simba
+    );
+    println!(
+        "overall energy saving from specialization: {:.1}% (paper: 22.1%); \
+         distance to ASIC: {:.2}x",
+        (1.0 - ml / base) * 100.0,
+        rows[1].rel_to_simba
+    );
+
+    let t = bench_util::time_ms(3, || run_table1(&cfg));
+    bench_util::report("table1_simba", t);
+}

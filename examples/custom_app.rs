@@ -1,0 +1,82 @@
+//! Bring-your-own application: build a dataflow graph with the public API,
+//! then run the entire DSE + backend on it.
+//!
+//! The app here is a small FIR+threshold DSP kernel that is *not* part of
+//! the paper's suite — demonstrating that the toolchain generalizes beyond
+//! the built-in applications.
+//!
+//! ```text
+//! cargo run --release --example custom_app
+//! ```
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::frontend::{App, Domain};
+use cgra_dse::ir::{Graph, Op};
+use cgra_dse::util::SplitMix64;
+
+/// 8-tap FIR with symmetric coefficients, then a threshold detector:
+/// `y = Σ h_k·x_k; out = y > T ? y : 0`.
+fn fir_detect() -> Graph {
+    let mut g = Graph::new("fir_detect");
+    const H: [i64; 8] = [2, -3, 5, 7, 7, 5, -3, 2];
+    let mut terms = Vec::new();
+    for (k, &h) in H.iter().enumerate() {
+        let x = g.add_node(Op::Input, format!("x{k}"));
+        let c = g.add_node(Op::Const(h), format!("h{k}"));
+        terms.push(g.add(Op::Mul, &[x, c]));
+    }
+    let mut acc = terms[0];
+    for &t in &terms[1..] {
+        acc = g.add(Op::Add, &[acc, t]);
+    }
+    let sh = g.add_op(Op::Const(3));
+    let y = g.add(Op::Ashr, &[acc, sh]);
+    let thr = g.add_node(Op::Const(16), "T");
+    let hit = g.add(Op::Gt, &[y, thr]);
+    let zero = g.add_op(Op::Const(0));
+    let out = g.add(Op::Sel, &[hit, y, zero]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+fn main() {
+    let mut graph = fir_detect();
+    graph.validate().expect("valid dataflow graph");
+    let app = App {
+        name: "fir_detect",
+        domain: Domain::Micro,
+        graph,
+    };
+    println!("custom app `{}`: {} compute ops", app.name, app.graph.compute_len());
+
+    // Full DSE.
+    let cfg = DseConfig::default();
+    let evals = dse::evaluate_ladder(&app, &cfg);
+    println!("{}", cgra_dse::report::render_ladder(app.name, &evals));
+    let base = &evals[0];
+    let spec = dse::pe_spec_of(&evals);
+    println!(
+        "specialization: {:.1}x energy, {:.1}x area, {} -> {} PEs",
+        base.pe_energy_per_op / spec.pe_energy_per_op,
+        base.total_area / spec.total_area,
+        base.n_pes,
+        spec.n_pes,
+    );
+
+    // Run it on the fabric and check.
+    let ladder = dse::variant_ladder(&app, &cfg);
+    let (_, pe) = ladder.last().unwrap();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut rng = SplitMix64::new(3);
+    let batch: Vec<Vec<i64>> = (0..64)
+        .map(|_| (0..8).map(|_| rng.below(256) as i64 - 128).collect())
+        .collect();
+    let mut g = app.graph.clone();
+    let sim = cgra_dse::sim::run_and_check(&mut g, pe, &fabric, &batch, 11)
+        .expect("CGRA execution matches the IR");
+    println!(
+        "simulated {} samples, latency {} cycles — all outputs correct",
+        sim.stats.items, sim.stats.latency_cycles
+    );
+}

@@ -1,0 +1,132 @@
+//! End-to-end driver (the repository's headline example): run the full
+//! DSE + backend on a real image workload and report the paper's metrics.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example image_pipeline_dse
+//! ```
+//!
+//! For the gaussian-blur application this drives *every* layer of the
+//! stack on a real 32×32 image:
+//!   mine → MIS-rank → merge → PE generation → map → place → route →
+//!   bitstream → cycle-level CGRA simulation of all 900 output pixels →
+//!   cross-check against the AOT-compiled JAX/Pallas oracle via PJRT →
+//!   energy/area/fmax evaluation for the whole variant ladder,
+//! and then prints the camera-pipeline ladder (the paper's Fig. 8 subject).
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::bitstream;
+use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::ir::Word;
+use cgra_dse::runtime;
+use cgra_dse::util::SplitMix64;
+
+const H: usize = 32;
+const W: usize = 32;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let app = AppSuite::by_name("gaussian").unwrap();
+
+    // --- DSE: generate the variant ladder, pick the specialized PE.
+    let ladder = dse::variant_ladder(&app, &cfg);
+    let (vname, pe) = ladder.last().unwrap();
+    println!("specialized variant `{vname}` for gaussian:\n{}", pe.describe());
+
+    // --- Backend: map, place, route, bitstream.
+    let mut graph = app.graph.clone();
+    let mapping = cgra_dse::mapper::map_app(&mut graph, pe).expect("mapping");
+    let fabric = Fabric::new(FabricConfig::default());
+    let (pl, rt) = cgra_dse::pnr::place_and_route(&mapping, &fabric, cfg.seed).expect("pnr");
+    let bs = bitstream::generate(pe, &mapping, &pl, &rt);
+    println!(
+        "mapped: {} PEs on a {}x{} fabric, {} routed hops, bitstream {} words",
+        mapping.num_pes(),
+        fabric.cfg.width,
+        fabric.cfg.height,
+        rt.total_hops,
+        bs.serialize().len()
+    );
+
+    // --- Real workload: one 32x32 image, all (H-2)*(W-2) output pixels.
+    let mut rng = SplitMix64::new(0x1347);
+    let img: Vec<i64> = (0..H * W).map(|_| rng.below(256) as i64).collect();
+    let mut windows: Vec<Vec<Word>> = Vec::new();
+    for r in 0..H - 2 {
+        for c in 0..W - 2 {
+            let mut win = Vec::with_capacity(9);
+            for dr in 0..3 {
+                for dc in 0..3 {
+                    win.push(img[(r + dr) * W + (c + dc)]);
+                }
+            }
+            windows.push(win);
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let sim = cgra_dse::sim::simulate(&mut graph, pe, &mapping, &pl, &rt, &windows);
+    let dt = t0.elapsed();
+    println!(
+        "simulated {} pixels: latency {} cycles, II={}, total {} cycles ({:.1} kpixel/s wall)",
+        sim.stats.items,
+        sim.stats.latency_cycles,
+        sim.stats.ii,
+        sim.stats.total_cycles,
+        sim.stats.items as f64 / dt.as_secs_f64() / 1e3,
+    );
+
+    // --- Differential check #1: per-pixel graph eval.
+    for (win, out) in windows.iter().zip(&sim.outputs) {
+        assert_eq!(*out, graph.eval(win), "CGRA sim diverged from IR eval");
+    }
+    println!("IR-eval check: all {} pixels match", sim.outputs.len());
+
+    // --- Differential check #2: the AOT JAX/Pallas oracle via PJRT.
+    if runtime::artifacts_available() {
+        // The gaussian artifact is lowered for 8x8 inputs; sweep 8x8 tiles
+        // of the image so the whole surface is oracle-checked.
+        let rtm = runtime::Runtime::new().expect("pjrt");
+        let oracle = rtm.load_artifact("gaussian").expect("artifact");
+        let mut checked = 0usize;
+        for tr in (0..H - 8 + 1).step_by(8) {
+            for tc in (0..W - 8 + 1).step_by(8) {
+                let tile: Vec<i32> = (0..8 * 8)
+                    .map(|k| img[(tr + k / 8) * W + (tc + k % 8)] as i32)
+                    .collect();
+                let want = oracle.run_i32(&[(&tile, &[8, 8])]).expect("oracle run");
+                for rr in 0..6 {
+                    for cc in 0..6 {
+                        let sim_out =
+                            sim.outputs[(tr + rr) * (W - 2) + (tc + cc)][0] as i32;
+                        assert_eq!(
+                            sim_out,
+                            want[rr * 6 + cc],
+                            "oracle mismatch at tile ({tr},{tc}) px ({rr},{cc})"
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        println!("PJRT oracle check: {checked} pixels match the Pallas kernel output");
+    } else {
+        println!("PJRT oracle check skipped (run `make artifacts`)");
+    }
+
+    // --- The paper's metrics for the whole ladder, camera included.
+    println!("\n=== gaussian ladder ===");
+    let evals = dse::evaluate_ladder(&app, &cfg);
+    println!("{}", cgra_dse::report::render_ladder("gaussian", &evals));
+    let camera = AppSuite::by_name("camera").unwrap();
+    let evals = dse::evaluate_ladder(&camera, &cfg);
+    println!("=== camera ladder (Fig. 8 subject) ===");
+    println!("{}", cgra_dse::report::render_ladder("camera", &evals));
+    let base = &evals[0];
+    let spec = dse::pe_spec_of(&evals);
+    println!(
+        "camera: {:.1}x energy, {:.1}x area vs baseline (paper: up to 8.3x / 3.4x)",
+        base.pe_energy_per_op / spec.pe_energy_per_op,
+        base.total_area / spec.total_area
+    );
+}

@@ -1,0 +1,69 @@
+//! ML accelerator generation (§V-B): build PE ML from the ResNet-50/U-Net
+//! kernel suite, run the conv workload through the generated CGRA, and
+//! reproduce the Table I comparison against a Simba-class ASIC.
+//!
+//! ```text
+//! cargo run --release --example ml_accelerator
+//! ```
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::coordinator;
+use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::util::SplitMix64;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let apps = AppSuite::ml();
+
+    // --- Generate the domain PE from all four ML kernels.
+    let pe_ml = dse::domain_pe(&apps, "pe_ml", 1, &cfg);
+    println!("PE ML (Fig. 12 analogue):\n{}", pe_ml.describe());
+
+    // --- Every ML kernel must map on it; report utilization.
+    println!("per-kernel evaluation on PE ML:");
+    for app in &apps {
+        match dse::evaluate_variant(app, "pe_ml", &pe_ml, &cfg) {
+            Some(ve) => println!(
+                "  {:<6} {:>3} PEs  {:>7.1} fJ/op  {:>9.0} µm² total  fmax {:.2} GHz",
+                app.name, ve.n_pes, ve.pe_energy_per_op, ve.total_area, ve.fmax_ghz
+            ),
+            None => println!("  {:<6} UNMAPPABLE", app.name),
+        }
+    }
+
+    // --- Serve a real conv workload through the simulated fabric.
+    let conv = apps.iter().find(|a| a.name == "conv").unwrap();
+    let mut graph = conv.graph.clone();
+    let mapping = cgra_dse::mapper::map_app(&mut graph, &pe_ml).expect("map conv");
+    let fabric = Fabric::new(FabricConfig::default());
+    let (pl, rt) = cgra_dse::pnr::place_and_route(&mapping, &fabric, 7).expect("pnr");
+    let mut rng = SplitMix64::new(99);
+    let batch: Vec<Vec<i64>> = (0..256)
+        .map(|_| (0..36).map(|_| rng.below(128) as i64 - 64).collect())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let sim = cgra_dse::sim::simulate(&mut graph, &pe_ml, &mapping, &pl, &rt, &batch);
+    let dt = t0.elapsed();
+    for (item, out) in batch.iter().zip(&sim.outputs) {
+        assert_eq!(*out, graph.eval(item));
+    }
+    println!(
+        "\nconv workload: {} output elements, latency {} cycles, II=1, \
+         {:.1}k elements/s (simulator wall-clock) — all correct",
+        sim.stats.items,
+        sim.stats.latency_cycles,
+        sim.stats.items as f64 / dt.as_secs_f64() / 1e3
+    );
+
+    // --- Table I.
+    let (text, rows) = coordinator::run_table1(&cfg);
+    println!("\n{text}");
+    let saving = 1.0 - rows[1].energy_per_op_fj / rows[0].energy_per_op_fj;
+    println!(
+        "specializing the PEs reduces overall CGRA energy by {:.1}% (paper: 22.1%), \
+         landing within {:.2}x of the Simba-class ASIC (paper: 'nears the efficiency')",
+        saving * 100.0,
+        rows[1].rel_to_simba
+    );
+}

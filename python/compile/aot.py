@@ -1,0 +1,54 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the Rust runtime.
+
+Run once by `make artifacts`; python never executes on the request path.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/gen_hlo.py).
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_app(name: str) -> str:
+    fn, args = model.APPS[name]
+    lowered = jax.jit(fn).lower(*args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--apps", nargs="*", default=sorted(model.APPS))
+    # Back-compat single-file mode used by older Makefiles.
+    ap.add_argument("--out", default=None)
+    ns = ap.parse_args()
+
+    out_dir = pathlib.Path(ns.out).parent if ns.out else pathlib.Path(ns.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name in ns.apps:
+        text = lower_app(name)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {len(text)} chars to {path}")
+    # Marker consumed by `make`'s staleness check.
+    (out_dir / "MANIFEST").write_text("\n".join(sorted(ns.apps)) + "\n")
+
+
+if __name__ == "__main__":
+    main()

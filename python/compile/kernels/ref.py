@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel.
+
+These are the ground truth the Pallas kernels (and transitively the whole
+Rust CGRA stack) are validated against in pytest. No pallas imports here.
+"""
+
+import jax.numpy as jnp
+
+from .conv3x3 import GAUSS_SHIFT, GAUSS_W, mac9_weights
+
+
+def stencil9_ref(x, weights):
+    """o[r, c] = sum_{dr, dc} w[dr][dc] * x[r+dr, c+dc], valid padding."""
+    x = x.astype(jnp.int32)
+    h, w = x.shape
+    h_out, w_out = h - 2, w - 2
+    acc = jnp.zeros((h_out, w_out), dtype=jnp.int32)
+    for dr in range(3):
+        for dc in range(3):
+            acc = acc + x[dr : dr + h_out, dc : dc + w_out] * jnp.int32(
+                weights[dr][dc]
+            )
+    return acc
+
+
+def gaussian_ref(x):
+    """Gaussian blur reference: stencil then arithmetic shift by 4."""
+    return jnp.right_shift(stencil9_ref(x, GAUSS_W), GAUSS_SHIFT)
+
+
+def conv_mc_ref(x, channels=4):
+    """Multi-channel conv accumulation reference (pre-bias/requant)."""
+    acc = None
+    for ch in range(channels):
+        part = stencil9_ref(x[ch], mac9_weights(ch + 1))
+        acc = part if acc is None else acc + part
+    return acc

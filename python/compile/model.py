@@ -1,0 +1,133 @@
+"""Layer-2 JAX models: the validated applications as whole-image numeric
+computations, built on the Layer-1 Pallas kernels.
+
+Semantics mirror `rust/src/frontend/` exactly (same fixed-point shifts,
+weights, bias and clamps), so the Rust CGRA simulator's per-pixel outputs
+must equal these models' whole-image outputs element-for-element. Input
+ranges used by validation keep every intermediate within int16, so int32
+here == the CGRA's 16-bit datapath.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .kernels.conv3x3 import (
+    conv3x3_mc_kernel,
+    gaussian_blur_kernel,
+    mac9_weights,
+)
+
+CONV_BIAS = 7
+CONV_SHIFT = 5
+BLOCK_SHIFT = 4
+QMIN, QMAX = -128, 127
+
+
+def _relu(x):
+    return jnp.maximum(x, 0)
+
+
+def _requant(x, shift):
+    return jnp.clip(jnp.right_shift(x, shift), QMIN, QMAX)
+
+
+def gaussian(x):
+    """Gaussian blur app: (H, W) int32 -> (H-2, W-2) int32."""
+    return (gaussian_blur_kernel(x),)
+
+
+def conv(x):
+    """Multi-channel conv app (frontend::ml::conv_multichannel):
+    (4, H, W) int32 -> (H-2, W-2) int32."""
+    acc = conv3x3_mc_kernel(x, channels=4)
+    return (_relu(_requant(acc + CONV_BIAS, CONV_SHIFT)),)
+
+
+def _stencil9(x, weights):
+    """Single-channel 3x3 stencil as a Pallas kernel (weights static)."""
+    h, w = x.shape
+    h_out, w_out = h - 2, w - 2
+
+    def kernel(x_ref, o_ref):
+        acc = jnp.zeros((h_out, w_out), dtype=jnp.int32)
+        for dr in range(3):
+            for dc in range(3):
+                wgt = weights[dr][dc]
+                if wgt == 0:
+                    continue
+                acc = acc + x_ref[dr : dr + h_out, dc : dc + w_out] * jnp.int32(wgt)
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32))
+
+
+def block(x, skip):
+    """Residual block tail (frontend::ml::residual_block):
+    conv3x3(wseed=2) -> requant(>>4) -> + skip -> relu."""
+    acc = _stencil9(x, mac9_weights(2))
+    return (_relu(_requant(acc, BLOCK_SHIFT) + skip),)
+
+
+GAUSS_SHIFT = 4
+LAP_POS_GAIN = 96
+LAP_NEG_GAIN = 48
+LAP_LIMIT = 64
+DS_GAIN = 48
+DS_SHIFT = 6
+
+
+def laplacian(x):
+    """Laplacian-pyramid level (frontend::imaging::laplacian_level):
+    blur = gaussian(x); lap = centre - blur; remap (asymmetric gains),
+    magnitude clamp, add back. (H, W) int32 -> (H-2, W-2)."""
+    blur = gaussian_blur_kernel(x)
+    centre = x[1:-1, 1:-1].astype(jnp.int32)
+    lap = centre - blur
+    pos = jnp.right_shift(lap * LAP_POS_GAIN, 6)
+    neg = jnp.right_shift(lap * LAP_NEG_GAIN, 6)
+    remapped = jnp.where(lap > 0, pos, neg)
+    limited = jnp.clip(remapped, -LAP_LIMIT, LAP_LIMIT)
+    return (blur + limited,)
+
+
+def downsample(x):
+    """U-Net downsample (frontend::ml::downsample): 2x2 max-pool, Q6 gain,
+    requant, relu. (H, W) int32 -> (H/2, W/2) int32."""
+    h, w = x.shape
+    q = x.reshape(h // 2, 2, w // 2, 2).astype(jnp.int32)
+    m = jnp.max(jnp.max(q, axis=3), axis=1)
+    return (_relu(_requant(m * DS_GAIN, DS_SHIFT)),)
+
+
+#: name -> (fn, example-arg builder). Shapes must match
+#: rust/src/validate.rs (IMG = 8, CONV_CH = 4).
+IMG = 8
+CONV_CH = 4
+
+APPS = {
+    "gaussian": (gaussian, lambda: (jax.ShapeDtypeStruct((IMG, IMG), jnp.int32),)),
+    "conv": (
+        conv,
+        lambda: (jax.ShapeDtypeStruct((CONV_CH, IMG, IMG), jnp.int32),),
+    ),
+    "block": (
+        block,
+        lambda: (
+            jax.ShapeDtypeStruct((IMG, IMG), jnp.int32),
+            jax.ShapeDtypeStruct((IMG - 2, IMG - 2), jnp.int32),
+        ),
+    ),
+    "laplacian": (
+        laplacian,
+        lambda: (jax.ShapeDtypeStruct((IMG, IMG), jnp.int32),),
+    ),
+    "ds": (
+        downsample,
+        lambda: (jax.ShapeDtypeStruct((IMG, IMG), jnp.int32),),
+    ),
+}

@@ -1,0 +1,106 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis-style shape/value sweeps are hand-rolled with a seeded
+numpy Generator (the offline image has no `hypothesis` package); each case
+is an independent random draw, so failures print the seed for replay.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.conv3x3 import (
+    GAUSS_W,
+    conv3x3_mc_kernel,
+    gaussian_blur_kernel,
+    mac9_weights,
+)
+
+RNG = np.random.default_rng(0xC6A)
+
+
+def rand_img(h, w, lo=0, hi=256):
+    return RNG.integers(lo, hi, size=(h, w), dtype=np.int32)
+
+
+class TestGaussianKernel:
+    @pytest.mark.parametrize("h,w", [(3, 3), (4, 7), (8, 8), (16, 5), (12, 32)])
+    def test_matches_ref_across_shapes(self, h, w):
+        x = rand_img(h, w)
+        got = gaussian_blur_kernel(jnp.asarray(x))
+        want = ref.gaussian_ref(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_flat_image_identity(self):
+        x = jnp.full((8, 8), 100, jnp.int32)
+        out = gaussian_blur_kernel(x)
+        np.testing.assert_array_equal(np.asarray(out), 100)
+
+    def test_impulse_center_weight(self):
+        x = jnp.zeros((5, 5), jnp.int32).at[2, 2].set(160)
+        out = np.asarray(gaussian_blur_kernel(x))
+        # centre of the 3x3 output sees weight 4/16.
+        assert out[1, 1] == 40
+
+    def test_negative_values_arithmetic_shift(self):
+        x = jnp.full((4, 4), -64, jnp.int32)
+        got = gaussian_blur_kernel(x)
+        want = ref.gaussian_ref(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert np.all(np.asarray(got) == -64)
+
+    def test_random_sweep(self):
+        for trial in range(25):
+            h = int(RNG.integers(3, 20))
+            w = int(RNG.integers(3, 20))
+            x = rand_img(h, w, -256, 256)
+            got = np.asarray(gaussian_blur_kernel(jnp.asarray(x)))
+            want = np.asarray(ref.gaussian_ref(jnp.asarray(x)))
+            np.testing.assert_array_equal(got, want, err_msg=f"trial {trial} {h}x{w}")
+
+
+class TestConvKernel:
+    @pytest.mark.parametrize("h,w", [(3, 3), (8, 8), (6, 11)])
+    def test_matches_ref(self, h, w):
+        x = RNG.integers(-64, 64, size=(4, h, w), dtype=np.int32)
+        got = conv3x3_mc_kernel(jnp.asarray(x))
+        want = ref.conv_mc_ref(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_zero_input_zero_output(self):
+        x = jnp.zeros((4, 8, 8), jnp.int32)
+        np.testing.assert_array_equal(np.asarray(conv3x3_mc_kernel(x)), 0)
+
+    def test_channel_weights_differ(self):
+        # Same data per channel must still weight channels differently.
+        base = rand_img(8, 8, -32, 32)
+        x = np.stack([base] * 4)
+        out = np.asarray(conv3x3_mc_kernel(jnp.asarray(x)))
+        per_ch = [
+            np.asarray(ref.stencil9_ref(jnp.asarray(base), mac9_weights(ch + 1)))
+            for ch in range(4)
+        ]
+        np.testing.assert_array_equal(out, sum(per_ch))
+        assert not np.array_equal(per_ch[0], per_ch[1])
+
+    def test_random_sweep(self):
+        for trial in range(10):
+            h = int(RNG.integers(3, 12))
+            w = int(RNG.integers(3, 12))
+            x = RNG.integers(-64, 64, size=(4, h, w), dtype=np.int32)
+            got = np.asarray(conv3x3_mc_kernel(jnp.asarray(x)))
+            want = np.asarray(ref.conv_mc_ref(jnp.asarray(x)))
+            np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
+
+
+class TestWeights:
+    def test_mac9_matches_rust_formula(self):
+        # rust frontend::ml::mac9: w = ((wseed + 3k) % 9) - 4.
+        for seed in range(1, 6):
+            ws = mac9_weights(seed)
+            flat = [ws[r][c] for r in range(3) for c in range(3)]
+            assert flat == [((seed + 3 * k) % 9) - 4 for k in range(9)]
+
+    def test_gauss_weights_sum_to_16(self):
+        assert sum(sum(r) for r in GAUSS_W) == 16

@@ -1,0 +1,123 @@
+"""Layer-2 correctness: app models' shapes and fixed-point semantics, plus
+the AOT lowering path (HLO text generation)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.conv3x3 import mac9_weights
+
+RNG = np.random.default_rng(7)
+
+
+class TestGaussianModel:
+    def test_shape(self):
+        x = jnp.zeros((8, 8), jnp.int32)
+        (out,) = model.gaussian(x)
+        assert out.shape == (6, 6)
+
+    def test_range_preserved_for_u8(self):
+        x = jnp.asarray(RNG.integers(0, 256, (10, 10), dtype=np.int32))
+        (out,) = model.gaussian(x)
+        o = np.asarray(out)
+        assert o.min() >= 0 and o.max() <= 255
+
+
+class TestConvModel:
+    def test_requant_clamps_to_int8(self):
+        x = jnp.asarray(RNG.integers(-64, 64, (4, 8, 8), dtype=np.int32))
+        (out,) = model.conv(x)
+        o = np.asarray(out)
+        assert o.min() >= 0  # relu
+        assert o.max() <= 127  # clamp
+
+    def test_matches_manual_pipeline(self):
+        x = jnp.asarray(RNG.integers(-64, 64, (4, 8, 8), dtype=np.int32))
+        (out,) = model.conv(x)
+        acc = ref.conv_mc_ref(x) + model.CONV_BIAS
+        want = jnp.maximum(
+            jnp.clip(jnp.right_shift(acc, model.CONV_SHIFT), -128, 127), 0
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+class TestBlockModel:
+    def test_skip_passthrough_on_zero_conv(self):
+        x = jnp.zeros((8, 8), jnp.int32)
+        skip = jnp.asarray(RNG.integers(0, 64, (6, 6), dtype=np.int32))
+        (out,) = model.block(x, skip)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(skip))
+
+    def test_relu_clips(self):
+        x = jnp.zeros((8, 8), jnp.int32)
+        skip = jnp.full((6, 6), -5, jnp.int32)
+        (out,) = model.block(x, skip)
+        np.testing.assert_array_equal(np.asarray(out), 0)
+
+    def test_matches_manual(self):
+        x = jnp.asarray(RNG.integers(-64, 64, (8, 8), dtype=np.int32))
+        skip = jnp.asarray(RNG.integers(-64, 64, (6, 6), dtype=np.int32))
+        (out,) = model.block(x, skip)
+        acc = ref.stencil9_ref(x, mac9_weights(2))
+        want = jnp.maximum(
+            jnp.clip(jnp.right_shift(acc, model.BLOCK_SHIFT), -128, 127) + skip, 0
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+class TestAot:
+    def test_every_app_lowers_to_hlo_text(self):
+        from compile import aot
+
+        for name in model.APPS:
+            text = aot.lower_app(name)
+            assert "HloModule" in text, name
+            assert len(text) > 200, name
+
+    def test_jit_executes_like_eager(self):
+        x = jnp.asarray(RNG.integers(0, 256, (8, 8), dtype=np.int32))
+        eager = model.gaussian(x)[0]
+        jitted = jax.jit(model.gaussian)(x)[0]
+        np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+class TestLaplacianModel:
+    def test_flat_identity(self):
+        x = jnp.full((8, 8), 77, jnp.int32)
+        (out,) = model.laplacian(x)
+        np.testing.assert_array_equal(np.asarray(out), 77)
+
+    def test_boost_matches_rust_semantics(self):
+        # Bright centre impulse: blur=(10*12+90*4)/16=30 at the centre;
+        # lap=60; remap=60*96>>6=90 -> clamp 64; out=94 (mirrors the rust
+        # frontend unit test).
+        x = jnp.full((8, 8), 10, jnp.int32).at[3, 3].set(90)
+        (out,) = model.laplacian(x)
+        assert int(np.asarray(out)[2, 2]) == 94
+
+    def test_negative_detail_damped(self):
+        x = jnp.full((8, 8), 100, jnp.int32).at[3, 3].set(10)
+        (out,) = model.laplacian(x)
+        o = np.asarray(out)
+        # Dark impulse is damped (neg gain 48/96), never boosted.
+        assert o[2, 2] > 10
+
+
+class TestDownsampleModel:
+    def test_max_pool_then_gain(self):
+        x = jnp.zeros((8, 8), jnp.int32).at[0, 1].set(100)
+        (out,) = model.downsample(x)
+        # max=100; 100*48>>6 = 75.
+        assert int(np.asarray(out)[0, 0]) == 75
+
+    def test_relu_floor(self):
+        x = jnp.full((8, 8), -50, jnp.int32)
+        (out,) = model.downsample(x)
+        np.testing.assert_array_equal(np.asarray(out), 0)
+
+    def test_shape_halves(self):
+        x = jnp.zeros((8, 8), jnp.int32)
+        (out,) = model.downsample(x)
+        assert out.shape == (4, 4)

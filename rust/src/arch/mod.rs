@@ -1,0 +1,165 @@
+//! CGRA fabric model (§IV, Fig. 7): a grid of PE and MEM tiles joined by a
+//! statically configured interconnect with horizontal and vertical routing
+//! tracks, connection boxes (CB) on tile inputs and switch boxes (SB) on
+//! tile outputs.
+
+use crate::power::tables;
+
+/// Tile kinds in the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileKind {
+    Pe,
+    Mem,
+}
+
+/// Fabric parameters.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    pub width: usize,
+    pub height: usize,
+    /// Routing tracks per direction per channel.
+    pub tracks: usize,
+    /// Every `mem_column_period`-th column is a MEM column (paper's CGRA
+    /// interleaves PE and MEM tiles; garnet uses every 4th).
+    pub mem_column_period: usize,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            width: 16,
+            height: 16,
+            tracks: 5,
+            mem_column_period: 4,
+        }
+    }
+}
+
+/// The instantiated fabric.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub cfg: FabricConfig,
+    pub tiles: Vec<TileKind>, // row-major
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Self {
+        let mut tiles = Vec::with_capacity(cfg.width * cfg.height);
+        for _r in 0..cfg.height {
+            for c in 0..cfg.width {
+                let kind = if cfg.mem_column_period > 0 && (c + 1) % cfg.mem_column_period == 0 {
+                    TileKind::Mem
+                } else {
+                    TileKind::Pe
+                };
+                tiles.push(kind);
+            }
+        }
+        Fabric { cfg, tiles }
+    }
+
+    pub fn kind(&self, row: usize, col: usize) -> TileKind {
+        self.tiles[row * self.cfg.width + col]
+    }
+
+    pub fn num_pe_tiles(&self) -> usize {
+        self.tiles.iter().filter(|&&t| t == TileKind::Pe).count()
+    }
+
+    pub fn num_mem_tiles(&self) -> usize {
+        self.tiles.iter().filter(|&&t| t == TileKind::Mem).count()
+    }
+
+    /// All PE tile coordinates, row-major.
+    pub fn pe_slots(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for r in 0..self.cfg.height {
+            for c in 0..self.cfg.width {
+                if self.kind(r, c) == TileKind::Pe {
+                    v.push((r, c));
+                }
+            }
+        }
+        v
+    }
+
+    /// MEM tile coordinates.
+    pub fn mem_slots(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for r in 0..self.cfg.height {
+            for c in 0..self.cfg.width {
+                if self.kind(r, c) == TileKind::Mem {
+                    v.push((r, c));
+                }
+            }
+        }
+        v
+    }
+
+    /// Manhattan distance between two tiles.
+    pub fn dist(a: (usize, usize), b: (usize, usize)) -> usize {
+        a.0.abs_diff(b.0) + a.1.abs_diff(b.1)
+    }
+}
+
+/// MEM tile cost model: a 2 KB SRAM macro with address generation — used
+/// for the CGRA-level evaluation of Table I.
+pub fn mem_tile_cost() -> tables::Cost {
+    tables::Cost {
+        // ~2KB SRAM macro + controller in 16nm.
+        area: 6900.0,
+        // Energy per 16-bit access.
+        energy: 58.0,
+        delay: 450.0,
+    }
+}
+
+/// Interconnect energy per routed hop (one tile-to-tile segment through an
+/// SB) for a fabric with `tracks` tracks.
+pub fn hop_energy(tracks: usize) -> f64 {
+    // Wire capacitance of one tile pitch + SB pass.
+    1.9 + tables::sb_cost(tracks).energy * 0.25
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_fabric_shape() {
+        let f = Fabric::new(FabricConfig::default());
+        assert_eq!(f.tiles.len(), 256);
+        assert_eq!(f.num_pe_tiles() + f.num_mem_tiles(), 256);
+        // Every 4th column is MEM: 4 of 16 columns.
+        assert_eq!(f.num_mem_tiles(), 4 * 16);
+    }
+
+    #[test]
+    fn no_mem_columns_when_period_zero() {
+        let f = Fabric::new(FabricConfig {
+            mem_column_period: 0,
+            ..Default::default()
+        });
+        assert_eq!(f.num_mem_tiles(), 0);
+    }
+
+    #[test]
+    fn pe_slots_match_kind() {
+        let f = Fabric::new(FabricConfig::default());
+        for (r, c) in f.pe_slots() {
+            assert_eq!(f.kind(r, c), TileKind::Pe);
+        }
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(Fabric::dist((0, 0), (3, 4)), 7);
+        assert_eq!(Fabric::dist((2, 2), (2, 2)), 0);
+    }
+
+    #[test]
+    fn mem_tile_dwarfs_pe_primitives() {
+        assert!(mem_tile_cost().area > 1000.0);
+        assert!(hop_energy(5) > 0.0);
+    }
+}

@@ -1,0 +1,333 @@
+//! Experiment coordinator: orchestrates the paper's evaluation (§V) —
+//! per-figure experiment drivers, a small thread pool for parallel variant
+//! evaluation, and result persistence under `results/`.
+//!
+//! (The reference architecture calls for a tokio-based runner; this build
+//! environment has no tokio in its offline registry, so the coordinator
+//! uses `std::thread` scoped threads — same structure, no async sugar.)
+
+use crate::arch::{hop_energy, mem_tile_cost};
+use crate::dse::{
+    domain_pe, evaluate_ladder, evaluate_variant, frequency_sweep, pe_spec_of, DseConfig,
+    SweepPoint, VariantEval,
+};
+use crate::frontend::{App, AppSuite};
+use crate::mapper::DataSrc;
+use crate::power::tables;
+use crate::report::{self, Table1Row};
+
+/// Run `jobs` closures on up to `width` worker threads, preserving input
+/// order in the returned results.
+pub fn parallel_map<T, F>(jobs: Vec<F>, width: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let width = width.max(1);
+    let mut results: Vec<Option<T>> = (0..jobs.len()).map(|_| None).collect();
+    let mut remaining: Vec<(usize, F)> = jobs.into_iter().enumerate().collect();
+    while !remaining.is_empty() {
+        let batch: Vec<(usize, F)> = remaining
+            .drain(..remaining.len().min(width))
+            .collect();
+        let outs: Vec<(usize, T)> = std::thread::scope(|s| {
+            let handles: Vec<_> = batch
+                .into_iter()
+                .map(|(i, f)| s.spawn(move || (i, f())))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, v) in outs {
+            results[i] = Some(v);
+        }
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Default worker width (single-core images still get overlap from the OS).
+pub fn default_width() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The Fig. 8 sweep frequencies (GHz).
+pub fn fig8_freqs() -> Vec<f64> {
+    vec![0.6, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0, 2.2]
+}
+
+/// Fig. 8: camera-pipeline variant ladder swept across synthesis
+/// frequencies. Returns (rendered text, raw sweep data).
+pub fn run_fig8(cfg: &DseConfig) -> (String, Vec<(String, Vec<SweepPoint>)>) {
+    let app = AppSuite::by_name("camera").expect("camera app");
+    let evals = evaluate_ladder(&app, cfg);
+    let freqs = fig8_freqs();
+    let sweeps: Vec<(String, Vec<SweepPoint>)> = evals
+        .iter()
+        .map(|v| (v.variant.clone(), frequency_sweep(v, &freqs)))
+        .collect();
+    let mut text = report::render_fig8(&sweeps);
+    text.push('\n');
+    text.push_str(&report::render_ladder("camera", &evals));
+    (text, sweeps)
+}
+
+/// Fig. 9: the subgraphs merged into each camera PE variant plus the
+/// resulting architectures.
+pub fn run_fig9(cfg: &DseConfig) -> String {
+    let app = AppSuite::by_name("camera").expect("camera app");
+    let mut graph = app.graph.clone();
+    let ranked = crate::dse::rank_subgraphs(&mut graph, cfg);
+    let mut s = String::from("Fig. 9 — subgraphs merged into camera PE variants\n");
+    for (k, r) in ranked.iter().take(cfg.max_merged).enumerate() {
+        s.push_str(&format!(
+            "subgraph {} (MIS={}, support={}, {} nodes): ops {:?}\n",
+            k + 1,
+            r.mis_size,
+            r.pattern.support,
+            r.pattern.graph.len(),
+            r.pattern
+                .graph
+                .nodes
+                .iter()
+                .map(|n| n.op.label())
+                .collect::<Vec<_>>()
+        ));
+    }
+    s.push('\n');
+    for (name, pe) in crate::dse::variant_ladder(&app, cfg) {
+        s.push_str(&format!("--- {name} ---\n{}\n", pe.describe()));
+    }
+    s
+}
+
+/// Shared engine for Figs. 10/11: evaluate every app of a domain on
+/// {baseline, domain PE, app-specialized PE}.
+pub fn run_domain_fig(
+    apps: &[App],
+    domain_name: &str,
+    per_app: usize,
+    cfg: &DseConfig,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    let dom_pe = domain_pe(apps, domain_name, per_app, cfg);
+    let rows: Vec<_> = parallel_map(
+        apps.iter()
+            .map(|app| {
+                let dom_pe = dom_pe.clone();
+                let cfg = cfg.clone();
+                move || {
+                    let ladder = evaluate_ladder(app, &cfg);
+                    let base = ladder[0].clone();
+                    let spec = pe_spec_of(&ladder).clone();
+                    let dom = evaluate_variant(app, domain_name, &dom_pe, &cfg)
+                        .expect("domain PE must map every domain app");
+                    (app.name.to_string(), base, dom, spec)
+                }
+            })
+            .collect(),
+        default_width(),
+    );
+    let title = if domain_name.contains("ip") {
+        "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)"
+    } else {
+        "Fig. 11 — ML kernels: PE ML vs PE Spec (normalized to baseline)"
+    };
+    let text = report::render_domain_fig(title, domain_name, &rows);
+    (text, rows)
+}
+
+pub fn run_fig10(cfg: &DseConfig) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    run_domain_fig(&AppSuite::imaging(), "pe_ip", 1, cfg)
+}
+
+pub fn run_fig11(cfg: &DseConfig) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    run_domain_fig(&AppSuite::ml(), "pe_ml", 1, cfg)
+}
+
+/// CGRA-level energy per op for a variant evaluation: PE core +
+/// interconnect hops + amortized MEM-tile accesses (Table I includes the
+/// memory tiles, §V-B).
+pub fn cgra_energy_per_op(app: &App, ve: &VariantEval, cfg: &DseConfig) -> f64 {
+    let ops = ve.mapping.ops_covered.max(1) as f64;
+    // MEM reads: one per AppInput binding per item.
+    let mem_reads: usize = ve
+        .mapping
+        .instances
+        .iter()
+        .flat_map(|i| i.inputs.iter())
+        .filter(|s| matches!(s, DataSrc::AppInput(_)))
+        .count();
+    let mem_e = mem_tile_cost().energy * mem_reads as f64 / ops;
+    // Average routed distance ~ grid locality: charge 2 hops per
+    // inter-instance net (placement keeps producers adjacent).
+    let nets: usize = ve
+        .mapping
+        .instances
+        .iter()
+        .flat_map(|i| i.inputs.iter())
+        .filter(|s| !matches!(s, DataSrc::Constant(_)))
+        .count();
+    let hop_e = hop_energy(cfg.tracks) * 2.0 * nets as f64 / ops;
+    let _ = app;
+    ve.pe_energy_per_op + ve.icn_energy_per_op + hop_e + mem_e
+}
+
+/// Simba-class ASIC reference point, derived from the same primitive cost
+/// tables (8-bit vector MAC datapath with minimal control): 8-bit multiply
+/// (~1/3.5 of our 16-bit), local accumulate, operand registers, and array
+/// data distribution. See DESIGN.md §5.
+pub fn simba_energy_per_op() -> f64 {
+    let mul8 = tables::class_cost(crate::ir::HwClass::Multiplier).energy / 3.5;
+    let add = tables::class_cost(crate::ir::HwClass::AddSub).energy / 4.0; // 8b accumulate slice
+    let regs = tables::word_reg_cost().energy / 2.0;
+    let distribution = 6.0;
+    mul8 + add + regs + distribution
+}
+
+/// Table I: ML CGRA vs baseline CGRA vs Simba.
+pub fn run_table1(cfg: &DseConfig) -> (String, Vec<Table1Row>) {
+    let apps = AppSuite::ml();
+    let conv = apps.iter().find(|a| a.name == "conv").unwrap();
+    let pe_ml = domain_pe(&apps, "pe_ml", 1, cfg);
+
+    let base_ladder = evaluate_ladder(conv, cfg);
+    let base = &base_ladder[0];
+    let ml = evaluate_variant(conv, "pe_ml", &pe_ml, cfg).expect("pe_ml maps conv");
+
+    let e_base = cgra_energy_per_op(conv, base, cfg);
+    let e_ml = cgra_energy_per_op(conv, &ml, cfg);
+    let e_simba = simba_energy_per_op();
+
+    let rows = vec![
+        Table1Row {
+            design: "Generic CGRA (baseline PE)".into(),
+            energy_per_op_fj: e_base,
+            rel_to_simba: e_base / e_simba,
+            notes: "incl. MEM tiles".into(),
+        },
+        Table1Row {
+            design: "ML CGRA (PE ML)".into(),
+            energy_per_op_fj: e_ml,
+            rel_to_simba: e_ml / e_simba,
+            notes: format!("-{:.1}% vs baseline", 100.0 * (1.0 - e_ml / e_base)),
+        },
+        Table1Row {
+            design: "Simba-class ASIC".into(),
+            energy_per_op_fj: e_simba,
+            rel_to_simba: 1.0,
+            notes: "analytical model".into(),
+        },
+    ];
+    (report::render_table1(&rows), rows)
+}
+
+/// §II-C experiment (an extension the paper motivates but does not plot):
+/// sweep the routing-track count and compare per-PE interconnect cost for
+/// the baseline PE (3 data inputs) vs the specialized PE (const registers
+/// internalized, fewer CB ports — the Fig. 2c effect).
+pub fn run_io_sweep(cfg: &DseConfig) -> (String, Vec<(usize, f64, f64)>) {
+    let app = AppSuite::by_name("camera").expect("camera");
+    let ladder = crate::dse::variant_ladder(&app, cfg);
+    let mut rows = Vec::new();
+    let mut text = String::from(
+        "I/O x interconnect sweep (camera): per-op interconnect energy [fJ]
+\
+         tracks   baseline   specialized   ratio
+",
+    );
+    for tracks in [3usize, 5, 8, 12, 16] {
+        let tcfg = DseConfig { tracks, ..cfg.clone() };
+        let base =
+            evaluate_variant(&app, "base", &ladder[0].1, &tcfg).expect("baseline maps");
+        let (vname, pe) = ladder.last().unwrap();
+        let spec = evaluate_variant(&app, vname, pe, &tcfg).expect("spec maps");
+        text.push_str(&format!(
+            "{tracks:>6}   {:>8.1}   {:>11.1}   {:.2}x
+",
+            base.icn_energy_per_op,
+            spec.icn_energy_per_op,
+            base.icn_energy_per_op / spec.icn_energy_per_op
+        ));
+        rows.push((tracks, base.icn_energy_per_op, spec.icn_energy_per_op));
+    }
+    text.push_str(
+        "
+specialized PEs internalize constants into configuration registers \
+         (Fig. 2c) and fold multiple ops per activation, so each application \
+         op crosses the CB/SB fabric fewer times; the gap widens with track \
+         count because every crossing gets more expensive.
+",
+    );
+    (text, rows)
+}
+
+/// Persist a report under `results/`.
+pub fn save_report(name: &str, text: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.md"));
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::MinerConfig;
+
+    fn cfg() -> DseConfig {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                max_patterns: 400,
+                ..Default::default()
+            },
+            max_merged: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let jobs: Vec<_> = (0..10).map(|i| move || i * 2).collect();
+        assert_eq!(parallel_map(jobs, 3), (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fig9_mentions_subgraphs() {
+        let s = run_fig9(&cfg());
+        assert!(s.contains("subgraph 1"));
+        assert!(s.contains("pe2"));
+    }
+
+    #[test]
+    fn simba_reference_is_positive_and_small() {
+        let e = simba_energy_per_op();
+        assert!(e > 10.0 && e < 100.0, "{e}");
+    }
+
+    #[test]
+    fn io_sweep_shows_cb_scaling_and_const_reg_savings() {
+        let (text, rows) = run_io_sweep(&cfg());
+        assert!(text.contains("tracks"));
+        // Interconnect energy grows with track count...
+        assert!(rows.last().unwrap().1 > rows[0].1);
+        // ...and the specialized design pays strictly less per op
+        // (constants internalized + multi-op activations).
+        for (t, base, spec) in &rows {
+            assert!(spec < base, "tracks {t}: spec {spec} >= base {base}");
+        }
+    }
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        // Baseline CGRA > ML CGRA > (close to) Simba.
+        let (_, rows) = run_table1(&cfg());
+        assert!(rows[0].energy_per_op_fj > rows[1].energy_per_op_fj);
+        assert!(rows[1].energy_per_op_fj >= rows[2].energy_per_op_fj * 0.8);
+        // Specialization saves a meaningful overall fraction.
+        let saving = 1.0 - rows[1].energy_per_op_fj / rows[0].energy_per_op_fj;
+        assert!(saving > 0.08, "saving {saving}");
+    }
+}

@@ -1,0 +1,491 @@
+//! The design-space-exploration driver (§IV, Fig. 6): ties the whole
+//! toolchain together — mine frequent subgraphs, rank them by maximal
+//! independent set size, merge the top ones into PE variants (PE 1–5 of
+//! §V), generate cross-application domain PEs (PE IP, PE ML), map each
+//! application onto each variant, and evaluate area / energy / frequency.
+
+pub mod ablation;
+
+use crate::frontend::App;
+use crate::ir::{canonical_code, Graph, NodeId, Op};
+use crate::mapper::{map_app, Mapping};
+use crate::mining::{mine, MinedPattern, MinerConfig};
+use crate::mis;
+use crate::pe::baseline::{baseline_pe, pe1_for_app, baseline_ops};
+use crate::pe::PeSpec;
+use crate::power::{evaluate_pe, interconnect_per_pe, synthesis_scale, PeEval};
+
+/// DSE-wide configuration.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub miner: MinerConfig,
+    /// Maximum merged subgraphs (PE 2..=1+max_merged).
+    pub max_merged: usize,
+    /// Patterns with more external inputs than this are skipped (PE I/O is
+    /// interconnect-expensive, §II-C).
+    pub max_pattern_inputs: usize,
+    /// Routing tracks for interconnect costing.
+    pub tracks: usize,
+    pub seed: u64,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            miner: MinerConfig::default(),
+            max_merged: 4,
+            max_pattern_inputs: 4,
+            tracks: 5,
+            seed: 0xD5E,
+        }
+    }
+}
+
+/// A mined pattern with its MIS analysis (the paper's ranking signal).
+#[derive(Debug, Clone)]
+pub struct RankedPattern {
+    pub pattern: MinedPattern,
+    pub mis_size: usize,
+    /// PE activations saved if this pattern becomes a PE mode:
+    /// `mis_size x (real ops - 1)` — the §III-C ranking refined by how many
+    /// ops each occurrence folds into one activation.
+    pub savings: usize,
+}
+
+/// Mine + MIS-rank the interesting subgraphs of an application (§III).
+pub fn rank_subgraphs(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
+    let mined = mine(app, &cfg.miner);
+    let mut ranked: Vec<RankedPattern> = mined
+        .into_iter()
+        .filter(|p| p.graph.len() >= 2)
+        .filter(|p| has_real_op(&p.graph))
+        .filter(|p| external_inputs_of(&p.graph) <= cfg.max_pattern_inputs)
+        .map(|pattern| {
+            let mis_size = mis::mis_size(&pattern.distinct);
+            let real_ops = pattern
+                .graph
+                .nodes
+                .iter()
+                .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+                .count();
+            let savings = mis_size * real_ops.saturating_sub(1);
+            RankedPattern { pattern, mis_size, savings }
+        })
+        .filter(|r| r.mis_size >= 2)
+        .collect();
+    // Paper §III-C ranks by MIS size so overlap-heavy subgraphs come last;
+    // we refine the primary key to activation savings (MIS x (ops-1)) —
+    // the quantity PE-count minimization actually cares about — with MIS
+    // itself and size as tie-breaks, then canonical code for determinism.
+    ranked.sort_by(|a, b| {
+        b.savings
+            .cmp(&a.savings)
+            .then(b.mis_size.cmp(&a.mis_size))
+            .then(b.pattern.graph.len().cmp(&a.pattern.graph.len()))
+            .then(a.pattern.canon.cmp(&b.pattern.canon))
+    });
+    ranked
+}
+
+fn has_real_op(g: &Graph) -> bool {
+    g.nodes
+        .iter()
+        .any(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+}
+
+/// Number of unbound input ports of a pattern (PE data inputs it implies).
+pub fn external_inputs_of(g: &Graph) -> usize {
+    let mut driven = std::collections::BTreeSet::new();
+    for e in &g.edges {
+        driven.insert((e.dst.index(), e.dst_port));
+    }
+    let mut n = 0;
+    for nd in &g.nodes {
+        if !nd.op.is_compute() {
+            continue;
+        }
+        for p in 0..nd.op.arity() as u8 {
+            if !driven.contains(&(nd.id.index(), p)) {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Greedily select up to `k` *complementary* patterns from the MIS-ranked
+/// list: each next pattern is the one with the largest marginal activation
+/// savings on the app nodes not yet claimed by earlier selections (greedy
+/// weighted set cover — mirrors what the mapper will actually be able to
+/// use, so merging a sub-pattern of an already-chosen subgraph gains
+/// nothing and is skipped).
+pub fn select_complementary(ranked: &[RankedPattern], k: usize) -> Vec<&RankedPattern> {
+    use std::collections::BTreeSet;
+    let mut covered: BTreeSet<NodeId> = BTreeSet::new();
+    let mut chosen: Vec<&RankedPattern> = Vec::new();
+    let mut remaining: Vec<&RankedPattern> = ranked.iter().collect();
+    while chosen.len() < k && !remaining.is_empty() {
+        let mut best: Option<(usize, usize)> = None; // (marginal savings, idx)
+        for (idx, r) in remaining.iter().enumerate() {
+            let real_ops = r
+                .pattern
+                .graph
+                .nodes
+                .iter()
+                .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+                .count();
+            if real_ops < 2 {
+                continue;
+            }
+            // Non-overlapping occurrences disjoint from already-covered
+            // nodes (greedy count).
+            let mut local: BTreeSet<NodeId> = BTreeSet::new();
+            let mut count = 0usize;
+            for occ in &r.pattern.distinct {
+                if occ.iter().any(|n| covered.contains(n) || local.contains(n)) {
+                    continue;
+                }
+                local.extend(occ.iter().copied());
+                count += 1;
+            }
+            let marginal = count * (real_ops - 1);
+            if marginal >= 2 && best.map_or(true, |(b, _)| marginal > b) {
+                best = Some((marginal, idx));
+            }
+        }
+        let Some((_, idx)) = best else { break };
+        let r = remaining.remove(idx);
+        for occ in &r.pattern.distinct {
+            if occ.iter().all(|n| !covered.contains(n)) {
+                covered.extend(occ.iter().copied());
+            }
+        }
+        chosen.push(r);
+    }
+    chosen
+}
+
+/// Single-op subgraphs for the ops an app uses (PE1's modes), plus
+/// const-operand variants (Fig. 2c): the mapper prefers internalizing an
+/// app constant into the PE's constant register, which both removes a CB
+/// input and lets multipliers specialize into constant-coefficient form.
+fn single_op_subs(app: &Graph) -> Vec<Graph> {
+    let hist = app.op_histogram();
+    let ops: Vec<Op> = baseline_ops()
+        .into_iter()
+        .filter(|op| hist.contains_key(op.label()))
+        .collect();
+    let mut subs: Vec<Graph> = Vec::new();
+    for &op in &ops {
+        let mut g = Graph::new(op.label());
+        g.add_op(op);
+        subs.push(g);
+    }
+    for &op in &ops {
+        if op.arity() >= 2 {
+            let mut g = Graph::new(format!("{}_c", op.label()));
+            let n = g.add_op(op);
+            let c = g.add_op(Op::Const(0));
+            g.connect(c, n, op.arity() as u8 - 1);
+            subs.push(g);
+        }
+    }
+    subs
+}
+
+/// Build the §V variant ladder for one application:
+/// `[("base", …), ("pe1", …), ("pe2", …), … up to pe5]`.
+///
+/// PE k+1 merges the k top-MIS-ranked subgraphs with the app's single-op
+/// modes (so every app node stays mappable).
+pub fn variant_ladder(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
+    let mut graph = app.graph.clone();
+    let ranked = rank_subgraphs(&mut graph, cfg);
+    let mut out = vec![
+        ("base".to_string(), baseline_pe()),
+        ("pe1".to_string(), pe1_for_app(&app.graph, format!("pe1_{}", app.name))),
+    ];
+    let singles = single_op_subs(&app.graph);
+    let selected = select_complementary(&ranked, cfg.max_merged);
+    let mut chosen: Vec<Graph> = Vec::new();
+    for r in selected {
+        chosen.push(r.pattern.graph.clone());
+        let mut subs = chosen.clone();
+        subs.extend(singles.iter().cloned());
+        let name = format!("pe{}_{}", 1 + chosen.len(), app.name);
+        out.push((
+            format!("pe{}", 1 + chosen.len()),
+            PeSpec::from_subgraphs(name, &subs),
+        ));
+    }
+    out
+}
+
+/// A cross-application domain PE (PE IP / PE ML of §V): merge the top
+/// `per_app` subgraphs of every app plus the union of all used single ops.
+pub fn domain_pe(apps: &[App], name: &str, per_app: usize, cfg: &DseConfig) -> PeSpec {
+    let mut subs: Vec<Graph> = Vec::new();
+    let mut seen_canon: Vec<String> = Vec::new();
+    for app in apps {
+        let mut g = app.graph.clone();
+        let ranked = rank_subgraphs(&mut g, cfg);
+        for r in select_complementary(&ranked, per_app) {
+            if seen_canon.contains(&r.pattern.canon) {
+                continue;
+            }
+            seen_canon.push(r.pattern.canon.clone());
+            subs.push(r.pattern.graph.clone());
+        }
+    }
+    // Union of single ops across the domain.
+    let mut ops_seen: Vec<&'static str> = Vec::new();
+    for app in apps {
+        for sub in single_op_subs(&app.graph) {
+            let c = canonical_code(&sub);
+            if !ops_seen.contains(&c.as_str()) {
+                ops_seen.push(Box::leak(c.into_boxed_str()));
+                subs.push(sub);
+            }
+        }
+    }
+    PeSpec::from_subgraphs(name, &subs)
+}
+
+/// Evaluation of one (app, PE) pair — the numbers behind Figs. 8/10/11.
+#[derive(Debug, Clone)]
+pub struct VariantEval {
+    pub variant: String,
+    pub app: String,
+    pub eval: PeEval,
+    pub mapping: Mapping,
+    /// PEs used by the app.
+    pub n_pes: usize,
+    /// PE core area × PEs used (the paper's "total area"), µm².
+    pub total_area: f64,
+    /// PE-core energy per application op, fJ (the paper's Fig. 8 metric).
+    pub pe_energy_per_op: f64,
+    /// Interconnect energy per op (CB/SB + hops), fJ.
+    pub icn_energy_per_op: f64,
+    /// Hard max frequency, GHz.
+    pub fmax_ghz: f64,
+}
+
+/// Map and evaluate an app on a PE. Returns `None` when the app cannot be
+/// covered by the PE's rules.
+pub fn evaluate_variant(
+    app: &App,
+    variant: &str,
+    pe: &PeSpec,
+    cfg: &DseConfig,
+) -> Option<VariantEval> {
+    let mut graph = app.graph.clone();
+    let mapping = map_app(&mut graph, pe).ok()?;
+    // Prune pass ("the most specialized PE possible", §V): rebuild the PE
+    // with only the modes the mapper actually used — dropping unused modes
+    // shrinks muxes/config and can unlock constant-coefficient
+    // multipliers. Baseline variants keep their full generality.
+    let (pe, mapping) = if variant == "base" || variant == "pe1" {
+        (pe.clone(), mapping)
+    } else {
+        let used: std::collections::BTreeSet<usize> =
+            mapping.instances.iter().map(|i| i.mode).collect();
+        let pruned_subs: Vec<Graph> = used
+            .iter()
+            .map(|&m| pe.mode_patterns[m].clone())
+            .collect();
+        let pruned = PeSpec::from_subgraphs(format!("{}_pruned", pe.name), &pruned_subs);
+        let mut g2 = app.graph.clone();
+        match map_app(&mut g2, &pruned) {
+            Ok(m2) => (pruned, m2),
+            Err(_) => (pe.clone(), mapping),
+        }
+    };
+    let pe = &pe;
+    let eval = evaluate_pe(pe);
+    let ops = mapping.ops_covered.max(1);
+
+    // One activation of every instance per output item.
+    let pe_energy_item: f64 = mapping
+        .instances
+        .iter()
+        .map(|i| eval.mode_energy[i.mode])
+        .sum();
+    let (_icn_area, icn_energy_per_pe) = interconnect_per_pe(pe, cfg.tracks);
+    let icn_energy_item = icn_energy_per_pe * mapping.num_pes() as f64;
+
+    Some(VariantEval {
+        variant: variant.to_string(),
+        app: app.name.to_string(),
+        n_pes: mapping.num_pes(),
+        total_area: eval.area * mapping.num_pes() as f64,
+        pe_energy_per_op: pe_energy_item / ops as f64,
+        icn_energy_per_op: icn_energy_item / ops as f64,
+        fmax_ghz: eval.fmax_ghz,
+        eval,
+        mapping,
+    })
+}
+
+/// One row of the Fig. 8 frequency sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub variant: String,
+    pub freq_ghz: f64,
+    /// Energy per op at this synthesis frequency (fJ); `None` = cannot
+    /// close timing.
+    pub energy_per_op: Option<f64>,
+    pub total_area: Option<f64>,
+}
+
+/// Sweep a variant evaluation across synthesis frequencies (Fig. 8).
+pub fn frequency_sweep(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
+    freqs
+        .iter()
+        .map(|&f| {
+            let scaled = synthesis_scale(&ve.eval, f);
+            SweepPoint {
+                variant: ve.variant.clone(),
+                freq_ghz: f,
+                energy_per_op: scaled.map(|(_, e)| ve.pe_energy_per_op * e),
+                total_area: scaled.map(|(a, _)| ve.total_area * a),
+            }
+        })
+        .collect()
+}
+
+/// Full per-app ladder evaluation: the engine behind `reproduce fig8/fig9`.
+pub fn evaluate_ladder(app: &App, cfg: &DseConfig) -> Vec<VariantEval> {
+    variant_ladder(app, cfg)
+        .into_iter()
+        .filter_map(|(name, pe)| evaluate_variant(app, &name, &pe, cfg))
+        .collect()
+}
+
+/// Pick the most specialized variant that did not increase area or energy
+/// (the paper's "PE Spec"): among the non-baseline ladder entries, minimize
+/// the energy·area product (ties go to the more specialized, later entry).
+pub fn pe_spec_of(ladder: &[VariantEval]) -> &VariantEval {
+    ladder[1..]
+        .iter()
+        .min_by(|a, b| {
+            let ka = a.pe_energy_per_op * a.total_area;
+            let kb = b.pe_energy_per_op * b.total_area;
+            ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap_or(&ladder[0])
+}
+
+/// Helper for tests: distinct node count of a mapping's covered sets.
+pub fn covered_nodes(mapping: &Mapping) -> usize {
+    let mut set: std::collections::BTreeSet<NodeId> = Default::default();
+    for i in &mapping.instances {
+        set.extend(i.occ.iter().copied());
+    }
+    set.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::AppSuite;
+
+    fn fast_cfg() -> DseConfig {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                max_patterns: 800,
+                ..Default::default()
+            },
+            max_merged: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ranked_subgraphs_sorted_by_savings() {
+        let mut app = AppSuite::by_name("gaussian").unwrap().graph;
+        let cfg = fast_cfg();
+        let ranked = rank_subgraphs(&mut app, &cfg);
+        assert!(!ranked.is_empty());
+        for w in ranked.windows(2) {
+            assert!(w[0].savings >= w[1].savings);
+        }
+        // And every kept pattern clears the MIS floor.
+        for r in &ranked {
+            assert!(r.mis_size >= 2);
+        }
+    }
+
+    #[test]
+    fn ladder_has_base_pe1_and_specializations() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let ladder = variant_ladder(&app, &fast_cfg());
+        assert!(ladder.len() >= 3, "ladder: {:?}", ladder.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+        assert_eq!(ladder[0].0, "base");
+        assert_eq!(ladder[1].0, "pe1");
+        assert_eq!(ladder[2].0, "pe2");
+    }
+
+    #[test]
+    fn gaussian_specialization_improves_energy_and_area() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let cfg = fast_cfg();
+        let evals = evaluate_ladder(&app, &cfg);
+        assert!(evals.len() >= 3);
+        let base = &evals[0];
+        let last = pe_spec_of(&evals);
+        assert!(
+            last.pe_energy_per_op < base.pe_energy_per_op,
+            "energy {} -> {}",
+            base.pe_energy_per_op,
+            last.pe_energy_per_op
+        );
+        assert!(
+            last.total_area < base.total_area,
+            "area {} -> {}",
+            base.total_area,
+            last.total_area
+        );
+        // Specialized variants use fewer PEs.
+        assert!(last.n_pes < base.n_pes);
+    }
+
+    #[test]
+    fn specialized_fmax_at_least_baseline() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let evals = evaluate_ladder(&app, &fast_cfg());
+        let base = &evals[0];
+        let spec = pe_spec_of(&evals);
+        assert!(spec.fmax_ghz >= base.fmax_ghz * 0.95);
+    }
+
+    #[test]
+    fn frequency_sweep_has_wall() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let evals = evaluate_ladder(&app, &fast_cfg());
+        let pts = frequency_sweep(&evals[0], &[0.8, 1.2, 5.0]);
+        assert!(pts[0].energy_per_op.is_some());
+        assert!(pts[2].energy_per_op.is_none(), "5 GHz must be infeasible");
+    }
+
+    #[test]
+    fn domain_pe_maps_all_imaging_apps() {
+        let apps = AppSuite::imaging();
+        let cfg = fast_cfg();
+        let pe_ip = domain_pe(&apps, "pe_ip", 1, &cfg);
+        for app in &apps {
+            let ve = evaluate_variant(app, "pe_ip", &pe_ip, &cfg);
+            assert!(ve.is_some(), "{} failed to map on PE IP", app.name);
+        }
+    }
+
+    #[test]
+    fn pattern_input_cap_respected() {
+        let mut app = AppSuite::by_name("gaussian").unwrap().graph;
+        let cfg = fast_cfg();
+        for r in rank_subgraphs(&mut app, &cfg) {
+            assert!(external_inputs_of(&r.pattern.graph) <= cfg.max_pattern_inputs);
+        }
+    }
+}

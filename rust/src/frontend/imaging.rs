@@ -1,0 +1,449 @@
+//! Image-processing applications (§V-A): harris, gaussian, camera pipeline,
+//! laplacian pyramid level. All graphs are per-output-pixel, 16-bit
+//! fixed-point, matching what the Halide→CoreIR lowering in the paper's
+//! agile flow produces.
+
+use crate::ir::{Graph, NodeId, Op};
+
+/// Sum a slice of nodes with a left-leaning adder chain (the shape Halide's
+/// CoreIR lowering produces and Fig. 3 of the paper mines).
+pub fn adder_chain(g: &mut Graph, terms: &[NodeId]) -> NodeId {
+    assert!(!terms.is_empty());
+    let mut acc = terms[0];
+    for &t in &terms[1..] {
+        acc = g.add(Op::Add, &[acc, t]);
+    }
+    acc
+}
+
+/// 3x3 window of inputs in row-major order; returns the 9 input ids.
+fn window3(g: &mut Graph, tag: &str) -> Vec<NodeId> {
+    (0..9)
+        .map(|k| g.add_node(Op::Input, format!("{tag}{}{}", k / 3, k % 3)))
+        .collect()
+}
+
+/// Gaussian blur 3x3 with the classic 1-2-1 kernel, normalized by >>4.
+///
+/// Inputs: 9 pixels row-major (p00..p22). Output: one blurred pixel.
+/// `out = (Σ p_k * w_k) >> 4`, w = [1,2,1,2,4,2,1,2,1].
+pub fn gaussian_blur() -> Graph {
+    let mut g = Graph::new("gaussian");
+    let px = window3(&mut g, "p");
+    const W: [i64; 9] = [1, 2, 1, 2, 4, 2, 1, 2, 1];
+    let mut terms = Vec::new();
+    for (k, &p) in px.iter().enumerate() {
+        let w = g.add_node(Op::Const(W[k]), format!("w{k}"));
+        terms.push(g.add(Op::Mul, &[p, w]));
+    }
+    let sum = adder_chain(&mut g, &terms);
+    let sh = g.add_node(Op::Const(4), "norm");
+    let out = g.add(Op::Ashr, &[sum, sh]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// Sobel-style horizontal gradient over a 3x3 window:
+/// `gx = (c0 + 2*c1 + c2) - (a0 + 2*a1 + a2)` where a/c are the left/right
+/// columns. `win` is row-major 3x3.
+fn sobel_x(g: &mut Graph, win: &[NodeId]) -> NodeId {
+    let two_r = {
+        let c = g.add_op(Op::Const(1));
+        g.add(Op::Shl, &[win[5], c])
+    };
+    let right = adder_chain(g, &[win[2], two_r, win[8]]);
+    let two_l = {
+        let c = g.add_op(Op::Const(1));
+        g.add(Op::Shl, &[win[3], c])
+    };
+    let left = adder_chain(g, &[win[0], two_l, win[6]]);
+    g.add(Op::Sub, &[right, left])
+}
+
+/// Sobel-style vertical gradient (top vs bottom rows).
+fn sobel_y(g: &mut Graph, win: &[NodeId]) -> NodeId {
+    let two_b = {
+        let c = g.add_op(Op::Const(1));
+        g.add(Op::Shl, &[win[7], c])
+    };
+    let bottom = adder_chain(g, &[win[6], two_b, win[8]]);
+    let two_t = {
+        let c = g.add_op(Op::Const(1));
+        g.add(Op::Shl, &[win[1], c])
+    };
+    let top = adder_chain(g, &[win[0], two_t, win[2]]);
+    g.add(Op::Sub, &[bottom, top])
+}
+
+/// Harris corner detection, fully unrolled per output pixel.
+///
+/// Inputs: a 5x5 window (25 inputs, row-major p00..p44). For each of the
+/// 3x3 interior positions we compute sobel gradients gx/gy, form the
+/// products gxx/gyy/gxy, sum them over the window, and compute the Harris
+/// response `det - (trace^2 >> 4)` followed by a threshold.
+pub fn harris() -> Graph {
+    let mut g = Graph::new("harris");
+    // 5x5 input window.
+    let p: Vec<NodeId> = (0..25)
+        .map(|k| g.add_node(Op::Input, format!("p{}{}", k / 5, k % 5)))
+        .collect();
+    let win_at = |r: usize, c: usize| -> Vec<NodeId> {
+        // 3x3 window centred at interior position (r, c), 1 <= r,c <= 3.
+        let mut w = Vec::with_capacity(9);
+        for dr in 0..3 {
+            for dc in 0..3 {
+                w.push(p[(r + dr - 1) * 5 + (c + dc - 1)]);
+            }
+        }
+        w
+    };
+    let mut gxx = Vec::new();
+    let mut gyy = Vec::new();
+    let mut gxy = Vec::new();
+    for r in 1..4 {
+        for c in 1..4 {
+            let w = win_at(r, c);
+            let gx = sobel_x(&mut g, &w);
+            let gy = sobel_y(&mut g, &w);
+            // Scale gradients down to keep products in 16-bit range.
+            let s1 = g.add_op(Op::Const(4));
+            let gx = g.add(Op::Ashr, &[gx, s1]);
+            let s2 = g.add_op(Op::Const(4));
+            let gy = g.add(Op::Ashr, &[gy, s2]);
+            gxx.push(g.add(Op::Mul, &[gx, gx]));
+            gyy.push(g.add(Op::Mul, &[gy, gy]));
+            gxy.push(g.add(Op::Mul, &[gx, gy]));
+        }
+    }
+    let sxx = adder_chain(&mut g, &gxx);
+    let syy = adder_chain(&mut g, &gyy);
+    let sxy = adder_chain(&mut g, &gxy);
+    // Scale sums before the determinant products (keeps det in 16 bits).
+    let c4a = g.add_op(Op::Const(6));
+    let sxx = g.add(Op::Ashr, &[sxx, c4a]);
+    let c4b = g.add_op(Op::Const(6));
+    let syy = g.add(Op::Ashr, &[syy, c4b]);
+    let c4c = g.add_op(Op::Const(6));
+    let sxy = g.add(Op::Ashr, &[sxy, c4c]);
+    let m0 = g.add(Op::Mul, &[sxx, syy]);
+    let m1 = g.add(Op::Mul, &[sxy, sxy]);
+    let det = g.add(Op::Sub, &[m0, m1]);
+    let trace = g.add(Op::Add, &[sxx, syy]);
+    let tr2 = g.add(Op::Mul, &[trace, trace]);
+    let k = g.add_node(Op::Const(4), "k");
+    let ktr2 = g.add(Op::Ashr, &[tr2, k]);
+    let resp = g.add(Op::Sub, &[det, ktr2]);
+    // Threshold: out = resp > T ? resp : 0.
+    let thr = g.add_node(Op::Const(2), "thresh");
+    let is_corner = g.add(Op::Gt, &[resp, thr]);
+    let zero = g.add_op(Op::Const(0));
+    let out = g.add(Op::Sel, &[is_corner, resp, zero]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// Piecewise-linear tone curve with three breakpoints (the camera
+/// pipeline's "apply curve" stage): four segments `y = (x * m_i) >> 6 + b_i`.
+fn tone_curve(g: &mut Graph, x: NodeId) -> NodeId {
+    let seg = |g: &mut Graph, x: NodeId, m: i64, b: i64| -> NodeId {
+        let mc = g.add_op(Op::Const(m));
+        let prod = g.add(Op::Mul, &[x, mc]);
+        let sh = g.add_op(Op::Const(6));
+        let scaled = g.add(Op::Ashr, &[prod, sh]);
+        let bc = g.add_op(Op::Const(b));
+        g.add(Op::Add, &[scaled, bc])
+    };
+    let y0 = seg(g, x, 112, 0); // deep shadows: steepest
+    let y1 = seg(g, x, 80, 16); // shadows
+    let y2 = seg(g, x, 64, 28); // mids: unity-ish
+    let y3 = seg(g, x, 32, 108); // highlights: compressed
+    let b0 = g.add_op(Op::Const(24));
+    let lt0 = g.add(Op::Lt, &[x, b0]);
+    let b1 = g.add_op(Op::Const(96));
+    let lt1 = g.add(Op::Lt, &[x, b1]);
+    let b2 = g.add_op(Op::Const(176));
+    let lt2 = g.add(Op::Lt, &[x, b2]);
+    let hi = g.add(Op::Sel, &[lt2, y2, y3]);
+    let mid = g.add(Op::Sel, &[lt1, y1, hi]);
+    g.add(Op::Sel, &[lt0, y0, mid])
+}
+
+/// Camera pipeline: demosaic → black level → white balance → 3x3 color
+/// correction matrix → per-channel tone curve → clamp; per output pixel.
+///
+/// Inputs: a 5x5 bayer window centred on an R site (row-major p00..p44).
+/// Outputs: R, G, B. Uses every baseline-PE op except SHL and the LUT bit
+/// ops — matching the paper's description of camera pipeline (§V-A). The
+/// compute-op count lands at ~221 ops, the figure the paper quotes.
+pub fn camera_pipeline() -> Graph {
+    let mut g = Graph::new("camera");
+    let p: Vec<NodeId> = (0..25)
+        .map(|k| g.add_node(Op::Input, format!("p{}{}", k / 5, k % 5)))
+        .collect();
+    let at = |r: usize, c: usize| p[r * 5 + c];
+
+    // --- Demosaic (bilinear at an R site, with gradient-corrected G).
+    // R = centre.
+    let r_raw = at(2, 2);
+    // G = avg of 4-neighbours.
+    let gsum = adder_chain(&mut g, &[at(1, 2), at(2, 1), at(2, 3), at(3, 2)]);
+    let c2 = g.add_op(Op::Const(2));
+    let g_raw = g.add(Op::Ashr, &[gsum, c2]);
+    // B = avg of diagonal neighbours.
+    let bsum = adder_chain(&mut g, &[at(1, 1), at(1, 3), at(3, 1), at(3, 3)]);
+    let c2b = g.add_op(Op::Const(2));
+    let b_raw = g.add(Op::Ashr, &[bsum, c2b]);
+    // Gradient correction for G: g += (4*R - (R_left2 + R_right2 + R_up2 +
+    // R_down2)) >> 3 — the classic Malvar kernel shape.
+    let rsum = adder_chain(&mut g, &[at(0, 2), at(4, 2), at(2, 0), at(2, 4)]);
+    // 4*R via Mul with a const — camera deliberately contains no SHL (§V-A).
+    let four = g.add_op(Op::Const(4));
+    let r4 = g.add(Op::Mul, &[r_raw, four]);
+    let diff = g.add(Op::Sub, &[r4, rsum]);
+    let c3 = g.add_op(Op::Const(3));
+    let corr = g.add(Op::Ashr, &[diff, c3]);
+    let g_corr = g.add(Op::Add, &[g_raw, corr]);
+
+    // --- Black level subtraction + pedestal clamp (per channel).
+    let mut chans = Vec::new();
+    for (ch, raw) in [("r", r_raw), ("gch", g_corr), ("b", b_raw)] {
+        let bl = g.add_node(Op::Const(16), format!("black_{ch}"));
+        let sub = g.add(Op::Sub, &[raw, bl]);
+        let zero = g.add_op(Op::Const(0));
+        let c = g.add(Op::Max, &[sub, zero]);
+        chans.push(c);
+    }
+
+    // --- Lens shading correction: radial gain per channel (Q6).
+    let mut lsc = Vec::new();
+    for (i, &c) in chans.iter().enumerate() {
+        let gn = g.add_node(Op::Const(68 + 2 * i as i64), format!("lsc{i}"));
+        let m = g.add(Op::Mul, &[c, gn]);
+        let s = g.add_op(Op::Const(6));
+        lsc.push(g.add(Op::Ashr, &[m, s]));
+    }
+
+    // --- White balance gains (Q6 fixed point): ch = (ch * wb) >> 6.
+    let wb_gains = [72i64, 64, 80];
+    let mut wbch = Vec::new();
+    for (i, &c) in lsc.iter().enumerate() {
+        let wc = g.add_node(Op::Const(wb_gains[i]), format!("wb{i}"));
+        let m = g.add(Op::Mul, &[c, wc]);
+        let s = g.add_op(Op::Const(6));
+        wbch.push(g.add(Op::Ashr, &[m, s]));
+    }
+
+    // --- 3x3 color correction matrix (Q6): out_i = Σ_j M[i][j]*ch_j >> 6.
+    const CCM: [[i64; 3]; 3] = [[80, -12, -4], [-8, 76, -4], [-2, -14, 80]];
+    let mut ccm_out = Vec::new();
+    for row in CCM.iter() {
+        let mut terms = Vec::new();
+        for (j, &m) in row.iter().enumerate() {
+            let mc = g.add_op(Op::Const(m));
+            terms.push(g.add(Op::Mul, &[wbch[j], mc]));
+        }
+        let sum = adder_chain(&mut g, &terms);
+        let s = g.add_op(Op::Const(6));
+        ccm_out.push(g.add(Op::Ashr, &[sum, s]));
+    }
+
+    // --- Luma + sharpening (unsharp mask on the raw centre cross).
+    // Y = (77*R + 150*G + 29*B) >> 8.
+    let yr = g.add_op(Op::Const(77));
+    let ty_r = g.add(Op::Mul, &[ccm_out[0], yr]);
+    let yg = g.add_op(Op::Const(150));
+    let ty_g = g.add(Op::Mul, &[ccm_out[1], yg]);
+    let yb = g.add_op(Op::Const(29));
+    let ty_b = g.add(Op::Mul, &[ccm_out[2], yb]);
+    let ysum = adder_chain(&mut g, &[ty_r, ty_g, ty_b]);
+    let ysh = g.add_op(Op::Const(8));
+    let luma = g.add(Op::Ashr, &[ysum, ysh]);
+    // Highpass on the raw centre: hp = (4*centre - 4-neighbour sum) >> 2.
+    let four2 = g.add_op(Op::Const(4));
+    let c4x = g.add(Op::Mul, &[r_raw, four2]);
+    let hp = g.add(Op::Sub, &[c4x, gsum]);
+    let hsh = g.add_op(Op::Const(2));
+    let hp = g.add(Op::Ashr, &[hp, hsh]);
+    let amt = g.add_node(Op::Const(24), "sharp_amt");
+    let hp_amt = g.add(Op::Mul, &[hp, amt]);
+    let hsh2 = g.add_op(Op::Const(6));
+    let sharp = g.add(Op::Ashr, &[hp_amt, hsh2]);
+
+    // --- Saturation adjust around luma + sharpen add, per channel:
+    // c' = Y + ((c - Y) * sat) >> 6 + sharp.
+    let mut final_ch = Vec::new();
+    for (i, &c) in ccm_out.iter().enumerate() {
+        let d = g.add(Op::Sub, &[c, luma]);
+        let sat = g.add_node(Op::Const(80), format!("sat{i}"));
+        let ds = g.add(Op::Mul, &[d, sat]);
+        let ssh = g.add_op(Op::Const(6));
+        let ds = g.add(Op::Ashr, &[ds, ssh]);
+        let resat = g.add(Op::Add, &[luma, ds]);
+        final_ch.push(g.add(Op::Add, &[resat, sharp]));
+    }
+
+    // --- Per-channel tone curve + final clamp to [0, 255].
+    for &c in &final_ch {
+        let toned = tone_curve(&mut g, c);
+        let lo = g.add_op(Op::Const(0));
+        let hi = g.add_op(Op::Const(255));
+        let clamped = g.add(Op::Clamp, &[toned, lo, hi]);
+        g.add(Op::Output, &[clamped]);
+    }
+    g
+}
+
+/// One Laplacian pyramid level per output pixel: gaussian blur of a 3x3
+/// window, `lap = centre - blur`, then a remap curve
+/// `out = lap > 0 ? (lap*a)>>6 : (lap*b)>>6` plus magnitude clamp.
+pub fn laplacian_level() -> Graph {
+    let mut g = Graph::new("laplacian");
+    let px = window3(&mut g, "p");
+    const W: [i64; 9] = [1, 2, 1, 2, 4, 2, 1, 2, 1];
+    let mut terms = Vec::new();
+    for (k, &p) in px.iter().enumerate() {
+        let w = g.add_op(Op::Const(W[k]));
+        terms.push(g.add(Op::Mul, &[p, w]));
+    }
+    let sum = adder_chain(&mut g, &terms);
+    let sh = g.add_op(Op::Const(4));
+    let blur = g.add(Op::Ashr, &[sum, sh]);
+    let lap = g.add(Op::Sub, &[px[4], blur]);
+    // Remap: boost positive detail, damp negative.
+    let a = g.add_op(Op::Const(96));
+    let pa = g.add(Op::Mul, &[lap, a]);
+    let s1 = g.add_op(Op::Const(6));
+    let pos = g.add(Op::Ashr, &[pa, s1]);
+    let b = g.add_op(Op::Const(48));
+    let pb = g.add(Op::Mul, &[lap, b]);
+    let s2 = g.add_op(Op::Const(6));
+    let neg = g.add(Op::Ashr, &[pb, s2]);
+    let zero = g.add_op(Op::Const(0));
+    let is_pos = g.add(Op::Gt, &[lap, zero]);
+    let remapped = g.add(Op::Sel, &[is_pos, pos, neg]);
+    // Magnitude clamp and add back to blur.
+    let lim_lo = g.add_op(Op::Const(-64));
+    let lim_hi = g.add_op(Op::Const(64));
+    let limited = g.add(Op::Clamp, &[remapped, lim_lo, lim_hi]);
+    let out = g.add(Op::Add, &[blur, limited]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_evaluates_like_reference() {
+        let mut g = gaussian_blur();
+        g.validate().unwrap();
+        // Flat image: blur of constant 100 is 100 (16/16 weight sum).
+        assert_eq!(g.eval(&[100; 9]), vec![100]);
+        // Impulse at centre: 100*4/16 = 25.
+        let mut im = [0i64; 9];
+        im[4] = 100;
+        assert_eq!(g.eval(&im), vec![25]);
+    }
+
+    #[test]
+    fn gaussian_matches_scalar_model() {
+        let mut g = gaussian_blur();
+        const W: [i64; 9] = [1, 2, 1, 2, 4, 2, 1, 2, 1];
+        let px: Vec<i64> = (0..9).map(|k| (k * 13 + 7) % 200).collect();
+        let want = px.iter().zip(W).map(|(p, w)| p * w).sum::<i64>() >> 4;
+        assert_eq!(g.eval(&px), vec![want]);
+    }
+
+    #[test]
+    fn harris_flat_image_is_not_corner() {
+        let mut g = harris();
+        g.validate().unwrap();
+        assert_eq!(g.eval(&[50; 25]), vec![0]);
+    }
+
+    #[test]
+    fn harris_corner_fires() {
+        // Bright quadrant corner in a 5x5 window.
+        let mut g = harris();
+        let mut im = [0i64; 25];
+        for r in 0..5 {
+            for c in 0..5 {
+                if r >= 2 && c >= 2 {
+                    im[r * 5 + c] = 200;
+                }
+            }
+        }
+        let out = g.eval(&im);
+        assert!(out[0] > 0, "corner response was {}", out[0]);
+    }
+
+    #[test]
+    fn camera_pipeline_op_count_near_paper() {
+        let g = camera_pipeline();
+        let n = g.compute_len();
+        // Paper: 221 ops per output pixel. Our construction must land close.
+        assert!(
+            (180..=260).contains(&n),
+            "camera pipeline has {n} compute ops"
+        );
+    }
+
+    #[test]
+    fn camera_has_three_outputs_and_valid() {
+        let mut g = camera_pipeline();
+        g.validate().unwrap();
+        assert_eq!(g.output_ids().len(), 3);
+        let grey = g.eval(&[128; 25]);
+        for v in &grey {
+            assert!((0..=255).contains(v), "channel out of range: {v}");
+        }
+    }
+
+    #[test]
+    fn camera_avoids_shl_and_bitops() {
+        // §V-A: camera uses all baseline ops except SHL and LUT bit ops.
+        let g = camera_pipeline();
+        for n in &g.nodes {
+            assert!(
+                !matches!(n.op, Op::Shl | Op::And | Op::Or | Op::Xor | Op::Not),
+                "camera contains {:?}",
+                n.op
+            );
+        }
+    }
+
+    #[test]
+    fn laplacian_flat_is_identity() {
+        let mut g = laplacian_level();
+        g.validate().unwrap();
+        assert_eq!(g.eval(&[77; 9]), vec![77]);
+    }
+
+    #[test]
+    fn laplacian_boosts_positive_detail() {
+        let mut g = laplacian_level();
+        let mut im = [10i64; 9];
+        im[4] = 90; // bright centre
+        let out = g.eval(&im)[0];
+        // blur = (10*12 + 90*4)/16 = 30; lap = 60; remap = 60*96>>6 = 90 →
+        // clamp 64; out = 94.
+        assert_eq!(out, 94);
+    }
+
+    #[test]
+    fn sobel_gradients_have_expected_sign() {
+        let mut g = Graph::new("t");
+        let w = window3(&mut g, "p");
+        let gx = sobel_x(&mut g, &w);
+        let gy = sobel_y(&mut g, &w);
+        g.add(Op::Output, &[gx]);
+        g.add(Op::Output, &[gy]);
+        g.validate().unwrap();
+        // Horizontal ramp: p[r][c] = c * 10.
+        let im: Vec<i64> = (0..9).map(|k| ((k % 3) as i64) * 10).collect();
+        let out = g.eval(&im);
+        assert!(out[0] > 0, "gx on ramp: {}", out[0]);
+        assert_eq!(out[1], 0, "gy on horizontal ramp");
+    }
+}

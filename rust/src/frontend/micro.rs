@@ -1,0 +1,100 @@
+//! Micro applications used by the paper's illustrative figures and by unit
+//! tests: the Fig. 3 convolution and small MAC pipelines.
+
+use super::imaging::adder_chain;
+use crate::ir::{Graph, NodeId, Op};
+
+/// The exact running example of Fig. 3:
+/// `((((i0*w0 + i1*w1) + i2*w2) + i3*w3) + c)`.
+pub fn conv1d_fig3() -> Graph {
+    let mut g = Graph::new("conv1d");
+    let mut terms: Vec<NodeId> = Vec::new();
+    for k in 0..4 {
+        let i = g.add_node(Op::Input, format!("i{k}"));
+        let w = g.add_node(Op::Const(k + 1), format!("w{k}"));
+        terms.push(g.add(Op::Mul, &[i, w]));
+    }
+    let sum = adder_chain(&mut g, &terms);
+    let c = g.add_node(Op::Const(5), "c");
+    let out = g.add(Op::Add, &[sum, c]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// N-tap FIR: Σ x_k * w_k, used by property tests and benches.
+pub fn fir(n: usize) -> Graph {
+    let mut g = Graph::new("fir");
+    let mut terms = Vec::new();
+    for k in 0..n {
+        let i = g.add_node(Op::Input, format!("x{k}"));
+        let w = g.add_node(Op::Const((k as i64 % 7) - 3), format!("h{k}"));
+        terms.push(g.add(Op::Mul, &[i, w]));
+    }
+    let sum = adder_chain(&mut g, &terms);
+    g.add(Op::Output, &[sum]);
+    g
+}
+
+/// The two-subgraph merging example of Fig. 5:
+/// subgraph A: `(x + const) + y`  — add(add(x, c), y)
+/// subgraph B: `(shl(x, c) + y) + z` analogue built from the paper's shapes.
+pub fn fig5_subgraph_a() -> Graph {
+    let mut g = Graph::new("fig5a");
+    let c = g.add_node(Op::Const(3), "a0");
+    let a1 = g.add_op(Op::Add); // a1
+    let a2 = g.add_op(Op::Add); // a2
+    let x = g.add_op(Op::Input);
+    let y = g.add_op(Op::Input);
+    g.connect(x, a2, 0);
+    g.connect(c, a2, 1);
+    g.connect(a2, a1, 0);
+    g.connect(y, a1, 1);
+    g.add(Op::Output, &[a1]);
+    g
+}
+
+pub fn fig5_subgraph_b() -> Graph {
+    let mut g = Graph::new("fig5b");
+    let c = g.add_node(Op::Const(7), "b0");
+    let sh = g.add_op(Op::Shl); // b1
+    let b2 = g.add_op(Op::Add);
+    let b3 = g.add_op(Op::Add);
+    let x = g.add_op(Op::Input);
+    let y = g.add_op(Op::Input);
+    let z = g.add_op(Op::Input);
+    g.connect(x, sh, 0);
+    g.connect(c, sh, 1);
+    g.connect(z, b3, 0);
+    g.connect(y, b3, 1);
+    g.connect(b3, b2, 0);
+    g.connect(sh, b2, 1);
+    g.add(Op::Output, &[b2]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1d_matches_formula() {
+        let mut g = conv1d_fig3();
+        g.validate().unwrap();
+        // weights 1..4, c = 5.
+        let out = g.eval(&[10, 20, 30, 40]);
+        assert_eq!(out, vec![10 + 40 + 90 + 160 + 5]);
+    }
+
+    #[test]
+    fn fir_has_n_muls() {
+        let g = fir(8);
+        assert_eq!(g.op_histogram()["mul"], 8);
+        assert_eq!(g.op_histogram()["add"], 7);
+    }
+
+    #[test]
+    fn fig5_graphs_validate() {
+        fig5_subgraph_a().validate().unwrap();
+        fig5_subgraph_b().validate().unwrap();
+    }
+}

@@ -1,0 +1,191 @@
+//! Machine-learning kernels (§V-B): the common kernels of ResNet-50 and
+//! U-Net the paper specializes for — multi-channel convolution (Conv),
+//! residual block (Block), strided convolution (StrC) and down sample (DS).
+//! All are int16 quantized per-output-element dataflow graphs with a
+//! requantize (arithmetic shift + clamp) and ReLU tail.
+
+use super::imaging::adder_chain;
+use crate::ir::{Graph, NodeId, Op};
+
+/// Requantize: `clamp(x >> shift, -128, 127)` (int8-range activations kept
+/// in 16-bit words, like the paper's quantized ML kernels).
+fn requant(g: &mut Graph, x: NodeId, shift: i64) -> NodeId {
+    let s = g.add_node(Op::Const(shift), "rq_shift");
+    let shifted = g.add(Op::Ashr, &[x, s]);
+    let lo = g.add_node(Op::Const(-128), "rq_lo");
+    let hi = g.add_node(Op::Const(127), "rq_hi");
+    g.add(Op::Clamp, &[shifted, lo, hi])
+}
+
+/// ReLU as `max(x, 0)`.
+fn relu(g: &mut Graph, x: NodeId) -> NodeId {
+    let zero = g.add_node(Op::Const(0), "relu_zero");
+    g.add(Op::Max, &[x, zero])
+}
+
+/// One 3x3 single-channel MAC tree: Σ w_k * x_k with the weights as
+/// configuration constants (the paper's constant-register motivation,
+/// Fig. 2c).
+fn mac9(g: &mut Graph, xs: &[NodeId], tag: &str, wseed: i64) -> NodeId {
+    let mut terms = Vec::with_capacity(9);
+    for (k, &x) in xs.iter().enumerate() {
+        // Small deterministic weights in [-4, 4].
+        let w = ((wseed + k as i64 * 3) % 9) - 4;
+        let wc = g.add_node(Op::Const(w), format!("{tag}_w{k}"));
+        terms.push(g.add(Op::Mul, &[x, wc]));
+    }
+    adder_chain(g, &terms)
+}
+
+/// Multi-channel 3x3 convolution (Conv): 4 input channels, one output
+/// element. 36 MACs + bias + requant + ReLU.
+///
+/// Inputs: channel-major — ch0 p00..p22, ch1 p00..p22, ch2, ch3.
+pub fn conv_multichannel() -> Graph {
+    let mut g = Graph::new("conv");
+    let mut partials = Vec::new();
+    for ch in 0..4 {
+        let xs: Vec<NodeId> = (0..9)
+            .map(|k| g.add_node(Op::Input, format!("c{ch}p{}{}", k / 3, k % 3)))
+            .collect();
+        partials.push(mac9(&mut g, &xs, &format!("c{ch}"), ch as i64 + 1));
+    }
+    let acc = adder_chain(&mut g, &partials);
+    let bias = g.add_node(Op::Const(7), "bias");
+    let acc = g.add(Op::Add, &[acc, bias]);
+    let rq = requant(&mut g, acc, 5);
+    let out = relu(&mut g, rq);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// Residual block tail (Block): a 3x3 single-channel conv plus the skip
+/// connection, then requant and ReLU — the fused pattern at the end of
+/// every ResNet block.
+///
+/// Inputs: 9 window pixels, then the skip-path activation.
+pub fn residual_block() -> Graph {
+    let mut g = Graph::new("block");
+    let xs: Vec<NodeId> = (0..9)
+        .map(|k| g.add_node(Op::Input, format!("p{}{}", k / 3, k % 3)))
+        .collect();
+    let skip = g.add_node(Op::Input, "skip");
+    let acc = mac9(&mut g, &xs, "m", 2);
+    let rq = requant(&mut g, acc, 4);
+    let sum = g.add(Op::Add, &[rq, skip]);
+    let out = relu(&mut g, sum);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// Strided convolution (StrC): 3x3 conv over 2 channels with stride 2 —
+/// per-output-element graph (stride shows up in the data layout, the
+/// compute graph is an 18-MAC tree) plus requant/ReLU.
+pub fn strided_conv() -> Graph {
+    let mut g = Graph::new("strc");
+    let mut partials = Vec::new();
+    for ch in 0..2 {
+        let xs: Vec<NodeId> = (0..9)
+            .map(|k| g.add_node(Op::Input, format!("c{ch}s{}{}", k / 3, k % 3)))
+            .collect();
+        partials.push(mac9(&mut g, &xs, &format!("s{ch}"), 2 * ch as i64 + 1));
+    }
+    let acc = g.add(Op::Add, &[partials[0], partials[1]]);
+    let rq = requant(&mut g, acc, 4);
+    let out = relu(&mut g, rq);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// Down sample (DS): 2x2 max-pool followed by an averaging 1x1 with
+/// requant — U-Net's downsampling step.
+///
+/// Inputs: the 2x2 pool window.
+pub fn downsample() -> Graph {
+    let mut g = Graph::new("ds");
+    let xs: Vec<NodeId> = (0..4)
+        .map(|k| g.add_node(Op::Input, format!("q{}{}", k / 2, k % 2)))
+        .collect();
+    let m0 = g.add(Op::Max, &[xs[0], xs[1]]);
+    let m1 = g.add(Op::Max, &[xs[2], xs[3]]);
+    let m = g.add(Op::Max, &[m0, m1]);
+    // Scale by a learned Q6 gain then requant.
+    let gain = g.add_node(Op::Const(48), "gain");
+    let scaled = g.add(Op::Mul, &[m, gain]);
+    let rq = requant(&mut g, scaled, 6);
+    let out = relu(&mut g, rq);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_zero_input_gives_bias_only() {
+        let mut g = conv_multichannel();
+        g.validate().unwrap();
+        let out = g.eval(&[0; 36]);
+        // bias 7 >> 5 = 0 → relu 0.
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn conv_output_in_int8_range() {
+        let mut g = conv_multichannel();
+        let xs: Vec<i64> = (0..36).map(|k| (k * 29 % 255) - 128).collect();
+        let out = g.eval(&xs)[0];
+        assert!((0..=127).contains(&out), "{out}");
+    }
+
+    #[test]
+    fn block_passes_skip_through_on_zero_conv() {
+        let mut g = residual_block();
+        g.validate().unwrap();
+        let mut xs = vec![0i64; 10];
+        xs[9] = 55; // skip (inputs are in node-id order: p00..p22, skip)
+        assert_eq!(g.eval(&xs), vec![55]);
+    }
+
+    #[test]
+    fn block_relu_clips_negative_skip() {
+        let mut g = residual_block();
+        let mut xs = vec![0i64; 10];
+        xs[9] = -20;
+        assert_eq!(g.eval(&xs), vec![0]);
+    }
+
+    #[test]
+    fn strided_conv_valid_and_bounded() {
+        let mut g = strided_conv();
+        g.validate().unwrap();
+        let xs: Vec<i64> = (0..18).map(|k| (k * 7 % 100) - 50).collect();
+        let out = g.eval(&xs)[0];
+        assert!((0..=127).contains(&out));
+    }
+
+    #[test]
+    fn downsample_takes_max_then_scales() {
+        let mut g = downsample();
+        g.validate().unwrap();
+        // max = 100; 100*48>>6 = 75; clamp→75; relu→75.
+        assert_eq!(g.eval(&[10, 100, 20, 30]), vec![75]);
+    }
+
+    #[test]
+    fn downsample_is_permutation_invariant() {
+        let mut g = downsample();
+        let a = g.eval(&[4, 9, 1, 7]);
+        let b = g.eval(&[9, 7, 4, 1]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ml_kernels_use_mul_add_heavily() {
+        let g = conv_multichannel();
+        let h = g.op_histogram();
+        assert_eq!(h["mul"], 36);
+        assert!(h["add"] >= 35);
+    }
+}

@@ -1,0 +1,151 @@
+//! Application frontend: constructs the CoreIR-equivalent dataflow graphs
+//! the paper's Halide compiler would produce.
+//!
+//! The analysis passes operate on per-output-pixel dataflow graphs — exactly
+//! the granularity the paper mines (e.g. "camera pipeline … needs 221
+//! operations to compute an output pixel"). Each builder returns one such
+//! graph; window layout conventions are documented per app so the CGRA
+//! simulator and the JAX oracle agree on input ordering.
+
+pub mod imaging;
+pub mod micro;
+pub mod ml;
+
+use crate::ir::Graph;
+
+/// Application domain, mirroring the paper's two evaluation domains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Imaging,
+    Ml,
+    Micro,
+}
+
+/// A named application with its dataflow graph.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub domain: Domain,
+    pub graph: Graph,
+}
+
+/// Registry of every application used in the paper's evaluation.
+pub struct AppSuite;
+
+impl AppSuite {
+    /// The four image-processing applications of §V-A.
+    pub fn imaging() -> Vec<App> {
+        vec![
+            App {
+                name: "harris",
+                domain: Domain::Imaging,
+                graph: imaging::harris(),
+            },
+            App {
+                name: "gaussian",
+                domain: Domain::Imaging,
+                graph: imaging::gaussian_blur(),
+            },
+            App {
+                name: "camera",
+                domain: Domain::Imaging,
+                graph: imaging::camera_pipeline(),
+            },
+            App {
+                name: "laplacian",
+                domain: Domain::Imaging,
+                graph: imaging::laplacian_level(),
+            },
+        ]
+    }
+
+    /// The four ML kernels of §V-B (ResNet-50 / U-Net building blocks).
+    pub fn ml() -> Vec<App> {
+        vec![
+            App {
+                name: "conv",
+                domain: Domain::Ml,
+                graph: ml::conv_multichannel(),
+            },
+            App {
+                name: "block",
+                domain: Domain::Ml,
+                graph: ml::residual_block(),
+            },
+            App {
+                name: "strc",
+                domain: Domain::Ml,
+                graph: ml::strided_conv(),
+            },
+            App {
+                name: "ds",
+                domain: Domain::Ml,
+                graph: ml::downsample(),
+            },
+        ]
+    }
+
+    pub fn all() -> Vec<App> {
+        let mut v = Self::imaging();
+        v.extend(Self::ml());
+        v
+    }
+
+    /// Look an application up by name (used by the CLI).
+    pub fn by_name(name: &str) -> Option<App> {
+        let micro = App {
+            name: "conv1d",
+            domain: Domain::Micro,
+            graph: micro::conv1d_fig3(),
+        };
+        Self::all()
+            .into_iter()
+            .chain(std::iter::once(micro))
+            .find(|a| a.name == name)
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        let mut v: Vec<_> = Self::all().iter().map(|a| a.name).collect();
+        v.push("conv1d");
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_apps_validate() {
+        for mut app in AppSuite::all() {
+            app.graph
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+        }
+    }
+
+    #[test]
+    fn suite_has_eight_paper_apps() {
+        assert_eq!(AppSuite::imaging().len(), 4);
+        assert_eq!(AppSuite::ml().len(), 4);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(AppSuite::by_name("camera").is_some());
+        assert!(AppSuite::by_name("conv1d").is_some());
+        assert!(AppSuite::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn apps_are_nontrivial() {
+        for app in AppSuite::all() {
+            assert!(
+                app.graph.compute_len() >= 5,
+                "{} too small: {}",
+                app.name,
+                app.graph.compute_len()
+            );
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Canonical codes for small pattern graphs.
+//!
+//! The miner deduplicates candidate patterns by a canonical string: the
+//! lexicographically minimal encoding over all node orderings that respect
+//! label classes. Patterns are small (the miner caps them well under 10
+//! nodes), so permutation search with label-class pruning is exact and fast.
+
+use super::graph::Graph;
+
+/// Encode a graph under a fixed node permutation `perm` (perm[new] = old).
+fn encode(g: &Graph, perm: &[usize]) -> String {
+    let mut inv = vec![0usize; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old] = new;
+    }
+    let mut parts: Vec<String> = Vec::with_capacity(g.len() + g.edges.len());
+    for &old in perm {
+        parts.push(g.nodes[old].op.label().to_string());
+    }
+    let mut edges: Vec<(usize, usize, u8)> = g
+        .edges
+        .iter()
+        .map(|e| {
+            // Port is identity-relevant only for non-commutative consumers.
+            let port = if g.nodes[e.dst.index()].op.commutative() {
+                u8::MAX
+            } else {
+                e.dst_port
+            };
+            (inv[e.src.index()], inv[e.dst.index()], port)
+        })
+        .collect();
+    edges.sort_unstable();
+    for (s, d, p) in edges {
+        parts.push(format!("{s}>{d}@{p}"));
+    }
+    parts.join("|")
+}
+
+/// Canonical code: minimum encoding over all label-respecting permutations.
+pub fn canonical_code(g: &Graph) -> String {
+    let n = g.len();
+    if n == 0 {
+        return String::new();
+    }
+    // Only permutations that keep labels in sorted order can be minimal, so
+    // sort nodes by label and permute within label classes.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| g.nodes[i].op.label());
+
+    // Label class boundaries.
+    let mut classes: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0;
+    for i in 1..=n {
+        if i == n || g.nodes[order[i]].op.label() != g.nodes[order[start]].op.label() {
+            classes.push((start, i));
+            start = i;
+        }
+    }
+
+    let mut best: Option<String> = None;
+    let mut perm = order.clone();
+    permute_classes(g, &mut perm, &classes, 0, &mut best);
+    best.unwrap()
+}
+
+fn permute_classes(
+    g: &Graph,
+    perm: &mut Vec<usize>,
+    classes: &[(usize, usize)],
+    ci: usize,
+    best: &mut Option<String>,
+) {
+    if ci == classes.len() {
+        let code = encode(g, perm);
+        if best.as_ref().map_or(true, |b| code < *b) {
+            *best = Some(code);
+        }
+        return;
+    }
+    let (lo, hi) = classes[ci];
+    heap_permute(g, perm, lo, hi, classes, ci, best);
+}
+
+fn heap_permute(
+    g: &Graph,
+    perm: &mut Vec<usize>,
+    lo: usize,
+    hi: usize,
+    classes: &[(usize, usize)],
+    ci: usize,
+    best: &mut Option<String>,
+) {
+    // Recursive permutation of perm[lo..hi].
+    if hi - lo <= 1 {
+        permute_classes(g, perm, classes, ci + 1, best);
+        return;
+    }
+    for i in lo..hi {
+        perm.swap(lo, i);
+        heap_permute(g, perm, lo + 1, hi, classes, ci, best);
+        perm.swap(lo, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::Op;
+
+    fn mul_add(order_flip: bool) -> Graph {
+        let mut g = Graph::new("p");
+        if order_flip {
+            let a = g.add_op(Op::Add);
+            let m = g.add_op(Op::Mul);
+            g.connect(m, a, 1);
+        } else {
+            let m = g.add_op(Op::Mul);
+            let a = g.add_op(Op::Add);
+            g.connect(m, a, 0);
+        }
+        g
+    }
+
+    #[test]
+    fn isomorphic_graphs_share_code() {
+        // add is commutative so port differences are erased too.
+        assert_eq!(canonical_code(&mul_add(false)), canonical_code(&mul_add(true)));
+    }
+
+    #[test]
+    fn different_ops_differ() {
+        let mut g1 = Graph::new("a");
+        g1.add_op(Op::Add);
+        let mut g2 = Graph::new("b");
+        g2.add_op(Op::Mul);
+        assert_ne!(canonical_code(&g1), canonical_code(&g2));
+    }
+
+    #[test]
+    fn noncommutative_port_is_significant() {
+        let mk = |port| {
+            let mut g = Graph::new("p");
+            let c = g.add_op(Op::Const(0));
+            let s = g.add_op(Op::Sub);
+            g.connect(c, s, port);
+            g
+        };
+        assert_ne!(canonical_code(&mk(0)), canonical_code(&mk(1)));
+    }
+
+    #[test]
+    fn const_values_do_not_matter() {
+        let mk = |v| {
+            let mut g = Graph::new("p");
+            let c = g.add_op(Op::Const(v));
+            let s = g.add_op(Op::Abs);
+            let _ = s;
+            let a = g.add_op(Op::Add);
+            g.connect(c, a, 0);
+            g
+        };
+        assert_eq!(canonical_code(&mk(1)), canonical_code(&mk(42)));
+    }
+
+    #[test]
+    fn larger_automorphic_chain() {
+        // mul->add->add vs a permuted construction order.
+        let mut g1 = Graph::new("g1");
+        let m = g1.add_op(Op::Mul);
+        let a1 = g1.add_op(Op::Add);
+        let a2 = g1.add_op(Op::Add);
+        g1.connect(m, a1, 0);
+        g1.connect(a1, a2, 1);
+
+        let mut g2 = Graph::new("g2");
+        let b2 = g2.add_op(Op::Add);
+        let b1 = g2.add_op(Op::Add);
+        let n = g2.add_op(Op::Mul);
+        g2.connect(n, b1, 1);
+        g2.connect(b1, b2, 0);
+
+        assert_eq!(canonical_code(&g1), canonical_code(&g2));
+    }
+}

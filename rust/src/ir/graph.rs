@@ -1,0 +1,426 @@
+//! Dataflow graph: the CoreIR-equivalent IR all analysis passes operate on.
+//!
+//! Nodes are primitive ops; edges carry one word from a producer's single
+//! output to a consumer input *port*. Graphs are append-only: passes build
+//! new graphs rather than mutating.
+
+use super::op::{Op, Word};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    /// Optional human-readable tag from the frontend (e.g. "luma", "gx").
+    pub name: String,
+}
+
+/// Directed edge `src -> (dst, dst_port)`. All ops have a single output, so
+/// there is no source port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub dst_port: u8,
+}
+
+/// A word-level dataflow graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    /// `in_edges[n][p]` = producer feeding port `p` of node `n`.
+    in_cache: Vec<Vec<Option<NodeId>>>,
+    out_cache: Vec<Vec<(NodeId, u8)>>,
+    cache_valid: bool,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_node(&mut self, op: Op, name: impl Into<String>) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node {
+            id,
+            op,
+            name: name.into(),
+        });
+        self.cache_valid = false;
+        id
+    }
+
+    pub fn add_op(&mut self, op: Op) -> NodeId {
+        self.add_node(op, "")
+    }
+
+    pub fn connect(&mut self, src: NodeId, dst: NodeId, dst_port: u8) {
+        debug_assert!((dst_port as usize) < self.nodes[dst.index()].op.arity());
+        self.edges.push(Edge { src, dst, dst_port });
+        self.cache_valid = false;
+    }
+
+    /// Add a node and connect all of its inputs in port order.
+    pub fn add(&mut self, op: Op, inputs: &[NodeId]) -> NodeId {
+        assert_eq!(op.arity(), inputs.len(), "{op:?} arity mismatch");
+        let id = self.add_op(op);
+        for (p, &src) in inputs.iter().enumerate() {
+            self.connect(src, id, p as u8);
+        }
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.nodes.len() as u32).map(NodeId)
+    }
+
+    /// Number of compute (minable) nodes.
+    pub fn compute_len(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_compute()).count()
+    }
+
+    fn build_cache(&mut self) {
+        let n = self.nodes.len();
+        let mut ins: Vec<Vec<Option<NodeId>>> = self
+            .nodes
+            .iter()
+            .map(|nd| vec![None; nd.op.arity()])
+            .collect();
+        let mut outs: Vec<Vec<(NodeId, u8)>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            ins[e.dst.index()][e.dst_port as usize] = Some(e.src);
+            outs[e.src.index()].push((e.dst, e.dst_port));
+        }
+        self.in_cache = ins;
+        self.out_cache = outs;
+        self.cache_valid = true;
+    }
+
+    /// (Re)build adjacency caches if stale. Called by all accessors; cheap
+    /// when already valid.
+    pub fn freeze(&mut self) {
+        if !self.cache_valid {
+            self.build_cache();
+        }
+    }
+
+    /// Producers per input port (None = unconnected). Requires `freeze`.
+    pub fn inputs_of(&self, id: NodeId) -> &[Option<NodeId>] {
+        debug_assert!(self.cache_valid, "call freeze() first");
+        &self.in_cache[id.index()]
+    }
+
+    /// Consumers `(node, port)` of a node's output. Requires `freeze`.
+    pub fn outputs_of(&self, id: NodeId) -> &[(NodeId, u8)] {
+        debug_assert!(self.cache_valid, "call freeze() first");
+        &self.out_cache[id.index()]
+    }
+
+    /// Fan-out (consumer count) of a node.
+    pub fn fanout(&self, id: NodeId) -> usize {
+        self.outputs_of(id).len()
+    }
+
+    /// Validate structural invariants: all ports connected exactly once,
+    /// ports in range, graph acyclic.
+    pub fn validate(&mut self) -> Result<(), String> {
+        self.freeze();
+        let mut seen: HashMap<(NodeId, u8), usize> = HashMap::new();
+        for e in &self.edges {
+            if e.src.index() >= self.nodes.len() || e.dst.index() >= self.nodes.len() {
+                return Err(format!("edge {e:?} references missing node"));
+            }
+            if e.dst_port as usize >= self.nodes[e.dst.index()].op.arity() {
+                return Err(format!("edge {e:?} port out of range"));
+            }
+            *seen.entry((e.dst, e.dst_port)).or_insert(0) += 1;
+        }
+        for ((n, p), c) in &seen {
+            if *c > 1 {
+                return Err(format!("port {p} of {n} driven {c} times"));
+            }
+        }
+        for nd in &self.nodes {
+            for p in 0..nd.op.arity() as u8 {
+                if !seen.contains_key(&(nd.id, p)) {
+                    return Err(format!(
+                        "port {p} of {} ({:?}) unconnected",
+                        nd.id, nd.op
+                    ));
+                }
+            }
+        }
+        self.topo_order()
+            .map(|_| ())
+            .ok_or_else(|| "graph has a cycle".to_string())
+    }
+
+    /// Kahn topological order; `None` if cyclic.
+    pub fn topo_order(&mut self) -> Option<Vec<NodeId>> {
+        self.freeze();
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.dst.index()] += 1;
+        }
+        let mut stack: Vec<NodeId> = (0..n as u32)
+            .map(NodeId)
+            .filter(|id| indeg[id.index()] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = stack.pop() {
+            order.push(id);
+            for &(dst, _) in &self.out_cache[id.index()] {
+                indeg[dst.index()] -= 1;
+                if indeg[dst.index()] == 0 {
+                    stack.push(dst);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Evaluate the graph: bind each `Input` node (in id order) to the
+    /// corresponding value, return values of `Output` nodes in id order.
+    pub fn eval(&mut self, inputs: &[Word]) -> Vec<Word> {
+        let order = self.topo_order().expect("eval requires acyclic graph");
+        let mut vals: Vec<Word> = vec![0; self.nodes.len()];
+        let mut in_idx = 0usize;
+        // Bind inputs in node-id order for determinism.
+        for id in self.node_ids() {
+            if self.nodes[id.index()].op == Op::Input {
+                vals[id.index()] = super::op::truncate(inputs[in_idx]);
+                in_idx += 1;
+            }
+        }
+        assert_eq!(in_idx, inputs.len(), "input count mismatch");
+        for id in order {
+            let op = self.nodes[id.index()].op;
+            if op == Op::Input {
+                continue;
+            }
+            let args: Vec<Word> = self.in_cache[id.index()]
+                .iter()
+                .map(|src| vals[src.expect("unconnected port in eval").index()])
+                .collect();
+            vals[id.index()] = op.eval(&args);
+        }
+        self.nodes
+            .iter()
+            .filter(|n| n.op == Op::Output)
+            .map(|n| vals[n.id.index()])
+            .collect()
+    }
+
+    /// Input node ids in id order.
+    pub fn input_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.op == Op::Input)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Output node ids in id order.
+    pub fn output_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.op == Op::Output)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Histogram of compute-op labels, useful for reports and PE1 synthesis.
+    pub fn op_histogram(&self) -> HashMap<&'static str, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            if n.op.is_compute() {
+                *h.entry(n.op.label()).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    /// Extract the induced subgraph over `ids` (compute nodes), remapping to
+    /// fresh ids in the returned pattern. Edges whose endpoints are both in
+    /// `ids` are kept. Order of `ids` defines new node order.
+    pub fn induced_subgraph(&self, ids: &[NodeId], name: &str) -> Graph {
+        let mut g = Graph::new(name);
+        let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+        for &id in ids {
+            let nd = self.node(id);
+            let nid = g.add_node(nd.op, nd.name.clone());
+            remap.insert(id, nid);
+        }
+        for e in &self.edges {
+            if let (Some(&s), Some(&d)) = (remap.get(&e.src), remap.get(&e.dst)) {
+                g.connect(s, d, e.dst_port);
+            }
+        }
+        g
+    }
+
+    /// DOT rendering for debugging / figures.
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name);
+        for n in &self.nodes {
+            let label = if n.name.is_empty() {
+                format!("{}", n.op.label())
+            } else {
+                format!("{}\\n{}", n.op.label(), n.name)
+            };
+            let shape = match n.op {
+                Op::Input | Op::Output => "ellipse",
+                Op::Const(_) => "diamond",
+                _ => "box",
+            };
+            s.push_str(&format!(
+                "  {} [label=\"{}\", shape={}];\n",
+                n.id, label, shape
+            ));
+        }
+        for e in &self.edges {
+            s.push_str(&format!(
+                "  {} -> {} [label=\"{}\"];\n",
+                e.src, e.dst, e.dst_port
+            ));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mac_graph() -> Graph {
+        // out = a*b + c
+        let mut g = Graph::new("mac");
+        let a = g.add_op(Op::Input);
+        let b = g.add_op(Op::Input);
+        let c = g.add_op(Op::Input);
+        let m = g.add(Op::Mul, &[a, b]);
+        let s = g.add(Op::Add, &[m, c]);
+        g.add(Op::Output, &[s]);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let mut g = mac_graph();
+        g.validate().unwrap();
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.compute_len(), 2);
+    }
+
+    #[test]
+    fn eval_mac() {
+        let mut g = mac_graph();
+        assert_eq!(g.eval(&[3, 4, 5]), vec![17]);
+        assert_eq!(g.eval(&[-2, 7, 1]), vec![-13]);
+    }
+
+    #[test]
+    fn validate_catches_unconnected_port() {
+        let mut g = Graph::new("bad");
+        let a = g.add_op(Op::Input);
+        let s = g.add_op(Op::Add);
+        g.connect(a, s, 0); // port 1 left dangling
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_double_drive() {
+        let mut g = Graph::new("bad");
+        let a = g.add_op(Op::Input);
+        let b = g.add_op(Op::Input);
+        let n = g.add_op(Op::Abs);
+        g.connect(a, n, 0);
+        g.connect(b, n, 0);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_cycle() {
+        let mut g = Graph::new("cyc");
+        let x = g.add_op(Op::Add);
+        let y = g.add_op(Op::Add);
+        g.connect(x, y, 0);
+        g.connect(x, y, 1);
+        g.connect(y, x, 0);
+        g.connect(y, x, 1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let mut g = mac_graph();
+        let order = g.topo_order().unwrap();
+        let pos: HashMap<NodeId, usize> =
+            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for e in g.edges.clone() {
+            assert!(pos[&e.src] < pos[&e.dst]);
+        }
+    }
+
+    #[test]
+    fn induced_subgraph_keeps_internal_edges() {
+        let g = mac_graph();
+        // Take the mul and add nodes (ids 3, 4).
+        let sub = g.induced_subgraph(&[NodeId(3), NodeId(4)], "sub");
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.edges.len(), 1);
+        assert_eq!(sub.edges[0].dst_port, 0);
+    }
+
+    #[test]
+    fn op_histogram_counts() {
+        let g = mac_graph();
+        let h = g.op_histogram();
+        assert_eq!(h.get("mul"), Some(&1));
+        assert_eq!(h.get("add"), Some(&1));
+        assert_eq!(h.get("in"), None);
+    }
+
+    #[test]
+    fn dot_contains_nodes() {
+        let g = mac_graph();
+        let dot = g.to_dot();
+        assert!(dot.contains("mul"));
+        assert!(dot.contains("->"));
+    }
+}

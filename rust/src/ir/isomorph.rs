@@ -1,0 +1,399 @@
+//! Subgraph isomorphism: find every occurrence of a small connected pattern
+//! in a large application graph.
+//!
+//! Matching semantics follow the paper's CoreIR interpretation:
+//! - node labels must match (`Op::label`, const values erased),
+//! - every pattern edge must exist between the mapped endpoints,
+//! - input *ports* must match exactly for non-commutative consumers, and
+//!   may be permuted (injectively) for commutative consumers,
+//! - extra target edges are allowed (non-induced matching — a mined `add`
+//!   may have fan-out in the application).
+
+use super::graph::{Graph, NodeId};
+use std::collections::{BTreeSet, HashMap};
+
+/// A single occurrence: `map[i]` is the target node that pattern node `i`
+/// maps to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Occurrence {
+    pub map: Vec<NodeId>,
+}
+
+impl Occurrence {
+    /// The set of target nodes covered, as a sorted vec (occurrences that
+    /// differ only by pattern automorphism share this).
+    pub fn node_set(&self) -> Vec<NodeId> {
+        let mut v = self.map.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct MatchConfig {
+    /// Hard cap on occurrences returned (guards pathological patterns).
+    pub max_occurrences: usize,
+}
+
+impl Default for MatchConfig {
+    fn default() -> Self {
+        MatchConfig {
+            max_occurrences: 200_000,
+        }
+    }
+}
+
+/// BFS order over pattern nodes starting at 0; pattern must be connected
+/// (undirected sense). Returns None if disconnected.
+fn bfs_order(pattern: &Graph) -> Option<Vec<usize>> {
+    let n = pattern.len();
+    if n == 0 {
+        return Some(vec![]);
+    }
+    let mut adj = vec![Vec::new(); n];
+    for e in &pattern.edges {
+        adj[e.src.index()].push(e.dst.index());
+        adj[e.dst.index()].push(e.src.index());
+    }
+    let mut seen = vec![false; n];
+    let mut order = vec![0usize];
+    seen[0] = true;
+    let mut head = 0;
+    while head < order.len() {
+        let u = order[head];
+        head += 1;
+        for &v in &adj[u] {
+            if !seen[v] {
+                seen[v] = true;
+                order.push(v);
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// Check that the in-edges of every pattern node admit an injective port
+/// assignment onto the target's in-edges under the full node map.
+fn ports_feasible(pattern: &Graph, target: &Graph, map: &[NodeId]) -> bool {
+    for pd in pattern.node_ids() {
+        let op = pattern.node(pd).op;
+        let in_edges: Vec<_> = pattern
+            .edges
+            .iter()
+            .filter(|e| e.dst == pd)
+            .collect();
+        if in_edges.is_empty() {
+            continue;
+        }
+        let td = map[pd.index()];
+        let tins = target.inputs_of(td);
+        if !op.commutative() {
+            for e in &in_edges {
+                let want = map[e.src.index()];
+                if tins.get(e.dst_port as usize).copied().flatten() != Some(want) {
+                    return false;
+                }
+            }
+        } else {
+            // Injective assignment of pattern in-edges to target ports whose
+            // drivers match; arity <= 3 so brute-force.
+            let k = in_edges.len();
+            let ports: Vec<usize> = (0..tins.len()).collect();
+            if !assign(&in_edges, &ports, tins, map, 0, &mut vec![false; tins.len()]) {
+                return false;
+            }
+            fn assign(
+                in_edges: &[&super::graph::Edge],
+                ports: &[usize],
+                tins: &[Option<NodeId>],
+                map: &[NodeId],
+                i: usize,
+                used: &mut Vec<bool>,
+            ) -> bool {
+                if i == in_edges.len() {
+                    return true;
+                }
+                let want = map[in_edges[i].src.index()];
+                for &p in ports {
+                    if !used[p] && tins[p] == Some(want) {
+                        used[p] = true;
+                        if assign(in_edges, ports, tins, map, i + 1, used) {
+                            used[p] = false;
+                            return true;
+                        }
+                        used[p] = false;
+                    }
+                }
+                false
+            }
+            let _ = k;
+        }
+    }
+    true
+}
+
+/// Weaker incremental check used during backtracking: every pattern edge
+/// between mapped nodes has *some* corresponding target edge (ports checked
+/// by the final `ports_feasible`).
+fn edge_exists(target: &Graph, ts: NodeId, td: NodeId, port: u8, commutative: bool) -> bool {
+    let tins = target.inputs_of(td);
+    if commutative {
+        tins.iter().any(|&x| x == Some(ts))
+    } else {
+        tins.get(port as usize).copied().flatten() == Some(ts)
+    }
+}
+
+/// Find all occurrences of `pattern` in `target`. Both graphs must be
+/// frozen (the function freezes them itself — needs `&mut`).
+pub fn find_occurrences(pattern: &mut Graph, target: &mut Graph, cfg: &MatchConfig) -> Vec<Occurrence> {
+    pattern.freeze();
+    target.freeze();
+    let order = match bfs_order(pattern) {
+        Some(o) => o,
+        None => return vec![],
+    };
+    if order.is_empty() {
+        return vec![];
+    }
+
+    // Candidate target nodes per label.
+    let mut by_label: HashMap<&'static str, Vec<NodeId>> = HashMap::new();
+    for n in &target.nodes {
+        if n.op.is_compute() {
+            by_label.entry(n.op.label()).or_default().push(n.id);
+        }
+    }
+
+    let mut results = Vec::new();
+    let mut map: Vec<Option<NodeId>> = vec![None; pattern.len()];
+    let mut used: BTreeSet<NodeId> = BTreeSet::new();
+
+    fn backtrack(
+        pattern: &Graph,
+        target: &Graph,
+        order: &[usize],
+        depth: usize,
+        by_label: &HashMap<&'static str, Vec<NodeId>>,
+        map: &mut Vec<Option<NodeId>>,
+        used: &mut BTreeSet<NodeId>,
+        results: &mut Vec<Occurrence>,
+        cfg: &MatchConfig,
+    ) {
+        if results.len() >= cfg.max_occurrences {
+            return;
+        }
+        if depth == order.len() {
+            let full: Vec<NodeId> = map.iter().map(|m| m.unwrap()).collect();
+            if ports_feasible(pattern, target, &full) {
+                results.push(Occurrence { map: full });
+            }
+            return;
+        }
+        let p = order[depth];
+        let plabel = pattern.nodes[p].op.label();
+        let Some(cands) = by_label.get(plabel) else {
+            return;
+        };
+        'cand: for &t in cands {
+            if used.contains(&t) {
+                continue;
+            }
+            // Check edges between p and already-mapped pattern nodes.
+            for e in &pattern.edges {
+                let (ps, pd) = (e.src.index(), e.dst.index());
+                if ps == p && map[pd].is_some() {
+                    let commut = pattern.nodes[pd].op.commutative();
+                    if !edge_exists(target, t, map[pd].unwrap(), e.dst_port, commut) {
+                        continue 'cand;
+                    }
+                } else if pd == p && map[ps].is_some() {
+                    let commut = pattern.nodes[pd].op.commutative();
+                    if !edge_exists(target, map[ps].unwrap(), t, e.dst_port, commut) {
+                        continue 'cand;
+                    }
+                }
+            }
+            map[p] = Some(t);
+            used.insert(t);
+            backtrack(
+                pattern, target, order, depth + 1, by_label, map, used, results, cfg,
+            );
+            used.remove(&t);
+            map[p] = None;
+        }
+    }
+
+    backtrack(
+        pattern,
+        target,
+        &order,
+        0,
+        &by_label,
+        &mut map,
+        &mut used,
+        &mut results,
+        cfg,
+    );
+    results
+}
+
+/// Deduplicate occurrences that cover the same target node set (pattern
+/// automorphisms). Keeps the first representative of each set.
+pub fn distinct_node_sets(occs: &[Occurrence]) -> Vec<Occurrence> {
+    let mut seen: BTreeSet<Vec<NodeId>> = BTreeSet::new();
+    let mut out = Vec::new();
+    for o in occs {
+        if seen.insert(o.node_set()) {
+            out.push(o.clone());
+        }
+    }
+    out
+}
+
+/// GRAMI-style MNI (minimum node image) support: for each pattern node, the
+/// number of distinct target nodes it maps to across all occurrences; the
+/// support is the minimum over pattern nodes.
+pub fn mni_support(pattern_len: usize, occs: &[Occurrence]) -> usize {
+    if occs.is_empty() {
+        return 0;
+    }
+    (0..pattern_len)
+        .map(|i| {
+            occs.iter()
+                .map(|o| o.map[i])
+                .collect::<BTreeSet<_>>()
+                .len()
+        })
+        .min()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::Op;
+
+    /// conv-like chain: ((i0*w0 + i1*w1) + i2*w2)
+    fn conv_chain() -> Graph {
+        let mut g = Graph::new("conv");
+        let mut prev = None;
+        for k in 0..3 {
+            let i = g.add_op(Op::Input);
+            let w = g.add_op(Op::Const(k));
+            let m = g.add(Op::Mul, &[i, w]);
+            prev = Some(match prev {
+                None => m,
+                Some(p) => g.add(Op::Add, &[p, m]),
+            });
+        }
+        g.add(Op::Output, &[prev.unwrap()]);
+        g
+    }
+
+    fn mul_pattern() -> Graph {
+        let mut p = Graph::new("mul");
+        p.add_op(Op::Mul);
+        p
+    }
+
+    #[test]
+    fn single_node_pattern_counts_all_muls() {
+        let mut target = conv_chain();
+        let mut pat = mul_pattern();
+        let occs = find_occurrences(&mut pat, &mut target, &MatchConfig::default());
+        assert_eq!(occs.len(), 3);
+    }
+
+    #[test]
+    fn mul_add_pattern_matches_twice() {
+        let mut target = conv_chain();
+        // pattern: mul -> add (any port: add commutative)
+        let mut pat = Graph::new("muladd");
+        let m = pat.add_op(Op::Mul);
+        let a = pat.add_op(Op::Add);
+        pat.connect(m, a, 0);
+        let occs = find_occurrences(&mut pat, &mut target, &MatchConfig::default());
+        // adds: add1 takes (mul0, mul1), add2 takes (add1, mul2) => mul->add
+        // matches: (mul0,add1), (mul1,add1), (mul2,add2) = 3 occurrences
+        assert_eq!(occs.len(), 3);
+        assert_eq!(distinct_node_sets(&occs).len(), 3);
+    }
+
+    #[test]
+    fn noncommutative_ports_respected() {
+        // target: sub(a, b); pattern: const -> sub port 1 must only match
+        // when the const really drives port 1.
+        let mut t = Graph::new("t");
+        let a = t.add_op(Op::Input);
+        let c = t.add_op(Op::Const(3));
+        let s = t.add_op(Op::Sub);
+        t.connect(a, s, 0);
+        t.connect(c, s, 1);
+        t.add(Op::Output, &[s]);
+
+        let mut p1 = Graph::new("p1");
+        let pc = p1.add_op(Op::Const(0));
+        let ps = p1.add_op(Op::Sub);
+        p1.connect(pc, ps, 1);
+        assert_eq!(find_occurrences(&mut p1, &mut t, &MatchConfig::default()).len(), 1);
+
+        let mut p0 = Graph::new("p0");
+        let pc = p0.add_op(Op::Const(0));
+        let ps = p0.add_op(Op::Sub);
+        p0.connect(pc, ps, 0);
+        assert_eq!(find_occurrences(&mut p0, &mut t, &MatchConfig::default()).len(), 0);
+    }
+
+    #[test]
+    fn commutative_two_in_edges_need_distinct_ports() {
+        // pattern: two distinct muls feeding one add — target add fed by one
+        // mul and one input must NOT match.
+        let mut t = Graph::new("t");
+        let a = t.add_op(Op::Input);
+        let b = t.add_op(Op::Input);
+        let m = t.add(Op::Mul, &[a, b]);
+        let i = t.add_op(Op::Input);
+        let s = t.add(Op::Add, &[m, i]);
+        t.add(Op::Output, &[s]);
+
+        let mut pat = Graph::new("p");
+        let m1 = pat.add_op(Op::Mul);
+        let m2 = pat.add_op(Op::Mul);
+        let ad = pat.add_op(Op::Add);
+        pat.connect(m1, ad, 0);
+        pat.connect(m2, ad, 1);
+        assert_eq!(find_occurrences(&mut pat, &mut t, &MatchConfig::default()).len(), 0);
+    }
+
+    #[test]
+    fn mni_support_on_overlapping_pattern() {
+        let mut target = conv_chain();
+        // pattern: add -> add (paper Fig 3d analogue at smaller scale).
+        let mut pat = Graph::new("addadd");
+        let a1 = pat.add_op(Op::Add);
+        let a2 = pat.add_op(Op::Add);
+        pat.connect(a1, a2, 0);
+        let occs = find_occurrences(&mut pat, &mut target, &MatchConfig::default());
+        assert_eq!(occs.len(), 1); // add1 -> add2 only
+        assert_eq!(mni_support(2, &occs), 1);
+    }
+
+    #[test]
+    fn disconnected_pattern_yields_nothing() {
+        let mut target = conv_chain();
+        let mut pat = Graph::new("disc");
+        pat.add_op(Op::Mul);
+        pat.add_op(Op::Add);
+        assert!(find_occurrences(&mut pat, &mut target, &MatchConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn occurrence_cap_respected() {
+        let mut target = conv_chain();
+        let mut pat = mul_pattern();
+        let cfg = MatchConfig { max_occurrences: 2 };
+        assert_eq!(find_occurrences(&mut pat, &mut target, &cfg).len(), 2);
+    }
+}

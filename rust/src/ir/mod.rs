@@ -1,0 +1,11 @@
+//! Dataflow IR: the CoreIR-equivalent representation shared by every pass.
+
+pub mod canon;
+pub mod graph;
+pub mod isomorph;
+pub mod op;
+
+pub use canon::canonical_code;
+pub use graph::{Edge, Graph, Node, NodeId};
+pub use isomorph::{distinct_node_sets, find_occurrences, mni_support, MatchConfig, Occurrence};
+pub use op::{truncate, HwClass, Op, Word, WORD_BITS};

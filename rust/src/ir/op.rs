@@ -1,0 +1,266 @@
+//! Primitive word-level operations of the dataflow IR.
+//!
+//! These mirror the compute nodes a Halide→CoreIR lowering produces for the
+//! paper's baseline PE (Fig. 7): a 16-bit integer arithmetic unit plus a LUT
+//! for bit operations. Every op has one output word; `arity` inputs.
+
+
+/// 16-bit word carried on every IR edge (sign-extended into `i64` during
+/// evaluation, truncated back on every op boundary like real RTL would).
+pub type Word = i64;
+
+pub const WORD_BITS: u32 = 16;
+
+/// Truncate an i64 to a signed 16-bit word (sign-extended back into i64).
+#[inline]
+pub fn truncate(v: i64) -> Word {
+    ((v as u64 & 0xffff) as i16) as i64
+}
+
+/// Primitive operation kinds.
+///
+/// `Input`/`Output` mark the graph boundary and are never mined or mapped;
+/// `Const` carries the configured constant value (the value is *not* part of
+/// the mining label — two consts with different values are the same pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Op {
+    Input,
+    Output,
+    Const(i64),
+    // Arithmetic unit ops.
+    Add,
+    Sub,
+    Mul,
+    Shl,
+    /// Logical shift right.
+    Lshr,
+    /// Arithmetic shift right.
+    Ashr,
+    Min,
+    Max,
+    Abs,
+    /// Signed less-than (produces 0/1).
+    Lt,
+    /// Signed greater-than (produces 0/1).
+    Gt,
+    /// Equality (produces 0/1).
+    Eq,
+    /// 2:1 select: `sel(c, a, b) = c != 0 ? a : b`.
+    Sel,
+    // LUT (bit) ops.
+    And,
+    Or,
+    Xor,
+    Not,
+    /// Unsigned saturating clamp helper used by image pipelines:
+    /// `clamp(x, lo, hi)`.
+    Clamp,
+}
+
+impl Op {
+    /// Number of input ports.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Input | Op::Const(_) => 0,
+            Op::Output | Op::Abs | Op::Not => 1,
+            Op::Sel | Op::Clamp => 3,
+            _ => 2,
+        }
+    }
+
+    /// Whether the op's inputs are interchangeable (matters for subgraph
+    /// isomorphism and datapath merging).
+    pub fn commutative(&self) -> bool {
+        matches!(
+            self,
+            Op::Add | Op::Mul | Op::Min | Op::Max | Op::Eq | Op::And | Op::Or | Op::Xor
+        )
+    }
+
+    /// Label used by the miner and the merger: op kind with const values and
+    /// input indices erased.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Op::Input => "in",
+            Op::Output => "out",
+            Op::Const(_) => "const",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Shl => "shl",
+            Op::Lshr => "lshr",
+            Op::Ashr => "ashr",
+            Op::Min => "min",
+            Op::Max => "max",
+            Op::Abs => "abs",
+            Op::Lt => "lt",
+            Op::Gt => "gt",
+            Op::Eq => "eq",
+            Op::Sel => "sel",
+            Op::And => "and",
+            Op::Or => "or",
+            Op::Xor => "xor",
+            Op::Not => "not",
+            Op::Clamp => "clamp",
+        }
+    }
+
+    /// True for nodes that represent real datapath hardware (minable).
+    pub fn is_compute(&self) -> bool {
+        !matches!(self, Op::Input | Op::Output)
+    }
+
+    /// Hardware resource class implementing this op. Ops in the same class
+    /// can share one functional unit when subgraphs are merged (§III-C: "can
+    /// both be implemented on the same hardware block").
+    pub fn hw_class(&self) -> HwClass {
+        match self {
+            Op::Input | Op::Output => HwClass::Io,
+            Op::Const(_) => HwClass::ConstReg,
+            Op::Mul => HwClass::Multiplier,
+            Op::Add | Op::Sub => HwClass::AddSub,
+            Op::Shl | Op::Lshr | Op::Ashr => HwClass::Shifter,
+            Op::Min | Op::Max | Op::Abs | Op::Lt | Op::Gt | Op::Eq | Op::Clamp => HwClass::Compare,
+            Op::Sel => HwClass::Mux,
+            Op::And | Op::Or | Op::Xor | Op::Not => HwClass::Lut,
+        }
+    }
+
+    /// Evaluate the op on already-truncated input words.
+    pub fn eval(&self, inputs: &[Word]) -> Word {
+        let t = truncate;
+        match self {
+            Op::Input => panic!("Input nodes are evaluated from bindings"),
+            Op::Output => inputs[0],
+            Op::Const(v) => t(*v),
+            Op::Add => t(inputs[0].wrapping_add(inputs[1])),
+            Op::Sub => t(inputs[0].wrapping_sub(inputs[1])),
+            Op::Mul => t(inputs[0].wrapping_mul(inputs[1])),
+            Op::Shl => t(inputs[0] << (inputs[1] as u64 & 0xf)),
+            Op::Lshr => t(((inputs[0] as u64 & 0xffff) >> (inputs[1] as u64 & 0xf)) as i64),
+            Op::Ashr => t(inputs[0] >> (inputs[1] as u64 & 0xf)),
+            Op::Min => inputs[0].min(inputs[1]),
+            Op::Max => inputs[0].max(inputs[1]),
+            Op::Abs => t(inputs[0].wrapping_abs()),
+            Op::Lt => (inputs[0] < inputs[1]) as i64,
+            Op::Gt => (inputs[0] > inputs[1]) as i64,
+            Op::Eq => (inputs[0] == inputs[1]) as i64,
+            Op::Sel => {
+                if inputs[0] != 0 {
+                    inputs[1]
+                } else {
+                    inputs[2]
+                }
+            }
+            Op::And => t(inputs[0] & inputs[1]),
+            Op::Or => t(inputs[0] | inputs[1]),
+            Op::Xor => t(inputs[0] ^ inputs[1]),
+            Op::Not => t(!inputs[0]),
+            Op::Clamp => inputs[0].max(inputs[1]).min(inputs[2]),
+        }
+    }
+
+    /// All compute op kinds (with a placeholder const), used by tests and by
+    /// the baseline-PE op inventory.
+    pub fn all_compute() -> Vec<Op> {
+        vec![
+            Op::Const(0),
+            Op::Add,
+            Op::Sub,
+            Op::Mul,
+            Op::Shl,
+            Op::Lshr,
+            Op::Ashr,
+            Op::Min,
+            Op::Max,
+            Op::Abs,
+            Op::Lt,
+            Op::Gt,
+            Op::Eq,
+            Op::Sel,
+            Op::And,
+            Op::Or,
+            Op::Xor,
+            Op::Not,
+            Op::Clamp,
+        ]
+    }
+}
+
+/// Functional-unit classes used for merging compatibility and cost lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum HwClass {
+    Io,
+    ConstReg,
+    Multiplier,
+    AddSub,
+    Shifter,
+    Compare,
+    Mux,
+    Lut,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncate_wraps_to_16_bits() {
+        assert_eq!(truncate(0x1_0000), 0);
+        assert_eq!(truncate(0x8000), -32768);
+        assert_eq!(truncate(-1), -1);
+        assert_eq!(truncate(0x7fff), 32767);
+    }
+
+    #[test]
+    fn eval_arith() {
+        assert_eq!(Op::Add.eval(&[3, 4]), 7);
+        assert_eq!(Op::Sub.eval(&[3, 4]), -1);
+        assert_eq!(Op::Mul.eval(&[300, 300]), truncate(90000));
+        assert_eq!(Op::Shl.eval(&[1, 4]), 16);
+        assert_eq!(Op::Lshr.eval(&[-1, 12]), 0xf);
+        assert_eq!(Op::Ashr.eval(&[-16, 2]), -4);
+        assert_eq!(Op::Abs.eval(&[-5]), 5);
+        assert_eq!(Op::Clamp.eval(&[300, 0, 255]), 255);
+    }
+
+    #[test]
+    fn eval_cmp_sel() {
+        assert_eq!(Op::Lt.eval(&[1, 2]), 1);
+        assert_eq!(Op::Gt.eval(&[1, 2]), 0);
+        assert_eq!(Op::Eq.eval(&[5, 5]), 1);
+        assert_eq!(Op::Sel.eval(&[1, 10, 20]), 10);
+        assert_eq!(Op::Sel.eval(&[0, 10, 20]), 20);
+    }
+
+    #[test]
+    fn eval_bitops() {
+        assert_eq!(Op::And.eval(&[0b1100, 0b1010]), 0b1000);
+        assert_eq!(Op::Or.eval(&[0b1100, 0b1010]), 0b1110);
+        assert_eq!(Op::Xor.eval(&[0b1100, 0b1010]), 0b0110);
+        assert_eq!(Op::Not.eval(&[0]), -1);
+    }
+
+    #[test]
+    fn arity_matches_eval_expectations() {
+        for op in Op::all_compute() {
+            let n = op.arity();
+            let inputs = vec![1i64; n];
+            let _ = op.eval(&inputs); // must not panic
+        }
+    }
+
+    #[test]
+    fn commutative_ops_are_order_insensitive() {
+        for op in Op::all_compute() {
+            if op.commutative() && op.arity() == 2 {
+                assert_eq!(op.eval(&[7, 3]), op.eval(&[3, 7]), "{op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn const_label_erases_value() {
+        assert_eq!(Op::Const(1).label(), Op::Const(99).label());
+    }
+}

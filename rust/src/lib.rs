@@ -1,0 +1,36 @@
+//! # cgra-dse
+//!
+//! Reproduction of *"Automated Design Space Exploration of CGRA Processing
+//! Element Architectures using Frequent Subgraph Analysis"* (Melchert et
+//! al., 2021): the full toolchain from application dataflow graphs through
+//! frequent-subgraph mining, maximal-independent-set analysis, datapath
+//! merging, PE generation, CGRA generation, mapping, place-and-route,
+//! bitstream generation, cycle-level simulation, and area/energy evaluation.
+//!
+//! See `DESIGN.md` for the module inventory and the per-experiment index,
+//! and `examples/quickstart.rs` for the 60-second tour.
+
+pub mod ir;
+
+pub mod frontend;
+pub mod mining;
+pub mod mis;
+
+pub mod merging;
+pub mod pe;
+
+pub mod arch;
+pub mod bitstream;
+pub mod mapper;
+pub mod pnr;
+pub mod sim;
+
+pub mod power;
+
+pub mod coordinator;
+pub mod dse;
+pub mod report;
+pub mod runtime;
+
+pub mod util;
+pub mod validate;

@@ -1,0 +1,331 @@
+//! cgra-dse command-line interface: the leader entrypoint for the whole
+//! toolchain. (Hand-rolled argument parsing — the offline build environment
+//! has no clap.)
+
+use cgra_dse::coordinator;
+use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::mining::MinerConfig;
+use cgra_dse::pe::verilog::emit_verilog;
+use cgra_dse::runtime;
+use cgra_dse::util::SplitMix64;
+
+const USAGE: &str = "\
+cgra-dse — automated DSE of CGRA processing element architectures
+           (frequent-subgraph analysis reproduction)
+
+USAGE:
+  cgra-dse mine --app <name> [--min-support N] [--max-nodes N]
+  cgra-dse pes --app <name> [--fast]
+  cgra-dse verilog --app <name> [--variant peK] [--out FILE]
+  cgra-dse map --app <name> [--variant peK]
+  cgra-dse sim --app <name> [--variant peK] [--items N]
+  cgra-dse reproduce <fig8|fig9|fig10|fig11|table1|io_sweep|all> [--fast] [--save]
+  cgra-dse validate [--app gaussian|conv|block] [--items N]
+  cgra-dse apps
+
+Apps: harris gaussian camera laplacian conv block strc ds conv1d
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let flags = Flags::parse(&args[1..]);
+    let code = match cmd {
+        "mine" => cmd_mine(&flags),
+        "pes" => cmd_pes(&flags),
+        "verilog" => cmd_verilog(&flags),
+        "map" => cmd_map(&flags),
+        "sim" => cmd_sim(&flags),
+        "reproduce" => cmd_reproduce(&args[1..], &flags),
+        "validate" => cmd_validate(&flags),
+        "apps" => {
+            println!("{}", AppSuite::names().join(" "));
+            0
+        }
+        _ => {
+            eprint!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` and bare `--key` (bool) pairs.
+struct Flags {
+    kv: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Self {
+        let mut kv = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                kv.push((key.to_string(), val));
+            }
+            i += 1;
+        }
+        Flags { kv }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn dse_config(flags: &Flags) -> DseConfig {
+    if flags.has("fast") {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                max_patterns: 600,
+                ..Default::default()
+            },
+            max_merged: 3,
+            ..Default::default()
+        }
+    } else {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: flags.get_usize("min-support", 2),
+                max_nodes: flags.get_usize("max-nodes", 7),
+                max_patterns: 6000,
+                ..Default::default()
+            },
+            max_merged: 4,
+            ..Default::default()
+        }
+    }
+}
+
+fn require_app(flags: &Flags) -> Result<cgra_dse::frontend::App, i32> {
+    let name = flags.get("app").unwrap_or("camera");
+    AppSuite::by_name(name).ok_or_else(|| {
+        eprintln!("unknown app `{name}`; try: {}", AppSuite::names().join(" "));
+        2
+    })
+}
+
+fn cmd_mine(flags: &Flags) -> i32 {
+    let Ok(app) = require_app(flags) else { return 2 };
+    let mut graph = app.graph.clone();
+    let cfg = dse_config(flags);
+    let ranked = dse::rank_subgraphs(&mut graph, &cfg);
+    println!(
+        "{} compute ops; {} interesting frequent subgraphs (MIS >= 2):",
+        graph.compute_len(),
+        ranked.len()
+    );
+    for (i, r) in ranked.iter().take(20).enumerate() {
+        println!(
+            "#{i:<3} MIS={:<4} support={:<4} nodes={} ops={:?}",
+            r.mis_size,
+            r.pattern.support,
+            r.pattern.graph.len(),
+            r.pattern
+                .graph
+                .nodes
+                .iter()
+                .map(|n| n.op.label())
+                .collect::<Vec<_>>()
+        );
+    }
+    0
+}
+
+fn cmd_pes(flags: &Flags) -> i32 {
+    let Ok(app) = require_app(flags) else { return 2 };
+    let cfg = dse_config(flags);
+    let evals = dse::evaluate_ladder(&app, &cfg);
+    println!("{}", cgra_dse::report::render_ladder(app.name, &evals));
+    0
+}
+
+fn cmd_verilog(flags: &Flags) -> i32 {
+    let Ok(app) = require_app(flags) else { return 2 };
+    let cfg = dse_config(flags);
+    let want = flags.get("variant").unwrap_or("pe2");
+    let ladder = dse::variant_ladder(&app, &cfg);
+    let Some((_, pe)) = ladder.iter().find(|(n, _)| n == want) else {
+        eprintln!(
+            "no variant `{want}`; available: {:?}",
+            ladder.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()
+        );
+        return 2;
+    };
+    let v = emit_verilog(pe);
+    match flags.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &v) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            println!("wrote {} bytes to {path}", v.len());
+        }
+        None => print!("{v}"),
+    }
+    0
+}
+
+fn cmd_map(flags: &Flags) -> i32 {
+    let Ok(app) = require_app(flags) else { return 2 };
+    let cfg = dse_config(flags);
+    let want = flags.get("variant").unwrap_or("pe2");
+    let ladder = dse::variant_ladder(&app, &cfg);
+    let Some((name, pe)) = ladder.into_iter().find(|(n, _)| n == want) else {
+        eprintln!("no variant `{want}`");
+        return 2;
+    };
+    match dse::evaluate_variant(&app, &name, &pe, &cfg) {
+        Some(ve) => {
+            println!(
+                "{}: {} PEs, PE area {:.0} um2, total {:.0} um2, {:.1} fJ/op (PE core), fmax {:.2} GHz",
+                app.name, ve.n_pes, ve.eval.area, ve.total_area, ve.pe_energy_per_op, ve.fmax_ghz
+            );
+            for (mode, count) in ve.mapping.mode_histogram() {
+                println!(
+                    "  mode {mode:<3} x{count:<4} ({} ops/activation)",
+                    pe.modes[mode].ops_covered
+                );
+            }
+            0
+        }
+        None => {
+            eprintln!("{} cannot be covered by {want}", app.name);
+            1
+        }
+    }
+}
+
+fn cmd_sim(flags: &Flags) -> i32 {
+    let Ok(app) = require_app(flags) else { return 2 };
+    let cfg = dse_config(flags);
+    let want = flags.get("variant").unwrap_or("pe2");
+    let items = flags.get_usize("items", 64);
+    let ladder = dse::variant_ladder(&app, &cfg);
+    let Some((_, pe)) = ladder.into_iter().find(|(n, _)| n == want) else {
+        eprintln!("no variant `{want}`");
+        return 2;
+    };
+    let mut graph = app.graph.clone();
+    let fabric = cgra_dse::arch::Fabric::new(cgra_dse::arch::FabricConfig::default());
+    let n_inputs = graph.input_ids().len();
+    let mut rng = SplitMix64::new(42);
+    let batch: Vec<Vec<i64>> = (0..items)
+        .map(|_| (0..n_inputs).map(|_| rng.word() & 0xff).collect())
+        .collect();
+    match cgra_dse::sim::run_and_check(&mut graph, &pe, &fabric, &batch, cfg.seed) {
+        Ok(r) => {
+            println!(
+                "simulated {} items: latency {} cycles, II={}, total {} cycles, {} word-hops — outputs MATCH Graph::eval",
+                r.stats.items,
+                r.stats.latency_cycles,
+                r.stats.ii,
+                r.stats.total_cycles,
+                r.stats.word_hops
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("simulation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_reproduce(args: &[String], flags: &Flags) -> i32 {
+    let what = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let cfg = dse_config(flags);
+    let save = flags.has("save");
+    let emit = |name: &str, text: String| {
+        println!("{text}");
+        if save {
+            match coordinator::save_report(name, &text) {
+                Ok(p) => println!("[saved to {}]", p.display()),
+                Err(e) => eprintln!("save failed: {e}"),
+            }
+        }
+    };
+    match what {
+        "fig8" => emit("fig8", coordinator::run_fig8(&cfg).0),
+        "fig9" => emit("fig9", coordinator::run_fig9(&cfg)),
+        "fig10" => emit("fig10", coordinator::run_fig10(&cfg).0),
+        "fig11" => emit("fig11", coordinator::run_fig11(&cfg).0),
+        "table1" => emit("table1", coordinator::run_table1(&cfg).0),
+        "io_sweep" => emit("io_sweep", coordinator::run_io_sweep(&cfg).0),
+        "all" => {
+            emit("fig8", coordinator::run_fig8(&cfg).0);
+            emit("fig9", coordinator::run_fig9(&cfg));
+            emit("fig10", coordinator::run_fig10(&cfg).0);
+            emit("fig11", coordinator::run_fig11(&cfg).0);
+            emit("table1", coordinator::run_table1(&cfg).0);
+            emit("io_sweep", coordinator::run_io_sweep(&cfg).0);
+        }
+        other => {
+            eprintln!("unknown target `{other}` (fig8|fig9|fig10|fig11|table1|all)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_validate(flags: &Flags) -> i32 {
+    if !runtime::artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return 1;
+    }
+    let apps: Vec<&str> = match flags.get("app") {
+        Some(a) => vec![a],
+        None => vec!["gaussian", "conv", "block", "laplacian", "ds"],
+    };
+    let items = flags.get_usize("items", 3);
+    let rt = match runtime::Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT: {e}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let mut failures = 0;
+    for app in apps {
+        match cgra_dse::validate::validate_app(&rt, app, items) {
+            Ok(report) => println!("{report}"),
+            Err(e) => {
+                eprintln!("{app}: FAILED — {e}");
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        println!("validate: all apps match the JAX/Pallas oracle");
+        0
+    } else {
+        1
+    }
+}

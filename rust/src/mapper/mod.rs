@@ -1,0 +1,555 @@
+//! Application mapper (§IV step 6): cover the application's CoreIR graph
+//! with PE configurations using the rewrite rules generated from the PE
+//! spec, minimizing the number of PEs used.
+//!
+//! Each mode of a [`PeSpec`] is a rewrite rule: its source pattern can
+//! replace any matching occurrence in the application. A legal cover
+//! partitions the app's compute nodes such that
+//! - every compute node belongs to exactly one instance,
+//! - within an instance, any non-root node's consumers all stay inside the
+//!   instance (PE internals are not observable), and
+//! - const values bind to the PE's constant registers.
+//!
+//! Covering is NP-hard; we use best-first greedy (most ops per activation
+//! first, the paper's "minimize the number of PEs used") with deterministic
+//! tie-breaking, which is exact on trees of uniform patterns and within a
+//! few percent of exhaustive on our app suite (see `mapper::tests`).
+
+use crate::ir::{find_occurrences, Graph, MatchConfig, NodeId, Op, Word};
+use crate::pe::PeSpec;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// One configured PE instance in the mapped graph.
+#[derive(Debug, Clone)]
+pub struct MappedPe {
+    /// PE mode implementing this instance.
+    pub mode: usize,
+    /// `pattern node index -> app node` for the covered occurrence.
+    pub occ: Vec<NodeId>,
+    /// Constant-register values bound from the app's const nodes
+    /// (`datapath unit -> value`).
+    pub const_values: BTreeMap<usize, Word>,
+    /// For each external input slot of the mode (in `ext_assignment`
+    /// order): where the data comes from.
+    pub inputs: Vec<DataSrc>,
+    /// App nodes whose values this instance produces, in PE-output order.
+    pub outputs: Vec<NodeId>,
+}
+
+/// Source of a PE instance input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataSrc {
+    /// An application `Input` node (comes from a MEM tile / IO).
+    AppInput(NodeId),
+    /// Output `pos` of another mapped instance.
+    Instance { inst: usize, pos: usize },
+    /// A constant bound at configuration time (an app const node consumed
+    /// from outside any covering occurrence — fed by a PE constant
+    /// register, so it needs no routing; consts replicate freely, as in
+    /// real CGRAs).
+    Constant(Word),
+}
+
+/// Where an application output's value comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutSrc {
+    /// Output `pos` of instance `inst`.
+    Instance { inst: usize, pos: usize },
+    /// A configuration constant (app output driven directly by a const).
+    Constant(Word),
+}
+
+/// A complete mapping of an application onto a PE architecture.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub instances: Vec<MappedPe>,
+    /// App output node -> value source.
+    pub app_outputs: Vec<(NodeId, OutSrc)>,
+    /// Total compute ops covered (excluding consts).
+    pub ops_covered: usize,
+}
+
+impl Mapping {
+    pub fn num_pes(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Histogram of instances per mode (used by the energy model).
+    pub fn mode_histogram(&self) -> BTreeMap<usize, usize> {
+        let mut h = BTreeMap::new();
+        for i in &self.instances {
+            *h.entry(i.mode).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+/// Mapping errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MapError {
+    /// Some app nodes cannot be covered by any rule of this PE.
+    Uncoverable(Vec<NodeId>),
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::Uncoverable(ns) => write!(f, "{} app nodes uncoverable", ns.len()),
+        }
+    }
+}
+
+/// A candidate placement of one rule occurrence.
+#[derive(Debug, Clone)]
+struct Candidate {
+    mode: usize,
+    occ: Vec<NodeId>,
+    node_set: BTreeSet<NodeId>,
+    ops: usize,
+}
+
+/// Map `app` onto `pe`.
+pub fn map_app(app: &mut Graph, pe: &PeSpec) -> Result<Mapping, MapError> {
+    app.freeze();
+    let match_cfg = MatchConfig::default();
+
+    // --- Enumerate legal candidates per mode.
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for (mode, pat) in pe.mode_patterns.iter().enumerate() {
+        // Patterns are compute-only by PeSpec construction.
+        let mut pattern = pat.clone();
+        let occs = find_occurrences(&mut pattern, app, &match_cfg);
+        let roots: BTreeSet<usize> = pe.modes[mode]
+            .out_pattern_nodes
+            .iter()
+            .copied()
+            .collect();
+        let ops = pattern
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+            .count();
+        let mut seen_sets: BTreeSet<Vec<NodeId>> = BTreeSet::new();
+        for occ in occs {
+            let node_set: BTreeSet<NodeId> = occ
+                .map
+                .iter()
+                .copied()
+                .filter(|&t| !matches!(app.node(t).op, Op::Const(_)))
+                .collect();
+            // Legality: non-root, non-const images keep all consumers
+            // inside (consts replicate freely).
+            let legal = occ.map.iter().enumerate().all(|(pi, &t)| {
+                roots.contains(&pi)
+                    || matches!(app.node(t).op, Op::Const(_))
+                    || app
+                        .outputs_of(t)
+                        .iter()
+                        .all(|(c, _)| node_set.contains(c))
+            });
+            // (Roots may feed Output nodes or other instances.)
+            if !legal {
+                continue;
+            }
+            // Every *external* pattern port must be driven from outside the
+            // occurrence (or by a const): a commutative match can otherwise
+            // pick an occurrence whose "external" port is really wired to a
+            // covered non-root node, which a PE cannot express.
+            let port_map = app_port_map(app, &pattern, &occ.map);
+            let ext_ok = pe.modes[mode].ext_pattern_ports.iter().all(|&(pi, q)| {
+                let Some(&ap) = port_map.get(&(pi, q)) else {
+                    return false;
+                };
+                match app.inputs_of(occ.map[pi])[ap as usize] {
+                    Some(src) => {
+                        matches!(app.node(src).op, Op::Const(_) | Op::Input)
+                            || !occ.map.contains(&src)
+                    }
+                    None => false,
+                }
+            });
+            if !ext_ok {
+                continue;
+            }
+            if !seen_sets.insert(occ.node_set()) {
+                continue;
+            }
+            candidates.push(Candidate {
+                mode,
+                occ: occ.map,
+                node_set,
+                ops,
+            });
+        }
+    }
+
+    // --- Greedy cover: most app-ops per instance first; ties by mode then
+    // by first node id for determinism.
+    candidates.sort_by(|a, b| {
+        b.ops
+            .cmp(&a.ops)
+            .then(b.occ.len().cmp(&a.occ.len())) // const-internalizing first
+            .then(a.mode.cmp(&b.mode))
+            .then(a.occ.cmp(&b.occ))
+    });
+
+    let mut covered: BTreeSet<NodeId> = BTreeSet::new();
+    let mut chosen: Vec<Candidate> = Vec::new();
+    let to_cover: BTreeSet<NodeId> = app
+        .nodes
+        .iter()
+        .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+        .map(|n| n.id)
+        .collect();
+
+    for c in candidates {
+        if c.node_set.iter().any(|n| covered.contains(n)) {
+            continue;
+        }
+        covered.extend(c.node_set.iter().copied());
+        chosen.push(c);
+        if covered.len() == to_cover.len() {
+            break;
+        }
+    }
+    if covered.len() != to_cover.len() {
+        let missing: Vec<NodeId> = to_cover.difference(&covered).copied().collect();
+        return Err(MapError::Uncoverable(missing));
+    }
+
+    // --- Build instances: wire inputs/outputs.
+    // app node -> (instance, output position) for instance roots.
+    let mut producer: HashMap<NodeId, (usize, usize)> = HashMap::new();
+    for (idx, c) in chosen.iter().enumerate() {
+        for (pos, &pi) in pe.modes[c.mode].out_pattern_nodes.iter().enumerate() {
+            producer.insert(c.occ[pi], (idx, pos));
+        }
+    }
+
+    let mut instances: Vec<MappedPe> = Vec::new();
+    for (idx, c) in chosen.iter().enumerate() {
+        let _ = idx;
+        let pat = &pe.mode_patterns[c.mode];
+        let mode_cfg = &pe.modes[c.mode];
+
+        let _ = pat;
+        // Bind const values through the datapath's origin bookkeeping:
+        // const unit u implements pattern node `const_origs[u]` in this
+        // mode; the occurrence maps that pattern node to an app const.
+        let mut const_values: BTreeMap<usize, Word> = BTreeMap::new();
+        for (&u, &orig) in &mode_cfg.const_origs {
+            let app_node = c.occ[orig];
+            if let Op::Const(v) = app.node(app_node).op {
+                const_values.insert(u, v);
+            }
+        }
+
+        // External inputs: slot k feeds pattern port `ext_pattern_ports[k]`.
+        // Commutative consumers may have matched with permuted ports, so
+        // translate pattern ports to the occurrence's actual app ports.
+        let port_map = app_port_map(app, &pe.mode_patterns[c.mode], &c.occ);
+        let pat_ext = &mode_cfg.ext_pattern_ports;
+        let mut inputs = Vec::with_capacity(pat_ext.len());
+        for &(pi, port) in pat_ext {
+            let app_node = c.occ[pi];
+            let app_port = port_map[&(pi, port)];
+            let src = app.inputs_of(app_node)[app_port as usize]
+                .expect("app port unconnected despite validation");
+            let src_op = app.node(src).op;
+            let data = if src_op == Op::Input {
+                DataSrc::AppInput(src)
+            } else if let Some(&(inst, pos)) = producer.get(&src) {
+                DataSrc::Instance { inst, pos }
+            } else if let Op::Const(v) = src_op {
+                DataSrc::Constant(v)
+            } else {
+                // Producer is inside another instance but not a root —
+                // illegal cover, should have been filtered.
+                panic!("input of {app_node} produced by non-root node {src}");
+            };
+            inputs.push(data);
+        }
+
+        let outputs: Vec<NodeId> = mode_cfg
+            .out_pattern_nodes
+            .iter()
+            .map(|&pi| c.occ[pi])
+            .collect();
+        instances.push(MappedPe {
+            mode: c.mode,
+            occ: c.occ.clone(),
+            const_values,
+            inputs,
+            outputs,
+        });
+    }
+
+    // --- App outputs.
+    let mut app_outputs = Vec::new();
+    for out in app.output_ids() {
+        let src = app.inputs_of(out)[0].expect("output unconnected");
+        let osrc = if let Some(&(inst, pos)) = producer.get(&src) {
+            OutSrc::Instance { inst, pos }
+        } else if let Op::Const(v) = app.node(src).op {
+            OutSrc::Constant(v)
+        } else {
+            panic!("app output driven by non-root value {src}");
+        };
+        app_outputs.push((out, osrc));
+    }
+
+    let ops_covered = to_cover
+        .iter()
+        .filter(|&&n| !matches!(app.node(n).op, Op::Const(_)))
+        .count();
+
+    Ok(Mapping {
+        instances,
+        app_outputs,
+        ops_covered,
+    })
+}
+
+
+/// For one occurrence, map every pattern `(node, port)` to the app port it
+/// actually corresponds to. Non-commutative consumers match ports exactly;
+/// commutative consumers may have permuted them, so internal pattern edges
+/// claim the app ports whose drivers they matched and external pattern
+/// ports take the remaining app ports in ascending order.
+fn app_port_map(
+    app: &Graph,
+    pat: &Graph,
+    occ: &[NodeId],
+) -> HashMap<(usize, u8), u8> {
+    let mut map = HashMap::new();
+    for pd in pat.nodes.iter() {
+        let pdi = pd.id.index();
+        let arity = pd.op.arity() as u8;
+        if arity == 0 {
+            continue;
+        }
+        if !pd.op.commutative() {
+            for q in 0..arity {
+                map.insert((pdi, q), q);
+            }
+            continue;
+        }
+        let app_node = occ[pdi];
+        let app_ins = app.inputs_of(app_node);
+        let mut taken = vec![false; app_ins.len()];
+        // Internal pattern edges claim matching app ports.
+        let mut internal_q: Vec<(u8, usize)> = Vec::new(); // (pattern port, src pattern node)
+        for e in &pat.edges {
+            if e.dst.index() == pdi {
+                internal_q.push((e.dst_port, e.src.index()));
+            }
+        }
+        for (q, ps) in &internal_q {
+            let want = occ[*ps];
+            let slot = (0..app_ins.len())
+                .find(|&k| !taken[k] && app_ins[k] == Some(want))
+                .expect("matched edge must have an app port");
+            taken[slot] = true;
+            map.insert((pdi, *q), slot as u8);
+        }
+        // External pattern ports take the remaining app ports in order.
+        let internal_ports: std::collections::BTreeSet<u8> =
+            internal_q.iter().map(|(q, _)| *q).collect();
+        let mut free = (0..app_ins.len()).filter(|&k| !taken[k]);
+        for q in 0..arity {
+            if !internal_ports.contains(&q) {
+                let slot = free.next().expect("port arity mismatch");
+                map.insert((pdi, q), slot as u8);
+            }
+        }
+    }
+    map
+}
+
+/// Functionally execute a mapping on concrete app inputs — the reference
+/// check that covering + PE configuration preserves semantics. Returns the
+/// app outputs in app-output order.
+pub fn execute_mapping(
+    app: &mut Graph,
+    pe: &PeSpec,
+    mapping: &Mapping,
+    inputs: &[Word],
+) -> Vec<Word> {
+    app.freeze();
+    // Bind app inputs in id order (same convention as Graph::eval).
+    let mut input_vals: HashMap<NodeId, Word> = HashMap::new();
+    for (i, id) in app.input_ids().into_iter().enumerate() {
+        input_vals.insert(id, crate::ir::truncate(inputs[i]));
+    }
+    // Fire instances in dependency order.
+    let n = mapping.instances.len();
+    let mut out_vals: Vec<Option<Vec<Word>>> = vec![None; n];
+    for _pass in 0..n {
+        let mut progressed = false;
+        for (idx, inst) in mapping.instances.iter().enumerate() {
+            if out_vals[idx].is_some() {
+                continue;
+            }
+            let mut ext: Vec<Word> = Vec::with_capacity(inst.inputs.len());
+            let mut ready = true;
+            for src in &inst.inputs {
+                match src {
+                    DataSrc::AppInput(nid) => ext.push(input_vals[nid]),
+                    DataSrc::Constant(v) => ext.push(crate::ir::truncate(*v)),
+                    DataSrc::Instance { inst: j, pos } => match &out_vals[*j] {
+                        Some(v) => ext.push(v[*pos]),
+                        None => {
+                            ready = false;
+                            break;
+                        }
+                    },
+                }
+            }
+            if !ready {
+                continue;
+            }
+            // Configure consts for this instance.
+            let outputs = execute_instance(pe, inst, &ext);
+            out_vals[idx] = Some(outputs);
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    mapping
+        .app_outputs
+        .iter()
+        .map(|&(_, src)| match src {
+            OutSrc::Instance { inst, pos } => out_vals[inst]
+                .as_ref()
+                .expect("instance never fired (cyclic mapping?)")[pos],
+            OutSrc::Constant(v) => crate::ir::truncate(v),
+        })
+        .collect()
+}
+
+/// Execute a single configured instance (PE mode + bound constants).
+pub fn execute_instance(pe: &PeSpec, inst: &MappedPe, ext: &[Word]) -> Vec<Word> {
+    pe.execute_mode_with(inst.mode, ext, Some(&inst.const_values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{micro, AppSuite};
+    use crate::pe::baseline::{baseline_pe, pe1_for_app};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn conv1d_maps_on_baseline() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        // 4 muls + 5 adds + 5 consts; baseline covers one op (+optional
+        // const operand) per PE.
+        assert!(m.num_pes() <= 9, "used {} PEs", m.num_pes());
+        assert!(m.num_pes() >= 8);
+    }
+
+    #[test]
+    fn conv1d_mapping_is_functional() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..20 {
+            let xs: Vec<i64> = (0..4).map(|_| rng.word() >> 8).collect();
+            let want = app.eval(&xs);
+            let got = execute_mapping(&mut app, &pe, &m, &xs);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn specialized_pe_uses_fewer_pes() {
+        let mut app = micro::conv1d_fig3();
+        let base = baseline_pe();
+        let m_base = map_app(&mut app, &base).unwrap();
+
+        // PE with a (const*x)+y MAC mode merged in (plus baseline ops).
+        let mut mac = Graph::new("mac");
+        let c = mac.add_op(Op::Const(0));
+        let mu = mac.add_op(Op::Mul);
+        mac.connect(c, mu, 1);
+        let ad = mac.add_op(Op::Add);
+        mac.connect(mu, ad, 0);
+        let mut subs = vec![mac];
+        for op in [Op::Add, Op::Mul] {
+            let mut g = Graph::new(op.label());
+            g.add_op(op);
+            subs.push(g);
+        }
+        let pe = PeSpec::from_subgraphs("mac_pe", &subs);
+        let m_spec = map_app(&mut app, &pe).unwrap();
+        assert!(
+            m_spec.num_pes() < m_base.num_pes(),
+            "{} vs {}",
+            m_spec.num_pes(),
+            m_base.num_pes()
+        );
+        // And still correct.
+        let xs = [3i64, -4, 5, 6];
+        assert_eq!(
+            execute_mapping(&mut app, &pe, &m_spec, &xs),
+            app.eval(&xs)
+        );
+    }
+
+    #[test]
+    fn all_apps_map_on_their_pe1_and_match_eval() {
+        for mut app in AppSuite::all() {
+            let pe = pe1_for_app(&app.graph, format!("pe1_{}", app.name));
+            let m = map_app(&mut app.graph, &pe)
+                .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+            let n_inputs = app.graph.input_ids().len();
+            let mut rng = SplitMix64::new(7);
+            for _ in 0..3 {
+                let xs: Vec<i64> = (0..n_inputs).map(|_| rng.word() & 0xff).collect();
+                let want = app.graph.eval(&xs);
+                let got = execute_mapping(&mut app.graph, &pe, &m, &xs);
+                assert_eq!(got, want, "{} functional mismatch", app.name);
+            }
+        }
+    }
+
+    #[test]
+    fn uncoverable_app_reports_error() {
+        let mut app = micro::conv1d_fig3();
+        // A PE that only knows `sub` cannot cover conv1d.
+        let mut sub = Graph::new("sub");
+        sub.add_op(Op::Sub);
+        let pe = PeSpec::from_subgraphs("subonly", &[sub]);
+        assert!(matches!(
+            map_app(&mut app, &pe),
+            Err(MapError::Uncoverable(_))
+        ));
+    }
+
+    #[test]
+    fn cover_is_a_partition() {
+        let mut app = AppSuite::by_name("gaussian").unwrap().graph;
+        let pe = pe1_for_app(&app, "pe1");
+        let m = map_app(&mut app, &pe).unwrap();
+        let mut seen = BTreeSet::new();
+        for inst in &m.instances {
+            for &n in &inst.occ {
+                if matches!(app.node(n).op, Op::Const(_)) {
+                    continue; // consts may replicate
+                }
+                assert!(seen.insert(n), "node {n} covered twice");
+            }
+        }
+        let compute = app
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+            .count();
+        assert_eq!(seen.len(), compute);
+    }
+}

@@ -1,0 +1,529 @@
+//! Datapath (subgraph) merging (§III-C, after Moreano et al.).
+//!
+//! Merging produces a single *merged datapath* that can be configured to
+//! implement each input subgraph (one configuration per "mode"). The
+//! algorithm follows the paper exactly:
+//!
+//! 1. enumerate merge opportunities between the datapath-so-far and the next
+//!    subgraph — node pairs implementable on the same hardware block, and
+//!    edge pairs whose endpoints merge with matching destination ports;
+//! 2. build a compatibility graph over the opportunities, weighted by the
+//!    area saved by applying each merge;
+//! 3. find its maximum-weight clique;
+//! 4. reconstruct the merged datapath, adding multiplexers wherever a node
+//!    input is driven by different sources in different modes.
+
+pub mod clique;
+
+use crate::ir::{Graph, HwClass, Op};
+use crate::power::tables;
+use clique::CliqueProblem;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// What a unit does in one mode: the op it performs and which node of the
+/// mode's source pattern it implements (`orig` = index into the pattern's
+/// compute-only node list; the mapper uses it to bind occurrences).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModeSlot {
+    pub op: Op,
+    pub orig: usize,
+}
+
+/// One functional unit of the merged datapath. `per_mode` records the
+/// operation the unit performs in each mode it participates in (consts keep
+/// their per-mode values here).
+#[derive(Debug, Clone)]
+pub struct DpNode {
+    pub class: HwClass,
+    pub per_mode: BTreeMap<usize, ModeSlot>,
+}
+
+impl DpNode {
+    /// All distinct op labels this unit must support.
+    pub fn op_labels(&self) -> BTreeSet<&'static str> {
+        self.per_mode.values().map(|s| s.op.label()).collect()
+    }
+
+    /// The op performed in `mode`, if active.
+    pub fn op_in(&self, mode: usize) -> Option<Op> {
+        self.per_mode.get(&mode).map(|s| s.op)
+    }
+
+    /// The source-pattern node index implemented in `mode`.
+    pub fn orig_in(&self, mode: usize) -> Option<usize> {
+        self.per_mode.get(&mode).map(|s| s.orig)
+    }
+
+    pub fn active_in(&self, mode: usize) -> bool {
+        self.per_mode.contains_key(&mode)
+    }
+}
+
+/// A wire of the merged datapath, live in `modes`.
+#[derive(Debug, Clone)]
+pub struct DpEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub port: u8,
+    pub modes: BTreeSet<usize>,
+}
+
+/// Merged datapath: the union of several subgraphs, one mode each.
+#[derive(Debug, Clone, Default)]
+pub struct MergedDatapath {
+    pub name: String,
+    pub num_modes: usize,
+    pub nodes: Vec<DpNode>,
+    pub edges: Vec<DpEdge>,
+}
+
+impl MergedDatapath {
+    /// Lift a single subgraph (compute nodes only) into a one-mode datapath.
+    pub fn from_graph(g: &Graph, name: impl Into<String>) -> Self {
+        let mut nodes = Vec::new();
+        let mut remap: HashMap<usize, usize> = HashMap::new();
+        for n in &g.nodes {
+            if !n.op.is_compute() {
+                continue;
+            }
+            remap.insert(n.id.index(), nodes.len());
+            let mut per_mode = BTreeMap::new();
+            per_mode.insert(0usize, ModeSlot { op: n.op, orig: nodes.len() });
+            nodes.push(DpNode {
+                class: n.op.hw_class(),
+                per_mode,
+            });
+        }
+        let mut edges = Vec::new();
+        for e in &g.edges {
+            if let (Some(&s), Some(&d)) = (remap.get(&e.src.index()), remap.get(&e.dst.index())) {
+                edges.push(DpEdge {
+                    src: s,
+                    dst: d,
+                    port: e.dst_port,
+                    modes: BTreeSet::from([0usize]),
+                });
+            }
+        }
+        MergedDatapath {
+            name: name.into(),
+            num_modes: 1,
+            nodes,
+            edges,
+        }
+    }
+
+    /// Internal in-edges of `(node, port)`.
+    pub fn edges_into(&self, node: usize, port: u8) -> Vec<&DpEdge> {
+        self.edges
+            .iter()
+            .filter(|e| e.dst == node && e.port == port)
+            .collect()
+    }
+
+    /// Distinct sources driving `(node, port)` across all modes — mux
+    /// inputs needed from internal wires (external inputs add more).
+    pub fn internal_sources(&self, node: usize, port: u8) -> BTreeSet<usize> {
+        self.edges_into(node, port).iter().map(|e| e.src).collect()
+    }
+
+    /// Nodes with no outgoing edge in `mode` — the mode's result values.
+    pub fn roots_of_mode(&self, mode: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].active_in(mode))
+            .filter(|&i| {
+                !self
+                    .edges
+                    .iter()
+                    .any(|e| e.src == i && e.modes.contains(&mode))
+            })
+            .collect()
+    }
+
+    /// External-input slots of `mode`: (node, port) pairs active in the mode
+    /// with no internal driver in that mode. Sorted for determinism.
+    pub fn external_ports_of_mode(&self, mode: usize) -> Vec<(usize, u8)> {
+        let mut v = Vec::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            let Some(&ModeSlot { op, .. }) = n.per_mode.get(&mode) else {
+                continue;
+            };
+            for p in 0..op.arity() as u8 {
+                let driven = self
+                    .edges
+                    .iter()
+                    .any(|e| e.dst == i && e.port == p && e.modes.contains(&mode));
+                if !driven {
+                    v.push((i, p));
+                }
+            }
+        }
+        v
+    }
+
+    /// Total functional-unit area (µm²) — ignores muxes/config (the PE
+    /// model adds those); used as the merge objective.
+    pub fn unit_area(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| tables::class_cost(n.class).area)
+            .sum()
+    }
+}
+
+/// A merge opportunity: a node pair or an edge pair.
+#[derive(Debug, Clone, PartialEq)]
+enum Opportunity {
+    Node { a: usize, b: usize, w: f64 },
+    Edge { ea: usize, eb: usize, w: f64 },
+}
+
+/// Can ops of these classes share one functional unit?
+fn classes_mergeable(a: HwClass, b: HwClass) -> bool {
+    a == b && a != HwClass::Io
+}
+
+/// Merge a new subgraph into the datapath. Returns the merged datapath; the
+/// new subgraph becomes mode `dp.num_modes`.
+pub fn merge_subgraph(dp: &MergedDatapath, sub: &Graph) -> MergedDatapath {
+    let b = MergedDatapath::from_graph(sub, sub.name.clone());
+    merge_datapaths(dp, &b)
+}
+
+/// Merge two datapaths (B's modes are renumbered to follow A's).
+pub fn merge_datapaths(a: &MergedDatapath, b: &MergedDatapath) -> MergedDatapath {
+    if a.nodes.is_empty() {
+        let mut out = b.clone();
+        out.name = if a.name.is_empty() {
+            b.name.clone()
+        } else {
+            format!("{}+{}", a.name, b.name)
+        };
+        return out;
+    }
+
+    // --- Step 1: merge opportunities.
+    let mut opps: Vec<Opportunity> = Vec::new();
+    let mut node_pair_idx: HashMap<(usize, usize), usize> = HashMap::new();
+    for (i, na) in a.nodes.iter().enumerate() {
+        for (j, nb) in b.nodes.iter().enumerate() {
+            if classes_mergeable(na.class, nb.class) {
+                let w = tables::class_cost(na.class).area.max(1.0);
+                node_pair_idx.insert((i, j), opps.len());
+                opps.push(Opportunity::Node { a: i, b: j, w });
+            }
+        }
+    }
+    for (ei, ea) in a.edges.iter().enumerate() {
+        for (ej, eb) in b.edges.iter().enumerate() {
+            let src_ok = node_pair_idx.contains_key(&(ea.src, eb.src));
+            let dst_ok = node_pair_idx.contains_key(&(ea.dst, eb.dst));
+            if !src_ok || !dst_ok {
+                continue;
+            }
+            // Destination ports must match, unless every op the merged
+            // destination performs is commutative (then B's wire can be
+            // re-ported to A's side during reconstruction).
+            let ports_ok = ea.port == eb.port
+                || (a.nodes[ea.dst].per_mode.values().all(|s| s.op.commutative())
+                    && b.nodes[eb.dst].per_mode.values().all(|s| s.op.commutative()));
+            if ports_ok {
+                let w = tables::mux_input_cost().area;
+                opps.push(Opportunity::Edge { ea: ei, eb: ej, w });
+            }
+        }
+    }
+
+    // --- Step 2: compatibility graph.
+    // Implied node mappings per opportunity.
+    let implied = |o: &Opportunity| -> Vec<(usize, usize)> {
+        match *o {
+            Opportunity::Node { a, b, .. } => vec![(a, b)],
+            Opportunity::Edge { ea, eb, .. } => {
+                let (sa, da) = (a.edges[ea].src, a.edges[ea].dst);
+                let (sb, db) = (b.edges[eb].src, b.edges[eb].dst);
+                vec![(sa, sb), (da, db)]
+            }
+        }
+    };
+    let compatible = |x: &Opportunity, y: &Opportunity| -> bool {
+        // Edge identity injectivity.
+        if let (Opportunity::Edge { ea: e1, eb: f1, .. }, Opportunity::Edge { ea: e2, eb: f2, .. }) =
+            (x, y)
+        {
+            if (e1 == e2) != (f1 == f2) {
+                return false;
+            }
+            if e1 == e2 && f1 == f2 {
+                return false; // same vertex, no self loop
+            }
+        }
+        // Node mapping injectivity in both directions.
+        let mut a2b: HashMap<usize, usize> = HashMap::new();
+        let mut b2a: HashMap<usize, usize> = HashMap::new();
+        for (na, nb) in implied(x).into_iter().chain(implied(y)) {
+            if let Some(&prev) = a2b.get(&na) {
+                if prev != nb {
+                    return false;
+                }
+            }
+            if let Some(&prev) = b2a.get(&nb) {
+                if prev != na {
+                    return false;
+                }
+            }
+            a2b.insert(na, nb);
+            b2a.insert(nb, na);
+        }
+        true
+    };
+
+    let weights: Vec<f64> = opps
+        .iter()
+        .map(|o| match o {
+            Opportunity::Node { w, .. } | Opportunity::Edge { w, .. } => *w,
+        })
+        .collect();
+    let mut prob = CliqueProblem::new(weights);
+    for i in 0..opps.len() {
+        for j in (i + 1)..opps.len() {
+            if compatible(&opps[i], &opps[j]) {
+                prob.add_edge(i, j);
+            }
+        }
+    }
+
+    // --- Step 3: maximum weight clique.
+    let clique = prob.solve(3_000_000);
+
+    // --- Step 4: reconstruction.
+    let mut a2b: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut edge_merge: BTreeMap<usize, usize> = BTreeMap::new(); // b edge -> a edge
+    for &v in &clique {
+        match opps[v] {
+            Opportunity::Node { a, b, .. } => {
+                a2b.insert(a, b);
+            }
+            Opportunity::Edge { ea, eb, .. } => {
+                a2b.insert(a.edges[ea].src, b.edges[eb].src);
+                a2b.insert(a.edges[ea].dst, b.edges[eb].dst);
+                edge_merge.insert(eb, ea);
+            }
+        }
+    }
+    let b2a: BTreeMap<usize, usize> = a2b.iter().map(|(&x, &y)| (y, x)).collect();
+
+    let mode_shift = a.num_modes;
+    let mut out = MergedDatapath {
+        name: format!("{}+{}", a.name, b.name),
+        num_modes: a.num_modes + b.num_modes,
+        nodes: a.nodes.clone(),
+        edges: a.edges.clone(),
+    };
+    // Absorb merged B nodes into their A partner; append the rest.
+    let mut bmap: HashMap<usize, usize> = HashMap::new();
+    for (j, nb) in b.nodes.iter().enumerate() {
+        if let Some(&i) = b2a.get(&j) {
+            for (&m, &slot) in &nb.per_mode {
+                out.nodes[i].per_mode.insert(m + mode_shift, slot);
+            }
+            bmap.insert(j, i);
+        } else {
+            let mut per_mode = BTreeMap::new();
+            for (&m, &slot) in &nb.per_mode {
+                per_mode.insert(m + mode_shift, slot);
+            }
+            bmap.insert(j, out.nodes.len());
+            out.nodes.push(DpNode {
+                class: nb.class,
+                per_mode,
+            });
+        }
+    }
+    // Edges: merged B edges fold into their A edge; the rest are appended.
+    for (ej, eb) in b.edges.iter().enumerate() {
+        let new_modes: BTreeSet<usize> = eb.modes.iter().map(|&m| m + mode_shift).collect();
+        if let Some(&ei) = edge_merge.get(&ej) {
+            out.edges[ei].modes.extend(new_modes);
+        } else {
+            out.edges.push(DpEdge {
+                src: bmap[&eb.src],
+                dst: bmap[&eb.dst],
+                port: eb.port,
+                modes: new_modes,
+            });
+        }
+    }
+    // Coalesce accidental duplicates (same src/dst/port).
+    let mut seen: BTreeMap<(usize, usize, u8), usize> = BTreeMap::new();
+    let mut coalesced: Vec<DpEdge> = Vec::new();
+    for e in out.edges.drain(..) {
+        match seen.get(&(e.src, e.dst, e.port)) {
+            Some(&k) => {
+                let modes = e.modes;
+                coalesced[k].modes.extend(modes);
+            }
+            None => {
+                seen.insert((e.src, e.dst, e.port), coalesced.len());
+                coalesced.push(e);
+            }
+        }
+    }
+    out.edges = coalesced;
+    out
+}
+
+/// Merge a list of subgraphs left to right (the paper's tuning knob: how
+/// many ranked subgraphs get merged).
+pub fn merge_all(subs: &[Graph], name: &str) -> MergedDatapath {
+    let mut dp = MergedDatapath {
+        name: name.to_string(),
+        ..Default::default()
+    };
+    for s in subs {
+        dp = merge_subgraph(&dp, s);
+    }
+    dp.name = name.to_string();
+    dp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::micro;
+    use crate::ir::Graph;
+
+    fn mul_add() -> Graph {
+        let mut g = Graph::new("muladd");
+        let m = g.add_op(Op::Mul);
+        let a = g.add_op(Op::Add);
+        g.connect(m, a, 0);
+        g
+    }
+
+    fn mul_sub() -> Graph {
+        let mut g = Graph::new("mulsub");
+        let m = g.add_op(Op::Mul);
+        let s = g.add_op(Op::Sub);
+        g.connect(m, s, 0);
+        g
+    }
+
+    #[test]
+    fn identical_subgraphs_merge_fully() {
+        let dp = merge_all(&[mul_add(), mul_add()], "t");
+        assert_eq!(dp.num_modes, 2);
+        assert_eq!(dp.nodes.len(), 2, "{:?}", dp.nodes);
+        assert_eq!(dp.edges.len(), 1);
+        assert_eq!(dp.edges[0].modes.len(), 2);
+    }
+
+    #[test]
+    fn add_sub_share_one_addsub_unit() {
+        let dp = merge_all(&[mul_add(), mul_sub()], "t");
+        // mul merges with mul, add with sub (same AddSub class).
+        assert_eq!(dp.nodes.len(), 2);
+        let unit = dp
+            .nodes
+            .iter()
+            .find(|n| n.class == HwClass::AddSub)
+            .unwrap();
+        assert_eq!(unit.op_labels(), BTreeSet::from(["add", "sub"]));
+    }
+
+    #[test]
+    fn disjoint_classes_do_not_merge() {
+        let mut g1 = Graph::new("a");
+        g1.add_op(Op::Mul);
+        let mut g2 = Graph::new("b");
+        g2.add_op(Op::And);
+        let dp = merge_all(&[g1, g2], "t");
+        assert_eq!(dp.nodes.len(), 2);
+    }
+
+    #[test]
+    fn paper_fig5_merge() {
+        // Fig. 5: A = add(add(x, const), y), B = add(add(z, y), shl(x, const)).
+        // The merged datapath must contain: 1 const, 1 shl, 2 adds (the two
+        // adds of A merged with the two adds of B) — 4 units total.
+        let a = micro::fig5_subgraph_a();
+        let b = micro::fig5_subgraph_b();
+        let dp = merge_all(&[a, b], "fig5");
+        let classes: Vec<HwClass> = dp.nodes.iter().map(|n| n.class).collect();
+        let adds = classes.iter().filter(|&&c| c == HwClass::AddSub).count();
+        let shifts = classes.iter().filter(|&&c| c == HwClass::Shifter).count();
+        let consts = classes.iter().filter(|&&c| c == HwClass::ConstReg).count();
+        assert_eq!(adds, 2, "nodes: {:?}", dp.nodes);
+        assert_eq!(shifts, 1);
+        assert_eq!(consts, 1);
+        assert_eq!(dp.nodes.len(), 4);
+        // The a2->a1 edge merges with b3->b2: one edge live in both modes.
+        assert!(
+            dp.edges
+                .iter()
+                .any(|e| e.modes.len() == 2),
+            "edges: {:?}",
+            dp.edges
+        );
+    }
+
+    #[test]
+    fn external_ports_and_roots() {
+        let dp = MergedDatapath::from_graph(&mul_add(), "m");
+        // mode 0: mul has 2 external ports, add has 1 (other fed by mul).
+        let ext = dp.external_ports_of_mode(0);
+        assert_eq!(ext.len(), 3);
+        assert_eq!(dp.roots_of_mode(0), vec![1]);
+    }
+
+    #[test]
+    fn merge_keeps_all_modes_executable() {
+        // After merging, every mode must still have its ops reachable:
+        // check per-mode op sets survive.
+        let subs = [mul_add(), mul_sub(), mul_add()];
+        let dp = merge_all(&subs, "t");
+        assert_eq!(dp.num_modes, 3);
+        for (m, sub) in subs.iter().enumerate() {
+            let want: BTreeSet<&str> = sub
+                .nodes
+                .iter()
+                .filter(|n| n.op.is_compute())
+                .map(|n| n.op.label())
+                .collect();
+            let got: BTreeSet<&str> = dp
+                .nodes
+                .iter()
+                .filter_map(|n| n.per_mode.get(&m).map(|s| s.op.label()))
+                .collect();
+            assert_eq!(want, got, "mode {m}");
+        }
+    }
+
+    #[test]
+    fn unit_area_decreases_with_merging() {
+        let separate = MergedDatapath::from_graph(&mul_add(), "a").unit_area()
+            + MergedDatapath::from_graph(&mul_add(), "b").unit_area();
+        let merged = merge_all(&[mul_add(), mul_add()], "t").unit_area();
+        assert!(merged < separate);
+    }
+
+    #[test]
+    fn const_values_survive_per_mode() {
+        let mut g1 = Graph::new("c3");
+        let c = g1.add_op(Op::Const(3));
+        let a = g1.add_op(Op::Add);
+        g1.connect(c, a, 0);
+        let mut g2 = Graph::new("c9");
+        let c2 = g2.add_op(Op::Const(9));
+        let a2 = g2.add_op(Op::Add);
+        g2.connect(c2, a2, 0);
+        let dp = merge_all(&[g1, g2], "t");
+        let cn = dp
+            .nodes
+            .iter()
+            .find(|n| n.class == HwClass::ConstReg)
+            .unwrap();
+        assert_eq!(cn.per_mode[&0].op, Op::Const(3));
+        assert_eq!(cn.per_mode[&1].op, Op::Const(9));
+    }
+}

@@ -1,0 +1,189 @@
+//! Maximal independent set analysis (§III-B).
+//!
+//! Overlapping occurrences of a mined subgraph cannot all be accelerated by
+//! fully-utilized PEs; the size of a maximal independent set of the
+//! occurrence-overlap graph estimates how many fully-utilized PEs the
+//! subgraph supports. We run greedy MIS from multiple seeded random orders
+//! and keep the best (exact for the tiny graphs in tests, high-quality for
+//! application-scale ones).
+
+use crate::ir::NodeId;
+use crate::util::SplitMix64;
+
+/// Build the overlap graph: one vertex per occurrence (node set), an edge
+/// whenever two occurrences share an application node. Returns an adjacency
+/// list.
+pub fn overlap_graph(occ_sets: &[Vec<NodeId>]) -> Vec<Vec<usize>> {
+    let n = occ_sets.len();
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if shares_node(&occ_sets[i], &occ_sets[j]) {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+    }
+    adj
+}
+
+/// Two sorted node sets share an element?
+fn shares_node(a: &[NodeId], b: &[NodeId]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => return true,
+        }
+    }
+    false
+}
+
+/// Greedy MIS in a given vertex order.
+fn greedy_mis(adj: &[Vec<usize>], order: &[usize]) -> Vec<usize> {
+    let n = adj.len();
+    let mut blocked = vec![false; n];
+    let mut set = Vec::new();
+    for &v in order {
+        if !blocked[v] {
+            set.push(v);
+            blocked[v] = true;
+            for &u in &adj[v] {
+                blocked[u] = true;
+            }
+        }
+    }
+    set
+}
+
+/// Result of the MIS analysis for one pattern.
+#[derive(Debug, Clone)]
+pub struct MisResult {
+    /// Indices (into the occurrence list) of a best-found independent set.
+    pub set: Vec<usize>,
+    /// Its size — the paper's "number of fully utilized PEs".
+    pub size: usize,
+}
+
+/// Compute a (near-)maximum independent set of the occurrence overlap graph
+/// with `restarts` randomized greedy passes plus a degree-ascending pass.
+pub fn mis(occ_sets: &[Vec<NodeId>], restarts: usize, seed: u64) -> MisResult {
+    let adj = overlap_graph(occ_sets);
+    let n = adj.len();
+    if n == 0 {
+        return MisResult { set: vec![], size: 0 };
+    }
+    // Pass 1: min-degree-first greedy (strong deterministic baseline).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&v| adj[v].len());
+    let mut best = greedy_mis(&adj, &order);
+    // Randomized restarts.
+    let mut rng = SplitMix64::new(seed);
+    let mut perm: Vec<usize> = (0..n).collect();
+    for _ in 0..restarts {
+        rng.shuffle(&mut perm);
+        let s = greedy_mis(&adj, &perm);
+        if s.len() > best.len() {
+            best = s;
+        }
+    }
+    MisResult {
+        size: best.len(),
+        set: best,
+    }
+}
+
+/// Convenience: MIS size of a mined pattern.
+pub fn mis_size(occ_sets: &[Vec<NodeId>]) -> usize {
+    mis(occ_sets, 32, 0xC0FFEE).size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::micro;
+    use crate::ir::{find_occurrences, Graph, MatchConfig, Op};
+
+    fn n(i: u32) -> NodeId {
+        NodeId(i)
+    }
+
+    #[test]
+    fn disjoint_occurrences_all_selected() {
+        let occs = vec![vec![n(0), n(1)], vec![n(2), n(3)], vec![n(4)]];
+        assert_eq!(mis_size(&occs), 3);
+    }
+
+    #[test]
+    fn fully_overlapping_occurrences_give_one() {
+        let occs = vec![vec![n(0), n(1)], vec![n(1), n(2)], vec![n(0), n(2)]];
+        assert_eq!(mis_size(&occs), 1);
+    }
+
+    #[test]
+    fn paper_fig4_chain_overlap() {
+        // Four occurrences in a chain where consecutive ones overlap:
+        // MIS = 2 (paper Fig. 4: blue and yellow).
+        let occs = vec![
+            vec![n(0), n(1)],
+            vec![n(1), n(2)],
+            vec![n(2), n(3)],
+            vec![n(3), n(4)],
+        ];
+        assert_eq!(mis_size(&occs), 2);
+    }
+
+    #[test]
+    fn overlap_graph_edges_are_symmetric() {
+        let occs = vec![vec![n(0)], vec![n(0), n(1)], vec![n(2)]];
+        let adj = overlap_graph(&occs);
+        assert!(adj[0].contains(&1));
+        assert!(adj[1].contains(&0));
+        assert!(adj[2].is_empty());
+    }
+
+    #[test]
+    fn add_add_in_conv1d_has_mis_2() {
+        // The paper's Fig. 3d/Fig. 4 example at our conv1d scale: the
+        // add->add pattern occurs 3 times in a 4-add chain; adjacent
+        // occurrences overlap, so MIS = 2.
+        let mut app = micro::conv1d_fig3();
+        let mut pat = Graph::new("addadd");
+        let a1 = pat.add_op(Op::Add);
+        let a2 = pat.add_op(Op::Add);
+        pat.connect(a1, a2, 0);
+        let occs = find_occurrences(&mut pat, &mut app, &MatchConfig::default());
+        let sets: Vec<Vec<NodeId>> = {
+            let mut seen = std::collections::BTreeSet::new();
+            occs.iter()
+                .map(|o| o.node_set())
+                .filter(|s| seen.insert(s.clone()))
+                .collect()
+        };
+        assert_eq!(sets.len(), 3);
+        assert_eq!(mis_size(&sets), 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(mis_size(&[]), 0);
+    }
+
+    #[test]
+    fn mis_set_is_independent() {
+        let occs = vec![
+            vec![n(0), n(1)],
+            vec![n(1), n(2)],
+            vec![n(3)],
+            vec![n(3), n(4)],
+            vec![n(5)],
+        ];
+        let r = mis(&occs, 16, 42);
+        for (i, &a) in r.set.iter().enumerate() {
+            for &b in &r.set[i + 1..] {
+                assert!(!shares_node(&occs[a], &occs[b]));
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! The baseline PE (paper Fig. 7, from the agile-flow CGRA): one integer
+//! arithmetic unit + multiplier + LUT for bit ops, two data inputs, one
+//! output, constant registers on each operand path.
+//!
+//! We synthesize it through the same generation flow as every specialized
+//! PE: a merge of single-op subgraphs, one mode per supported operation.
+//! The datapath merger shares units by hardware class, yielding exactly the
+//! classic ALU + multiplier + shifter + compare + LUT structure.
+
+use super::PeSpec;
+use crate::ir::{Graph, Op};
+
+/// Full baseline operation inventory (paper Fig. 7): arithmetic, shifts,
+/// comparisons/select, and the LUT bit operations.
+pub fn baseline_ops() -> Vec<Op> {
+    vec![
+        Op::Add,
+        Op::Sub,
+        Op::Mul,
+        Op::Shl,
+        Op::Lshr,
+        Op::Ashr,
+        Op::Min,
+        Op::Max,
+        Op::Abs,
+        Op::Lt,
+        Op::Gt,
+        Op::Eq,
+        Op::Sel,
+        Op::Clamp,
+        Op::And,
+        Op::Or,
+        Op::Xor,
+        Op::Not,
+    ]
+}
+
+/// A one-op subgraph.
+fn single_op_pattern(op: Op) -> Graph {
+    let mut g = Graph::new(op.label());
+    g.add_op(op);
+    g
+}
+
+/// A one-op subgraph with a constant register on the last operand (the
+/// baseline PE's register-file constant path, Fig. 2c).
+fn const_operand_pattern(op: Op) -> Graph {
+    let mut g = Graph::new(format!("{}_c", op.label()));
+    let n = g.add_op(op);
+    let c = g.add_op(Op::Const(0));
+    g.connect(c, n, op.arity() as u8 - 1);
+    g
+}
+
+fn build_flexible_pe(name: &str, ops: &[Op]) -> PeSpec {
+    // One mode per op plus const-operand variants for the binary ops —
+    // together with the full-crossbar widening below this reproduces the
+    // baseline PE's flexible operand routing (Fig. 7).
+    let mut subs: Vec<Graph> = ops.iter().copied().map(single_op_pattern).collect();
+    for &op in ops {
+        if op.arity() >= 2 {
+            subs.push(const_operand_pattern(op));
+        }
+    }
+    let mut pe = PeSpec::from_subgraphs(name, &subs);
+    pe.widen_input_muxes_full();
+    pe
+}
+
+/// The full baseline PE.
+pub fn baseline_pe() -> PeSpec {
+    build_flexible_pe("baseline", &baseline_ops())
+}
+
+/// PE variant 1 (§V): the baseline PE restricted to the operations the
+/// application actually uses (keeping the baseline's flexible operand
+/// routing).
+pub fn pe1_for_app(app: &Graph, name: impl Into<String>) -> PeSpec {
+    let hist = app.op_histogram();
+    let ops: Vec<Op> = baseline_ops()
+        .into_iter()
+        .filter(|op| hist.contains_key(op.label()))
+        .collect();
+    assert!(!ops.is_empty(), "app uses no baseline ops");
+    let name = name.into();
+    build_flexible_pe(&name, &ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::AppSuite;
+    use crate::ir::HwClass;
+
+    #[test]
+    fn baseline_shares_units_by_class() {
+        let pe = baseline_pe();
+        // ALU-style sharing: one AddSub, one Multiplier, one Shifter, one
+        // Compare, one Mux(sel), one Lut.
+        let count = |c: HwClass| {
+            pe.datapath
+                .nodes
+                .iter()
+                .filter(|n| n.class == c)
+                .count()
+        };
+        assert_eq!(count(HwClass::AddSub), 1);
+        assert_eq!(count(HwClass::Multiplier), 1);
+        assert_eq!(count(HwClass::Shifter), 1);
+        assert_eq!(count(HwClass::Compare), 1);
+        assert_eq!(count(HwClass::Lut), 1);
+        // One constant register shared across all const-operand modes.
+        assert_eq!(count(HwClass::ConstReg), 1);
+        // A plain mode per op plus const-operand variants for multi-input ops.
+        let multi = baseline_ops().iter().filter(|o| o.arity() >= 2).count();
+        assert_eq!(pe.modes.len(), baseline_ops().len() + multi);
+    }
+
+    #[test]
+    fn baseline_executes_every_op() {
+        let pe = baseline_pe();
+        for (m, op) in baseline_ops().into_iter().enumerate() {
+            let args: Vec<i64> = (1..=op.arity() as i64).map(|k| k + 2).collect();
+            let want = op.eval(&args);
+            let got = pe.execute_mode(m, &args);
+            assert_eq!(got, vec![want], "{op:?}");
+        }
+    }
+
+    #[test]
+    fn baseline_has_three_inputs() {
+        // sel/clamp need 3 operands; everything else 2 or fewer.
+        let pe = baseline_pe();
+        assert_eq!(pe.num_inputs, 3);
+        assert_eq!(pe.num_outputs, 1);
+    }
+
+    #[test]
+    fn pe1_restricts_ops() {
+        let app = AppSuite::by_name("gaussian").unwrap().graph;
+        let pe = pe1_for_app(&app, "pe1_gauss");
+        // gaussian uses mul, add, ashr (+consts): no LUT, no compare.
+        assert!(pe
+            .datapath
+            .nodes
+            .iter()
+            .all(|n| n.class != HwClass::Lut));
+        assert!(pe.modes.len() < baseline_ops().len());
+    }
+
+    #[test]
+    fn pe1_smaller_than_baseline() {
+        let app = AppSuite::by_name("gaussian").unwrap().graph;
+        let pe = pe1_for_app(&app, "pe1");
+        assert!(pe.datapath.unit_area() < baseline_pe().datapath.unit_area());
+    }
+
+    #[test]
+    fn camera_pe1_has_no_shl_or_lut() {
+        let app = AppSuite::by_name("camera").unwrap().graph;
+        let pe = pe1_for_app(&app, "pe1_cam");
+        for n in &pe.datapath.nodes {
+            for l in n.op_labels() {
+                assert!(!matches!(l, "shl" | "and" | "or" | "xor" | "not"));
+            }
+        }
+    }
+}

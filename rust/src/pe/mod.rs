@@ -1,0 +1,602 @@
+//! Processing element specification and generation (the PEak-equivalent).
+//!
+//! A [`PeSpec`] is materialized from a [`MergedDatapath`]: functional units,
+//! per-port input multiplexers, external data inputs (one connection box
+//! each), configuration constants, output selection, and one configuration
+//! ("mode") per merged subgraph. The spec carries the original subgraph
+//! pattern of every mode — those become the mapper's rewrite rules — and
+//! can emit structural Verilog (`verilog` module) and execute any mode
+//! functionally (used by the CGRA simulator and differential tests).
+
+pub mod baseline;
+pub mod verilog;
+
+use crate::ir::{Graph, HwClass, Op, Word};
+use crate::merging::MergedDatapath;
+use std::collections::BTreeMap;
+
+/// A multiplexer source for a unit input port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MuxSrc {
+    /// Output of another functional unit in the datapath.
+    Unit(usize),
+    /// External PE data input (fed by a connection box).
+    ExtInput(usize),
+}
+
+/// The mux in front of one unit input port.
+#[derive(Debug, Clone)]
+pub struct PortMux {
+    pub node: usize,
+    pub port: u8,
+    /// Deduplicated candidate sources, selection-index ordered.
+    pub srcs: Vec<MuxSrc>,
+}
+
+/// Per-mode configuration: how to set every mux and which unit drives each
+/// PE output, plus the constant-register values.
+#[derive(Debug, Clone)]
+pub struct ModeConfig {
+    /// `(node, port) -> index into the port's mux sources`.
+    pub mux_select: BTreeMap<(usize, u8), usize>,
+    /// Unit driving each PE output (one entry per used output).
+    pub out_units: Vec<usize>,
+    /// `const unit -> value` for this mode.
+    pub const_values: BTreeMap<usize, Word>,
+    /// External input index -> (node, port) it feeds in this mode.
+    pub ext_assignment: Vec<(usize, u8)>,
+    /// External input index -> (source-pattern node, port) — the mapper
+    /// binds application data through this view.
+    pub ext_pattern_ports: Vec<(usize, u8)>,
+    /// PE output position -> source-pattern node producing it.
+    pub out_pattern_nodes: Vec<usize>,
+    /// Const unit -> source-pattern node index (for value binding).
+    pub const_origs: BTreeMap<usize, usize>,
+    /// Number of application ops this mode covers per activation
+    /// (compute ops of the source pattern, consts excluded).
+    pub ops_covered: usize,
+}
+
+/// A complete PE architecture.
+#[derive(Debug, Clone)]
+pub struct PeSpec {
+    pub name: String,
+    pub datapath: MergedDatapath,
+    /// Original subgraph pattern per mode (= mapper rewrite rules).
+    pub mode_patterns: Vec<Graph>,
+    pub port_muxes: Vec<PortMux>,
+    pub modes: Vec<ModeConfig>,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+    /// Output mux candidates per output position.
+    pub out_muxes: Vec<Vec<usize>>,
+    /// True when the PE has the baseline's full operand crossbar (set by
+    /// `widen_input_muxes_full`). Flexible operand routing cannot park
+    /// idle units on quiet sources, so the energy model charges a much
+    /// larger idle-toggle fraction.
+    pub full_crossbar: bool,
+}
+
+impl PeSpec {
+    /// Materialize a PE from a merged datapath and the per-mode source
+    /// patterns (same order as the datapath's modes).
+    pub fn from_datapath(
+        name: impl Into<String>,
+        datapath: MergedDatapath,
+        mode_patterns: Vec<Graph>,
+    ) -> Self {
+        assert_eq!(datapath.num_modes, mode_patterns.len());
+        let nmodes = datapath.num_modes;
+
+        // --- External input assignment per mode (deterministic order).
+        let mut ext_assign: Vec<Vec<(usize, u8)>> = Vec::with_capacity(nmodes);
+        let mut num_inputs = 0usize;
+        for m in 0..nmodes {
+            let ports = datapath.external_ports_of_mode(m);
+            num_inputs = num_inputs.max(ports.len());
+            ext_assign.push(ports);
+        }
+
+        // --- Collect mux candidates per (node, port).
+        let mut cand: BTreeMap<(usize, u8), Vec<MuxSrc>> = BTreeMap::new();
+        for e in &datapath.edges {
+            let v = cand.entry((e.dst, e.port)).or_default();
+            if !v.contains(&MuxSrc::Unit(e.src)) {
+                v.push(MuxSrc::Unit(e.src));
+            }
+        }
+        for ports in &ext_assign {
+            for (slot, &(node, port)) in ports.iter().enumerate() {
+                let v = cand.entry((node, port)).or_default();
+                if !v.contains(&MuxSrc::ExtInput(slot)) {
+                    v.push(MuxSrc::ExtInput(slot));
+                }
+            }
+        }
+        let port_muxes: Vec<PortMux> = cand
+            .into_iter()
+            .map(|((node, port), srcs)| PortMux { node, port, srcs })
+            .collect();
+        let mux_index: BTreeMap<(usize, u8), usize> = port_muxes
+            .iter()
+            .enumerate()
+            .map(|(i, pm)| ((pm.node, pm.port), i))
+            .collect();
+
+        // --- Outputs: union of per-mode roots, positionally assigned.
+        let mut num_outputs = 0usize;
+        let mut out_muxes: Vec<Vec<usize>> = Vec::new();
+        let mut mode_roots: Vec<Vec<usize>> = Vec::with_capacity(nmodes);
+        for m in 0..nmodes {
+            let roots = datapath.roots_of_mode(m);
+            num_outputs = num_outputs.max(roots.len());
+            mode_roots.push(roots);
+        }
+        out_muxes.resize(num_outputs, Vec::new());
+        for roots in &mode_roots {
+            for (pos, &u) in roots.iter().enumerate() {
+                if !out_muxes[pos].contains(&u) {
+                    out_muxes[pos].push(u);
+                }
+            }
+        }
+
+        // --- Per-mode configuration.
+        let mut modes = Vec::with_capacity(nmodes);
+        for m in 0..nmodes {
+            let mut mux_select = BTreeMap::new();
+            // Internal edges live in this mode pick their source.
+            for e in &datapath.edges {
+                if e.modes.contains(&m) {
+                    let mi = mux_index[&(e.dst, e.port)];
+                    let sel = port_muxes[mi]
+                        .srcs
+                        .iter()
+                        .position(|s| *s == MuxSrc::Unit(e.src))
+                        .expect("edge source must be a mux candidate");
+                    mux_select.insert((e.dst, e.port), sel);
+                }
+            }
+            // External ports pick their assigned input.
+            for (slot, &(node, port)) in ext_assign[m].iter().enumerate() {
+                let mi = mux_index[&(node, port)];
+                let sel = port_muxes[mi]
+                    .srcs
+                    .iter()
+                    .position(|s| *s == MuxSrc::ExtInput(slot))
+                    .expect("ext input must be a mux candidate");
+                mux_select.insert((node, port), sel);
+            }
+            // Constants for this mode.
+            let mut const_values = BTreeMap::new();
+            let mut const_origs = BTreeMap::new();
+            for (i, n) in datapath.nodes.iter().enumerate() {
+                if let Some(slot) = n.per_mode.get(&m) {
+                    if let Op::Const(v) = slot.op {
+                        const_values.insert(i, v);
+                        const_origs.insert(i, slot.orig);
+                    }
+                }
+            }
+            let ops_covered = mode_patterns[m]
+                .nodes
+                .iter()
+                .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+                .count()
+                .max(1);
+            let ext_pattern_ports: Vec<(usize, u8)> = ext_assign[m]
+                .iter()
+                .map(|&(node, port)| {
+                    (
+                        datapath.nodes[node]
+                            .orig_in(m)
+                            .expect("ext port on inactive unit"),
+                        port,
+                    )
+                })
+                .collect();
+            let out_pattern_nodes: Vec<usize> = mode_roots[m]
+                .iter()
+                .map(|&u| datapath.nodes[u].orig_in(m).expect("root inactive"))
+                .collect();
+            modes.push(ModeConfig {
+                mux_select,
+                out_units: mode_roots[m].clone(),
+                const_values,
+                ext_assignment: ext_assign[m].clone(),
+                ext_pattern_ports,
+                out_pattern_nodes,
+                const_origs,
+                ops_covered,
+            });
+        }
+
+        PeSpec {
+            name: name.into(),
+            datapath,
+            mode_patterns,
+            port_muxes,
+            modes,
+            num_inputs: num_inputs.max(1),
+            num_outputs: num_outputs.max(1),
+            out_muxes,
+            full_crossbar: false,
+        }
+    }
+
+    /// Build a PE by merging `subgraphs` in order (the paper's generation
+    /// flow: ranked frequent subgraphs in, PE out). Subgraphs are projected
+    /// to their compute nodes first, so pattern-node indices line up with
+    /// the datapath's origin bookkeeping.
+    pub fn from_subgraphs(name: impl Into<String>, subgraphs: &[Graph]) -> Self {
+        let name = name.into();
+        let patterns: Vec<Graph> = subgraphs
+            .iter()
+            .map(|g| {
+                let ids: Vec<_> = g
+                    .nodes
+                    .iter()
+                    .filter(|n| n.op.is_compute())
+                    .map(|n| n.id)
+                    .collect();
+                g.induced_subgraph(&ids, &g.name)
+            })
+            .collect();
+        let dp = crate::merging::merge_all(&patterns, &name);
+        Self::from_datapath(name, dp, patterns)
+    }
+
+    /// Execute one mode functionally: `ext` are the PE data inputs used by
+    /// the mode (in `ext_assignment` order). Returns the PE outputs.
+    ///
+    /// This is the behavioural model of the generated RTL; the CGRA
+    /// simulator calls it per tile per cycle, and differential tests check
+    /// it against the source pattern's `Graph::eval`.
+    pub fn execute_mode(&self, mode: usize, ext: &[Word]) -> Vec<Word> {
+        self.execute_mode_with(mode, ext, None)
+    }
+
+    /// `execute_mode` with per-instance constant-register overrides (the
+    /// simulator's hot path — avoids cloning the spec per activation).
+    pub fn execute_mode_with(
+        &self,
+        mode: usize,
+        ext: &[Word],
+        const_overrides: Option<&BTreeMap<usize, Word>>,
+    ) -> Vec<Word> {
+        let cfg = &self.modes[mode];
+        let dp = &self.datapath;
+        let n = dp.nodes.len();
+        // Topological evaluation over units active in this mode.
+        let mut vals: Vec<Option<Word>> = vec![None; n];
+        // Constants first.
+        for (&u, &v) in &cfg.const_values {
+            vals[u] = Some(crate::ir::truncate(v));
+        }
+        if let Some(ovr) = const_overrides {
+            for (&u, &v) in ovr {
+                vals[u] = Some(crate::ir::truncate(v));
+            }
+        }
+        // Iterate until fixpoint (datapath is a DAG; bounded by n passes).
+        for _ in 0..n {
+            let mut progressed = false;
+            for u in 0..n {
+                if vals[u].is_some() {
+                    continue;
+                }
+                let Some(op) = dp.nodes[u].op_in(mode) else {
+                    continue;
+                };
+                if matches!(op, Op::Const(_)) {
+                    continue; // already set
+                }
+                let arity = op.arity();
+                let mut args: Vec<Word> = Vec::with_capacity(arity);
+                let mut ready = true;
+                for p in 0..arity as u8 {
+                    let Some(&sel) = cfg.mux_select.get(&(u, p)) else {
+                        ready = false;
+                        break;
+                    };
+                    let mi = self
+                        .port_muxes
+                        .iter()
+                        .position(|pm| pm.node == u && pm.port == p)
+                        .unwrap();
+                    match self.port_muxes[mi].srcs[sel] {
+                        MuxSrc::Unit(s) => match vals[s] {
+                            Some(v) => args.push(v),
+                            None => {
+                                ready = false;
+                                break;
+                            }
+                        },
+                        MuxSrc::ExtInput(slot) => {
+                            args.push(crate::ir::truncate(
+                                ext.get(slot).copied().unwrap_or(0),
+                            ));
+                        }
+                    }
+                }
+                if ready {
+                    vals[u] = Some(op.eval(&args));
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        cfg.out_units
+            .iter()
+            .map(|&u| vals[u].unwrap_or_else(|| panic!("unit {u} never fired in mode {mode}")))
+            .collect()
+    }
+
+    /// Widen every unit input-port mux to the full operand crossbar: all
+    /// external inputs plus every constant register become selectable on
+    /// every port. This is the baseline PE's flexible intraconnect
+    /// (§II-B: "each input to the PE can be routed to either input of the
+    /// ALU") — generality that costs mux area, energy and delay.
+    ///
+    /// Existing sources keep their selection indices, so the per-mode
+    /// configurations remain valid.
+    pub fn widen_input_muxes_full(&mut self) {
+        self.full_crossbar = true;
+        let consts: Vec<usize> = self
+            .datapath
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.class == HwClass::ConstReg)
+            .map(|(i, _)| i)
+            .collect();
+        for pm in &mut self.port_muxes {
+            for slot in 0..self.num_inputs {
+                let s = MuxSrc::ExtInput(slot);
+                if !pm.srcs.contains(&s) {
+                    pm.srcs.push(s);
+                }
+            }
+            for &c in &consts {
+                let s = MuxSrc::Unit(c);
+                if pm.node != c && !pm.srcs.contains(&s) {
+                    pm.srcs.push(s);
+                }
+            }
+        }
+    }
+
+    /// Number of configuration bits this PE needs (mux selects, per-unit op
+    /// selects, const registers, output selects).
+    pub fn config_bits(&self) -> usize {
+        let mut bits = 0usize;
+        for pm in &self.port_muxes {
+            if pm.srcs.len() > 1 {
+                bits += (pm.srcs.len() as f64).log2().ceil() as usize;
+            }
+        }
+        for n in &self.datapath.nodes {
+            let nops = n.op_labels().len();
+            if nops > 1 {
+                bits += (nops as f64).log2().ceil() as usize;
+            }
+            if n.class == HwClass::ConstReg {
+                bits += crate::ir::WORD_BITS as usize;
+            }
+        }
+        for om in &self.out_muxes {
+            if om.len() > 1 {
+                bits += (om.len() as f64).log2().ceil() as usize;
+            }
+        }
+        bits
+    }
+
+    /// Does this PE use a constant-coefficient multiplier? True for
+    /// multiplier units whose second operand is a constant register in
+    /// every mode (the KCM specialization the camera/ML PEs benefit from).
+    pub fn unit_is_const_mult(&self, unit: usize) -> bool {
+        if self.datapath.nodes[unit].class != HwClass::Multiplier {
+            return false;
+        }
+        self.datapath.nodes[unit].per_mode.keys().all(|&m| {
+            // In mode m, some port of `unit` is fed by a ConstReg unit.
+            self.modes[m].mux_select.iter().any(|(&(n, p), &sel)| {
+                if n != unit {
+                    return false;
+                }
+                let mi = self
+                    .port_muxes
+                    .iter()
+                    .position(|pm| pm.node == n && pm.port == p)
+                    .unwrap();
+                matches!(self.port_muxes[mi].srcs[sel], MuxSrc::Unit(s)
+                    if self.datapath.nodes[s].class == HwClass::ConstReg)
+            })
+        })
+    }
+
+    /// Human-readable architecture summary (used by `reproduce fig9`).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "PE `{}`: {} units, {} inputs, {} outputs, {} modes, {} config bits\n",
+            self.name,
+            self.datapath.nodes.len(),
+            self.num_inputs,
+            self.num_outputs,
+            self.modes.len(),
+            self.config_bits()
+        );
+        for (i, n) in self.datapath.nodes.iter().enumerate() {
+            let labels: Vec<&str> = n.op_labels().into_iter().collect();
+            let kcm = if self.unit_is_const_mult(i) { " [const-mult]" } else { "" };
+            s.push_str(&format!("  u{i}: {:?} {{{}}}{}\n", n.class, labels.join(","), kcm));
+        }
+        for pm in &self.port_muxes {
+            if pm.srcs.len() > 1 {
+                s.push_str(&format!(
+                    "  mux u{}.p{}: {} sources\n",
+                    pm.node,
+                    pm.port,
+                    pm.srcs.len()
+                ));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::micro;
+    use crate::ir::Graph;
+    use crate::util::SplitMix64;
+
+    fn mul_add_pattern() -> Graph {
+        // (x*w) + y with w const.
+        let mut g = Graph::new("mac");
+        let x = g.add_op(Op::Input);
+        let w = g.add_op(Op::Const(3));
+        let m = g.add(Op::Mul, &[x, w]);
+        let y = g.add_op(Op::Input);
+        let s = g.add(Op::Add, &[m, y]);
+        g.add(Op::Output, &[s]);
+        g
+    }
+
+    /// Strip Input/Output for use as a mined-pattern-style subgraph.
+    fn as_pattern(g: &Graph) -> Graph {
+        let ids: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute())
+            .map(|n| n.id)
+            .collect();
+        g.induced_subgraph(&ids, &g.name)
+    }
+
+    #[test]
+    fn single_mode_pe_executes_pattern() {
+        let pat = as_pattern(&mul_add_pattern());
+        let pe = PeSpec::from_subgraphs("mac_pe", &[pat.clone()]);
+        assert_eq!(pe.modes.len(), 1);
+        // ext inputs: mul.p0 (x) and add.p1 (y) — in (node, port) order.
+        let out = pe.execute_mode(0, &[10, 5]);
+        assert_eq!(out, vec![10 * 3 + 5]);
+    }
+
+    #[test]
+    fn pe_matches_pattern_eval_on_random_inputs() {
+        let pat = as_pattern(&mul_add_pattern());
+        let pe = PeSpec::from_subgraphs("mac_pe", &[pat]);
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..50 {
+            let x = rng.word();
+            let y = rng.word();
+            let got = pe.execute_mode(0, &[x, y]);
+            let want = crate::ir::truncate(crate::ir::truncate(x.wrapping_mul(3)) + y);
+            assert_eq!(got, vec![crate::ir::truncate(want)]);
+        }
+    }
+
+    #[test]
+    fn two_mode_pe_shares_units() {
+        let mut add = Graph::new("add");
+        add.add_op(Op::Add);
+        let mut sub = Graph::new("sub");
+        sub.add_op(Op::Sub);
+        let pe = PeSpec::from_subgraphs("addsub", &[add, sub]);
+        assert_eq!(pe.datapath.nodes.len(), 1);
+        assert_eq!(pe.modes.len(), 2);
+        assert_eq!(pe.execute_mode(0, &[7, 5]), vec![12]);
+        assert_eq!(pe.execute_mode(1, &[7, 5]), vec![2]);
+    }
+
+    #[test]
+    fn fig5_pe_executes_both_modes() {
+        let a = as_pattern(&micro::fig5_subgraph_a());
+        let b = as_pattern(&micro::fig5_subgraph_b());
+        let pe = PeSpec::from_subgraphs("fig5", &[a.clone(), b.clone()]);
+        // Mode 0: (x + 3) + y. ext in (node,port) order.
+        let m0 = &pe.modes[0];
+        assert_eq!(m0.ext_assignment.len(), 2);
+        let out = pe.execute_mode(0, &[10, 4]);
+        assert_eq!(out, vec![10 + 3 + 4]);
+        // Mode 1: (z + y) + (x << 7).
+        let out = pe.execute_mode(1, &[1, 2, 3]);
+        // ext assignment order is deterministic; compute expected from the
+        // pattern itself.
+        let mut bg = b.clone();
+        // pattern b inputs in (node,port) order of its external ports — the
+        // PE assigns slots in that same order, so evaluating the original
+        // graph with inputs bound in id order may differ. Instead check
+        // against all permutations matching one value.
+        let candidates: Vec<Word> = {
+            let xs = [1i64, 2, 3];
+            let mut outs = vec![];
+            let idx = [0usize, 1, 2];
+            let perms = [
+                [idx[0], idx[1], idx[2]],
+                [idx[0], idx[2], idx[1]],
+                [idx[1], idx[0], idx[2]],
+                [idx[1], idx[2], idx[0]],
+                [idx[2], idx[0], idx[1]],
+                [idx[2], idx[1], idx[0]],
+            ];
+            for p in perms {
+                let (x, y, z) = (xs[p[0]], xs[p[1]], xs[p[2]]);
+                outs.push(crate::ir::truncate((z + y) + crate::ir::truncate(x << 7)));
+            }
+            let _ = &mut bg;
+            outs
+        };
+        assert!(candidates.contains(&out[0]), "out {:?}", out);
+    }
+
+    #[test]
+    fn config_bits_grow_with_modes() {
+        let mut add = Graph::new("add");
+        add.add_op(Op::Add);
+        let pe1 = PeSpec::from_subgraphs("p1", &[add.clone()]);
+        let mut sub = Graph::new("sub");
+        sub.add_op(Op::Sub);
+        let mut shl = Graph::new("shl");
+        shl.add_op(Op::Shl);
+        let pe3 = PeSpec::from_subgraphs("p3", &[add, sub, shl]);
+        assert!(pe3.config_bits() >= pe1.config_bits());
+    }
+
+    #[test]
+    fn const_mult_detection() {
+        let pat = as_pattern(&mul_add_pattern());
+        let pe = PeSpec::from_subgraphs("mac", &[pat]);
+        let mul_unit = pe
+            .datapath
+            .nodes
+            .iter()
+            .position(|n| n.class == HwClass::Multiplier)
+            .unwrap();
+        assert!(pe.unit_is_const_mult(mul_unit));
+    }
+
+    #[test]
+    fn non_const_mult_not_kcm() {
+        let mut g = Graph::new("mm");
+        let m = g.add_op(Op::Mul);
+        let _ = m;
+        let pe = PeSpec::from_subgraphs("mm", &[g]);
+        assert!(!pe.unit_is_const_mult(0));
+    }
+
+    #[test]
+    fn describe_mentions_units() {
+        let pat = as_pattern(&mul_add_pattern());
+        let pe = PeSpec::from_subgraphs("mac", &[pat]);
+        let d = pe.describe();
+        assert!(d.contains("Multiplier"));
+        assert!(d.contains("modes"));
+    }
+}

@@ -1,0 +1,371 @@
+//! Place and route: assign mapped PE instances to fabric tiles (simulated
+//! annealing on total wirelength) and route every inter-instance net on the
+//! track graph with negotiated congestion (PathFinder-style).
+
+use crate::arch::Fabric;
+use crate::mapper::{DataSrc, Mapping};
+use crate::util::SplitMix64;
+use std::collections::HashMap;
+
+/// Placement: instance index -> (row, col). App inputs live on MEM tiles.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub slots: Vec<(usize, usize)>,
+    /// App `Input` nodes are served from MEM tiles: input node id ->
+    /// (row, col) of its line-buffer MEM.
+    pub input_mems: HashMap<u32, (usize, usize)>,
+    pub cost: f64,
+}
+
+/// One routed net: from a source tile to a sink tile as a list of hop
+/// segments (tile-to-tile), each with an assigned track.
+#[derive(Debug, Clone)]
+pub struct RoutedNet {
+    pub src: (usize, usize),
+    pub dst: (usize, usize),
+    pub hops: Vec<((usize, usize), (usize, usize), usize)>,
+}
+
+/// Routing result.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub nets: Vec<RoutedNet>,
+    pub total_hops: usize,
+    /// Peak channel utilization (used segments on the busiest channel /
+    /// tracks).
+    pub peak_utilization: f64,
+    pub iterations: usize,
+}
+
+/// Errors.
+#[derive(Debug, Clone)]
+pub enum PnrError {
+    TooManyInstances { need: usize, have: usize },
+    Unroutable { nets_left: usize },
+}
+
+impl std::fmt::Display for PnrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PnrError::TooManyInstances { need, have } => {
+                write!(f, "need {need} PE tiles, fabric has {have}")
+            }
+            PnrError::Unroutable { nets_left } => write!(f, "{nets_left} nets unroutable"),
+        }
+    }
+}
+
+/// Nets to route: (source tile, dest tile) pairs derived from the mapping
+/// and a placement.
+fn nets_of(mapping: &Mapping, pl: &Placement) -> Vec<((usize, usize), (usize, usize))> {
+    let mut nets = Vec::new();
+    for (idx, inst) in mapping.instances.iter().enumerate() {
+        for src in &inst.inputs {
+            let from = match src {
+                DataSrc::AppInput(nid) => pl.input_mems[&nid.0],
+                DataSrc::Instance { inst: j, .. } => pl.slots[*j],
+                // Constants come from the PE's own config registers.
+                DataSrc::Constant(_) => continue,
+            };
+            nets.push((from, pl.slots[idx]));
+        }
+    }
+    nets
+}
+
+/// Simulated-annealing placement minimizing total Manhattan wirelength.
+pub fn place(mapping: &Mapping, fabric: &Fabric, seed: u64) -> Result<Placement, PnrError> {
+    let slots_avail = fabric.pe_slots();
+    let n = mapping.instances.len();
+    if n > slots_avail.len() {
+        return Err(PnrError::TooManyInstances {
+            need: n,
+            have: slots_avail.len(),
+        });
+    }
+    let mut rng = SplitMix64::new(seed);
+
+    // App inputs round-robin over MEM tiles (line buffers).
+    let mems = fabric.mem_slots();
+    let mut input_mems: HashMap<u32, (usize, usize)> = HashMap::new();
+    {
+        let mut k = 0usize;
+        for inst in &mapping.instances {
+            for src in &inst.inputs {
+                if let DataSrc::AppInput(nid) = src {
+                    input_mems.entry(nid.0).or_insert_with(|| {
+                        let s = mems[k % mems.len().max(1)];
+                        k += 1;
+                        s
+                    });
+                }
+            }
+        }
+    }
+
+    // Initial placement: first-fit row-major.
+    let mut assign: Vec<usize> = (0..n).collect(); // instance -> slot index
+    let cost_of = |assign: &[usize]| -> f64 {
+        let pl = Placement {
+            slots: assign.iter().map(|&s| slots_avail[s]).collect(),
+            input_mems: input_mems.clone(),
+            cost: 0.0,
+        };
+        nets_of(mapping, &pl)
+            .iter()
+            .map(|&(a, b)| Fabric::dist(a, b) as f64)
+            .sum()
+    };
+    let mut cost = cost_of(&assign);
+
+    // SA over swaps / moves.
+    let moves = (n * 60).max(200);
+    let mut temp = (cost / n.max(1) as f64).max(1.0);
+    for step in 0..moves {
+        let i = rng.below(n);
+        // Swap with another instance's slot or move to a free slot.
+        let j_slot = rng.below(slots_avail.len());
+        let mut next = assign.clone();
+        if let Some(j) = next.iter().position(|&s| s == j_slot) {
+            next.swap(i, j);
+        } else {
+            next[i] = j_slot;
+        }
+        let c2 = cost_of(&next);
+        let accept = c2 <= cost || rng.f64() < ((cost - c2) / temp).exp();
+        if accept {
+            assign = next;
+            cost = c2;
+        }
+        // Geometric cooling.
+        if step % 32 == 31 {
+            temp *= 0.85;
+        }
+    }
+
+    Ok(Placement {
+        slots: assign.iter().map(|&s| slots_avail[s]).collect(),
+        input_mems,
+        cost,
+    })
+}
+
+/// Channel id: a directed tile-to-tile segment.
+type Segment = ((usize, usize), (usize, usize));
+
+/// PathFinder-style routing: L-shaped candidate paths with per-segment
+/// history cost, iterated until no channel exceeds its track count.
+pub fn route(
+    mapping: &Mapping,
+    fabric: &Fabric,
+    pl: &Placement,
+    max_iters: usize,
+) -> Result<Routing, PnrError> {
+    let tracks = fabric.cfg.tracks;
+    let nets = nets_of(mapping, pl);
+    let mut history: HashMap<Segment, f64> = HashMap::new();
+
+    let mut best: Option<Routing> = None;
+    for iter in 0..max_iters {
+        let mut usage: HashMap<Segment, usize> = HashMap::new();
+        let mut routed: Vec<RoutedNet> = Vec::new();
+        for &(src, dst) in &nets {
+            // Two L-shaped candidates; pick the one with lower congestion
+            // cost.
+            let cands = [l_path(src, dst, true), l_path(src, dst, false)];
+            let cost = |path: &[Segment]| -> f64 {
+                path.iter()
+                    .map(|s| {
+                        let u = *usage.get(s).unwrap_or(&0) as f64;
+                        let h = *history.get(s).unwrap_or(&0.0);
+                        1.0 + h + if u >= tracks as f64 { 8.0 * (u - tracks as f64 + 1.0) } else { 0.2 * u }
+                    })
+                    .sum()
+            };
+            let path = if cost(&cands[0]) <= cost(&cands[1]) {
+                &cands[0]
+            } else {
+                &cands[1]
+            };
+            let mut hops = Vec::with_capacity(path.len());
+            for &seg in path {
+                let u = usage.entry(seg).or_insert(0);
+                hops.push((seg.0, seg.1, *u % tracks.max(1)));
+                *u += 1;
+            }
+            routed.push(RoutedNet { src, dst, hops });
+        }
+        // Check overuse.
+        let over: Vec<(&Segment, &usize)> =
+            usage.iter().filter(|(_, &u)| u > tracks).collect();
+        let peak = usage
+            .values()
+            .copied()
+            .max()
+            .unwrap_or(0) as f64
+            / tracks.max(1) as f64;
+        let total_hops = routed.iter().map(|r| r.hops.len()).sum();
+        let result = Routing {
+            nets: routed,
+            total_hops,
+            peak_utilization: peak,
+            iterations: iter + 1,
+        };
+        if over.is_empty() {
+            return Ok(result);
+        }
+        // Update history cost on overused segments and retry.
+        for (seg, &u) in over {
+            *history.entry(*seg).or_insert(0.0) += 0.5 * (u - tracks) as f64;
+        }
+        best = Some(result);
+    }
+    // Congestion never cleared: report as unroutable if badly overused,
+    // otherwise accept with peak utilization recorded.
+    let b = best.unwrap();
+    if b.peak_utilization > 2.0 {
+        Err(PnrError::Unroutable {
+            nets_left: b.nets.len(),
+        })
+    } else {
+        Ok(b)
+    }
+}
+
+/// L-shaped path between tiles: horizontal-then-vertical or the reverse.
+fn l_path(src: (usize, usize), dst: (usize, usize), h_first: bool) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    let mut cur = src;
+    let go_h = |cur: &mut (usize, usize), segs: &mut Vec<Segment>| {
+        while cur.1 != dst.1 {
+            let next = (
+                cur.0,
+                if dst.1 > cur.1 { cur.1 + 1 } else { cur.1 - 1 },
+            );
+            segs.push((*cur, next));
+            *cur = next;
+        }
+    };
+    let go_v = |cur: &mut (usize, usize), segs: &mut Vec<Segment>| {
+        while cur.0 != dst.0 {
+            let next = (
+                if dst.0 > cur.0 { cur.0 + 1 } else { cur.0 - 1 },
+                cur.1,
+            );
+            segs.push((*cur, next));
+            *cur = next;
+        }
+    };
+    if h_first {
+        go_h(&mut cur, &mut segs);
+        go_v(&mut cur, &mut segs);
+    } else {
+        go_v(&mut cur, &mut segs);
+        go_h(&mut cur, &mut segs);
+    }
+    segs
+}
+
+/// Full PnR convenience wrapper.
+pub fn place_and_route(
+    mapping: &Mapping,
+    fabric: &Fabric,
+    seed: u64,
+) -> Result<(Placement, Routing), PnrError> {
+    let pl = place(mapping, fabric, seed)?;
+    let rt = route(mapping, fabric, &pl, 24)?;
+    Ok((pl, rt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{FabricConfig, TileKind};
+    use crate::frontend::micro;
+    use crate::mapper::map_app;
+    use crate::pe::baseline::baseline_pe;
+
+    fn small_fabric() -> Fabric {
+        Fabric::new(FabricConfig {
+            width: 8,
+            height: 8,
+            tracks: 5,
+            mem_column_period: 4,
+        })
+    }
+
+    #[test]
+    fn conv1d_places_and_routes() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        let f = small_fabric();
+        let (pl, rt) = place_and_route(&m, &f, 1).unwrap();
+        assert_eq!(pl.slots.len(), m.num_pes());
+        assert!(rt.total_hops > 0);
+        assert!(rt.peak_utilization <= 2.0);
+    }
+
+    #[test]
+    fn placement_slots_are_distinct_pe_tiles() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        let f = small_fabric();
+        let pl = place(&m, &f, 2).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for &s in &pl.slots {
+            assert!(seen.insert(s), "slot reused: {s:?}");
+            assert_eq!(f.kind(s.0, s.1), TileKind::Pe);
+        }
+    }
+
+    #[test]
+    fn too_small_fabric_rejected() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        let f = Fabric::new(FabricConfig {
+            width: 2,
+            height: 2,
+            tracks: 2,
+            mem_column_period: 2,
+        });
+        assert!(matches!(
+            place(&m, &f, 0),
+            Err(PnrError::TooManyInstances { .. })
+        ));
+    }
+
+    #[test]
+    fn routes_connect_endpoints() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        let f = small_fabric();
+        let (_, rt) = place_and_route(&m, &f, 3).unwrap();
+        for net in &rt.nets {
+            if net.src == net.dst {
+                assert!(net.hops.is_empty());
+                continue;
+            }
+            assert_eq!(net.hops.first().unwrap().0, net.src);
+            assert_eq!(net.hops.last().unwrap().1, net.dst);
+            // Contiguous.
+            for w in net.hops.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic_per_seed() {
+        let mut app = micro::conv1d_fig3();
+        let pe = baseline_pe();
+        let m = map_app(&mut app, &pe).unwrap();
+        let f = small_fabric();
+        let a = place(&m, &f, 7).unwrap();
+        let b = place(&m, &f, 7).unwrap();
+        assert_eq!(a.slots, b.slots);
+    }
+}

@@ -1,0 +1,12 @@
+//! Area / energy / timing models (stand-in for the paper's synthesis +
+//! power flow). `tables` holds the primitive costs; `pe_model` (added with
+//! the PE module) evaluates whole PEs and CGRAs.
+
+pub mod pe_model;
+pub mod tables;
+
+pub use pe_model::{evaluate_pe, evaluate_pe_opts, interconnect_per_pe, synthesis_scale, PeEval, PeModelOpts};
+pub use tables::{
+    cb_cost, class_cost, config_bit_cost, mux_input_cost, op_delay, op_energy, sb_cost,
+    word_reg_cost, Cost,
+};

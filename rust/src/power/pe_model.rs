@@ -1,0 +1,365 @@
+//! PE-level area / energy / timing evaluation (stand-in for Design
+//! Compiler + PrimeTime PX on the generated PE RTL).
+//!
+//! Model structure (documented in DESIGN.md §5):
+//! - generated PEs register every functional-unit output (the statically
+//!   scheduled CGRA absorbs the latency), so the critical path is the worst
+//!   single *stage*: port-mux → unit → output-mux → register;
+//! - a multiplier whose operand is a constant register in every mode is a
+//!   constant-coefficient multiplier (KCM): 0.60× area, 0.55× energy,
+//!   0.65× delay — this is why specialized PEs close timing above the
+//!   baseline (paper: 1.43 GHz baseline vs 2 GHz camera-specialized);
+//! - synthesizing above the nominal frequency up-sizes gates: superlinear
+//!   area/energy penalty, hard wall at +42% — this produces the frequency
+//!   sweeps of Fig. 8.
+
+use super::tables;
+use crate::ir::HwClass;
+use crate::pe::PeSpec;
+
+/// Multiplicative discounts for a constant-coefficient multiplier.
+pub const KCM_AREA: f64 = 0.60;
+pub const KCM_ENERGY: f64 = 0.55;
+pub const KCM_DELAY: f64 = 0.78;
+
+/// Register setup + clk-to-q + clock margin per pipeline stage (ps).
+const STAGE_REG_OVERHEAD_PS: f64 = 90.0;
+/// Fixed per-PE control/decode overhead (µm²).
+const PE_FIXED_AREA: f64 = 42.0;
+/// Max up-sizing speedup before timing cannot close.
+pub const MAX_SPEEDUP: f64 = 1.42;
+/// Fraction of a register's clock energy burned when its unit is idle
+/// (imperfect clock gating) — this is what makes a big general PE pay for
+/// its unused units every cycle.
+const IDLE_REG_FACTOR: f64 = 0.30;
+/// Fraction of a functional unit's dynamic energy burned when the unit is
+/// idle during an activation. Two regimes, chosen structurally:
+/// - full-crossbar PEs (the baseline) route operands through a shared
+///   network with no operand isolation, so live data toggles into every
+///   unit each cycle (cf. the paper's observation that PE IP wins on
+///   Harris by "reducing activity on an input to a multiplier");
+/// - generated specialized PEs can park don't-care input muxes on constant
+///   registers, quieting unused units almost completely.
+const IDLE_UNIT_FACTOR_FLEX: f64 = 0.85;
+const IDLE_UNIT_FACTOR_SPEC: f64 = 0.10;
+/// Wire/config-network toggle energy per µm² of mux + configuration
+/// structure, charged per activation: the interconnect-like capacitance of
+/// the operand-routing fabric inside the PE. This is what makes a big
+/// flexible PE expensive even for a cheap op.
+const WIRE_TOGGLE_FJ_PER_UM2: f64 = 0.085;
+
+/// Evaluation result for one PE at nominal synthesis.
+#[derive(Debug, Clone)]
+pub struct PeEval {
+    /// Total PE core area, µm².
+    pub area: f64,
+    /// Worst pipeline-stage delay, ps.
+    pub delay_ps: f64,
+    /// Hard maximum synthesis frequency, GHz.
+    pub fmax_ghz: f64,
+    /// Energy per activation per mode, fJ.
+    pub mode_energy: Vec<f64>,
+    /// Energy per *covered application op* per mode, fJ.
+    pub mode_energy_per_op: Vec<f64>,
+    /// Config bits (area already included).
+    pub config_bits: usize,
+}
+
+fn mux_levels(srcs: usize) -> f64 {
+    if srcs <= 1 {
+        0.0
+    } else {
+        (srcs as f64).log2().ceil()
+    }
+}
+
+/// Model options (used by the ablation study; defaults match the paper's
+/// generated PEs).
+#[derive(Debug, Clone)]
+pub struct PeModelOpts {
+    /// Detect constant-coefficient multipliers and apply the KCM
+    /// area/energy/delay discounts.
+    pub kcm: bool,
+}
+
+impl Default for PeModelOpts {
+    fn default() -> Self {
+        PeModelOpts { kcm: true }
+    }
+}
+
+/// Evaluate a PE at nominal synthesis effort.
+pub fn evaluate_pe(pe: &PeSpec) -> PeEval {
+    evaluate_pe_opts(pe, &PeModelOpts::default())
+}
+
+/// Evaluate with explicit model options.
+pub fn evaluate_pe_opts(pe: &PeSpec, opts: &PeModelOpts) -> PeEval {
+    let dp = &pe.datapath;
+    let n = dp.nodes.len();
+
+    // --- Per-unit area and delay (with KCM detection).
+    let mut unit_area = vec![0.0f64; n];
+    let mut unit_energy = vec![0.0f64; n];
+    let mut unit_delay = vec![0.0f64; n];
+    for (i, node) in dp.nodes.iter().enumerate() {
+        let c = tables::class_cost(node.class);
+        let kcm = opts.kcm && pe.unit_is_const_mult(i);
+        let nops = node.op_labels().len().max(1);
+        // A unit that supports several ops pays a small decode/steering tax.
+        let flex = 1.0 + 0.06 * (nops as f64 - 1.0);
+        unit_area[i] = c.area * flex * if kcm { KCM_AREA } else { 1.0 };
+        unit_energy[i] = c.energy * flex * if kcm { KCM_ENERGY } else { 1.0 };
+        unit_delay[i] = c.delay * if kcm { KCM_DELAY } else { 1.0 };
+    }
+
+    // --- Mux area/delay per port.
+    let mut port_mux_area = 0.0;
+    let mut port_mux_delay = vec![0.0f64; n]; // worst in-mux delay per unit
+    for pm in &pe.port_muxes {
+        let k = pm.srcs.len();
+        if k > 1 {
+            port_mux_area += tables::mux_input_cost().area * k as f64;
+            let d = 10.0 + 22.0 * mux_levels(k);
+            if d > port_mux_delay[pm.node] {
+                port_mux_delay[pm.node] = d;
+            }
+        }
+    }
+    // Output muxes.
+    let mut out_mux_area = 0.0;
+    let mut out_mux_delay = 0.0f64;
+    for om in &pe.out_muxes {
+        if om.len() > 1 {
+            out_mux_area += tables::mux_input_cost().area * om.len() as f64;
+            out_mux_delay = out_mux_delay.max(10.0 + 22.0 * mux_levels(om.len()));
+        }
+    }
+
+    // --- Registers: one per non-const unit output + PE outputs.
+    let datapath_regs = dp
+        .nodes
+        .iter()
+        .filter(|nd| nd.class != HwClass::ConstReg)
+        .count();
+    let reg_area = tables::word_reg_cost().area * (datapath_regs + pe.num_outputs) as f64;
+
+    let config_bits = pe.config_bits();
+    let cfg_area = tables::config_bit_cost().area * config_bits as f64;
+
+    let area = unit_area.iter().sum::<f64>()
+        + port_mux_area
+        + out_mux_area
+        + reg_area
+        + cfg_area
+        + PE_FIXED_AREA;
+
+    // --- Critical stage: mux-in + unit (+ out-mux for units that feed a PE
+    // output) + register overhead.
+    let mut delay_ps = 0.0f64;
+    for i in 0..n {
+        if dp.nodes[i].class == HwClass::ConstReg {
+            continue;
+        }
+        let feeds_output = pe.out_muxes.iter().any(|om| om.contains(&i));
+        let stage = port_mux_delay[i]
+            + unit_delay[i]
+            + if feeds_output { out_mux_delay } else { 0.0 }
+            + STAGE_REG_OVERHEAD_PS;
+        delay_ps = delay_ps.max(stage);
+    }
+    if delay_ps == 0.0 {
+        delay_ps = STAGE_REG_OVERHEAD_PS;
+    }
+    let fmax_ghz = MAX_SPEEDUP * 1000.0 / delay_ps;
+
+    // --- Per-mode energy.
+    let idle_factor = if pe.full_crossbar {
+        IDLE_UNIT_FACTOR_FLEX
+    } else {
+        IDLE_UNIT_FACTOR_SPEC
+    };
+    let wire_toggle = WIRE_TOGGLE_FJ_PER_UM2 * (port_mux_area + out_mux_area + cfg_area);
+    let reg_e = tables::word_reg_cost().energy;
+    let mut mode_energy = Vec::with_capacity(pe.modes.len());
+    let mut mode_energy_per_op = Vec::with_capacity(pe.modes.len());
+    for (m, cfg) in pe.modes.iter().enumerate() {
+        let mut e = 0.0;
+        let mut active_units = 0usize;
+        for (i, node) in dp.nodes.iter().enumerate() {
+            if node.active_in(m) {
+                e += unit_energy[i];
+                if node.class != HwClass::ConstReg {
+                    e += reg_e; // its output register toggles
+                    active_units += 1;
+                }
+            } else if node.class != HwClass::ConstReg {
+                e += reg_e * IDLE_REG_FACTOR; // clock-gating residue
+                e += unit_energy[i] * idle_factor; // operand toggling
+            }
+        }
+        // Mux switching on active ports.
+        for pm in &pe.port_muxes {
+            if pm.srcs.len() > 1 && cfg.mux_select.contains_key(&(pm.node, pm.port)) {
+                e += tables::mux_input_cost().energy * mux_levels(pm.srcs.len());
+            }
+        }
+        // Operand-network wire toggle, output registers, clock tree.
+        e += wire_toggle;
+        e += reg_e * pe.num_outputs as f64;
+        e += 1.2 * active_units.max(1) as f64;
+        mode_energy.push(e);
+        mode_energy_per_op.push(e / cfg.ops_covered as f64);
+    }
+
+    PeEval {
+        area,
+        delay_ps,
+        fmax_ghz,
+        mode_energy,
+        mode_energy_per_op,
+        config_bits,
+    }
+}
+
+/// Area/energy scale factors when synthesizing at `f_ghz`. `None` if the PE
+/// cannot close timing at that frequency.
+pub fn synthesis_scale(eval: &PeEval, f_ghz: f64) -> Option<(f64, f64)> {
+    let t_target = 1000.0 / f_ghz;
+    let speedup = eval.delay_ps / t_target;
+    if speedup > MAX_SPEEDUP {
+        return None;
+    }
+    if speedup <= 0.7 {
+        // Deeply relaxed: synthesis down-sizes.
+        return Some((0.92, 0.95));
+    }
+    if speedup <= 1.0 {
+        // Linear from the down-sized floor at 0.7 to nominal at 1.0.
+        let t = (speedup - 0.7) / 0.3;
+        return Some((0.92 + 0.08 * t, 0.95 + 0.05 * t));
+    }
+    // Up-sizing: superlinear.
+    let f = (speedup - 1.0) / (MAX_SPEEDUP - 1.0);
+    Some((1.0 + 1.8 * f * f, 1.0 + 1.4 * f * f))
+}
+
+/// Interconnect cost charged per PE instance: `num_inputs` connection boxes
+/// and one switch-box slice per output, for a fabric with `tracks` routing
+/// tracks per direction.
+pub fn interconnect_per_pe(pe: &PeSpec, tracks: usize) -> (f64, f64) {
+    let cb = tables::cb_cost(tracks);
+    let sb = tables::sb_cost(tracks);
+    let area = cb.area * pe.num_inputs as f64 + sb.area * pe.num_outputs as f64;
+    let energy = cb.energy * pe.num_inputs as f64 + sb.energy * pe.num_outputs as f64;
+    (area, energy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Graph, Op};
+    use crate::pe::baseline::{baseline_pe, pe1_for_app};
+    use crate::pe::PeSpec;
+
+    fn mac_pe() -> PeSpec {
+        let mut p = Graph::new("mac");
+        let x = p.add_op(Op::Const(3));
+        let m = p.add_op(Op::Mul);
+        p.connect(x, m, 1);
+        let a = p.add_op(Op::Add);
+        p.connect(m, a, 0);
+        PeSpec::from_subgraphs("mac", &[p])
+    }
+
+    #[test]
+    fn baseline_fmax_near_paper() {
+        let e = evaluate_pe(&baseline_pe());
+        // Paper: baseline PE max frequency 1.43 GHz.
+        assert!(
+            (1.2..1.7).contains(&e.fmax_ghz),
+            "baseline fmax {} GHz",
+            e.fmax_ghz
+        );
+    }
+
+    #[test]
+    fn specialized_mac_faster_than_baseline() {
+        // Camera-specialized PEs reach 2 GHz in the paper: the KCM +
+        // small-mux effect must push fmax well above the baseline.
+        let b = evaluate_pe(&baseline_pe());
+        let s = evaluate_pe(&mac_pe());
+        assert!(s.fmax_ghz > b.fmax_ghz);
+        assert!((1.8..2.6).contains(&s.fmax_ghz), "mac fmax {}", s.fmax_ghz);
+    }
+
+    #[test]
+    fn mac_energy_per_op_beats_baseline() {
+        let b = evaluate_pe(&baseline_pe());
+        let s = evaluate_pe(&mac_pe());
+        // Baseline executing a mul (mode 2 = Mul in baseline_ops order).
+        let base_mul_epo = b.mode_energy_per_op[2];
+        let mac_epo = s.mode_energy_per_op[0];
+        assert!(
+            mac_epo < base_mul_epo,
+            "mac {mac_epo} vs baseline mul {base_mul_epo}"
+        );
+    }
+
+    #[test]
+    fn baseline_area_dominated_by_multiplier() {
+        let e = evaluate_pe(&baseline_pe());
+        let mul = tables::class_cost(crate::ir::HwClass::Multiplier).area;
+        assert!(e.area > mul);
+        assert!(e.area < mul * 4.0, "area {}", e.area);
+    }
+
+    #[test]
+    fn synthesis_wall() {
+        let e = evaluate_pe(&baseline_pe());
+        assert!(synthesis_scale(&e, e.fmax_ghz * 1.01).is_none());
+        assert!(synthesis_scale(&e, e.fmax_ghz * 0.99).is_some());
+    }
+
+    #[test]
+    fn synthesis_scale_monotone() {
+        let e = evaluate_pe(&baseline_pe());
+        let fs = [0.5, 0.8, 1.0, 1.2, 1.35];
+        let mut last_area = 0.0;
+        for f in fs {
+            if let Some((a, en)) = synthesis_scale(&e, f) {
+                assert!(a >= last_area, "area not monotone at {f}");
+                assert!(en > 0.0);
+                last_area = a;
+            }
+        }
+    }
+
+    #[test]
+    fn pe1_cheaper_than_baseline() {
+        let app = crate::frontend::AppSuite::by_name("gaussian").unwrap().graph;
+        let pe1 = pe1_for_app(&app, "pe1");
+        let (b, s) = (evaluate_pe(&baseline_pe()), evaluate_pe(&pe1));
+        assert!(s.area < b.area);
+    }
+
+    #[test]
+    fn interconnect_scales_with_io() {
+        let b = baseline_pe();
+        let (a3, _) = interconnect_per_pe(&b, 5);
+        let mac = mac_pe();
+        let (a_mac, _) = interconnect_per_pe(&mac, 5);
+        // mac PE has 2 inputs (x external, y external) vs baseline 3.
+        assert!(a_mac <= a3);
+    }
+
+    #[test]
+    fn mode_energy_positive_and_finite() {
+        for pe in [baseline_pe(), mac_pe()] {
+            let e = evaluate_pe(&pe);
+            for &x in &e.mode_energy {
+                assert!(x.is_finite() && x > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Primitive area/energy/delay tables — the stand-in for the paper's TSMC
+//! 16 nm synthesis (Design Compiler) and power analysis (PrimeTime PX).
+//!
+//! Units: area in µm², energy in fJ per activation at nominal 0.8 V,
+//! intrinsic delay in ps at nominal synthesis effort. Absolute values are
+//! calibrated against published 16 nm datapoints for 16-bit datapath
+//! blocks; every claim the paper makes is *relative*, so what matters (and
+//! what `power::tests` pins down) are the ratios: a multiplier is ~17× an
+//! adder's area and ~13× its energy, a mux input is ~20× cheaper than an
+//! adder, configuration bits are almost free in energy but not in area.
+
+use crate::ir::{HwClass, Op};
+
+/// Per-activation cost of one primitive hardware block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cost {
+    /// µm².
+    pub area: f64,
+    /// fJ per activation.
+    pub energy: f64,
+    /// ps intrinsic delay.
+    pub delay: f64,
+}
+
+/// Cost of the functional unit implementing a hardware class (16-bit).
+pub fn class_cost(class: HwClass) -> Cost {
+    match class {
+        // An add/sub unit: carry-propagate adder + negate row.
+        HwClass::AddSub => Cost { area: 68.0, energy: 9.2, delay: 210.0 },
+        // 16x16 multiplier (truncated product).
+        HwClass::Multiplier => Cost { area: 1150.0, energy: 121.0, delay: 680.0 },
+        // Barrel shifter.
+        HwClass::Shifter => Cost { area: 150.0, energy: 7.8, delay: 160.0 },
+        // Comparator / min / max / abs / clamp block.
+        HwClass::Compare => Cost { area: 52.0, energy: 4.6, delay: 140.0 },
+        // 2:1 word select.
+        HwClass::Mux => Cost { area: 18.0, energy: 1.3, delay: 45.0 },
+        // Bitwise LUT (per-bit 4-LUT row, as in the baseline PE).
+        HwClass::Lut => Cost { area: 98.0, energy: 6.1, delay: 120.0 },
+        // Configuration-loaded constant register.
+        HwClass::ConstReg => Cost { area: 62.0, energy: 1.1, delay: 30.0 },
+        // Graph I/O carries no datapath hardware.
+        HwClass::Io => Cost { area: 0.0, energy: 0.0, delay: 0.0 },
+    }
+}
+
+/// Cost of one additional *input* to a word-level mux (mux tree growth is
+/// linear in inputs for area/energy; delay grows with log2).
+pub fn mux_input_cost() -> Cost {
+    Cost { area: 9.5, energy: 0.7, delay: 22.0 }
+}
+
+/// One configuration bit (storage + routing).
+pub fn config_bit_cost() -> Cost {
+    Cost { area: 1.9, energy: 0.02, delay: 0.0 }
+}
+
+/// Pipeline/output register for one 16-bit word.
+pub fn word_reg_cost() -> Cost {
+    Cost { area: 58.0, energy: 4.4, delay: 60.0 }
+}
+
+/// Per-op activation energy (fJ): the energy of the class unit doing this
+/// op; cheaper ops on a shared unit still burn close to the unit's cost.
+pub fn op_energy(op: Op) -> f64 {
+    class_cost(op.hw_class()).energy
+}
+
+/// Per-op intrinsic delay (ps) through the class unit.
+pub fn op_delay(op: Op) -> f64 {
+    class_cost(op.hw_class()).delay
+}
+
+/// Interconnect: one connection-box (CB) port on a routing fabric with
+/// `tracks` tracks — a `tracks`:1 word mux plus config.
+pub fn cb_cost(tracks: usize) -> Cost {
+    let mux_in = mux_input_cost();
+    let cfg = config_bit_cost();
+    let cfg_bits = (tracks as f64).log2().ceil().max(1.0);
+    Cost {
+        area: mux_in.area * tracks as f64 + cfg.area * cfg_bits + 14.0,
+        energy: mux_in.energy * (tracks as f64).log2().max(1.0) + 0.4,
+        delay: 30.0 + 22.0 * (tracks as f64).log2().max(1.0),
+    }
+}
+
+/// Switch-box cost per PE output: word-level crossbar slice over `tracks`.
+pub fn sb_cost(tracks: usize) -> Cost {
+    let mux_in = mux_input_cost();
+    let cfg = config_bit_cost();
+    Cost {
+        area: (mux_in.area * 4.0 + cfg.area * 2.0) * tracks as f64,
+        energy: mux_in.energy * 2.0 * (tracks as f64).log2().max(1.0),
+        delay: 38.0 + 20.0 * (tracks as f64).log2().max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_sane() {
+        let add = class_cost(HwClass::AddSub);
+        let mul = class_cost(HwClass::Multiplier);
+        // Published 16nm-ish ratios: multiplier 10–25x adder area, 10–15x
+        // energy.
+        let ar = mul.area / add.area;
+        let er = mul.energy / add.energy;
+        assert!((10.0..25.0).contains(&ar), "area ratio {ar}");
+        assert!((10.0..15.0).contains(&er), "energy ratio {er}");
+    }
+
+    #[test]
+    fn mux_much_cheaper_than_adder() {
+        assert!(mux_input_cost().area * 5.0 < class_cost(HwClass::AddSub).area);
+    }
+
+    #[test]
+    fn config_bits_negligible_energy() {
+        assert!(config_bit_cost().energy < 0.1);
+    }
+
+    #[test]
+    fn cb_scales_with_tracks() {
+        assert!(cb_cost(10).area > cb_cost(5).area);
+        assert!(sb_cost(10).area > sb_cost(5).area);
+    }
+
+    #[test]
+    fn io_is_free() {
+        assert_eq!(class_cost(HwClass::Io).area, 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Figure/table renderers: turn DSE evaluations into the text tables and
+//! bar charts the `reproduce` commands print, and into markdown for
+//! EXPERIMENTS.md.
+
+use crate::dse::{SweepPoint, VariantEval};
+use crate::util::{bar_chart, md_table};
+
+/// Render the Fig. 8 sweep (energy/op and total area vs variant across
+/// synthesis frequencies) as a text table.
+pub fn render_fig8(points_by_variant: &[(String, Vec<SweepPoint>)]) -> String {
+    let mut s = String::from(
+        "Fig. 8 — camera pipeline: PE-core energy/op [fJ] and total active-PE area [µm²]\n",
+    );
+    // Header: frequencies from the first variant.
+    if let Some((_, pts)) = points_by_variant.first() {
+        s.push_str(&format!("{:<8}", "variant"));
+        for p in pts {
+            s.push_str(&format!("{:>14}", format!("{:.2} GHz", p.freq_ghz)));
+        }
+        s.push('\n');
+    }
+    for (variant, pts) in points_by_variant {
+        s.push_str(&format!("{variant:<8}"));
+        for p in pts {
+            match p.energy_per_op {
+                Some(e) => s.push_str(&format!("{e:>14.1}")),
+                None => s.push_str(&format!("{:>14}", "—")),
+            }
+        }
+        s.push_str("  fJ/op\n");
+        s.push_str(&format!("{:<8}", ""));
+        for p in pts {
+            match p.total_area {
+                Some(a) => s.push_str(&format!("{:>14.0}", a)),
+                None => s.push_str(&format!("{:>14}", "—")),
+            }
+        }
+        s.push_str("  µm²\n");
+    }
+    s
+}
+
+/// Render a normalized domain figure (Fig. 10 imaging / Fig. 11 ML):
+/// rows per app, columns {baseline, domain PE, app-specialized PE},
+/// normalized to the baseline.
+pub fn render_domain_fig(
+    title: &str,
+    domain_label: &str,
+    rows: &[(String, VariantEval, VariantEval, VariantEval)],
+) -> String {
+    let mut s = format!("{title}\n");
+    let hdr = [
+        "app",
+        "base E/op",
+        &format!("{domain_label} E/op"),
+        "spec E/op",
+        "base area",
+        &format!("{domain_label} area"),
+        "spec area",
+    ];
+    let mut table_rows = Vec::new();
+    for (app, base, dom, spec) in rows {
+        table_rows.push(vec![
+            app.clone(),
+            "1.00".to_string(),
+            format!("{:.2}", dom.pe_energy_per_op / base.pe_energy_per_op),
+            format!("{:.2}", spec.pe_energy_per_op / base.pe_energy_per_op),
+            "1.00".to_string(),
+            format!("{:.2}", dom.total_area / base.total_area),
+            format!("{:.2}", spec.total_area / base.total_area),
+        ]);
+    }
+    s.push_str(&md_table(
+        &hdr.iter().map(|h| h as &str).collect::<Vec<_>>(),
+        &table_rows,
+    ));
+    // Bar chart of normalized energies.
+    let bars: Vec<(String, f64)> = rows
+        .iter()
+        .flat_map(|(app, base, dom, spec)| {
+            vec![
+                (format!("{app}/base"), 1.0),
+                (
+                    format!("{app}/{domain_label}"),
+                    dom.pe_energy_per_op / base.pe_energy_per_op,
+                ),
+                (
+                    format!("{app}/spec"),
+                    spec.pe_energy_per_op / base.pe_energy_per_op,
+                ),
+                (format!("{app}/"), 0.0),
+            ]
+            .into_iter()
+            .take(if base.app.is_empty() { 3 } else { 4 })
+        })
+        .collect();
+    s.push('\n');
+    s.push_str(&bar_chart("normalized PE-core energy (lower is better)", &bars, 40));
+    s
+}
+
+/// Table I rows.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub design: String,
+    pub energy_per_op_fj: f64,
+    pub rel_to_simba: f64,
+    pub notes: String,
+}
+
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    let mut s = String::from("Table I — ML CGRA vs ASIC (Simba-class) comparison\n");
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.design.clone(),
+                format!("{:.1}", r.energy_per_op_fj),
+                format!("{:.2}x", r.rel_to_simba),
+                r.notes.clone(),
+            ]
+        })
+        .collect();
+    s.push_str(&md_table(
+        &["design", "energy/op [fJ]", "vs Simba", "notes"],
+        &table_rows,
+    ));
+    s
+}
+
+/// Summarize one ladder (fig 8/9 companions).
+pub fn render_ladder(app: &str, evals: &[VariantEval]) -> String {
+    let mut s = format!("Variant ladder for `{app}`\n");
+    let rows: Vec<Vec<String>> = evals
+        .iter()
+        .map(|v| {
+            vec![
+                v.variant.clone(),
+                format!("{}", v.n_pes),
+                format!("{:.0}", v.eval.area),
+                format!("{:.0}", v.total_area),
+                format!("{:.1}", v.pe_energy_per_op),
+                format!("{:.1}", v.icn_energy_per_op),
+                format!("{:.2}", v.fmax_ghz),
+            ]
+        })
+        .collect();
+    s.push_str(&md_table(
+        &[
+            "variant",
+            "PEs used",
+            "PE area µm²",
+            "total µm²",
+            "E/op fJ",
+            "icn E/op fJ",
+            "fmax GHz",
+        ],
+        &rows,
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{evaluate_ladder, frequency_sweep, DseConfig};
+    use crate::frontend::AppSuite;
+    use crate::mining::MinerConfig;
+
+    fn cfg() -> DseConfig {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                max_patterns: 500,
+                ..Default::default()
+            },
+            max_merged: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig8_renders() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let evals = evaluate_ladder(&app, &cfg());
+        let sweeps: Vec<(String, Vec<_>)> = evals
+            .iter()
+            .map(|v| (v.variant.clone(), frequency_sweep(v, &[0.8, 1.4, 2.0])))
+            .collect();
+        let out = render_fig8(&sweeps);
+        assert!(out.contains("base"));
+        assert!(out.contains("GHz"));
+    }
+
+    #[test]
+    fn ladder_renders() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let evals = evaluate_ladder(&app, &cfg());
+        let out = render_ladder("gaussian", &evals);
+        assert!(out.contains("variant"));
+        assert!(out.contains("pe1"));
+    }
+
+    #[test]
+    fn table1_renders() {
+        let rows = vec![Table1Row {
+            design: "CGRA base".into(),
+            energy_per_op_fj: 100.0,
+            rel_to_simba: 2.0,
+            notes: "".into(),
+        }];
+        let out = render_table1(&rows);
+        assert!(out.contains("Simba"));
+    }
+}

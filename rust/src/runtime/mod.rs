@@ -1,0 +1,141 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text,
+//! produced once by `make artifacts`) and executes them on the CPU PJRT
+//! client from the `xla` crate. Python never runs on this path.
+//!
+//! The artifacts are the *numeric oracle* for the CGRA: `validate` sweeps a
+//! real image through both the cycle-level CGRA simulator and the compiled
+//! XLA executable and compares every output element (see
+//! `rust/tests/oracle.rs` and the `validate` CLI command).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory (relative to the repo root).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CGRA_DSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A loaded, compiled XLA executable.
+pub struct Oracle {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime holding the CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<Oracle> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Oracle {
+            name: path
+                .file_name()
+                .map(|s| {
+                    s.to_string_lossy()
+                        .trim_end_matches(".hlo.txt")
+                        .to_string()
+                })
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Load `artifacts/<name>.hlo.txt`.
+    pub fn load_artifact(&self, name: &str) -> Result<Oracle> {
+        self.load(&artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl Oracle {
+    /// Execute with int32 tensor inputs `(data, dims)`; returns the flat
+    /// int32 elements of every tuple output, concatenated in order.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[usize])]) -> Result<Vec<i32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // Artifacts are lowered with return_tuple=True.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::new();
+        for e in elems {
+            out.extend(e.to_vec::<i32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// True when the artifacts directory exists with at least one artifact —
+/// used by tests to skip gracefully before `make artifacts` has run.
+pub fn artifacts_available() -> bool {
+    let d = artifacts_dir();
+    d.is_dir()
+        && std::fs::read_dir(&d)
+            .map(|mut it| {
+                it.any(|e| {
+                    e.map(|e| e.path().extension().is_some_and(|x| x == "txt"))
+                        .unwrap_or(false)
+                })
+            })
+            .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_creates_cpu_client() {
+        let rt = Runtime::new().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn artifacts_flag_is_consistent() {
+        // Must not panic regardless of artifact presence.
+        let _ = artifacts_available();
+    }
+
+    #[test]
+    fn load_and_run_gaussian_if_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let oracle = rt.load_artifact("gaussian").unwrap();
+        // 8x8 flat image of 100s -> every blurred interior pixel is 100.
+        let img = vec![100i32; 64];
+        let out = oracle.run_i32(&[(&img, &[8, 8])]).unwrap();
+        assert_eq!(out.len(), 36); // (8-2)^2
+        assert!(out.iter().all(|&v| v == 100), "{out:?}");
+    }
+}

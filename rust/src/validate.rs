@@ -1,0 +1,252 @@
+//! End-to-end validation against the AOT-compiled JAX/Pallas oracle.
+//!
+//! For each validated app we run the *entire* stack — mine, merge, generate
+//! the PE, map, place, route, bitstream, cycle-level simulate — on a real
+//! image, and compare every output element against the compiled XLA
+//! executable built by `python/compile/aot.py` from the L2 JAX model (which
+//! itself calls the L1 Pallas kernels). Inputs are range-limited so the
+//! int32 oracle and the 16-bit CGRA datapath agree exactly (no overflow).
+
+use crate::arch::{Fabric, FabricConfig};
+use crate::dse::{variant_ladder, DseConfig};
+use crate::frontend::AppSuite;
+use crate::ir::Word;
+use crate::mining::MinerConfig;
+use crate::runtime::Runtime;
+use crate::util::SplitMix64;
+use anyhow::{bail, Context, Result};
+
+/// Image height/width used for validation (must match aot.py).
+pub const IMG: usize = 8;
+/// Conv input channels (must match aot.py and `frontend::ml`).
+pub const CONV_CH: usize = 4;
+
+fn fast_cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 600,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+/// Validate one app (`gaussian`, `conv` or `block`) over `items` random
+/// images. Returns a human-readable report or an error on any mismatch.
+pub fn validate_app(rt: &Runtime, name: &str, items: usize) -> Result<String> {
+    let oracle = rt.load_artifact(name)?;
+    let app = AppSuite::by_name(name).context("unknown app")?;
+    let cfg = fast_cfg();
+    let ladder = variant_ladder(&app, &cfg);
+    // Most specialized variant: exercises subgraph merging end to end.
+    let (variant, pe) = ladder.last().context("empty ladder")?;
+    let mut graph = app.graph.clone();
+    let mapping = crate::mapper::map_app(&mut graph, pe)
+        .map_err(|e| anyhow::anyhow!("mapping failed: {e}"))?;
+    let fabric = Fabric::new(FabricConfig::default());
+    let (pl, rt_route) = crate::pnr::place_and_route(&mapping, &fabric, cfg.seed)
+        .map_err(|e| anyhow::anyhow!("pnr failed: {e}"))?;
+
+    let mut rng = SplitMix64::new(0xDA7A + items as u64);
+    let mut checked = 0usize;
+    for item in 0..items {
+        let _ = item;
+        let (oracle_inputs, windows, expected_len) = build_item(name, &mut rng)?;
+        // Oracle run.
+        let refs: Vec<(&[i32], &[usize])> = oracle_inputs
+            .iter()
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        let want = oracle.run_i32(&refs)?;
+        if want.len() != expected_len {
+            bail!("oracle output length {} != {}", want.len(), expected_len);
+        }
+        // CGRA run over the same windows.
+        let sim = crate::sim::simulate(&mut graph, pe, &mapping, &pl, &rt_route, &windows);
+        let got: Vec<i32> = sim.outputs.iter().map(|o| o[0] as i32).collect();
+        if got != want {
+            let idx = got
+                .iter()
+                .zip(&want)
+                .position(|(g, w)| g != w)
+                .unwrap_or(0);
+            bail!(
+                "{name}: mismatch at element {idx}: cgra={} oracle={}",
+                got[idx],
+                want[idx]
+            );
+        }
+        checked += want.len();
+    }
+    Ok(format!(
+        "{name}: OK — {} output elements over {items} images match the oracle exactly \
+         (variant {variant}, {} PEs, latency {} cycles)",
+        checked,
+        mapping.num_pes(),
+        crate::sim::simulate(
+            &mut graph,
+            pe,
+            &mapping,
+            &pl,
+            &rt_route,
+            &[first_window(name)]
+        )
+        .stats
+        .latency_cycles
+    ))
+}
+
+/// Build one random validation item: oracle inputs (tensor, shape) and the
+/// per-output-pixel window batch for the CGRA simulator.
+#[allow(clippy::type_complexity)]
+fn build_item(
+    name: &str,
+    rng: &mut SplitMix64,
+) -> Result<(Vec<(Vec<i32>, Vec<usize>)>, Vec<Vec<Word>>, usize)> {
+    match name {
+        "gaussian" => {
+            let img: Vec<i32> = (0..IMG * IMG).map(|_| (rng.below(256)) as i32).collect();
+            let mut windows = Vec::new();
+            for r in 0..IMG - 2 {
+                for c in 0..IMG - 2 {
+                    let mut w = Vec::with_capacity(9);
+                    for dr in 0..3 {
+                        for dc in 0..3 {
+                            w.push(img[(r + dr) * IMG + (c + dc)] as Word);
+                        }
+                    }
+                    windows.push(w);
+                }
+            }
+            let n = (IMG - 2) * (IMG - 2);
+            Ok((vec![(img, vec![IMG, IMG])], windows, n))
+        }
+        "conv" => {
+            let img: Vec<i32> = (0..CONV_CH * IMG * IMG)
+                .map(|_| rng.below(128) as i32 - 64)
+                .collect();
+            let mut windows = Vec::new();
+            for r in 0..IMG - 2 {
+                for c in 0..IMG - 2 {
+                    // Channel-major 3x3 windows — same order as the
+                    // frontend's conv input nodes.
+                    let mut w = Vec::with_capacity(CONV_CH * 9);
+                    for ch in 0..CONV_CH {
+                        for dr in 0..3 {
+                            for dc in 0..3 {
+                                w.push(img[ch * IMG * IMG + (r + dr) * IMG + (c + dc)] as Word);
+                            }
+                        }
+                    }
+                    windows.push(w);
+                }
+            }
+            let n = (IMG - 2) * (IMG - 2);
+            Ok((vec![(img, vec![CONV_CH, IMG, IMG])], windows, n))
+        }
+        "laplacian" => {
+            let img: Vec<i32> = (0..IMG * IMG).map(|_| (rng.below(256)) as i32).collect();
+            let mut windows = Vec::new();
+            for r in 0..IMG - 2 {
+                for c in 0..IMG - 2 {
+                    let mut w = Vec::with_capacity(9);
+                    for dr in 0..3 {
+                        for dc in 0..3 {
+                            w.push(img[(r + dr) * IMG + (c + dc)] as Word);
+                        }
+                    }
+                    windows.push(w);
+                }
+            }
+            let n = (IMG - 2) * (IMG - 2);
+            Ok((vec![(img, vec![IMG, IMG])], windows, n))
+        }
+        "ds" => {
+            // Non-overlapping 2x2 pool windows (stride 2).
+            let img: Vec<i32> = (0..IMG * IMG).map(|_| rng.below(128) as i32 - 64).collect();
+            let mut windows = Vec::new();
+            for r in (0..IMG).step_by(2) {
+                for c in (0..IMG).step_by(2) {
+                    windows.push(vec![
+                        img[r * IMG + c] as Word,
+                        img[r * IMG + c + 1] as Word,
+                        img[(r + 1) * IMG + c] as Word,
+                        img[(r + 1) * IMG + c + 1] as Word,
+                    ]);
+                }
+            }
+            let n = (IMG / 2) * (IMG / 2);
+            Ok((vec![(img, vec![IMG, IMG])], windows, n))
+        }
+        "block" => {
+            let img: Vec<i32> = (0..IMG * IMG).map(|_| rng.below(128) as i32 - 64).collect();
+            let skip: Vec<i32> = (0..(IMG - 2) * (IMG - 2))
+                .map(|_| rng.below(128) as i32 - 64)
+                .collect();
+            let mut windows = Vec::new();
+            for r in 0..IMG - 2 {
+                for c in 0..IMG - 2 {
+                    let mut w = Vec::with_capacity(10);
+                    for dr in 0..3 {
+                        for dc in 0..3 {
+                            w.push(img[(r + dr) * IMG + (c + dc)] as Word);
+                        }
+                    }
+                    w.push(skip[r * (IMG - 2) + c] as Word);
+                    windows.push(w);
+                }
+            }
+            let n = (IMG - 2) * (IMG - 2);
+            Ok((
+                vec![
+                    (img, vec![IMG, IMG]),
+                    (skip, vec![IMG - 2, IMG - 2]),
+                ],
+                windows,
+                n,
+            ))
+        }
+        other => bail!("no oracle wiring for app `{other}`"),
+    }
+}
+
+fn first_window(name: &str) -> Vec<Word> {
+    match name {
+        "gaussian" | "laplacian" => vec![0; 9],
+        "conv" => vec![0; CONV_CH * 9],
+        "block" => vec![0; 10],
+        "ds" => vec![0; 4],
+        _ => vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_item_shapes() {
+        let mut rng = SplitMix64::new(1);
+        let (ins, windows, n) = build_item("gaussian", &mut rng).unwrap();
+        assert_eq!(ins[0].1, vec![IMG, IMG]);
+        assert_eq!(windows.len(), n);
+        assert_eq!(windows[0].len(), 9);
+
+        let (ins, windows, _) = build_item("conv", &mut rng).unwrap();
+        assert_eq!(ins[0].1, vec![CONV_CH, IMG, IMG]);
+        assert_eq!(windows[0].len(), 36);
+
+        let (ins, windows, _) = build_item("block", &mut rng).unwrap();
+        assert_eq!(ins.len(), 2);
+        assert_eq!(windows[0].len(), 10);
+    }
+
+    #[test]
+    fn unknown_app_rejected() {
+        let mut rng = SplitMix64::new(1);
+        assert!(build_item("nope", &mut rng).is_err());
+    }
+}

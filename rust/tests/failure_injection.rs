@@ -1,0 +1,107 @@
+//! Failure-injection tests: every stage must fail *cleanly* (typed errors,
+//! no panics) when given impossible resources or uncoverable inputs.
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::ir::{Graph, Op};
+use cgra_dse::mapper::{map_app, MapError};
+use cgra_dse::pe::baseline::baseline_pe;
+use cgra_dse::pe::PeSpec;
+use cgra_dse::pnr::{place, place_and_route, PnrError};
+
+#[test]
+fn mapper_reports_every_uncoverable_node() {
+    // An xor-only app on an arithmetic-only PE: all real ops uncoverable.
+    let mut app = Graph::new("xor_app");
+    let a = app.add_op(Op::Input);
+    let b = app.add_op(Op::Input);
+    let x1 = app.add(Op::Xor, &[a, b]);
+    let x2 = app.add(Op::Xor, &[x1, b]);
+    app.add(Op::Output, &[x2]);
+
+    let mut addsub = Graph::new("add");
+    addsub.add_op(Op::Add);
+    let pe = PeSpec::from_subgraphs("addonly", &[addsub]);
+    match map_app(&mut app, &pe) {
+        Err(MapError::Uncoverable(nodes)) => assert_eq!(nodes.len(), 2),
+        other => panic!("expected Uncoverable, got {other:?}"),
+    }
+}
+
+#[test]
+fn placement_rejects_fabric_without_enough_pe_tiles() {
+    let mut app = AppSuite::by_name("gaussian").unwrap().graph;
+    let pe = baseline_pe();
+    let mapping = map_app(&mut app, &pe).unwrap();
+    // 2x2 fabric with a MEM column: 2 PE tiles for ~19 instances.
+    let f = Fabric::new(FabricConfig {
+        width: 2,
+        height: 2,
+        tracks: 4,
+        mem_column_period: 2,
+    });
+    match place(&mapping, &f, 0) {
+        Err(PnrError::TooManyInstances { need, have }) => {
+            assert!(need > have);
+        }
+        other => panic!("expected TooManyInstances, got {other:?}"),
+    }
+}
+
+#[test]
+fn routing_survives_single_track_fabric_or_fails_cleanly() {
+    // 1 track per channel: heavy congestion. PathFinder must either find a
+    // legal (possibly detoured) solution or return Unroutable — never
+    // panic, never emit an inconsistent route.
+    let mut app = AppSuite::by_name("gaussian").unwrap().graph;
+    let pe = baseline_pe();
+    let mapping = map_app(&mut app, &pe).unwrap();
+    let f = Fabric::new(FabricConfig {
+        width: 10,
+        height: 10,
+        tracks: 1,
+        mem_column_period: 4,
+    });
+    match place_and_route(&mapping, &f, 1) {
+        Ok((_, rt)) => {
+            for net in &rt.nets {
+                for w in net.hops.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "discontinuous route");
+                }
+            }
+        }
+        Err(PnrError::Unroutable { .. }) => {} // acceptable
+        Err(e) => panic!("unexpected error {e}"),
+    }
+}
+
+#[test]
+fn validate_rejects_unknown_app_before_touching_pjrt() {
+    // validate_app must fail on the app-lookup path, not deep inside.
+    if !cgra_dse::runtime::artifacts_available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let rt = cgra_dse::runtime::Runtime::new().unwrap();
+    assert!(cgra_dse::validate::validate_app(&rt, "harris", 1).is_err());
+}
+
+#[test]
+fn runtime_load_missing_artifact_is_an_error() {
+    let rt = cgra_dse::runtime::Runtime::new().unwrap();
+    assert!(rt
+        .load(std::path::Path::new("/nonexistent/x.hlo.txt"))
+        .is_err());
+}
+
+#[test]
+fn graph_eval_panics_are_prevented_by_validate() {
+    // A malformed graph (dangling port) must be caught by validate() so
+    // callers never reach eval with it.
+    let mut g = Graph::new("bad");
+    let a = g.add_op(Op::Input);
+    let s = g.add_op(Op::Sub);
+    g.connect(a, s, 0);
+    g.add(Op::Output, &[s]);
+    assert!(g.validate().is_err());
+}

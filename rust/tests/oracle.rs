@@ -1,0 +1,72 @@
+//! Oracle integration tests: the Rust CGRA stack against the AOT-compiled
+//! JAX/Pallas artifacts via PJRT. Skipped (with a notice) until
+//! `make artifacts` has produced `artifacts/*.hlo.txt`.
+
+use cgra_dse::runtime::{artifacts_available, Runtime};
+use cgra_dse::validate::validate_app;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new().expect("PJRT CPU client"))
+}
+
+#[test]
+fn gaussian_matches_pallas_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let report = validate_app(&rt, "gaussian", 2).expect("gaussian validation");
+    assert!(report.contains("OK"));
+}
+
+#[test]
+fn conv_matches_pallas_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let report = validate_app(&rt, "conv", 2).expect("conv validation");
+    assert!(report.contains("OK"));
+}
+
+#[test]
+fn block_matches_jax_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let report = validate_app(&rt, "block", 2).expect("block validation");
+    assert!(report.contains("OK"));
+}
+
+#[test]
+fn laplacian_matches_pallas_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let report = validate_app(&rt, "laplacian", 2).expect("laplacian validation");
+    assert!(report.contains("OK"));
+}
+
+#[test]
+fn downsample_matches_jax_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let report = validate_app(&rt, "ds", 2).expect("ds validation");
+    assert!(report.contains("OK"));
+}
+
+#[test]
+fn oracle_artifacts_compile_and_execute() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["gaussian", "conv", "block", "laplacian", "ds"] {
+        let oracle = rt.load_artifact(name).unwrap_or_else(|e| {
+            panic!("loading {name}: {e}");
+        });
+        assert_eq!(oracle.name, name);
+    }
+}
+
+#[test]
+fn oracle_gaussian_numbers_spot_check() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let oracle = rt.load_artifact("gaussian").unwrap();
+    // Impulse response: centre pixel weight is 4/16.
+    let mut img = vec![0i32; 64];
+    img[3 * 8 + 3] = 160;
+    let out = oracle.run_i32(&[(&img, &[8, 8])]).unwrap();
+    assert_eq!(out.len(), 36);
+    assert_eq!(out[2 * 6 + 2], 40); // (3,3) in input = (2,2) in output
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over randomly generated dataflow graphs.
+//!
+//! (`proptest` is not available in this offline registry; generation is
+//! hand-rolled on the deterministic SplitMix64 generator, with the failing
+//! seed printed on assertion failure — same replay discipline.)
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::ir::{
+    canonical_code, find_occurrences, Graph, MatchConfig, Op,
+};
+use cgra_dse::mapper::{execute_mapping, map_app};
+use cgra_dse::mining::{mine, MinerConfig};
+use cgra_dse::pe::baseline::baseline_pe;
+use cgra_dse::util::SplitMix64;
+
+/// Generate a random acyclic dataflow graph with `n_ops` compute nodes over
+/// a restricted op alphabet (all baseline-supported).
+fn random_app(seed: u64, n_inputs: usize, n_ops: usize) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let ops = [
+        Op::Add,
+        Op::Sub,
+        Op::Mul,
+        Op::Min,
+        Op::Max,
+        Op::Ashr,
+        Op::Abs,
+        Op::And,
+        Op::Xor,
+    ];
+    let mut g = Graph::new(format!("rand{seed}"));
+    let mut values: Vec<cgra_dse::ir::NodeId> = (0..n_inputs)
+        .map(|k| g.add_node(Op::Input, format!("x{k}")))
+        .collect();
+    // A few constants.
+    for k in 0..(n_ops / 4).max(1) {
+        values.push(g.add_node(Op::Const((k as i64 * 37 % 100) - 50), ""));
+    }
+    for _ in 0..n_ops {
+        let op = ops[rng.below(ops.len())];
+        let args: Vec<_> = (0..op.arity())
+            .map(|_| values[rng.below(values.len())])
+            .collect();
+        values.push(g.add(op, &args));
+    }
+    // Every sink becomes an output (keeps the graph fully observable).
+    g.freeze();
+    let sinks: Vec<_> = g
+        .nodes
+        .iter()
+        .filter(|n| n.op.is_compute())
+        .map(|n| n.id)
+        .filter(|&id| g.outputs_of(id).is_empty())
+        .collect();
+    for s in sinks {
+        g.add(Op::Output, &[s]);
+    }
+    g
+}
+
+#[test]
+fn prop_random_apps_validate() {
+    for seed in 0..40 {
+        let mut g = random_app(seed, 4, 20);
+        g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_mapping_preserves_semantics_on_baseline() {
+    // THE core invariant: covering + PE configuration never changes the
+    // computed function.
+    let pe = baseline_pe();
+    for seed in 0..25 {
+        let mut g = random_app(seed, 4, 16);
+        g.validate().unwrap();
+        let mapping = match map_app(&mut g, &pe) {
+            Ok(m) => m,
+            Err(e) => panic!("seed {seed}: {e}"),
+        };
+        let mut rng = SplitMix64::new(seed ^ 0xF00D);
+        for _ in 0..5 {
+            let xs: Vec<i64> = (0..4).map(|_| rng.word() >> 4).collect();
+            let want = g.eval(&xs);
+            let got = execute_mapping(&mut g, &pe, &mapping, &xs);
+            assert_eq!(got, want, "seed {seed} inputs {xs:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_full_backend_matches_eval() {
+    let pe = baseline_pe();
+    let fabric = Fabric::new(FabricConfig {
+        width: 12,
+        height: 12,
+        tracks: 6,
+        mem_column_period: 4,
+    });
+    for seed in 0..8 {
+        let mut g = random_app(seed * 3 + 1, 3, 10);
+        let mut rng = SplitMix64::new(seed);
+        let batch: Vec<Vec<i64>> = (0..4)
+            .map(|_| (0..3).map(|_| rng.word() >> 4).collect())
+            .collect();
+        cgra_dse::sim::run_and_check(&mut g, &pe, &fabric, &batch, seed)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_mined_occurrences_are_exact_matches() {
+    let cfg = MinerConfig {
+        min_support: 2,
+        max_nodes: 3,
+        max_patterns: 200,
+        ..Default::default()
+    };
+    for seed in 0..10 {
+        let mut g = random_app(seed + 100, 4, 18);
+        for p in mine(&mut g, &cfg) {
+            for occ in p.occurrences.iter().take(10) {
+                for (pi, &t) in occ.map.iter().enumerate() {
+                    assert_eq!(
+                        p.graph.nodes[pi].op.label(),
+                        g.node(t).op.label(),
+                        "seed {seed} pattern {}",
+                        p.canon
+                    );
+                }
+            }
+            // MNI support is a lower bound on distinct occurrences count
+            // per node, hence <= distinct occurrence count.
+            assert!(p.support <= p.occurrences.len(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_canonical_code_invariant_under_relabeling() {
+    // Rebuilding a pattern with permuted node insertion order must not
+    // change its canonical code.
+    for seed in 0..20 {
+        let mut rng = SplitMix64::new(seed + 7);
+        let g = random_app(seed + 200, 3, 6);
+        // Extract a small connected compute subgraph: take a node and its
+        // compute ancestors up to 4 nodes.
+        let mut g2 = g.clone();
+        g2.freeze();
+        let compute: Vec<_> = g2
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute())
+            .map(|n| n.id)
+            .collect();
+        if compute.len() < 2 {
+            continue;
+        }
+        let take: Vec<_> = compute.iter().take(4).copied().collect();
+        let pat = g.induced_subgraph(&take, "p");
+        // Permute.
+        let mut order: Vec<usize> = (0..take.len()).collect();
+        rng.shuffle(&mut order);
+        let take2: Vec<_> = order.iter().map(|&i| take[i]).collect();
+        let pat2 = g.induced_subgraph(&take2, "p2");
+        assert_eq!(
+            canonical_code(&pat),
+            canonical_code(&pat2),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_occurrences_of_extracted_subgraph_include_itself() {
+    for seed in 0..15 {
+        let g = random_app(seed + 300, 3, 12);
+        let mut g2 = g.clone();
+        g2.freeze();
+        // Pick a connected pair (producer, consumer).
+        let Some(edge) = g
+            .edges
+            .iter()
+            .find(|e| g.node(e.src).op.is_compute() && g.node(e.dst).op.is_compute())
+        else {
+            continue;
+        };
+        let mut pat = g.induced_subgraph(&[edge.src, edge.dst], "pair");
+        if pat.edges.is_empty() {
+            continue;
+        }
+        let occs = find_occurrences(&mut pat, &mut g2, &MatchConfig::default());
+        let found = occs.iter().any(|o| {
+            let mut s = o.node_set();
+            s.sort_unstable();
+            s == {
+                let mut v = vec![edge.src, edge.dst];
+                v.sort_unstable();
+                v
+            }
+        });
+        assert!(found, "seed {seed}: subgraph not found at its own site");
+    }
+}
+
+#[test]
+fn prop_merge_preserves_per_mode_op_multiset() {
+    use cgra_dse::merging::merge_all;
+    for seed in 0..15 {
+        let g = random_app(seed + 400, 3, 8);
+        let compute: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute())
+            .map(|n| n.id)
+            .collect();
+        if compute.len() < 4 {
+            continue;
+        }
+        let a = g.induced_subgraph(&compute[0..3], "a");
+        let b = g.induced_subgraph(&compute[1..4], "b");
+        let dp = merge_all(&[a.clone(), b.clone()], "t");
+        for (m, src) in [(0usize, &a), (1usize, &b)] {
+            let mut want: Vec<&str> = src.nodes.iter().map(|n| n.op.label()).collect();
+            want.sort_unstable();
+            let mut got: Vec<&str> = dp
+                .nodes
+                .iter()
+                .filter_map(|n| n.op_in(m).map(|o| o.label()))
+                .collect();
+            got.sort_unstable();
+            assert_eq!(want, got, "seed {seed} mode {m}");
+        }
+    }
+}
+
+#[test]
+fn prop_sim_latency_monotone_in_depth() {
+    // Deeper graphs cannot have smaller latency on the same PE.
+    let pe = baseline_pe();
+    let fabric = Fabric::new(FabricConfig::default());
+    let mut last = 0usize;
+    for depth in [2usize, 6, 12] {
+        let mut g = Graph::new(format!("chain{depth}"));
+        let mut v = g.add_op(Op::Input);
+        for k in 0..depth {
+            let c = g.add_op(Op::Const(k as i64 + 1));
+            v = g.add(Op::Add, &[v, c]);
+        }
+        g.add(Op::Output, &[v]);
+        let r = cgra_dse::sim::run_and_check(&mut g, &pe, &fabric, &[vec![1]], 0).unwrap();
+        assert!(
+            r.stats.latency_cycles >= last,
+            "depth {depth}: {} < {last}",
+            r.stats.latency_cycles
+        );
+        last = r.stats.latency_cycles;
+    }
+}
