@@ -8,12 +8,18 @@
 
 mod bench_util;
 
-use cgra_dse::coordinator::run_fig10;
+use cgra_dse::coordinator::fig10;
 use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::session::DseSession;
 
 fn main() {
     let cfg = DseConfig::default();
-    let (text, rows) = run_fig10(&cfg);
+    let session = DseSession::builder()
+        .apps(AppSuite::imaging())
+        .config(cfg.clone())
+        .build();
+    let (text, rows) = fig10(&session);
     println!("{text}");
 
     let mut spec_wins = 0usize;
@@ -42,6 +48,13 @@ fn main() {
         "PE Spec should match/beat PE IP on all but at most one app"
     );
 
-    let t = bench_util::time_ms(3, || run_fig10(&cfg));
+    // Timing: cold session per iteration (the full domain pipeline).
+    let t = bench_util::time_ms(3, || {
+        let s = DseSession::builder()
+            .apps(AppSuite::imaging())
+            .config(cfg.clone())
+            .build();
+        fig10(&s)
+    });
     bench_util::report("fig10_image_domain", t);
 }

@@ -8,12 +8,18 @@
 
 mod bench_util;
 
-use cgra_dse::coordinator::run_fig11;
+use cgra_dse::coordinator::fig11;
 use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::session::DseSession;
 
 fn main() {
     let cfg = DseConfig::default();
-    let (text, rows) = run_fig11(&cfg);
+    let session = DseSession::builder()
+        .apps(AppSuite::ml())
+        .config(cfg.clone())
+        .build();
+    let (text, rows) = fig11(&session);
     println!("{text}");
 
     let mut best_saving = 0.0f64;
@@ -35,6 +41,13 @@ fn main() {
         "best PE ML energy saving {best_saving:.2} should be paper-scale"
     );
 
-    let t = bench_util::time_ms(3, || run_fig11(&cfg));
+    // Timing: cold session per iteration.
+    let t = bench_util::time_ms(3, || {
+        let s = DseSession::builder()
+            .apps(AppSuite::ml())
+            .config(cfg.clone())
+            .build();
+        fig11(&s)
+    });
     bench_util::report("fig11_ml_domain", t);
 }

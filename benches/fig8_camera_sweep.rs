@@ -10,14 +10,20 @@
 
 mod bench_util;
 
-use cgra_dse::coordinator::{fig8_freqs, run_fig8};
+use cgra_dse::coordinator::{fig8, fig8_freqs};
 use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::session::DseSession;
 
 fn main() {
     let cfg = DseConfig::default();
+    let session = DseSession::builder()
+        .app(AppSuite::by_name("camera").unwrap())
+        .config(cfg.clone())
+        .build();
 
     // The figure itself.
-    let (text, sweeps) = run_fig8(&cfg);
+    let (text, sweeps) = fig8(&session);
     println!("{text}");
 
     // Shape assertions (who wins, where the wall is).
@@ -51,7 +57,13 @@ fn main() {
     };
     assert!(wall(&spec.1) > wall(base), "specialized fmax must exceed baseline");
 
-    // Timing.
-    let t = bench_util::time_ms(3, || run_fig8(&cfg));
+    // Timing: cold session (full pipeline) per iteration.
+    let t = bench_util::time_ms(3, || {
+        let s = DseSession::builder()
+            .app(AppSuite::by_name("camera").unwrap())
+            .config(cfg.clone())
+            .build();
+        fig8(&s)
+    });
     bench_util::report("fig8_camera_sweep", t);
 }

@@ -1,21 +1,33 @@
 //! Toolchain performance bench (§Perf of EXPERIMENTS.md): wall-clock of
-//! every stage of the flow on the heaviest app (camera pipeline), plus the
-//! cycle-level simulator's throughput. This is the harness used for the
+//! every stage of the flow on the heaviest app (camera pipeline), the
+//! cycle-level simulator's throughput, and — the headline case — the
+//! `reproduce all` wall-time win from `DseSession` stage caching (shared
+//! session vs a cold session per figure). This is the harness used for the
 //! optimization pass — run before/after each change.
 
 mod bench_util;
 
 use cgra_dse::arch::{Fabric, FabricConfig};
-use cgra_dse::dse::{self, DseConfig};
-use cgra_dse::frontend::AppSuite;
+use cgra_dse::coordinator;
+use cgra_dse::dse::DseConfig;
 use cgra_dse::mining::{mine, MinerConfig};
+use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
+
+fn fresh_session(cfg: &DseConfig) -> DseSession {
+    DseSession::builder()
+        .paper_suite()
+        .config(cfg.clone())
+        .build()
+}
 
 fn main() {
     let cfg = DseConfig::default();
-    let app = AppSuite::by_name("camera").unwrap();
+    let session = fresh_session(&cfg);
+    let camera = session.app("camera").unwrap();
+    let app = camera.app().clone();
 
-    // --- Mining.
+    // --- Mining (cold: a fresh graph clone per iteration).
     let mcfg = MinerConfig::default();
     let t = bench_util::time_ms(3, || {
         let mut g = app.graph.clone();
@@ -23,19 +35,20 @@ fn main() {
     });
     bench_util::report("mine_camera", t);
 
-    // --- Ranking (mining + MIS).
+    // --- Ranking (mining + MIS; cold session each iteration).
     let t = bench_util::time_ms(3, || {
-        let mut g = app.graph.clone();
-        dse::rank_subgraphs(&mut g, &cfg).len()
+        fresh_session(&cfg).app("camera").unwrap().ranked().len()
     });
     bench_util::report("rank_camera", t);
 
-    // --- PE generation (merging, clique search).
-    let t = bench_util::time_ms(3, || dse::variant_ladder(&app, &cfg).len());
+    // --- PE generation (merging, clique search; cold session).
+    let t = bench_util::time_ms(3, || {
+        fresh_session(&cfg).app("camera").unwrap().variants().len()
+    });
     bench_util::report("variant_ladder_camera", t);
 
     // --- Mapping on the most specialized PE.
-    let ladder = dse::variant_ladder(&app, &cfg);
+    let ladder = camera.variants();
     let (_, pe) = ladder.last().unwrap();
     let t = bench_util::time_ms(5, || {
         let mut g = app.graph.clone();
@@ -56,10 +69,10 @@ fn main() {
     bench_util::report("pnr_camera", t);
 
     // --- Simulator throughput (items/sec on gaussian, 1k pixels).
-    let gapp = AppSuite::by_name("gaussian").unwrap();
-    let gladder = dse::variant_ladder(&gapp, &cfg);
+    let gauss = session.app("gaussian").unwrap();
+    let gladder = gauss.variants();
     let (_, gpe) = gladder.last().unwrap();
-    let mut gg = gapp.graph.clone();
+    let mut gg = gauss.app().graph.clone();
     let gmap = cgra_dse::mapper::map_app(&mut gg, gpe).unwrap();
     let (pl, rt) = cgra_dse::pnr::place_and_route(&gmap, &fabric, 2).unwrap();
     let mut rng = SplitMix64::new(5);
@@ -77,7 +90,42 @@ fn main() {
         1000.0 / t.0 /* ms */
     );
 
-    // --- End-to-end DSE (the number a user of the tool experiences).
-    let t = bench_util::time_ms(3, || dse::evaluate_ladder(&app, &cfg).len());
+    // --- End-to-end DSE (the number a user of the tool experiences; cold
+    // session, parallel variant evaluation).
+    let t = bench_util::time_ms(3, || {
+        fresh_session(&cfg).app("camera").unwrap().ladder().len()
+    });
     bench_util::report("evaluate_ladder_camera", t);
+
+    // --- THE session-caching case: `reproduce all` on one shared session
+    // (figures reuse each other's mining/ranking/ladders) vs a cold
+    // session per figure (the pre-0.2 free-function behavior, which
+    // re-mined and re-merged the same graphs for every figure).
+    let t_shared = bench_util::time_ms(1, || {
+        let s = fresh_session(&cfg);
+        coordinator::reproduce(&s, &coordinator::REPRODUCE_TARGETS)
+            .sections
+            .len()
+    });
+    bench_util::report("reproduce_all_shared", t_shared);
+    let t_cold = bench_util::time_ms(1, || {
+        coordinator::REPRODUCE_TARGETS
+            .iter()
+            .map(|&t| {
+                let s = fresh_session(&cfg);
+                coordinator::reproduce(&s, &[t]).sections.len()
+            })
+            .sum::<usize>()
+    });
+    bench_util::report("reproduce_all_cold", t_cold);
+    println!(
+        "stage-caching speedup on `reproduce all`: {:.2}x (cold {:.0} ms -> shared {:.0} ms)",
+        t_cold.0 / t_shared.0,
+        t_cold.0,
+        t_shared.0
+    );
+    assert!(
+        t_shared.0 < t_cold.0,
+        "shared-session reproduce must beat cold-per-figure reproduce"
+    );
 }

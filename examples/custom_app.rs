@@ -1,5 +1,5 @@
 //! Bring-your-own application: build a dataflow graph with the public API,
-//! then run the entire DSE + backend on it.
+//! register it in a `DseSession`, then run the entire DSE + backend on it.
 //!
 //! The app here is a small FIR+threshold DSP kernel that is *not* part of
 //! the paper's suite — demonstrating that the toolchain generalizes beyond
@@ -10,9 +10,10 @@
 //! ```
 
 use cgra_dse::arch::{Fabric, FabricConfig};
-use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::dse::pe_spec_of;
 use cgra_dse::frontend::{App, Domain};
 use cgra_dse::ir::{Graph, Op};
+use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
 
 /// 8-tap FIR with symmetric coefficients, then a threshold detector:
@@ -50,12 +51,14 @@ fn main() {
     };
     println!("custom app `{}`: {} compute ops", app.name, app.graph.compute_len());
 
-    // Full DSE.
-    let cfg = DseConfig::default();
-    let evals = dse::evaluate_ladder(&app, &cfg);
-    println!("{}", cgra_dse::report::render_ladder(app.name, &evals));
+    // Full DSE through the session: mining, merging, and evaluation run
+    // once; every later stage handle is a cache hit.
+    let session = DseSession::builder().app(app).build();
+    let stages = session.app("fir_detect").unwrap();
+    let evals = stages.ladder();
+    println!("{}", cgra_dse::report::render_ladder("fir_detect", evals.as_slice()));
     let base = &evals[0];
-    let spec = dse::pe_spec_of(&evals);
+    let spec = pe_spec_of(evals.as_slice());
     println!(
         "specialization: {:.1}x energy, {:.1}x area, {} -> {} PEs",
         base.pe_energy_per_op / spec.pe_energy_per_op,
@@ -64,15 +67,16 @@ fn main() {
         spec.n_pes,
     );
 
-    // Run it on the fabric and check.
-    let ladder = dse::variant_ladder(&app, &cfg);
+    // Run it on the fabric and check (the variants stage is already
+    // cached from the ladder evaluation above).
+    let ladder = stages.variants();
     let (_, pe) = ladder.last().unwrap();
     let fabric = Fabric::new(FabricConfig::default());
     let mut rng = SplitMix64::new(3);
     let batch: Vec<Vec<i64>> = (0..64)
         .map(|_| (0..8).map(|_| rng.below(256) as i64 - 128).collect())
         .collect();
-    let mut g = app.graph.clone();
+    let mut g = stages.app().graph.clone();
     let sim = cgra_dse::sim::run_and_check(&mut g, pe, &fabric, &batch, 11)
         .expect("CGRA execution matches the IR");
     println!(

@@ -12,33 +12,36 @@
 //!   cross-check against the AOT-compiled JAX/Pallas oracle via PJRT →
 //!   energy/area/fmax evaluation for the whole variant ladder,
 //! and then prints the camera-pipeline ladder (the paper's Fig. 8 subject).
+//! Both ladders come from one `DseSession`, so the gaussian mining feeding
+//! the backend steps is reused by the ladder evaluation at the end.
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
 use cgra_dse::arch::{Fabric, FabricConfig};
 use cgra_dse::bitstream;
-use cgra_dse::dse::{self, DseConfig};
-use cgra_dse::frontend::AppSuite;
+use cgra_dse::dse::pe_spec_of;
 use cgra_dse::ir::Word;
 use cgra_dse::runtime;
+use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
 
 const H: usize = 32;
 const W: usize = 32;
 
 fn main() {
-    let cfg = DseConfig::default();
-    let app = AppSuite::by_name("gaussian").unwrap();
+    let session = DseSession::builder().paper_suite().build();
+    let gaussian = session.app("gaussian").unwrap();
 
     // --- DSE: generate the variant ladder, pick the specialized PE.
-    let ladder = dse::variant_ladder(&app, &cfg);
+    let ladder = gaussian.variants();
     let (vname, pe) = ladder.last().unwrap();
     println!("specialized variant `{vname}` for gaussian:\n{}", pe.describe());
 
     // --- Backend: map, place, route, bitstream.
-    let mut graph = app.graph.clone();
+    let mut graph = gaussian.app().graph.clone();
     let mapping = cgra_dse::mapper::map_app(&mut graph, pe).expect("mapping");
     let fabric = Fabric::new(FabricConfig::default());
-    let (pl, rt) = cgra_dse::pnr::place_and_route(&mapping, &fabric, cfg.seed).expect("pnr");
+    let seed = session.config().seed;
+    let (pl, rt) = cgra_dse::pnr::place_and_route(&mapping, &fabric, seed).expect("pnr");
     let bs = bitstream::generate(pe, &mapping, &pl, &rt);
     println!(
         "mapped: {} PEs on a {}x{} fabric, {} routed hops, bitstream {} words",
@@ -83,7 +86,7 @@ fn main() {
     println!("IR-eval check: all {} pixels match", sim.outputs.len());
 
     // --- Differential check #2: the AOT JAX/Pallas oracle via PJRT.
-    if runtime::artifacts_available() {
+    if runtime::pjrt_enabled() && runtime::artifacts_available() {
         // The gaussian artifact is lowered for 8x8 inputs; sweep 8x8 tiles
         // of the image so the whole surface is oracle-checked.
         let rtm = runtime::Runtime::new().expect("pjrt");
@@ -111,19 +114,19 @@ fn main() {
         }
         println!("PJRT oracle check: {checked} pixels match the Pallas kernel output");
     } else {
-        println!("PJRT oracle check skipped (run `make artifacts`)");
+        println!("PJRT oracle check skipped (enable the `pjrt` feature and run `make artifacts`)");
     }
 
     // --- The paper's metrics for the whole ladder, camera included.
     println!("\n=== gaussian ladder ===");
-    let evals = dse::evaluate_ladder(&app, &cfg);
-    println!("{}", cgra_dse::report::render_ladder("gaussian", &evals));
-    let camera = AppSuite::by_name("camera").unwrap();
-    let evals = dse::evaluate_ladder(&camera, &cfg);
+    let evals = gaussian.ladder();
+    println!("{}", cgra_dse::report::render_ladder("gaussian", evals.as_slice()));
+    let camera = session.app("camera").unwrap();
+    let evals = camera.ladder();
     println!("=== camera ladder (Fig. 8 subject) ===");
-    println!("{}", cgra_dse::report::render_ladder("camera", &evals));
+    println!("{}", cgra_dse::report::render_ladder("camera", evals.as_slice()));
     let base = &evals[0];
-    let spec = dse::pe_spec_of(&evals);
+    let spec = pe_spec_of(evals.as_slice());
     println!(
         "camera: {:.1}x energy, {:.1}x area vs baseline (paper: up to 8.3x / 3.4x)",
         base.pe_energy_per_op / spec.pe_energy_per_op,

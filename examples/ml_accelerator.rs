@@ -5,36 +5,40 @@
 //! ```text
 //! cargo run --release --example ml_accelerator
 //! ```
+//!
+//! One `DseSession` carries the whole run: the per-kernel rankings feeding
+//! the domain-PE merge are the same cached stages Table I consumes.
 
 use cgra_dse::arch::{Fabric, FabricConfig};
 use cgra_dse::coordinator;
-use cgra_dse::dse::{self, DseConfig};
 use cgra_dse::frontend::AppSuite;
+use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
 
 fn main() {
-    let cfg = DseConfig::default();
-    let apps = AppSuite::ml();
+    let session = DseSession::builder().apps(AppSuite::ml()).build();
+    let names: Vec<&str> = AppSuite::ml().iter().map(|a| a.name).collect();
 
     // --- Generate the domain PE from all four ML kernels.
-    let pe_ml = dse::domain_pe(&apps, "pe_ml", 1, &cfg);
+    let pe_ml = session.domain_pe("pe_ml", 1, &names);
     println!("PE ML (Fig. 12 analogue):\n{}", pe_ml.describe());
 
     // --- Every ML kernel must map on it; report utilization.
     println!("per-kernel evaluation on PE ML:");
-    for app in &apps {
-        match dse::evaluate_variant(app, "pe_ml", &pe_ml, &cfg) {
+    for &name in &names {
+        let stages = session.app(name).unwrap();
+        match stages.evaluate_pe("pe_ml", &pe_ml) {
             Some(ve) => println!(
                 "  {:<6} {:>3} PEs  {:>7.1} fJ/op  {:>9.0} µm² total  fmax {:.2} GHz",
-                app.name, ve.n_pes, ve.pe_energy_per_op, ve.total_area, ve.fmax_ghz
+                name, ve.n_pes, ve.pe_energy_per_op, ve.total_area, ve.fmax_ghz
             ),
-            None => println!("  {:<6} UNMAPPABLE", app.name),
+            None => println!("  {name:<6} UNMAPPABLE"),
         }
     }
 
     // --- Serve a real conv workload through the simulated fabric.
-    let conv = apps.iter().find(|a| a.name == "conv").unwrap();
-    let mut graph = conv.graph.clone();
+    let conv = session.app("conv").unwrap();
+    let mut graph = conv.app().graph.clone();
     let mapping = cgra_dse::mapper::map_app(&mut graph, &pe_ml).expect("map conv");
     let fabric = Fabric::new(FabricConfig::default());
     let (pl, rt) = cgra_dse::pnr::place_and_route(&mapping, &fabric, 7).expect("pnr");
@@ -56,8 +60,9 @@ fn main() {
         sim.stats.items as f64 / dt.as_secs_f64() / 1e3
     );
 
-    // --- Table I.
-    let (text, rows) = coordinator::run_table1(&cfg);
+    // --- Table I (reuses the session's cached rankings and the pe_ml
+    // domain stage computed above).
+    let (text, rows) = coordinator::table1(&session);
     println!("\n{text}");
     let saving = 1.0 - rows[1].energy_per_op_fj / rows[0].energy_per_op_fj;
     println!(

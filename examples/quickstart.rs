@@ -4,31 +4,38 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! 1. Build the application dataflow graph (Halide→CoreIR equivalent).
-//! 2. Mine frequent subgraphs (GRAMI-equivalent) and rank by MIS.
-//! 3. Merge the top subgraph into a specialized PE (datapath merging).
+//! 1. Build a `DseSession` over the application (Halide→CoreIR equivalent).
+//! 2. Mine frequent subgraphs (GRAMI-equivalent) and rank by MIS —
+//!    `session.app(..).ranked()`.
+//! 3. Merge the top subgraph into a specialized PE (datapath merging) —
+//!    `.variants()`.
 //! 4. Map the app onto the PE, place & route, generate a bitstream.
 //! 5. Simulate the CGRA cycle-by-cycle and check against `Graph::eval`.
+//!
+//! Every stage result is computed once and cached on the session: the
+//! ladder evaluations at the end reuse the mining/merging from steps 2–3.
 
 use cgra_dse::arch::{Fabric, FabricConfig};
-use cgra_dse::dse::{self, DseConfig};
 use cgra_dse::frontend::AppSuite;
 use cgra_dse::power::evaluate_pe;
+use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
 
 fn main() {
     // --- 1. The application: ((((i0*w0 + i1*w1) + i2*w2) + i3*w3) + c).
-    let app = AppSuite::by_name("conv1d").unwrap();
+    let session = DseSession::builder()
+        .app(AppSuite::by_name("conv1d").unwrap())
+        .build();
+    let stages = session.app("conv1d").unwrap();
+    let app = stages.app();
     println!(
         "app `{}`: {} compute ops\n",
         app.name,
         app.graph.compute_len()
     );
 
-    // --- 2. Mine + MIS-rank.
-    let cfg = DseConfig::default();
-    let mut graph = app.graph.clone();
-    let ranked = dse::rank_subgraphs(&mut graph, &cfg);
+    // --- 2. Mine + MIS-rank (stage 1+2, computed lazily, cached).
+    let ranked = stages.ranked();
     println!("top mined subgraphs (ranked by MIS × ops-per-activation):");
     for r in ranked.iter().take(3) {
         println!(
@@ -44,8 +51,8 @@ fn main() {
         );
     }
 
-    // --- 3. The variant ladder merges top subgraphs into PEs.
-    let ladder = dse::variant_ladder(&app, &cfg);
+    // --- 3. The variant ladder merges top subgraphs into PEs (stage 3).
+    let ladder = stages.variants();
     let (name, pe) = ladder.last().unwrap();
     println!("\nmost specialized variant `{name}`:\n{}", pe.describe());
     let eval = evaluate_pe(pe);
@@ -68,9 +75,10 @@ fn main() {
         result.stats.items, result.stats.latency_cycles, result.stats.ii
     );
 
-    // --- Compare against the baseline.
-    let base = dse::evaluate_variant(&app, "base", &ladder[0].1, &cfg).unwrap();
-    let spec = dse::evaluate_variant(&app, name, pe, &cfg).unwrap();
+    // --- Compare against the baseline (stage 4, reuses stages 1–3 from
+    // the session cache).
+    let base = stages.evaluated("base").unwrap();
+    let spec = stages.evaluated(name).unwrap();
     println!(
         "\nbaseline : {} PEs, {:.1} fJ/op, {:.0} µm² total",
         base.n_pes, base.pe_energy_per_op, base.total_area

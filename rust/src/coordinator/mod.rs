@@ -1,85 +1,60 @@
-//! Experiment coordinator: orchestrates the paper's evaluation (§V) —
-//! per-figure experiment drivers, a small thread pool for parallel variant
-//! evaluation, and result persistence under `results/`.
+//! Experiment coordinator: thin renderers that turn [`DseSession`] stage
+//! results into the paper's figures and tables (§V), plus result
+//! persistence under `results/`.
 //!
-//! (The reference architecture calls for a tokio-based runner; this build
-//! environment has no tokio in its offline registry, so the coordinator
-//! uses `std::thread` scoped threads — same structure, no async sugar.)
+//! All heavy lifting — mining, ranking, merging, mapping, evaluation — is
+//! computed (and memoized) by the session; a `reproduce all` run therefore
+//! mines and merges each application exactly once, no matter how many
+//! figures consume it. The pre-0.2 free functions (`run_fig8(&cfg)`, …)
+//! remain as `#[deprecated]` one-shot shims for a single PR cycle.
 
 use crate::arch::{hop_energy, mem_tile_cost};
-use crate::dse::{
-    domain_pe, evaluate_ladder, evaluate_variant, frequency_sweep, pe_spec_of, DseConfig,
-    SweepPoint, VariantEval,
-};
+use crate::dse::{self, pe_spec_of, DseConfig, SweepPoint, VariantEval};
 use crate::frontend::{App, AppSuite};
 use crate::mapper::DataSrc;
 use crate::power::tables;
+use crate::report::json::Json;
 use crate::report::{self, Table1Row};
+use crate::session::report as sjson;
+use crate::session::{DseSession, SessionReport};
 
-/// Run `jobs` closures on up to `width` worker threads, preserving input
-/// order in the returned results.
-pub fn parallel_map<T, F>(jobs: Vec<F>, width: usize) -> Vec<T>
-where
-    T: Send,
-    F: FnOnce() -> T + Send,
-{
-    let width = width.max(1);
-    let mut results: Vec<Option<T>> = (0..jobs.len()).map(|_| None).collect();
-    let mut remaining: Vec<(usize, F)> = jobs.into_iter().enumerate().collect();
-    while !remaining.is_empty() {
-        let batch: Vec<(usize, F)> = remaining
-            .drain(..remaining.len().min(width))
-            .collect();
-        let outs: Vec<(usize, T)> = std::thread::scope(|s| {
-            let handles: Vec<_> = batch
-                .into_iter()
-                .map(|(i, f)| s.spawn(move || (i, f())))
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for (i, v) in outs {
-            results[i] = Some(v);
-        }
-    }
-    results.into_iter().map(|r| r.unwrap()).collect()
-}
-
-/// Default worker width (single-core images still get overlap from the OS).
-pub fn default_width() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-}
+pub use crate::runtime::{default_width, parallel_map};
 
 /// The Fig. 8 sweep frequencies (GHz).
 pub fn fig8_freqs() -> Vec<f64> {
     vec![0.6, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0, 2.2]
 }
 
+/// Every valid `reproduce` target, in canonical order.
+pub const REPRODUCE_TARGETS: [&str; 6] =
+    ["fig8", "fig9", "fig10", "fig11", "table1", "io_sweep"];
+
+fn camera(session: &DseSession) -> crate::session::AppStages<'_> {
+    session
+        .app("camera")
+        .expect("camera app (build the session with .paper_suite())")
+}
+
 /// Fig. 8: camera-pipeline variant ladder swept across synthesis
 /// frequencies. Returns (rendered text, raw sweep data).
-pub fn run_fig8(cfg: &DseConfig) -> (String, Vec<(String, Vec<SweepPoint>)>) {
-    let app = AppSuite::by_name("camera").expect("camera app");
-    let evals = evaluate_ladder(&app, cfg);
-    let freqs = fig8_freqs();
-    let sweeps: Vec<(String, Vec<SweepPoint>)> = evals
-        .iter()
-        .map(|v| (v.variant.clone(), frequency_sweep(v, &freqs)))
-        .collect();
-    let mut text = report::render_fig8(&sweeps);
+pub fn fig8(session: &DseSession) -> (String, Vec<(String, Vec<SweepPoint>)>) {
+    let cam = camera(session);
+    let evals = cam.ladder();
+    let sweeps = cam.sweep(&fig8_freqs());
+    let mut text = report::render_fig8(sweeps.as_slice());
     text.push('\n');
-    text.push_str(&report::render_ladder("camera", &evals));
-    (text, sweeps)
+    text.push_str(&report::render_ladder("camera", evals.as_slice()));
+    (text, sweeps.as_ref().clone())
 }
 
 /// Fig. 9: the subgraphs merged into each camera PE variant plus the
 /// resulting architectures.
-pub fn run_fig9(cfg: &DseConfig) -> String {
-    let app = AppSuite::by_name("camera").expect("camera app");
-    let mut graph = app.graph.clone();
-    let ranked = crate::dse::rank_subgraphs(&mut graph, cfg);
+pub fn fig9(session: &DseSession) -> String {
+    let cam = camera(session);
+    let ranked = cam.ranked();
+    let max_merged = session.config().max_merged;
     let mut s = String::from("Fig. 9 — subgraphs merged into camera PE variants\n");
-    for (k, r) in ranked.iter().take(cfg.max_merged).enumerate() {
+    for (k, r) in ranked.iter().take(max_merged).enumerate() {
         s.push_str(&format!(
             "subgraph {} (MIS={}, support={}, {} nodes): ops {:?}\n",
             k + 1,
@@ -95,37 +70,42 @@ pub fn run_fig9(cfg: &DseConfig) -> String {
         ));
     }
     s.push('\n');
-    for (name, pe) in crate::dse::variant_ladder(&app, cfg) {
+    for (name, pe) in cam.variants().iter() {
         s.push_str(&format!("--- {name} ---\n{}\n", pe.describe()));
     }
     s
 }
 
-/// Shared engine for Figs. 10/11: evaluate every app of a domain on
-/// {baseline, domain PE, app-specialized PE}.
-pub fn run_domain_fig(
-    apps: &[App],
+/// Shared engine for Figs. 10/11: evaluate every named app of a domain on
+/// {baseline, domain PE, app-specialized PE}, fanning per-app work out
+/// over the session's pool (each app's ladder is itself cached).
+pub fn domain_fig(
+    session: &DseSession,
+    members: &[&str],
     domain_name: &str,
     per_app: usize,
-    cfg: &DseConfig,
 ) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    let dom_pe = domain_pe(apps, domain_name, per_app, cfg);
+    let dom_pe = session.domain_pe(domain_name, per_app, members);
     let rows: Vec<_> = parallel_map(
-        apps.iter()
-            .map(|app| {
+        members
+            .iter()
+            .map(|&name| {
                 let dom_pe = dom_pe.clone();
-                let cfg = cfg.clone();
                 move || {
-                    let ladder = evaluate_ladder(app, &cfg);
+                    let stages = session
+                        .app(name)
+                        .unwrap_or_else(|| panic!("app `{name}` not in session"));
+                    let ladder = stages.ladder();
                     let base = ladder[0].clone();
                     let spec = pe_spec_of(&ladder).clone();
-                    let dom = evaluate_variant(app, domain_name, &dom_pe, &cfg)
+                    let dom = stages
+                        .evaluate_pe(domain_name, &dom_pe)
                         .expect("domain PE must map every domain app");
-                    (app.name.to_string(), base, dom, spec)
+                    (name.to_string(), base, dom, spec)
                 }
             })
             .collect(),
-        default_width(),
+        session.threads(),
     );
     let title = if domain_name.contains("ip") {
         "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)"
@@ -136,12 +116,24 @@ pub fn run_domain_fig(
     (text, rows)
 }
 
-pub fn run_fig10(cfg: &DseConfig) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    run_domain_fig(&AppSuite::imaging(), "pe_ip", 1, cfg)
+fn imaging_names() -> Vec<&'static str> {
+    AppSuite::imaging().iter().map(|a| a.name).collect()
 }
 
-pub fn run_fig11(cfg: &DseConfig) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    run_domain_fig(&AppSuite::ml(), "pe_ml", 1, cfg)
+fn ml_names() -> Vec<&'static str> {
+    AppSuite::ml().iter().map(|a| a.name).collect()
+}
+
+pub fn fig10(
+    session: &DseSession,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    domain_fig(session, &imaging_names(), "pe_ip", 1)
+}
+
+pub fn fig11(
+    session: &DseSession,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    domain_fig(session, &ml_names(), "pe_ml", 1)
 }
 
 /// CGRA-level energy per op for a variant evaluation: PE core +
@@ -185,17 +177,21 @@ pub fn simba_energy_per_op() -> f64 {
 }
 
 /// Table I: ML CGRA vs baseline CGRA vs Simba.
-pub fn run_table1(cfg: &DseConfig) -> (String, Vec<Table1Row>) {
-    let apps = AppSuite::ml();
-    let conv = apps.iter().find(|a| a.name == "conv").unwrap();
-    let pe_ml = domain_pe(&apps, "pe_ml", 1, cfg);
+pub fn table1(session: &DseSession) -> (String, Vec<Table1Row>) {
+    let pe_ml = session.domain_pe("pe_ml", 1, &ml_names());
+    let conv = session
+        .app("conv")
+        .expect("conv app (build the session with .paper_suite())");
+    let cfg = session.config();
 
-    let base_ladder = evaluate_ladder(conv, cfg);
+    let base_ladder = conv.ladder();
     let base = &base_ladder[0];
-    let ml = evaluate_variant(conv, "pe_ml", &pe_ml, cfg).expect("pe_ml maps conv");
+    let ml = conv
+        .evaluate_pe("pe_ml", &pe_ml)
+        .expect("pe_ml maps conv");
 
-    let e_base = cgra_energy_per_op(conv, base, cfg);
-    let e_ml = cgra_energy_per_op(conv, &ml, cfg);
+    let e_base = cgra_energy_per_op(conv.app(), base, &cfg);
+    let e_ml = cgra_energy_per_op(conv.app(), &ml, &cfg);
     let e_simba = simba_energy_per_op();
 
     let rows = vec![
@@ -225,9 +221,11 @@ pub fn run_table1(cfg: &DseConfig) -> (String, Vec<Table1Row>) {
 /// sweep the routing-track count and compare per-PE interconnect cost for
 /// the baseline PE (3 data inputs) vs the specialized PE (const registers
 /// internalized, fewer CB ports — the Fig. 2c effect).
-pub fn run_io_sweep(cfg: &DseConfig) -> (String, Vec<(usize, f64, f64)>) {
-    let app = AppSuite::by_name("camera").expect("camera");
-    let ladder = crate::dse::variant_ladder(&app, cfg);
+pub fn io_sweep(session: &DseSession) -> (String, Vec<(usize, f64, f64)>) {
+    let cam = camera(session);
+    let app = cam.app();
+    let cfg = session.config();
+    let ladder = cam.variants();
     let mut rows = Vec::new();
     let mut text = String::from(
         "I/O x interconnect sweep (camera): per-op interconnect energy [fJ]
@@ -237,10 +235,10 @@ pub fn run_io_sweep(cfg: &DseConfig) -> (String, Vec<(usize, f64, f64)>) {
     );
     for tracks in [3usize, 5, 8, 12, 16] {
         let tcfg = DseConfig { tracks, ..cfg.clone() };
-        let base =
-            evaluate_variant(&app, "base", &ladder[0].1, &tcfg).expect("baseline maps");
+        let base = dse::evaluate_variant_impl(app, "base", &ladder[0].1, &tcfg)
+            .expect("baseline maps");
         let (vname, pe) = ladder.last().unwrap();
-        let spec = evaluate_variant(&app, vname, pe, &tcfg).expect("spec maps");
+        let spec = dse::evaluate_variant_impl(app, vname, pe, &tcfg).expect("spec maps");
         text.push_str(&format!(
             "{tracks:>6}   {:>8.1}   {:>11.1}   {:.2}x
 ",
@@ -259,6 +257,127 @@ specialized PEs internalize constants into configuration registers \
 ",
     );
     (text, rows)
+}
+
+/// Run the named experiments over one session and bundle the results.
+/// Valid targets are [`REPRODUCE_TARGETS`]; unknown targets panic (the CLI
+/// validates first).
+pub fn reproduce(session: &DseSession, targets: &[&str]) -> SessionReport {
+    let mut rep = SessionReport::new(session);
+    for &t in targets {
+        match t {
+            "fig8" => {
+                let (text, sweeps) = fig8(session);
+                rep.push("fig8", text, sjson::sweep_json(&sweeps));
+            }
+            "fig9" => {
+                let text = fig9(session);
+                rep.push("fig9", text, Json::Null);
+            }
+            "fig10" => {
+                let (text, rows) = fig10(session);
+                rep.push("fig10", text, sjson::domain_json(&rows));
+            }
+            "fig11" => {
+                let (text, rows) = fig11(session);
+                rep.push("fig11", text, sjson::domain_json(&rows));
+            }
+            "table1" => {
+                let (text, rows) = table1(session);
+                rep.push("table1", text, sjson::table1_json(&rows));
+            }
+            "io_sweep" => {
+                let (text, rows) = io_sweep(session);
+                rep.push("io_sweep", text, sjson::io_sweep_json(&rows));
+            }
+            other => panic!("unknown reproduce target `{other}`"),
+        }
+    }
+    rep
+}
+
+fn one_shot(cfg: &DseConfig) -> DseSession {
+    DseSession::builder()
+        .paper_suite()
+        .config(cfg.clone())
+        .build()
+}
+
+/// Fig. 8 over a throwaway session.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::fig8(&session)"
+)]
+pub fn run_fig8(cfg: &DseConfig) -> (String, Vec<(String, Vec<SweepPoint>)>) {
+    fig8(&one_shot(cfg))
+}
+
+/// Fig. 9 over a throwaway session.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::fig9(&session)"
+)]
+pub fn run_fig9(cfg: &DseConfig) -> String {
+    fig9(&one_shot(cfg))
+}
+
+/// Figs. 10/11 engine over a throwaway session of the given apps.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::domain_fig(&session, ...)"
+)]
+pub fn run_domain_fig(
+    apps: &[App],
+    domain_name: &str,
+    per_app: usize,
+    cfg: &DseConfig,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    let session = DseSession::builder()
+        .apps(apps.to_vec())
+        .config(cfg.clone())
+        .build();
+    let names: Vec<&str> = apps.iter().map(|a| a.name).collect();
+    domain_fig(&session, &names, domain_name, per_app)
+}
+
+/// Fig. 10 over a throwaway session.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::fig10(&session)"
+)]
+pub fn run_fig10(
+    cfg: &DseConfig,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    fig10(&one_shot(cfg))
+}
+
+/// Fig. 11 over a throwaway session.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::fig11(&session)"
+)]
+pub fn run_fig11(
+    cfg: &DseConfig,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    fig11(&one_shot(cfg))
+}
+
+/// Table I over a throwaway session.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::table1(&session)"
+)]
+pub fn run_table1(cfg: &DseConfig) -> (String, Vec<Table1Row>) {
+    table1(&one_shot(cfg))
+}
+
+/// I/O sweep over a throwaway session.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession once and call coordinator::io_sweep(&session)"
+)]
+pub fn run_io_sweep(cfg: &DseConfig) -> (String, Vec<(usize, f64, f64)>) {
+    io_sweep(&one_shot(cfg))
 }
 
 /// Persist a report under `results/`.
@@ -288,15 +407,13 @@ mod tests {
         }
     }
 
-    #[test]
-    fn parallel_map_preserves_order() {
-        let jobs: Vec<_> = (0..10).map(|i| move || i * 2).collect();
-        assert_eq!(parallel_map(jobs, 3), (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    fn session() -> DseSession {
+        DseSession::builder().paper_suite().config(cfg()).build()
     }
 
     #[test]
     fn fig9_mentions_subgraphs() {
-        let s = run_fig9(&cfg());
+        let s = fig9(&session());
         assert!(s.contains("subgraph 1"));
         assert!(s.contains("pe2"));
     }
@@ -309,7 +426,7 @@ mod tests {
 
     #[test]
     fn io_sweep_shows_cb_scaling_and_const_reg_savings() {
-        let (text, rows) = run_io_sweep(&cfg());
+        let (text, rows) = io_sweep(&session());
         assert!(text.contains("tracks"));
         // Interconnect energy grows with track count...
         assert!(rows.last().unwrap().1 > rows[0].1);
@@ -323,11 +440,23 @@ mod tests {
     #[test]
     fn table1_shape_matches_paper() {
         // Baseline CGRA > ML CGRA > (close to) Simba.
-        let (_, rows) = run_table1(&cfg());
+        let (_, rows) = table1(&session());
         assert!(rows[0].energy_per_op_fj > rows[1].energy_per_op_fj);
         assert!(rows[1].energy_per_op_fj >= rows[2].energy_per_op_fj * 0.8);
         // Specialization saves a meaningful overall fraction.
         let saving = 1.0 - rows[1].energy_per_op_fj / rows[0].energy_per_op_fj;
         assert!(saving > 0.08, "saving {saving}");
+    }
+
+    #[test]
+    fn reproduce_reuses_cached_stages() {
+        use crate::session::Stage;
+        let s = session();
+        let rep = reproduce(&s, &["fig8", "fig9", "io_sweep"]);
+        assert_eq!(rep.sections.len(), 3);
+        // All three experiments share one camera mining/ranking pass.
+        assert_eq!(s.stage_computes(Stage::Mine), 1);
+        assert_eq!(s.stage_computes(Stage::Rank), 1);
+        assert_eq!(s.stage_computes(Stage::Variants), 1);
     }
 }

@@ -1,8 +1,14 @@
-//! The design-space-exploration driver (§IV, Fig. 6): ties the whole
-//! toolchain together — mine frequent subgraphs, rank them by maximal
-//! independent set size, merge the top ones into PE variants (PE 1–5 of
-//! §V), generate cross-application domain PEs (PE IP, PE ML), map each
-//! application onto each variant, and evaluate area / energy / frequency.
+//! The design-space-exploration stage library (§IV, Fig. 6): mine frequent
+//! subgraphs, rank them by maximal independent set size, merge the top ones
+//! into PE variants (PE 1–5 of §V), generate cross-application domain PEs
+//! (PE IP, PE ML), map each application onto each variant, and evaluate
+//! area / energy / frequency.
+//!
+//! The free functions in this module are the *primitives*; the supported
+//! entry point is [`crate::session::DseSession`], which runs them as a
+//! staged pipeline with per-stage memoization and parallel fan-out. The
+//! old free-function API is kept as `#[deprecated]` shims for one PR cycle
+//! (see DESIGN.md §4 for the migration table).
 
 pub mod ablation;
 
@@ -11,7 +17,7 @@ use crate::ir::{canonical_code, Graph, NodeId, Op};
 use crate::mapper::{map_app, Mapping};
 use crate::mining::{mine, MinedPattern, MinerConfig};
 use crate::mis;
-use crate::pe::baseline::{baseline_pe, pe1_for_app, baseline_ops};
+use crate::pe::baseline::{baseline_ops, baseline_pe, pe1_for_app};
 use crate::pe::PeSpec;
 use crate::power::{evaluate_pe, interconnect_per_pe, synthesis_scale, PeEval};
 
@@ -52,9 +58,17 @@ pub struct RankedPattern {
     pub savings: usize,
 }
 
-/// Mine + MIS-rank the interesting subgraphs of an application (§III).
-pub fn rank_subgraphs(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
-    let mined = mine(app, &cfg.miner);
+/// Stage 1 — mine the frequent subgraphs of an application (§III-A).
+///
+/// Clones the graph so the caller's `App` stays untouched; the miner
+/// freezes its working copy.
+pub(crate) fn mine_patterns(app: &App, cfg: &DseConfig) -> Vec<MinedPattern> {
+    let mut graph = app.graph.clone();
+    mine(&mut graph, &cfg.miner)
+}
+
+/// Stage 2 — filter + MIS-rank already-mined patterns (§III-B/C).
+pub(crate) fn rank_mined(mined: Vec<MinedPattern>, cfg: &DseConfig) -> Vec<RankedPattern> {
     let mut ranked: Vec<RankedPattern> = mined
         .into_iter()
         .filter(|p| p.graph.len() >= 2)
@@ -85,6 +99,19 @@ pub fn rank_subgraphs(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
             .then(a.pattern.canon.cmp(&b.pattern.canon))
     });
     ranked
+}
+
+pub(crate) fn rank_subgraphs_impl(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
+    rank_mined(mine(app, &cfg.miner), cfg)
+}
+
+/// Mine + MIS-rank the interesting subgraphs of an application (§III).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession and call session.app(name).ranked() instead"
+)]
+pub fn rank_subgraphs(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
+    rank_subgraphs_impl(app, cfg)
 }
 
 fn has_real_op(g: &Graph) -> bool {
@@ -193,20 +220,18 @@ fn single_op_subs(app: &Graph) -> Vec<Graph> {
     subs
 }
 
-/// Build the §V variant ladder for one application:
-/// `[("base", …), ("pe1", …), ("pe2", …), … up to pe5]`.
-///
-/// PE k+1 merges the k top-MIS-ranked subgraphs with the app's single-op
-/// modes (so every app node stays mappable).
-pub fn variant_ladder(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
-    let mut graph = app.graph.clone();
-    let ranked = rank_subgraphs(&mut graph, cfg);
+/// Stage 3 — build the §V variant ladder from already-ranked subgraphs.
+pub(crate) fn ladder_from_ranked(
+    app: &App,
+    ranked: &[RankedPattern],
+    cfg: &DseConfig,
+) -> Vec<(String, PeSpec)> {
     let mut out = vec![
         ("base".to_string(), baseline_pe()),
         ("pe1".to_string(), pe1_for_app(&app.graph, format!("pe1_{}", app.name))),
     ];
     let singles = single_op_subs(&app.graph);
-    let selected = select_complementary(&ranked, cfg.max_merged);
+    let selected = select_complementary(ranked, cfg.max_merged);
     let mut chosen: Vec<Graph> = Vec::new();
     for r in selected {
         chosen.push(r.pattern.graph.clone());
@@ -221,15 +246,37 @@ pub fn variant_ladder(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
     out
 }
 
-/// A cross-application domain PE (PE IP / PE ML of §V): merge the top
-/// `per_app` subgraphs of every app plus the union of all used single ops.
-pub fn domain_pe(apps: &[App], name: &str, per_app: usize, cfg: &DseConfig) -> PeSpec {
+pub(crate) fn variant_ladder_impl(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
+    let mut graph = app.graph.clone();
+    let ranked = rank_subgraphs_impl(&mut graph, cfg);
+    ladder_from_ranked(app, &ranked, cfg)
+}
+
+/// Build the §V variant ladder for one application:
+/// `[("base", …), ("pe1", …), ("pe2", …), … up to pe5]`.
+///
+/// PE k+1 merges the k top-MIS-ranked subgraphs with the app's single-op
+/// modes (so every app node stays mappable).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession and call session.app(name).variants() instead"
+)]
+pub fn variant_ladder(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
+    variant_ladder_impl(app, cfg)
+}
+
+/// Cross-application domain-PE merge from already-ranked per-app subgraph
+/// lists (`apps` and `ranked` are parallel slices).
+pub(crate) fn domain_pe_from_ranked(
+    apps: &[&App],
+    ranked: &[&[RankedPattern]],
+    name: &str,
+    per_app: usize,
+) -> PeSpec {
     let mut subs: Vec<Graph> = Vec::new();
     let mut seen_canon: Vec<String> = Vec::new();
-    for app in apps {
-        let mut g = app.graph.clone();
-        let ranked = rank_subgraphs(&mut g, cfg);
-        for r in select_complementary(&ranked, per_app) {
+    for app_ranked in ranked {
+        for r in select_complementary(app_ranked, per_app) {
             if seen_canon.contains(&r.pattern.canon) {
                 continue;
             }
@@ -238,17 +285,45 @@ pub fn domain_pe(apps: &[App], name: &str, per_app: usize, cfg: &DseConfig) -> P
         }
     }
     // Union of single ops across the domain.
-    let mut ops_seen: Vec<&'static str> = Vec::new();
+    let mut ops_seen: Vec<String> = Vec::new();
     for app in apps {
         for sub in single_op_subs(&app.graph) {
             let c = canonical_code(&sub);
-            if !ops_seen.contains(&c.as_str()) {
-                ops_seen.push(Box::leak(c.into_boxed_str()));
+            if !ops_seen.contains(&c) {
+                ops_seen.push(c);
                 subs.push(sub);
             }
         }
     }
     PeSpec::from_subgraphs(name, &subs)
+}
+
+pub(crate) fn domain_pe_impl(
+    apps: &[App],
+    name: &str,
+    per_app: usize,
+    cfg: &DseConfig,
+) -> PeSpec {
+    let ranked: Vec<Vec<RankedPattern>> = apps
+        .iter()
+        .map(|app| {
+            let mut g = app.graph.clone();
+            rank_subgraphs_impl(&mut g, cfg)
+        })
+        .collect();
+    let app_refs: Vec<&App> = apps.iter().collect();
+    let ranked_refs: Vec<&[RankedPattern]> = ranked.iter().map(|r| r.as_slice()).collect();
+    domain_pe_from_ranked(&app_refs, &ranked_refs, name, per_app)
+}
+
+/// A cross-application domain PE (PE IP / PE ML of §V): merge the top
+/// `per_app` subgraphs of every app plus the union of all used single ops.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession and call session.domain_pe(name, per_app, &app_names) instead"
+)]
+pub fn domain_pe(apps: &[App], name: &str, per_app: usize, cfg: &DseConfig) -> PeSpec {
+    domain_pe_impl(apps, name, per_app, cfg)
 }
 
 /// Evaluation of one (app, PE) pair — the numbers behind Figs. 8/10/11.
@@ -270,9 +345,9 @@ pub struct VariantEval {
     pub fmax_ghz: f64,
 }
 
-/// Map and evaluate an app on a PE. Returns `None` when the app cannot be
-/// covered by the PE's rules.
-pub fn evaluate_variant(
+/// Stage 4 — map and evaluate an app on a PE. Returns `None` when the app
+/// cannot be covered by the PE's rules.
+pub(crate) fn evaluate_variant_impl(
     app: &App,
     variant: &str,
     pe: &PeSpec,
@@ -326,6 +401,22 @@ pub fn evaluate_variant(
     })
 }
 
+/// Map and evaluate an app on a PE. Returns `None` when the app cannot be
+/// covered by the PE's rules.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession and call session.app(name).evaluated(variant) \
+            (or .evaluate_pe(variant, &pe) for an external PeSpec) instead"
+)]
+pub fn evaluate_variant(
+    app: &App,
+    variant: &str,
+    pe: &PeSpec,
+    cfg: &DseConfig,
+) -> Option<VariantEval> {
+    evaluate_variant_impl(app, variant, pe, cfg)
+}
+
 /// One row of the Fig. 8 frequency sweep.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
@@ -337,8 +428,8 @@ pub struct SweepPoint {
     pub total_area: Option<f64>,
 }
 
-/// Sweep a variant evaluation across synthesis frequencies (Fig. 8).
-pub fn frequency_sweep(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
+/// Stage 5 — sweep a variant evaluation across synthesis frequencies.
+pub(crate) fn frequency_sweep_impl(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
     freqs
         .iter()
         .map(|&f| {
@@ -353,12 +444,31 @@ pub fn frequency_sweep(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
         .collect()
 }
 
-/// Full per-app ladder evaluation: the engine behind `reproduce fig8/fig9`.
-pub fn evaluate_ladder(app: &App, cfg: &DseConfig) -> Vec<VariantEval> {
-    variant_ladder(app, cfg)
+/// Sweep a variant evaluation across synthesis frequencies (Fig. 8).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession and call session.app(name).sweep(&freqs) instead"
+)]
+pub fn frequency_sweep(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
+    frequency_sweep_impl(ve, freqs)
+}
+
+/// Sequential ladder evaluation (the session fans the same work out over
+/// the worker pool; results are identical either way).
+pub(crate) fn evaluate_ladder_impl(app: &App, cfg: &DseConfig) -> Vec<VariantEval> {
+    variant_ladder_impl(app, cfg)
         .into_iter()
-        .filter_map(|(name, pe)| evaluate_variant(app, &name, &pe, cfg))
+        .filter_map(|(name, pe)| evaluate_variant_impl(app, &name, &pe, cfg))
         .collect()
+}
+
+/// Full per-app ladder evaluation: the engine behind `reproduce fig8/fig9`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a DseSession and call session.app(name).ladder() instead"
+)]
+pub fn evaluate_ladder(app: &App, cfg: &DseConfig) -> Vec<VariantEval> {
+    evaluate_ladder_impl(app, cfg)
 }
 
 /// Pick the most specialized variant that did not increase area or energy
@@ -406,7 +516,7 @@ mod tests {
     fn ranked_subgraphs_sorted_by_savings() {
         let mut app = AppSuite::by_name("gaussian").unwrap().graph;
         let cfg = fast_cfg();
-        let ranked = rank_subgraphs(&mut app, &cfg);
+        let ranked = rank_subgraphs_impl(&mut app, &cfg);
         assert!(!ranked.is_empty());
         for w in ranked.windows(2) {
             assert!(w[0].savings >= w[1].savings);
@@ -420,8 +530,12 @@ mod tests {
     #[test]
     fn ladder_has_base_pe1_and_specializations() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let ladder = variant_ladder(&app, &fast_cfg());
-        assert!(ladder.len() >= 3, "ladder: {:?}", ladder.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+        let ladder = variant_ladder_impl(&app, &fast_cfg());
+        assert!(
+            ladder.len() >= 3,
+            "ladder: {:?}",
+            ladder.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()
+        );
         assert_eq!(ladder[0].0, "base");
         assert_eq!(ladder[1].0, "pe1");
         assert_eq!(ladder[2].0, "pe2");
@@ -431,7 +545,7 @@ mod tests {
     fn gaussian_specialization_improves_energy_and_area() {
         let app = AppSuite::by_name("gaussian").unwrap();
         let cfg = fast_cfg();
-        let evals = evaluate_ladder(&app, &cfg);
+        let evals = evaluate_ladder_impl(&app, &cfg);
         assert!(evals.len() >= 3);
         let base = &evals[0];
         let last = pe_spec_of(&evals);
@@ -454,7 +568,7 @@ mod tests {
     #[test]
     fn specialized_fmax_at_least_baseline() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let evals = evaluate_ladder(&app, &fast_cfg());
+        let evals = evaluate_ladder_impl(&app, &fast_cfg());
         let base = &evals[0];
         let spec = pe_spec_of(&evals);
         assert!(spec.fmax_ghz >= base.fmax_ghz * 0.95);
@@ -463,8 +577,8 @@ mod tests {
     #[test]
     fn frequency_sweep_has_wall() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let evals = evaluate_ladder(&app, &fast_cfg());
-        let pts = frequency_sweep(&evals[0], &[0.8, 1.2, 5.0]);
+        let evals = evaluate_ladder_impl(&app, &fast_cfg());
+        let pts = frequency_sweep_impl(&evals[0], &[0.8, 1.2, 5.0]);
         assert!(pts[0].energy_per_op.is_some());
         assert!(pts[2].energy_per_op.is_none(), "5 GHz must be infeasible");
     }
@@ -473,9 +587,9 @@ mod tests {
     fn domain_pe_maps_all_imaging_apps() {
         let apps = AppSuite::imaging();
         let cfg = fast_cfg();
-        let pe_ip = domain_pe(&apps, "pe_ip", 1, &cfg);
+        let pe_ip = domain_pe_impl(&apps, "pe_ip", 1, &cfg);
         for app in &apps {
-            let ve = evaluate_variant(app, "pe_ip", &pe_ip, &cfg);
+            let ve = evaluate_variant_impl(app, "pe_ip", &pe_ip, &cfg);
             assert!(ve.is_some(), "{} failed to map on PE IP", app.name);
         }
     }
@@ -484,8 +598,34 @@ mod tests {
     fn pattern_input_cap_respected() {
         let mut app = AppSuite::by_name("gaussian").unwrap().graph;
         let cfg = fast_cfg();
-        for r in rank_subgraphs(&mut app, &cfg) {
+        for r in rank_subgraphs_impl(&mut app, &cfg) {
             assert!(external_inputs_of(&r.pattern.graph) <= cfg.max_pattern_inputs);
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_impls() {
+        // The one-PR-cycle migration shims must stay behaviorally identical
+        // to the stage impls they wrap.
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let cfg = fast_cfg();
+        let mut g1 = app.graph.clone();
+        let mut g2 = app.graph.clone();
+        let a = rank_subgraphs(&mut g1, &cfg);
+        let b = rank_subgraphs_impl(&mut g2, &cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pattern.canon, y.pattern.canon);
+            assert_eq!(x.savings, y.savings);
+        }
+        let l1 = evaluate_ladder(&app, &cfg);
+        let l2 = evaluate_ladder_impl(&app, &cfg);
+        assert_eq!(l1.len(), l2.len());
+        for (x, y) in l1.iter().zip(&l2) {
+            assert_eq!(x.variant, y.variant);
+            assert_eq!(x.total_area.to_bits(), y.total_area.to_bits());
+            assert_eq!(x.pe_energy_per_op.to_bits(), y.pe_energy_per_op.to_bits());
         }
     }
 }

@@ -1,0 +1,102 @@
+//! Minimal string-backed error type shared by the fallible toolchain APIs.
+//!
+//! (The reference implementation used `anyhow`; that crate is not in the
+//! offline registry, so this module provides the same ergonomics — a
+//! `Result` alias, a `Context` extension trait for `Result`/`Option`, and a
+//! `bail!` macro — on a zero-dependency error type.)
+
+use std::fmt;
+
+/// A toolchain error: a human-readable message chain.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style combinators for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a static message prefix.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily built message prefix.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::new(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::new(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (the `anyhow::bail!` idiom).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::new(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke at {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "broke at 42");
+    }
+
+    #[test]
+    fn context_on_result_prefixes() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, String> = Ok(1);
+        let r = ok.with_context(|| panic!("must not run"));
+        assert_eq!(r.unwrap(), 1);
+    }
+}

@@ -7,8 +7,16 @@
 //! merging, PE generation, CGRA generation, mapping, place-and-route,
 //! bitstream generation, cycle-level simulation, and area/energy evaluation.
 //!
-//! See `DESIGN.md` for the module inventory and the per-experiment index,
-//! and `examples/quickstart.rs` for the 60-second tour.
+//! The supported entry point is [`session::DseSession`] — a staged, cached,
+//! parallel pipeline over the stage primitives in [`dse`]; the experiment
+//! renderers in [`coordinator`] consume it. The pre-0.2 free-function API
+//! survives as `#[deprecated]` shims for one PR cycle.
+//!
+//! See `DESIGN.md` for the module inventory, the per-experiment index, and
+//! the `DseSession` stage diagram, and `examples/quickstart.rs` for the
+//! 60-second tour.
+
+pub mod error;
 
 pub mod ir;
 
@@ -31,6 +39,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod report;
 pub mod runtime;
+pub mod session;
 
 pub mod util;
 pub mod validate;

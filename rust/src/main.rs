@@ -1,13 +1,18 @@
 //! cgra-dse command-line interface: the leader entrypoint for the whole
 //! toolchain. (Hand-rolled argument parsing — the offline build environment
 //! has no clap.)
+//!
+//! Every subcommand builds one [`DseSession`] and drives it; stages shared
+//! between subcommand steps (e.g. the six `reproduce all` experiments) are
+//! mined/merged once and served from the session cache.
 
 use cgra_dse::coordinator;
-use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::dse::DseConfig;
 use cgra_dse::frontend::AppSuite;
 use cgra_dse::mining::MinerConfig;
 use cgra_dse::pe::verilog::emit_verilog;
 use cgra_dse::runtime;
+use cgra_dse::session::{report as sjson, AppStages, DseSession};
 use cgra_dse::util::SplitMix64;
 
 const USAGE: &str = "\
@@ -16,13 +21,17 @@ cgra-dse — automated DSE of CGRA processing element architectures
 
 USAGE:
   cgra-dse mine --app <name> [--min-support N] [--max-nodes N]
-  cgra-dse pes --app <name> [--fast]
+  cgra-dse pes --app <name> [--fast] [--json]
   cgra-dse verilog --app <name> [--variant peK] [--out FILE]
   cgra-dse map --app <name> [--variant peK]
   cgra-dse sim --app <name> [--variant peK] [--items N]
-  cgra-dse reproduce <fig8|fig9|fig10|fig11|table1|io_sweep|all> [--fast] [--save]
+  cgra-dse reproduce <fig8|fig9|fig10|fig11|table1|io_sweep|all> [--fast] [--save] [--json]
   cgra-dse validate [--app gaussian|conv|block] [--items N]
   cgra-dse apps
+
+GLOBAL FLAGS:
+  --threads N   worker-pool width for parallel stages (default: all cores)
+  --json        machine-readable JSON output (pes, reproduce)
 
 Apps: harris gaussian camera laplacian conv block strc ds conv1d
 ";
@@ -123,22 +132,31 @@ fn dse_config(flags: &Flags) -> DseConfig {
     }
 }
 
-fn require_app(flags: &Flags) -> Result<cgra_dse::frontend::App, i32> {
+/// One session per invocation: the paper suite, the flag-derived config,
+/// and the requested worker width.
+fn session_for(flags: &Flags) -> DseSession {
+    DseSession::builder()
+        .paper_suite()
+        .config(dse_config(flags))
+        .threads(flags.get_usize("threads", runtime::default_width()))
+        .build()
+}
+
+fn require_app<'s>(session: &'s DseSession, flags: &Flags) -> Result<AppStages<'s>, i32> {
     let name = flags.get("app").unwrap_or("camera");
-    AppSuite::by_name(name).ok_or_else(|| {
+    session.app(name).ok_or_else(|| {
         eprintln!("unknown app `{name}`; try: {}", AppSuite::names().join(" "));
         2
     })
 }
 
 fn cmd_mine(flags: &Flags) -> i32 {
-    let Ok(app) = require_app(flags) else { return 2 };
-    let mut graph = app.graph.clone();
-    let cfg = dse_config(flags);
-    let ranked = dse::rank_subgraphs(&mut graph, &cfg);
+    let session = session_for(flags);
+    let Ok(stages) = require_app(&session, flags) else { return 2 };
+    let ranked = stages.ranked();
     println!(
         "{} compute ops; {} interesting frequent subgraphs (MIS >= 2):",
-        graph.compute_len(),
+        stages.app().graph.compute_len(),
         ranked.len()
     );
     for (i, r) in ranked.iter().take(20).enumerate() {
@@ -159,18 +177,25 @@ fn cmd_mine(flags: &Flags) -> i32 {
 }
 
 fn cmd_pes(flags: &Flags) -> i32 {
-    let Ok(app) = require_app(flags) else { return 2 };
-    let cfg = dse_config(flags);
-    let evals = dse::evaluate_ladder(&app, &cfg);
-    println!("{}", cgra_dse::report::render_ladder(app.name, &evals));
+    let session = session_for(flags);
+    let Ok(stages) = require_app(&session, flags) else { return 2 };
+    let evals = stages.ladder();
+    if flags.has("json") {
+        println!("{}", sjson::ladder_json(stages.app().name, &evals).render());
+    } else {
+        println!(
+            "{}",
+            cgra_dse::report::render_ladder(stages.app().name, evals.as_slice())
+        );
+    }
     0
 }
 
 fn cmd_verilog(flags: &Flags) -> i32 {
-    let Ok(app) = require_app(flags) else { return 2 };
-    let cfg = dse_config(flags);
+    let session = session_for(flags);
+    let Ok(stages) = require_app(&session, flags) else { return 2 };
     let want = flags.get("variant").unwrap_or("pe2");
-    let ladder = dse::variant_ladder(&app, &cfg);
+    let ladder = stages.variants();
     let Some((_, pe)) = ladder.iter().find(|(n, _)| n == want) else {
         eprintln!(
             "no variant `{want}`; available: {:?}",
@@ -193,15 +218,18 @@ fn cmd_verilog(flags: &Flags) -> i32 {
 }
 
 fn cmd_map(flags: &Flags) -> i32 {
-    let Ok(app) = require_app(flags) else { return 2 };
-    let cfg = dse_config(flags);
+    let session = session_for(flags);
+    let Ok(stages) = require_app(&session, flags) else { return 2 };
     let want = flags.get("variant").unwrap_or("pe2");
-    let ladder = dse::variant_ladder(&app, &cfg);
-    let Some((name, pe)) = ladder.into_iter().find(|(n, _)| n == want) else {
+    let ladder = stages.variants();
+    let Some((name, pe)) = ladder.iter().find(|(n, _)| n == want) else {
         eprintln!("no variant `{want}`");
         return 2;
     };
-    match dse::evaluate_variant(&app, &name, &pe, &cfg) {
+    let app = stages.app();
+    // Evaluate just the requested variant — no need to pay for the whole
+    // ladder on a single-variant query.
+    match stages.evaluate_pe(name, pe) {
         Some(ve) => {
             println!(
                 "{}: {} PEs, PE area {:.0} um2, total {:.0} um2, {:.1} fJ/op (PE core), fmax {:.2} GHz",
@@ -223,23 +251,24 @@ fn cmd_map(flags: &Flags) -> i32 {
 }
 
 fn cmd_sim(flags: &Flags) -> i32 {
-    let Ok(app) = require_app(flags) else { return 2 };
-    let cfg = dse_config(flags);
+    let session = session_for(flags);
+    let Ok(stages) = require_app(&session, flags) else { return 2 };
     let want = flags.get("variant").unwrap_or("pe2");
     let items = flags.get_usize("items", 64);
-    let ladder = dse::variant_ladder(&app, &cfg);
-    let Some((_, pe)) = ladder.into_iter().find(|(n, _)| n == want) else {
+    let ladder = stages.variants();
+    let Some((_, pe)) = ladder.iter().find(|(n, _)| n == want) else {
         eprintln!("no variant `{want}`");
         return 2;
     };
-    let mut graph = app.graph.clone();
+    let mut graph = stages.app().graph.clone();
     let fabric = cgra_dse::arch::Fabric::new(cgra_dse::arch::FabricConfig::default());
     let n_inputs = graph.input_ids().len();
     let mut rng = SplitMix64::new(42);
     let batch: Vec<Vec<i64>> = (0..items)
         .map(|_| (0..n_inputs).map(|_| rng.word() & 0xff).collect())
         .collect();
-    match cgra_dse::sim::run_and_check(&mut graph, &pe, &fabric, &batch, cfg.seed) {
+    let seed = session.config().seed;
+    match cgra_dse::sim::run_and_check(&mut graph, pe, &fabric, &batch, seed) {
         Ok(r) => {
             println!(
                 "simulated {} items: latency {} cycles, II={}, total {} cycles, {} word-hops — outputs MATCH Graph::eval",
@@ -260,35 +289,38 @@ fn cmd_sim(flags: &Flags) -> i32 {
 
 fn cmd_reproduce(args: &[String], flags: &Flags) -> i32 {
     let what = args.first().map(|s| s.as_str()).unwrap_or("all");
-    let cfg = dse_config(flags);
-    let save = flags.has("save");
-    let emit = |name: &str, text: String| {
-        println!("{text}");
-        if save {
-            match coordinator::save_report(name, &text) {
-                Ok(p) => println!("[saved to {}]", p.display()),
-                Err(e) => eprintln!("save failed: {e}"),
-            }
-        }
-    };
-    match what {
-        "fig8" => emit("fig8", coordinator::run_fig8(&cfg).0),
-        "fig9" => emit("fig9", coordinator::run_fig9(&cfg)),
-        "fig10" => emit("fig10", coordinator::run_fig10(&cfg).0),
-        "fig11" => emit("fig11", coordinator::run_fig11(&cfg).0),
-        "table1" => emit("table1", coordinator::run_table1(&cfg).0),
-        "io_sweep" => emit("io_sweep", coordinator::run_io_sweep(&cfg).0),
-        "all" => {
-            emit("fig8", coordinator::run_fig8(&cfg).0);
-            emit("fig9", coordinator::run_fig9(&cfg));
-            emit("fig10", coordinator::run_fig10(&cfg).0);
-            emit("fig11", coordinator::run_fig11(&cfg).0);
-            emit("table1", coordinator::run_table1(&cfg).0);
-            emit("io_sweep", coordinator::run_io_sweep(&cfg).0);
-        }
+    let targets: Vec<&str> = match what {
+        "all" => coordinator::REPRODUCE_TARGETS.to_vec(),
+        t if coordinator::REPRODUCE_TARGETS.contains(&t) => vec![t],
         other => {
             eprintln!("unknown target `{other}` (fig8|fig9|fig10|fig11|table1|all)");
             return 2;
+        }
+    };
+    let session = session_for(flags);
+    let report = coordinator::reproduce(&session, &targets);
+    let save = flags.has("save");
+    if flags.has("json") {
+        println!("{}", report.to_json());
+        // --save still persists the figure texts; notices go to stderr so
+        // stdout stays one clean JSON document.
+        if save {
+            for sec in &report.sections {
+                match coordinator::save_report(&sec.name, &sec.text) {
+                    Ok(p) => eprintln!("[saved to {}]", p.display()),
+                    Err(e) => eprintln!("save failed: {e}"),
+                }
+            }
+        }
+    } else {
+        for sec in &report.sections {
+            println!("{}", sec.text);
+            if save {
+                match coordinator::save_report(&sec.name, &sec.text) {
+                    Ok(p) => println!("[saved to {}]", p.display()),
+                    Err(e) => eprintln!("save failed: {e}"),
+                }
+            }
         }
     }
     0

@@ -1,0 +1,146 @@
+//! Hand-rolled JSON value + writer (serde is unavailable in the offline
+//! registry). Only what the machine-readable `SessionReport` output needs:
+//! construction helpers and a compact, RFC 8259-conformant renderer.
+
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// A string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// A number; non-finite values become `null` (JSON has no NaN/Inf).
+    pub fn num(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// An integer-valued number.
+    pub fn int(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// An optional number (`None` renders as `null`).
+    pub fn opt(v: Option<f64>) -> Json {
+        match v {
+            Some(x) => Json::num(x),
+            None => Json::Null,
+        }
+    }
+
+    /// An object from `(key, value)` pairs, preserving order.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                // Rust's f64 Display is shortest-roundtrip decimal without
+                // exponent notation — valid JSON as-is.
+                let _ = write!(out, "{v}");
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::num(1.5).render(), "1.5");
+        assert_eq!(Json::int(42).render(), "42");
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::opt(None).render(), "null");
+    }
+
+    #[test]
+    fn strings_escape() {
+        assert_eq!(Json::str("a\"b\\c\nd").render(), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(Json::str("\u{1}").render(), "\"\\u0001\"");
+        assert_eq!(Json::str("µm²").render(), "\"µm²\"");
+    }
+
+    #[test]
+    fn composites_render_in_order() {
+        let j = Json::obj(vec![
+            ("b", Json::Arr(vec![Json::int(1), Json::int(2)])),
+            ("a", Json::str("x")),
+        ]);
+        assert_eq!(j.render(), "{\"b\":[1,2],\"a\":\"x\"}");
+    }
+
+    #[test]
+    fn whole_floats_render_as_integers() {
+        assert_eq!(Json::num(2.0).render(), "2");
+    }
+}

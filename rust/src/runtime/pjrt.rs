@@ -1,0 +1,94 @@
+//! Real PJRT runtime (the `pjrt` feature): loads the AOT-compiled
+//! JAX/Pallas artifacts and executes them on the CPU PJRT client from the
+//! `xla` crate. Python never runs on this path.
+//!
+//! The artifacts are the *numeric oracle* for the CGRA: `validate` sweeps a
+//! real image through both the cycle-level CGRA simulator and the compiled
+//! XLA executable and compares every output element (see
+//! `rust/tests/oracle.rs` and the `validate` CLI command).
+//!
+//! NOTE: the `xla` crate is not in the offline registry; enabling `pjrt`
+//! requires adding it to [dependencies] by hand.
+
+use super::artifacts_dir;
+use crate::error::{Context, Result};
+use std::path::Path;
+
+/// A loaded, compiled XLA executable.
+pub struct Oracle {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime holding the CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<Oracle> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Oracle {
+            name: path
+                .file_name()
+                .map(|s| {
+                    s.to_string_lossy()
+                        .trim_end_matches(".hlo.txt")
+                        .to_string()
+                })
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Load `artifacts/<name>.hlo.txt`.
+    pub fn load_artifact(&self, name: &str) -> Result<Oracle> {
+        self.load(&artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl Oracle {
+    /// Execute with int32 tensor inputs `(data, dims)`; returns the flat
+    /// int32 elements of every tuple output, concatenated in order.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[usize])]) -> Result<Vec<i32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing oracle")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // Artifacts are lowered with return_tuple=True.
+        let elems = result.to_tuple().context("untupling result")?;
+        let mut out = Vec::new();
+        for e in elems {
+            out.extend(e.to_vec::<i32>().context("reading tuple element")?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,49 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off (the default
+//! in the offline environment — the `xla` crate is not in the registry).
+//!
+//! Mirrors the real runtime's API exactly so consumers compile unchanged;
+//! every entry point that would touch PJRT reports a descriptive error.
+
+use crate::bail;
+use crate::error::Result;
+use std::path::Path;
+
+const MSG: &str = "PJRT runtime unavailable: built without the `pjrt` feature \
+(the `xla` crate is not in the offline registry; see DESIGN.md §7)";
+
+/// A loaded, compiled XLA executable (stub: never constructible).
+pub struct Oracle {
+    pub name: String,
+}
+
+/// The PJRT runtime holding the CPU client (stub: construction fails).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        bail!("{MSG}")
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, _path: &Path) -> Result<Oracle> {
+        bail!("{MSG}")
+    }
+
+    /// Load `artifacts/<name>.hlo.txt`.
+    pub fn load_artifact(&self, _name: &str) -> Result<Oracle> {
+        bail!("{MSG}")
+    }
+}
+
+impl Oracle {
+    /// Execute with int32 tensor inputs `(data, dims)`.
+    pub fn run_i32(&self, _inputs: &[(&[i32], &[usize])]) -> Result<Vec<i32>> {
+        bail!("{MSG}")
+    }
+}

@@ -1,0 +1,638 @@
+//! `DseSession` — the staged, cached, parallel pipeline API for the whole
+//! toolchain (the supported entry point since 0.2.0).
+//!
+//! The paper's flow (Fig. 6) is a strict staged pipeline:
+//!
+//! ```text
+//!   mine ──> ranked ──> variants ──> evaluate (per variant, parallel) ──> sweep
+//!              │
+//!              └──────> domain_pe (cross-app merge, reuses every app's ranked stage)
+//! ```
+//!
+//! A session owns a set of applications, one [`DseConfig`], and a worker
+//! width. Each stage computes lazily exactly once per `(app, config)`
+//! fingerprint, caches its result behind interior mutability, and hands out
+//! cheap `Arc` clones. Independent variant evaluations fan out over the
+//! [`crate::runtime::parallel_map`] worker pool. Changing the config with
+//! [`DseSession::set_config`] drops every cached stage.
+//!
+//! ```no_run
+//! use cgra_dse::session::DseSession;
+//!
+//! let session = DseSession::builder().paper_suite().threads(8).build();
+//! let camera = session.app("camera").unwrap();
+//! let ranked = camera.ranked();          // mines + ranks once
+//! let ladder = camera.ladder();          // parallel variant evaluation
+//! let ladder2 = camera.ladder();         // cache hit — no recompute
+//! # let _ = (ranked, ladder, ladder2);
+//! ```
+//!
+//! Experiment renderers live in [`crate::coordinator`] (`fig8(&session)`,
+//! `table1(&session)`, …) and produce a machine-consumable
+//! [`SessionReport`] via `coordinator::reproduce`.
+
+pub mod report;
+
+pub use report::{Section, SessionReport};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::dse::{self, DseConfig, RankedPattern, SweepPoint, VariantEval};
+use crate::frontend::{App, AppSuite};
+use crate::mapper::Mapping;
+use crate::mining::MinedPattern;
+use crate::pe::PeSpec;
+use crate::runtime::{default_width, parallel_map};
+
+/// Pipeline stages with per-session compute counters (see
+/// [`DseSession::stage_computes`]; the memoization tests key off these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Frequent-subgraph mining (§III-A).
+    Mine,
+    /// MIS ranking of mined patterns (§III-B/C).
+    Rank,
+    /// Variant-ladder PE generation (§V): `base`, `pe1`, `pe2`…
+    Variants,
+    /// Map + area/energy/fmax evaluation of a full ladder.
+    Evaluate,
+    /// Synthesis-frequency sweep (Fig. 8).
+    Sweep,
+    /// Cross-application domain-PE merge (PE IP / PE ML).
+    Domain,
+}
+
+/// Stable fingerprint of a [`DseConfig`] — the cache key component that
+/// ties every stage result to the exact configuration that produced it.
+pub fn config_fingerprint(cfg: &DseConfig) -> u64 {
+    // FNV-1a over the config's scalar fields, with extra avalanche mixing.
+    let mut h: u64 = 0xcbf29ce484222325;
+    let fields = [
+        cfg.miner.min_support as u64,
+        cfg.miner.max_nodes as u64,
+        cfg.miner.max_patterns as u64,
+        cfg.miner.match_cfg.max_occurrences as u64,
+        cfg.miner.require_real_op as u64,
+        cfg.max_merged as u64,
+        cfg.max_pattern_inputs as u64,
+        cfg.tracks as u64,
+        cfg.seed,
+    ];
+    for v in fields {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+        h ^= h >> 29;
+    }
+    h
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum Key {
+    Mine(String),
+    Rank(String),
+    Variants(String),
+    Ladder(String),
+    /// Per-app sweep keyed by the requested frequencies (bit patterns).
+    Sweep(String, Vec<u64>),
+    /// Domain PE keyed by (name, per_app, member app names).
+    Domain(String, usize, Vec<String>),
+}
+
+#[derive(Clone)]
+enum Value {
+    Mine(Arc<Vec<MinedPattern>>),
+    Rank(Arc<Vec<RankedPattern>>),
+    Variants(Arc<Vec<(String, PeSpec)>>),
+    Ladder(Arc<Vec<VariantEval>>),
+    Sweep(Arc<Vec<(String, Vec<SweepPoint>)>>),
+    Domain(Arc<PeSpec>),
+}
+
+struct State {
+    cfg: DseConfig,
+    fingerprint: u64,
+    store: HashMap<Key, Value>,
+}
+
+#[derive(Default)]
+struct Counters {
+    mine: AtomicUsize,
+    rank: AtomicUsize,
+    variants: AtomicUsize,
+    evaluate: AtomicUsize,
+    sweep: AtomicUsize,
+    domain: AtomicUsize,
+}
+
+impl Counters {
+    fn of(&self, stage: Stage) -> &AtomicUsize {
+        match stage {
+            Stage::Mine => &self.mine,
+            Stage::Rank => &self.rank,
+            Stage::Variants => &self.variants,
+            Stage::Evaluate => &self.evaluate,
+            Stage::Sweep => &self.sweep,
+            Stage::Domain => &self.domain,
+        }
+    }
+}
+
+/// Builder for [`DseSession`].
+pub struct DseSessionBuilder {
+    apps: Vec<App>,
+    cfg: DseConfig,
+    threads: usize,
+}
+
+impl DseSessionBuilder {
+    /// Register one application.
+    pub fn app(mut self, app: App) -> Self {
+        self.apps.push(app);
+        self
+    }
+
+    /// Register several applications.
+    pub fn apps(mut self, apps: impl IntoIterator<Item = App>) -> Self {
+        self.apps.extend(apps);
+        self
+    }
+
+    /// Register the paper's full evaluation suite (4 imaging + 4 ML apps)
+    /// plus the Fig. 3 `conv1d` micro-app — what the CLI and the
+    /// `reproduce` experiments expect.
+    pub fn paper_suite(mut self) -> Self {
+        self.apps.extend(AppSuite::all());
+        if let Some(micro) = AppSuite::by_name("conv1d") {
+            self.apps.push(micro);
+        }
+        self
+    }
+
+    /// Set the DSE configuration (defaults to [`DseConfig::default`]).
+    pub fn config(mut self, cfg: DseConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Worker-pool width for parallel stages (defaults to the machine's
+    /// available parallelism; clamped to at least 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Build the session. Duplicate app names keep the first registration.
+    pub fn build(self) -> DseSession {
+        let mut apps: Vec<App> = Vec::new();
+        for app in self.apps {
+            if !apps.iter().any(|a| a.name == app.name) {
+                apps.push(app);
+            }
+        }
+        let fingerprint = config_fingerprint(&self.cfg);
+        DseSession {
+            apps,
+            threads: self.threads,
+            state: Mutex::new(State {
+                cfg: self.cfg,
+                fingerprint,
+                store: HashMap::new(),
+            }),
+            counters: Counters::default(),
+        }
+    }
+}
+
+impl Default for DseSessionBuilder {
+    fn default() -> Self {
+        DseSessionBuilder {
+            apps: Vec::new(),
+            cfg: DseConfig::default(),
+            threads: default_width(),
+        }
+    }
+}
+
+/// A staged, cached, parallel DSE pipeline over a fixed set of
+/// applications. See the module docs for the stage diagram.
+pub struct DseSession {
+    apps: Vec<App>,
+    threads: usize,
+    state: Mutex<State>,
+    counters: Counters,
+}
+
+impl DseSession {
+    pub fn builder() -> DseSessionBuilder {
+        DseSessionBuilder::default()
+    }
+
+    /// The registered applications, in registration order.
+    pub fn apps(&self) -> &[App] {
+        &self.apps
+    }
+
+    /// Worker-pool width used by parallel stages.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// A clone of the current configuration.
+    pub fn config(&self) -> DseConfig {
+        self.lock().cfg.clone()
+    }
+
+    /// The current config fingerprint (every cached stage is keyed to it).
+    pub fn fingerprint(&self) -> u64 {
+        self.lock().fingerprint
+    }
+
+    /// Swap the configuration. All cached stage results are dropped —
+    /// they were computed under the old fingerprint. A no-op when the new
+    /// config fingerprints identically.
+    pub fn set_config(&self, cfg: DseConfig) {
+        let fp = config_fingerprint(&cfg);
+        let mut st = self.lock();
+        if fp != st.fingerprint {
+            st.store.clear();
+        }
+        st.cfg = cfg;
+        st.fingerprint = fp;
+    }
+
+    /// Stage handle for a registered application.
+    pub fn app(&self, name: &str) -> Option<AppStages<'_>> {
+        self.apps
+            .iter()
+            .find(|a| a.name == name)
+            .map(|app| AppStages { session: self, app })
+    }
+
+    /// How many times a stage has actually computed (cache misses) over the
+    /// session's lifetime. Cache hits do not increment.
+    pub fn stage_computes(&self, stage: Stage) -> usize {
+        self.counters.of(stage).load(Ordering::Relaxed)
+    }
+
+    /// Cross-application domain PE (PE IP / PE ML of §V) over the named
+    /// member apps, reusing each member's cached `ranked` stage.
+    ///
+    /// Panics if a member app is not registered in the session.
+    pub fn domain_pe(&self, name: &str, per_app: usize, members: &[&str]) -> Arc<PeSpec> {
+        let key = Key::Domain(
+            name.to_string(),
+            per_app,
+            members.iter().map(|s| s.to_string()).collect(),
+        );
+        if let Some(Value::Domain(v)) = self.lookup(&key) {
+            return v;
+        }
+        let apps: Vec<&App> = members
+            .iter()
+            .map(|m| {
+                self.find_app(m)
+                    .unwrap_or_else(|| panic!("app `{m}` not registered in this session"))
+            })
+            .collect();
+        let fp = self.fingerprint();
+        // The per-member mine+rank stages are the expensive part of a
+        // domain merge — fan them out over the pool (cache hits return
+        // instantly; misses compute concurrently on distinct apps).
+        let ranked: Vec<Arc<Vec<RankedPattern>>> = parallel_map(
+            apps.iter()
+                .map(|&app| move || self.rank_cached(app))
+                .collect(),
+            self.threads,
+        );
+        if !self.fp_current(fp) {
+            return self.domain_pe(name, per_app, members);
+        }
+        self.counters.domain.fetch_add(1, Ordering::Relaxed);
+        let ranked_refs: Vec<&[RankedPattern]> =
+            ranked.iter().map(|r| r.as_slice()).collect();
+        let pe = Arc::new(dse::domain_pe_from_ranked(&apps, &ranked_refs, name, per_app));
+        match self.insert(key, Value::Domain(pe.clone()), fp) {
+            Some(Value::Domain(v)) => v,
+            _ => pe,
+        }
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn find_app(&self, name: &str) -> Option<&App> {
+        self.apps.iter().find(|a| a.name == name)
+    }
+
+    fn lookup(&self, key: &Key) -> Option<Value> {
+        self.lock().store.get(key).cloned()
+    }
+
+    /// Insert a freshly computed value unless the config changed while it
+    /// was computing (in which case it is stale and silently dropped) or a
+    /// concurrent compute won the race (in which case the canonical first
+    /// insertion is returned so every caller observes the same `Arc`).
+    fn insert(&self, key: Key, value: Value, fp: u64) -> Option<Value> {
+        let mut st = self.lock();
+        if st.fingerprint != fp {
+            return None;
+        }
+        Some(st.store.entry(key).or_insert(value).clone())
+    }
+
+    fn snapshot_cfg(&self) -> (DseConfig, u64) {
+        let st = self.lock();
+        (st.cfg.clone(), st.fingerprint)
+    }
+
+    /// True when the fingerprint is still current. Every cached stage
+    /// snapshots the config *before* resolving its upstream stages and
+    /// re-checks afterwards: a `set_config` racing the computation would
+    /// otherwise let a result mix stages from two configs and be cached
+    /// under the new fingerprint.
+    fn fp_current(&self, fp: u64) -> bool {
+        self.lock().fingerprint == fp
+    }
+
+    fn mine_cached(&self, app: &App) -> Arc<Vec<MinedPattern>> {
+        let key = Key::Mine(app.name.to_string());
+        if let Some(Value::Mine(v)) = self.lookup(&key) {
+            return v;
+        }
+        let (cfg, fp) = self.snapshot_cfg();
+        self.counters.mine.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(dse::mine_patterns(app, &cfg));
+        match self.insert(key, Value::Mine(v.clone()), fp) {
+            Some(Value::Mine(canon)) => canon,
+            _ => v,
+        }
+    }
+
+    fn rank_cached(&self, app: &App) -> Arc<Vec<RankedPattern>> {
+        loop {
+            let key = Key::Rank(app.name.to_string());
+            if let Some(Value::Rank(v)) = self.lookup(&key) {
+                return v;
+            }
+            let (cfg, fp) = self.snapshot_cfg();
+            let mined = self.mine_cached(app);
+            if !self.fp_current(fp) {
+                continue;
+            }
+            self.counters.rank.fetch_add(1, Ordering::Relaxed);
+            let v = Arc::new(dse::rank_mined(mined.as_ref().clone(), &cfg));
+            return match self.insert(key, Value::Rank(v.clone()), fp) {
+                Some(Value::Rank(canon)) => canon,
+                _ => v,
+            };
+        }
+    }
+
+    fn variants_cached(&self, app: &App) -> Arc<Vec<(String, PeSpec)>> {
+        loop {
+            let key = Key::Variants(app.name.to_string());
+            if let Some(Value::Variants(v)) = self.lookup(&key) {
+                return v;
+            }
+            let (cfg, fp) = self.snapshot_cfg();
+            let ranked = self.rank_cached(app);
+            if !self.fp_current(fp) {
+                continue;
+            }
+            self.counters.variants.fetch_add(1, Ordering::Relaxed);
+            let v = Arc::new(dse::ladder_from_ranked(app, &ranked, &cfg));
+            return match self.insert(key, Value::Variants(v.clone()), fp) {
+                Some(Value::Variants(canon)) => canon,
+                _ => v,
+            };
+        }
+    }
+
+    fn ladder_cached(&self, app: &App) -> Arc<Vec<VariantEval>> {
+        let key = Key::Ladder(app.name.to_string());
+        if let Some(Value::Ladder(v)) = self.lookup(&key) {
+            return v;
+        }
+        let (cfg, fp) = self.snapshot_cfg();
+        let variants = self.variants_cached(app);
+        if !self.fp_current(fp) {
+            return self.ladder_cached(app);
+        }
+        self.counters.evaluate.fetch_add(1, Ordering::Relaxed);
+        // Fan independent variant evaluations out over the worker pool;
+        // parallel_map preserves input order, so the result is identical
+        // to a sequential filter_map.
+        let jobs: Vec<_> = variants
+            .iter()
+            .map(|(name, pe)| {
+                let name = name.clone();
+                let pe = pe.clone();
+                let cfg = cfg.clone();
+                move || dse::evaluate_variant_impl(app, &name, &pe, &cfg)
+            })
+            .collect();
+        let evals: Vec<VariantEval> = parallel_map(jobs, self.threads)
+            .into_iter()
+            .flatten()
+            .collect();
+        let v = Arc::new(evals);
+        match self.insert(key, Value::Ladder(v.clone()), fp) {
+            Some(Value::Ladder(canon)) => canon,
+            _ => v,
+        }
+    }
+
+    fn sweep_cached(&self, app: &App, freqs: &[f64]) -> Arc<Vec<(String, Vec<SweepPoint>)>> {
+        let key = Key::Sweep(
+            app.name.to_string(),
+            freqs.iter().map(|f| f.to_bits()).collect(),
+        );
+        if let Some(Value::Sweep(v)) = self.lookup(&key) {
+            return v;
+        }
+        let (_cfg, fp) = self.snapshot_cfg();
+        let ladder = self.ladder_cached(app);
+        if !self.fp_current(fp) {
+            return self.sweep_cached(app, freqs);
+        }
+        self.counters.sweep.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(
+            ladder
+                .iter()
+                .map(|ve| (ve.variant.clone(), dse::frequency_sweep_impl(ve, freqs)))
+                .collect::<Vec<_>>(),
+        );
+        match self.insert(key, Value::Sweep(v.clone()), fp) {
+            Some(Value::Sweep(canon)) => canon,
+            _ => v,
+        }
+    }
+}
+
+/// Typed stage handles for one application inside a [`DseSession`].
+///
+/// Every method is memoized on the session: the first call computes (and
+/// computes its upstream stages), subsequent calls return the cached `Arc`.
+#[derive(Clone, Copy)]
+pub struct AppStages<'s> {
+    session: &'s DseSession,
+    app: &'s App,
+}
+
+impl<'s> AppStages<'s> {
+    /// The underlying application.
+    pub fn app(&self) -> &'s App {
+        self.app
+    }
+
+    /// Stage 1 — mined frequent subgraphs (§III-A).
+    pub fn mine(&self) -> Arc<Vec<MinedPattern>> {
+        self.session.mine_cached(self.app)
+    }
+
+    /// Stage 2 — MIS-ranked interesting subgraphs (§III-B/C).
+    pub fn ranked(&self) -> Arc<Vec<RankedPattern>> {
+        self.session.rank_cached(self.app)
+    }
+
+    /// Stage 3 — the §V variant ladder: `[("base", …), ("pe1", …), …]`.
+    pub fn variants(&self) -> Arc<Vec<(String, PeSpec)>> {
+        self.session.variants_cached(self.app)
+    }
+
+    /// Stage 4 — the fully evaluated ladder (parallel fan-out over the
+    /// session's worker pool). Unmappable variants are dropped, exactly
+    /// like the sequential pipeline.
+    pub fn ladder(&self) -> Arc<Vec<VariantEval>> {
+        self.session.ladder_cached(self.app)
+    }
+
+    /// Evaluation of one ladder variant by name (`"base"`, `"pe2"`, …);
+    /// `None` when the variant does not exist or cannot cover the app.
+    pub fn evaluated(&self, variant: &str) -> Option<VariantEval> {
+        self.ladder().iter().find(|v| v.variant == variant).cloned()
+    }
+
+    /// The (post-prune) mapping of one ladder variant.
+    pub fn mapped(&self, variant: &str) -> Option<Mapping> {
+        self.evaluated(variant).map(|ve| ve.mapping)
+    }
+
+    /// The paper's "PE Spec" pick for this app (see [`dse::pe_spec_of`]).
+    pub fn pe_spec(&self) -> Option<VariantEval> {
+        let ladder = self.ladder();
+        if ladder.is_empty() {
+            return None;
+        }
+        Some(dse::pe_spec_of(&ladder).clone())
+    }
+
+    /// Stage 5 — synthesis-frequency sweep of every ladder variant.
+    pub fn sweep(&self, freqs: &[f64]) -> Arc<Vec<(String, Vec<SweepPoint>)>> {
+        self.session.sweep_cached(self.app, freqs)
+    }
+
+    /// Evaluate this app on an *external* PE (e.g. a domain PE). Uncached:
+    /// arbitrary `PeSpec`s have no stable cache identity.
+    pub fn evaluate_pe(&self, variant: &str, pe: &PeSpec) -> Option<VariantEval> {
+        let cfg = self.session.config();
+        dse::evaluate_variant_impl(self.app, variant, pe, &cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::MinerConfig;
+
+    fn fast_cfg() -> DseConfig {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                max_patterns: 400,
+                ..Default::default()
+            },
+            max_merged: 2,
+            ..Default::default()
+        }
+    }
+
+    fn session() -> DseSession {
+        DseSession::builder()
+            .app(AppSuite::by_name("gaussian").unwrap())
+            .config(fast_cfg())
+            .threads(2)
+            .build()
+    }
+
+    #[test]
+    fn builder_dedups_by_name() {
+        let s = DseSession::builder()
+            .app(AppSuite::by_name("gaussian").unwrap())
+            .app(AppSuite::by_name("gaussian").unwrap())
+            .paper_suite()
+            .build();
+        let names: Vec<_> = s.apps().iter().map(|a| a.name).collect();
+        assert_eq!(names.iter().filter(|n| **n == "gaussian").count(), 1);
+        assert!(names.contains(&"conv1d"));
+    }
+
+    #[test]
+    fn unknown_app_yields_none() {
+        assert!(session().app("nope").is_none());
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_fields() {
+        let a = config_fingerprint(&fast_cfg());
+        assert_eq!(a, config_fingerprint(&fast_cfg()));
+        let mut other = fast_cfg();
+        other.tracks += 1;
+        assert_ne!(a, config_fingerprint(&other));
+        let mut other = fast_cfg();
+        other.miner.min_support += 1;
+        assert_ne!(a, config_fingerprint(&other));
+    }
+
+    #[test]
+    fn stages_compute_once() {
+        let s = session();
+        let app = s.app("gaussian").unwrap();
+        let r1 = app.ranked();
+        let r2 = app.ranked();
+        assert!(Arc::ptr_eq(&r1, &r2), "second call must be a cache hit");
+        assert_eq!(s.stage_computes(Stage::Mine), 1);
+        assert_eq!(s.stage_computes(Stage::Rank), 1);
+        let _ = app.ladder();
+        let _ = app.ladder();
+        assert_eq!(s.stage_computes(Stage::Variants), 1);
+        assert_eq!(s.stage_computes(Stage::Evaluate), 1);
+    }
+
+    #[test]
+    fn set_config_invalidates() {
+        let s = session();
+        let app = s.app("gaussian").unwrap();
+        let _ = app.ranked();
+        assert_eq!(s.stage_computes(Stage::Rank), 1);
+        let mut cfg = fast_cfg();
+        cfg.max_merged = 3;
+        s.set_config(cfg);
+        let _ = s.app("gaussian").unwrap().ranked();
+        assert_eq!(s.stage_computes(Stage::Rank), 2, "config change must recompute");
+        // Same-fingerprint set_config keeps the caches.
+        s.set_config({
+            let mut c = fast_cfg();
+            c.max_merged = 3;
+            c
+        });
+        let _ = s.app("gaussian").unwrap().ranked();
+        assert_eq!(s.stage_computes(Stage::Rank), 2);
+    }
+}

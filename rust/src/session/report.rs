@@ -1,0 +1,211 @@
+//! `SessionReport` — the machine-consumable result bundle of a session's
+//! experiment run, with hand-rolled JSON serialization (offline registry:
+//! no serde). Produced by [`crate::coordinator::reproduce`]; rendered by
+//! the CLI either as the byte-stable figure text or, with `--json`, as one
+//! JSON document.
+
+use crate::dse::{SweepPoint, VariantEval};
+use crate::report::json::Json;
+use crate::report::Table1Row;
+
+use super::DseSession;
+
+/// One experiment section: the rendered figure/table text plus its
+/// structured data.
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub name: String,
+    pub text: String,
+    pub data: Json,
+}
+
+/// Everything one `reproduce` run produced.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// Fingerprint of the config every section was computed under.
+    pub config_fingerprint: u64,
+    /// Worker width the session used.
+    pub threads: usize,
+    pub sections: Vec<Section>,
+}
+
+impl SessionReport {
+    pub fn new(session: &DseSession) -> Self {
+        SessionReport {
+            config_fingerprint: session.fingerprint(),
+            threads: session.threads(),
+            sections: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, text: String, data: Json) {
+        self.sections.push(Section {
+            name: name.to_string(),
+            text,
+            data,
+        });
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    /// The sections' rendered text, in order — exactly what the pre-session
+    /// CLI printed (one `println!` per section).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for s in &self.sections {
+            out.push_str(&s.text);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// One JSON document with both the structured data and the rendered
+    /// text of every section.
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("tool", Json::str("cgra-dse")),
+            (
+                "config_fingerprint",
+                Json::str(format!("{:016x}", self.config_fingerprint)),
+            ),
+            ("threads", Json::int(self.threads)),
+            (
+                "sections",
+                Json::Arr(
+                    self.sections
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(&s.name)),
+                                ("data", s.data.clone()),
+                                ("text", Json::str(&s.text)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .render()
+    }
+}
+
+/// JSON view of one variant evaluation (the Fig. 8/10/11 row datum).
+pub fn eval_json(ve: &VariantEval) -> Json {
+    Json::obj(vec![
+        ("variant", Json::str(&ve.variant)),
+        ("app", Json::str(&ve.app)),
+        ("n_pes", Json::int(ve.n_pes)),
+        ("pe_area_um2", Json::num(ve.eval.area)),
+        ("total_area_um2", Json::num(ve.total_area)),
+        ("pe_energy_per_op_fj", Json::num(ve.pe_energy_per_op)),
+        ("icn_energy_per_op_fj", Json::num(ve.icn_energy_per_op)),
+        ("fmax_ghz", Json::num(ve.fmax_ghz)),
+    ])
+}
+
+/// JSON view of a full per-app ladder.
+pub fn ladder_json(app: &str, evals: &[VariantEval]) -> Json {
+    Json::obj(vec![
+        ("app", Json::str(app)),
+        ("ladder", Json::Arr(evals.iter().map(eval_json).collect())),
+    ])
+}
+
+/// JSON view of the Fig. 8 frequency sweep.
+pub fn sweep_json(sweeps: &[(String, Vec<SweepPoint>)]) -> Json {
+    Json::Arr(
+        sweeps
+            .iter()
+            .map(|(variant, pts)| {
+                Json::obj(vec![
+                    ("variant", Json::str(variant)),
+                    (
+                        "points",
+                        Json::Arr(
+                            pts.iter()
+                                .map(|p| {
+                                    Json::obj(vec![
+                                        ("freq_ghz", Json::num(p.freq_ghz)),
+                                        ("energy_per_op_fj", Json::opt(p.energy_per_op)),
+                                        ("total_area_um2", Json::opt(p.total_area)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// JSON view of a Fig. 10/11 domain comparison.
+pub fn domain_json(rows: &[(String, VariantEval, VariantEval, VariantEval)]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|(app, base, dom, spec)| {
+                Json::obj(vec![
+                    ("app", Json::str(app)),
+                    ("base", eval_json(base)),
+                    ("domain", eval_json(dom)),
+                    ("spec", eval_json(spec)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// JSON view of Table I.
+pub fn table1_json(rows: &[Table1Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("design", Json::str(&r.design)),
+                    ("energy_per_op_fj", Json::num(r.energy_per_op_fj)),
+                    ("rel_to_simba", Json::num(r.rel_to_simba)),
+                    ("notes", Json::str(&r.notes)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// JSON view of the I/O × interconnect sweep.
+pub fn io_sweep_json(rows: &[(usize, f64, f64)]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|(tracks, base, spec)| {
+                Json::obj(vec![
+                    ("tracks", Json::int(*tracks)),
+                    ("base_icn_energy_per_op_fj", Json::num(*base)),
+                    ("spec_icn_energy_per_op_fj", Json::num(*spec)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::DseSession;
+
+    #[test]
+    fn report_render_and_json_shape() {
+        let session = DseSession::builder().build();
+        let mut rep = SessionReport::new(&session);
+        rep.push("fig8", "line one".to_string(), Json::Null);
+        rep.push("fig9", "line two".to_string(), Json::int(3));
+        assert_eq!(rep.render_text(), "line one\nline two\n");
+        let j = rep.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\":\"fig8\""));
+        assert!(j.contains("\"data\":3"));
+        assert!(j.contains("\"threads\":"));
+        assert!(rep.section("fig9").is_some());
+        assert!(rep.section("nope").is_none());
+    }
+}

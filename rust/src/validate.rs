@@ -8,13 +8,14 @@
 //! int32 oracle and the 16-bit CGRA datapath agree exactly (no overflow).
 
 use crate::arch::{Fabric, FabricConfig};
-use crate::dse::{variant_ladder, DseConfig};
+use crate::bail;
+use crate::dse::{variant_ladder_impl, DseConfig};
+use crate::error::{Context, Error, Result};
 use crate::frontend::AppSuite;
 use crate::ir::Word;
 use crate::mining::MinerConfig;
 use crate::runtime::Runtime;
 use crate::util::SplitMix64;
-use anyhow::{bail, Context, Result};
 
 /// Image height/width used for validation (must match aot.py).
 pub const IMG: usize = 8;
@@ -37,18 +38,19 @@ fn fast_cfg() -> DseConfig {
 /// Validate one app (`gaussian`, `conv` or `block`) over `items` random
 /// images. Returns a human-readable report or an error on any mismatch.
 pub fn validate_app(rt: &Runtime, name: &str, items: usize) -> Result<String> {
-    let oracle = rt.load_artifact(name)?;
+    // App lookup first, so bad names fail before any PJRT work.
     let app = AppSuite::by_name(name).context("unknown app")?;
+    let oracle = rt.load_artifact(name)?;
     let cfg = fast_cfg();
-    let ladder = variant_ladder(&app, &cfg);
+    let ladder = variant_ladder_impl(&app, &cfg);
     // Most specialized variant: exercises subgraph merging end to end.
     let (variant, pe) = ladder.last().context("empty ladder")?;
     let mut graph = app.graph.clone();
     let mapping = crate::mapper::map_app(&mut graph, pe)
-        .map_err(|e| anyhow::anyhow!("mapping failed: {e}"))?;
+        .map_err(|e| Error::new(format!("mapping failed: {e}")))?;
     let fabric = Fabric::new(FabricConfig::default());
     let (pl, rt_route) = crate::pnr::place_and_route(&mapping, &fabric, cfg.seed)
-        .map_err(|e| anyhow::anyhow!("pnr failed: {e}"))?;
+        .map_err(|e| Error::new(format!("pnr failed: {e}")))?;
 
     let mut rng = SplitMix64::new(0xDA7A + items as u64);
     let mut checked = 0usize;

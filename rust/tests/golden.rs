@@ -1,0 +1,237 @@
+//! Golden-output tests: `reproduce` through the cached, parallel
+//! `DseSession` pipeline must be byte-identical to the pre-0.2
+//! free-function pipeline (reconstructed here, sequentially, from the
+//! deprecated primitives). This pins the refactor's "same text, less
+//! work" contract.
+
+#![allow(deprecated)]
+
+use cgra_dse::coordinator;
+use cgra_dse::dse::{self, DseConfig, SweepPoint, VariantEval};
+use cgra_dse::frontend::{App, AppSuite};
+use cgra_dse::mining::MinerConfig;
+use cgra_dse::report;
+use cgra_dse::session::DseSession;
+
+fn cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 500,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+fn session() -> DseSession {
+    DseSession::builder().paper_suite().config(cfg()).build()
+}
+
+// ---- the pre-0.2 figure pipelines, reconstructed from the deprecated
+// ---- free functions exactly as rust/src/coordinator/mod.rs composed them
+
+fn legacy_fig8(cfg: &DseConfig) -> String {
+    let app = AppSuite::by_name("camera").unwrap();
+    let evals = dse::evaluate_ladder(&app, cfg);
+    let freqs = coordinator::fig8_freqs();
+    let sweeps: Vec<(String, Vec<SweepPoint>)> = evals
+        .iter()
+        .map(|v| (v.variant.clone(), dse::frequency_sweep(v, &freqs)))
+        .collect();
+    let mut text = report::render_fig8(&sweeps);
+    text.push('\n');
+    text.push_str(&report::render_ladder("camera", &evals));
+    text
+}
+
+fn legacy_fig9(cfg: &DseConfig) -> String {
+    let app = AppSuite::by_name("camera").unwrap();
+    let mut graph = app.graph.clone();
+    let ranked = dse::rank_subgraphs(&mut graph, cfg);
+    let mut s = String::from("Fig. 9 — subgraphs merged into camera PE variants\n");
+    for (k, r) in ranked.iter().take(cfg.max_merged).enumerate() {
+        s.push_str(&format!(
+            "subgraph {} (MIS={}, support={}, {} nodes): ops {:?}\n",
+            k + 1,
+            r.mis_size,
+            r.pattern.support,
+            r.pattern.graph.len(),
+            r.pattern
+                .graph
+                .nodes
+                .iter()
+                .map(|n| n.op.label())
+                .collect::<Vec<_>>()
+        ));
+    }
+    s.push('\n');
+    for (name, pe) in dse::variant_ladder(&app, cfg) {
+        s.push_str(&format!("--- {name} ---\n{}\n", pe.describe()));
+    }
+    s
+}
+
+fn legacy_domain_fig(
+    apps: &[App],
+    domain_name: &str,
+    per_app: usize,
+    cfg: &DseConfig,
+) -> String {
+    let dom_pe = dse::domain_pe(apps, domain_name, per_app, cfg);
+    let rows: Vec<(String, VariantEval, VariantEval, VariantEval)> = apps
+        .iter()
+        .map(|app| {
+            let ladder = dse::evaluate_ladder(app, cfg);
+            let base = ladder[0].clone();
+            let spec = dse::pe_spec_of(&ladder).clone();
+            let dom = dse::evaluate_variant(app, domain_name, &dom_pe, cfg)
+                .expect("domain PE must map every domain app");
+            (app.name.to_string(), base, dom, spec)
+        })
+        .collect();
+    let title = if domain_name.contains("ip") {
+        "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)"
+    } else {
+        "Fig. 11 — ML kernels: PE ML vs PE Spec (normalized to baseline)"
+    };
+    report::render_domain_fig(title, domain_name, &rows)
+}
+
+fn legacy_table1(cfg: &DseConfig) -> String {
+    let apps = AppSuite::ml();
+    let conv = apps.iter().find(|a| a.name == "conv").unwrap();
+    let pe_ml = dse::domain_pe(&apps, "pe_ml", 1, cfg);
+
+    let base_ladder = dse::evaluate_ladder(conv, cfg);
+    let base = &base_ladder[0];
+    let ml = dse::evaluate_variant(conv, "pe_ml", &pe_ml, cfg).expect("pe_ml maps conv");
+
+    let e_base = coordinator::cgra_energy_per_op(conv, base, cfg);
+    let e_ml = coordinator::cgra_energy_per_op(conv, &ml, cfg);
+    let e_simba = coordinator::simba_energy_per_op();
+
+    let rows = vec![
+        report::Table1Row {
+            design: "Generic CGRA (baseline PE)".into(),
+            energy_per_op_fj: e_base,
+            rel_to_simba: e_base / e_simba,
+            notes: "incl. MEM tiles".into(),
+        },
+        report::Table1Row {
+            design: "ML CGRA (PE ML)".into(),
+            energy_per_op_fj: e_ml,
+            rel_to_simba: e_ml / e_simba,
+            notes: format!("-{:.1}% vs baseline", 100.0 * (1.0 - e_ml / e_base)),
+        },
+        report::Table1Row {
+            design: "Simba-class ASIC".into(),
+            energy_per_op_fj: e_simba,
+            rel_to_simba: 1.0,
+            notes: "analytical model".into(),
+        },
+    ];
+    report::render_table1(&rows)
+}
+
+fn legacy_io_sweep(cfg: &DseConfig) -> String {
+    let app = AppSuite::by_name("camera").unwrap();
+    let ladder = dse::variant_ladder(&app, cfg);
+    let mut text = String::from(
+        "I/O x interconnect sweep (camera): per-op interconnect energy [fJ]\ntracks   baseline   specialized   ratio\n",
+    );
+    for tracks in [3usize, 5, 8, 12, 16] {
+        let tcfg = DseConfig { tracks, ..cfg.clone() };
+        let base =
+            dse::evaluate_variant(&app, "base", &ladder[0].1, &tcfg).expect("baseline maps");
+        let (vname, pe) = ladder.last().unwrap();
+        let spec = dse::evaluate_variant(&app, vname, pe, &tcfg).expect("spec maps");
+        text.push_str(&format!(
+            "{tracks:>6}   {:>8.1}   {:>11.1}   {:.2}x\n",
+            base.icn_energy_per_op,
+            spec.icn_energy_per_op,
+            base.icn_energy_per_op / spec.icn_energy_per_op
+        ));
+    }
+    text.push_str(
+        "\nspecialized PEs internalize constants into configuration registers (Fig. 2c) and fold multiple ops per activation, so each application op crosses the CB/SB fabric fewer times; the gap widens with track count because every crossing gets more expensive.\n",
+    );
+    text
+}
+
+// ---- the byte-identity assertions --------------------------------------
+
+#[test]
+fn fig8_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::fig8(&s);
+    assert_eq!(text, legacy_fig8(&cfg()));
+}
+
+#[test]
+fn fig9_is_byte_identical() {
+    let s = session();
+    assert_eq!(coordinator::fig9(&s), legacy_fig9(&cfg()));
+}
+
+#[test]
+fn fig10_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::fig10(&s);
+    assert_eq!(text, legacy_domain_fig(&AppSuite::imaging(), "pe_ip", 1, &cfg()));
+}
+
+#[test]
+fn fig11_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::fig11(&s);
+    assert_eq!(text, legacy_domain_fig(&AppSuite::ml(), "pe_ml", 1, &cfg()));
+}
+
+#[test]
+fn table1_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::table1(&s);
+    assert_eq!(text, legacy_table1(&cfg()));
+}
+
+#[test]
+fn io_sweep_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::io_sweep(&s);
+    assert_eq!(text, legacy_io_sweep(&cfg()));
+}
+
+#[test]
+fn reproduce_all_is_byte_identical() {
+    // The CLI's `reproduce all` path: one shared session, six sections,
+    // printed in canonical order — against the six legacy pipelines run
+    // back to back, each from scratch.
+    let s = session();
+    let rep = coordinator::reproduce(&s, &coordinator::REPRODUCE_TARGETS);
+    let mut legacy = String::new();
+    for text in [
+        legacy_fig8(&cfg()),
+        legacy_fig9(&cfg()),
+        legacy_domain_fig(&AppSuite::imaging(), "pe_ip", 1, &cfg()),
+        legacy_domain_fig(&AppSuite::ml(), "pe_ml", 1, &cfg()),
+        legacy_table1(&cfg()),
+        legacy_io_sweep(&cfg()),
+    ] {
+        legacy.push_str(&text);
+        legacy.push('\n');
+    }
+    assert_eq!(rep.render_text(), legacy);
+}
+
+#[test]
+fn deprecated_run_shims_delegate_to_the_session_pipeline() {
+    // The one-PR-cycle shims must produce the same bytes as the session
+    // renderers they wrap.
+    let (text, _) = coordinator::run_table1(&cfg());
+    let s = session();
+    let (new_text, _) = coordinator::table1(&s);
+    assert_eq!(text, new_text);
+}

@@ -2,10 +2,14 @@
 //! JAX/Pallas artifacts via PJRT. Skipped (with a notice) until
 //! `make artifacts` has produced `artifacts/*.hlo.txt`.
 
-use cgra_dse::runtime::{artifacts_available, Runtime};
+use cgra_dse::runtime::{artifacts_available, pjrt_enabled, Runtime};
 use cgra_dse::validate::validate_app;
 
 fn runtime_or_skip() -> Option<Runtime> {
+    if !pjrt_enabled() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     if !artifacts_available() {
         eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
         return None;

@@ -1,12 +1,14 @@
 //! Integration tests: the full toolchain (mine → merge → generate → map →
 //! place → route → bitstream → simulate) over the entire application
-//! suite, with functional differential checks at every step.
+//! suite via the `DseSession` API, with functional differential checks at
+//! every step.
 
 use cgra_dse::arch::{Fabric, FabricConfig};
-use cgra_dse::dse::{self, DseConfig};
+use cgra_dse::dse::{pe_spec_of, DseConfig};
 use cgra_dse::frontend::AppSuite;
 use cgra_dse::mining::MinerConfig;
 use cgra_dse::pe::baseline::baseline_pe;
+use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
 
 fn fast_cfg() -> DseConfig {
@@ -20,6 +22,13 @@ fn fast_cfg() -> DseConfig {
         max_merged: 2,
         ..Default::default()
     }
+}
+
+fn fast_session() -> DseSession {
+    DseSession::builder()
+        .paper_suite()
+        .config(fast_cfg())
+        .build()
 }
 
 fn big_fabric() -> Fabric {
@@ -50,10 +59,11 @@ fn every_app_runs_end_to_end_on_baseline() {
 
 #[test]
 fn every_app_runs_end_to_end_on_its_specialized_pe() {
-    let cfg = fast_cfg();
+    let session = fast_session();
     let fabric = big_fabric();
     for app in AppSuite::all() {
-        let ladder = dse::variant_ladder(&app, &cfg);
+        let stages = session.app(app.name).unwrap();
+        let ladder = stages.variants();
         let (vname, pe) = ladder.last().unwrap();
         let mut g = app.graph.clone();
         let n_inputs = g.input_ids().len();
@@ -68,12 +78,12 @@ fn every_app_runs_end_to_end_on_its_specialized_pe() {
 
 #[test]
 fn specialization_always_helps_energy_and_area() {
-    let cfg = fast_cfg();
+    let session = fast_session();
     for app in AppSuite::all() {
-        let evals = dse::evaluate_ladder(&app, &cfg);
+        let evals = session.app(app.name).unwrap().ladder();
         assert!(evals.len() >= 2, "{}: ladder too short", app.name);
         let base = &evals[0];
-        let spec = dse::pe_spec_of(&evals);
+        let spec = pe_spec_of(&evals);
         assert!(
             spec.pe_energy_per_op <= base.pe_energy_per_op,
             "{}: energy {} -> {}",
@@ -95,13 +105,13 @@ fn specialization_always_helps_energy_and_area() {
 fn headline_claims_shape() {
     // §VII: up to 9.1x area and 10.5x energy across the suite. Our cost
     // model lands in the same direction with >3x best-case on both axes.
-    let cfg = DseConfig::default();
+    let session = DseSession::builder().paper_suite().build();
     let mut best_energy = 0.0f64;
     let mut best_area = 0.0f64;
     for app in AppSuite::all() {
-        let evals = dse::evaluate_ladder(&app, &cfg);
+        let evals = session.app(app.name).unwrap().ladder();
         let base = &evals[0];
-        let spec = dse::pe_spec_of(&evals);
+        let spec = pe_spec_of(&evals);
         best_energy = best_energy.max(base.pe_energy_per_op / spec.pe_energy_per_op);
         best_area = best_area.max(base.total_area / spec.total_area);
     }
@@ -113,9 +123,8 @@ fn headline_claims_shape() {
 fn specialized_variants_hit_2ghz_class_fmax() {
     // §V-A: baseline 1.43 GHz; camera-specialized up to 2 GHz. Needs the
     // full mining depth so constant-coefficient multipliers emerge.
-    let cfg = DseConfig::default();
-    let app = AppSuite::by_name("camera").unwrap();
-    let evals = dse::evaluate_ladder(&app, &cfg);
+    let session = DseSession::builder().paper_suite().build();
+    let evals = session.app("camera").unwrap().ladder();
     let base = &evals[0];
     let best_fmax = evals[1..]
         .iter()
@@ -127,14 +136,14 @@ fn specialized_variants_hit_2ghz_class_fmax() {
 
 #[test]
 fn bitstream_roundtrip_is_stable_across_runs() {
-    let cfg = fast_cfg();
-    let app = AppSuite::by_name("gaussian").unwrap();
-    let ladder = dse::variant_ladder(&app, &cfg);
+    let session = fast_session();
+    let stages = session.app("gaussian").unwrap();
+    let ladder = stages.variants();
     let (_, pe) = ladder.last().unwrap();
     let fabric = big_fabric();
     let words: Vec<Vec<(u64, u64)>> = (0..2)
         .map(|_| {
-            let mut g = app.graph.clone();
+            let mut g = stages.app().graph.clone();
             let m = cgra_dse::mapper::map_app(&mut g, pe).unwrap();
             let (pl, rt) = cgra_dse::pnr::place_and_route(&m, &fabric, 9).unwrap();
             cgra_dse::bitstream::generate(pe, &m, &pl, &rt).serialize()
@@ -145,10 +154,9 @@ fn bitstream_roundtrip_is_stable_across_runs() {
 
 #[test]
 fn verilog_emits_for_all_camera_variants() {
-    let cfg = fast_cfg();
-    let app = AppSuite::by_name("camera").unwrap();
-    for (name, pe) in dse::variant_ladder(&app, &cfg) {
-        let v = cgra_dse::pe::verilog::emit_verilog(&pe);
+    let session = fast_session();
+    for (name, pe) in session.app("camera").unwrap().variants().iter() {
+        let v = cgra_dse::pe::verilog::emit_verilog(pe);
         assert!(v.contains("module"), "{name}");
         assert!(v.contains("endmodule"), "{name}");
         assert!(v.len() > 500, "{name}: suspiciously small RTL");
@@ -157,21 +165,21 @@ fn verilog_emits_for_all_camera_variants() {
 
 #[test]
 fn domain_pes_cover_their_whole_domain() {
-    let cfg = fast_cfg();
-    let ip = dse::domain_pe(&AppSuite::imaging(), "pe_ip", 1, &cfg);
-    for app in AppSuite::imaging() {
+    let session = fast_session();
+    let imaging: Vec<&str> = AppSuite::imaging().iter().map(|a| a.name).collect();
+    let ip = session.domain_pe("pe_ip", 1, &imaging);
+    for name in &imaging {
         assert!(
-            dse::evaluate_variant(&app, "pe_ip", &ip, &cfg).is_some(),
-            "{} unmappable on PE IP",
-            app.name
+            session.app(name).unwrap().evaluate_pe("pe_ip", &ip).is_some(),
+            "{name} unmappable on PE IP"
         );
     }
-    let ml = dse::domain_pe(&AppSuite::ml(), "pe_ml", 1, &cfg);
-    for app in AppSuite::ml() {
+    let ml_apps: Vec<&str> = AppSuite::ml().iter().map(|a| a.name).collect();
+    let ml = session.domain_pe("pe_ml", 1, &ml_apps);
+    for name in &ml_apps {
         assert!(
-            dse::evaluate_variant(&app, "pe_ml", &ml, &cfg).is_some(),
-            "{} unmappable on PE ML",
-            app.name
+            session.app(name).unwrap().evaluate_pe("pe_ml", &ml).is_some(),
+            "{name} unmappable on PE ML"
         );
     }
 }

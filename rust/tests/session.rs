@@ -1,0 +1,200 @@
+//! `DseSession` behavioral tests: stage memoization, cache invalidation on
+//! config change, cross-thread determinism of ladder evaluations, and the
+//! machine-readable report output.
+
+use cgra_dse::dse::{DseConfig, VariantEval};
+use cgra_dse::mining::MinerConfig;
+use cgra_dse::session::{config_fingerprint, DseSession, Stage};
+
+fn fast_cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 500,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+fn session(threads: usize) -> DseSession {
+    DseSession::builder()
+        .paper_suite()
+        .config(fast_cfg())
+        .threads(threads)
+        .build()
+}
+
+/// Bit-exact key of a ladder evaluation (f64s compared by bit pattern).
+fn ladder_key(evals: &[VariantEval]) -> Vec<(String, usize, u64, u64, u64, u64)> {
+    evals
+        .iter()
+        .map(|v| {
+            (
+                v.variant.clone(),
+                v.n_pes,
+                v.total_area.to_bits(),
+                v.pe_energy_per_op.to_bits(),
+                v.icn_energy_per_op.to_bits(),
+                v.fmax_ghz.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn second_call_does_no_recompute() {
+    let s = session(2);
+    let stages = s.app("gaussian").unwrap();
+
+    let first = stages.ladder();
+    assert_eq!(s.stage_computes(Stage::Mine), 1);
+    assert_eq!(s.stage_computes(Stage::Rank), 1);
+    assert_eq!(s.stage_computes(Stage::Variants), 1);
+    assert_eq!(s.stage_computes(Stage::Evaluate), 1);
+
+    // Re-request every stage: all cache hits, zero new computes.
+    let _ = stages.mine();
+    let _ = stages.ranked();
+    let _ = stages.variants();
+    let second = stages.ladder();
+    assert_eq!(s.stage_computes(Stage::Mine), 1);
+    assert_eq!(s.stage_computes(Stage::Rank), 1);
+    assert_eq!(s.stage_computes(Stage::Variants), 1);
+    assert_eq!(s.stage_computes(Stage::Evaluate), 1);
+
+    // And the cached Arc is the very same allocation.
+    assert!(std::sync::Arc::ptr_eq(&first, &second));
+}
+
+#[test]
+fn per_app_caches_are_independent() {
+    let s = session(2);
+    let _ = s.app("gaussian").unwrap().ranked();
+    let _ = s.app("conv").unwrap().ranked();
+    assert_eq!(s.stage_computes(Stage::Mine), 2);
+    assert_eq!(s.stage_computes(Stage::Rank), 2);
+}
+
+#[test]
+fn config_change_invalidates_caches() {
+    let s = session(2);
+    let before = s.app("gaussian").unwrap().ranked();
+    assert_eq!(s.stage_computes(Stage::Rank), 1);
+
+    // Deeper mining: different fingerprint, so every stage recomputes.
+    let mut deeper = fast_cfg();
+    deeper.miner.min_support = 2;
+    assert_ne!(config_fingerprint(&fast_cfg()), config_fingerprint(&deeper));
+    s.set_config(deeper);
+    let after = s.app("gaussian").unwrap().ranked();
+    assert_eq!(s.stage_computes(Stage::Mine), 2);
+    assert_eq!(s.stage_computes(Stage::Rank), 2);
+    // Lower support admits at least as many patterns.
+    assert!(after.len() >= before.len());
+
+    // Restoring the original config recomputes too (caches were dropped),
+    // and reproduces the original ranking exactly.
+    s.set_config(fast_cfg());
+    let again = s.app("gaussian").unwrap().ranked();
+    assert_eq!(s.stage_computes(Stage::Rank), 3);
+    assert_eq!(again.len(), before.len());
+    for (a, b) in again.iter().zip(before.iter()) {
+        assert_eq!(a.pattern.canon, b.pattern.canon);
+        assert_eq!(a.mis_size, b.mis_size);
+        assert_eq!(a.savings, b.savings);
+    }
+}
+
+#[test]
+fn ladder_results_are_thread_width_invariant() {
+    // The parallel fan-out must be bit-identical to single-threaded
+    // evaluation, for every app in the suite.
+    let seq = session(1);
+    let par = session(8);
+    for app in cgra_dse::frontend::AppSuite::all() {
+        let a = seq.app(app.name).unwrap().ladder();
+        let b = par.app(app.name).unwrap().ladder();
+        assert_eq!(
+            ladder_key(&a),
+            ladder_key(&b),
+            "{}: ladder differs across thread widths",
+            app.name
+        );
+    }
+}
+
+#[test]
+fn domain_pe_reuses_member_rankings() {
+    let s = session(2);
+    let names: Vec<&str> = cgra_dse::frontend::AppSuite::ml()
+        .iter()
+        .map(|a| a.name)
+        .collect();
+    // Warm the rankings.
+    for n in &names {
+        let _ = s.app(n).unwrap().ranked();
+    }
+    assert_eq!(s.stage_computes(Stage::Rank), names.len());
+    let pe1 = s.domain_pe("pe_ml", 1, &names);
+    // No member was re-ranked, and the domain merge itself ran once.
+    assert_eq!(s.stage_computes(Stage::Rank), names.len());
+    assert_eq!(s.stage_computes(Stage::Domain), 1);
+    let pe2 = s.domain_pe("pe_ml", 1, &names);
+    assert_eq!(s.stage_computes(Stage::Domain), 1);
+    assert!(std::sync::Arc::ptr_eq(&pe1, &pe2));
+}
+
+#[test]
+fn session_report_json_is_machine_consumable() {
+    let s = session(2);
+    let rep = cgra_dse::coordinator::reproduce(&s, &["table1", "io_sweep"]);
+    let json = rep.to_json();
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    for key in [
+        "\"tool\":\"cgra-dse\"",
+        "\"config_fingerprint\":",
+        "\"threads\":2",
+        "\"name\":\"table1\"",
+        "\"name\":\"io_sweep\"",
+        "\"energy_per_op_fj\":",
+        "\"tracks\":",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    // Balanced braces/brackets outside of strings — a cheap structural
+    // sanity check on the hand-rolled writer.
+    let mut depth = 0i64;
+    let mut in_str = false;
+    let mut escape = false;
+    for c in json.chars() {
+        if escape {
+            escape = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escape = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0);
+    }
+    assert_eq!(depth, 0, "unbalanced JSON");
+    assert!(!in_str, "unterminated string");
+}
+
+#[test]
+fn sweep_stage_is_cached_per_frequency_set() {
+    let s = session(2);
+    let stages = s.app("gaussian").unwrap();
+    let a = stages.sweep(&[0.8, 1.2]);
+    let b = stages.sweep(&[0.8, 1.2]);
+    assert_eq!(s.stage_computes(Stage::Sweep), 1);
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    let _ = stages.sweep(&[0.8, 1.2, 1.6]);
+    assert_eq!(s.stage_computes(Stage::Sweep), 2);
+}
