@@ -17,4 +17,5 @@ fn main() {
     let app = AppSuite::by_name("camera").unwrap();
     let t = bench_util::time_ms(3, || run_ablation(&app, &cfg).len());
     bench_util::report("ablation_camera", t);
+    bench_util::write_json("ablation");
 }

@@ -1,11 +1,29 @@
 //! Shared mini-harness for the figure benches (criterion is unavailable in
 //! this offline environment; this provides the same measure-N-times /
 //! report-median discipline).
+//!
+//! Machine-readable output: run with `--json` or `BENCH_JSON=1` and call
+//! [`write_json`] at the end of a bench main to emit `BENCH_<name>.json`
+//! with per-case min/mean/median/max milliseconds — the perf trajectory is
+//! tracked across PRs from these files (see EXPERIMENTS.md §Perf and the
+//! CI `pipeline_perf` smoke step).
 
+#![allow(dead_code)]
+
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
-/// Time `f` over `iters` runs; returns (median_ms, min_ms, max_ms).
-pub fn time_ms<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64, f64) {
+/// Per-case timing summary over all iterations, in milliseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub mean_ms: f64,
+}
+
+/// Time `f` over `iters` runs.
+pub fn time_ms<T>(iters: usize, mut f: impl FnMut() -> T) -> Stats {
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();
@@ -13,14 +31,63 @@ pub fn time_ms<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64, f64) {
         samples.push(t.elapsed().as_secs_f64() * 1e3);
         std::hint::black_box(out);
     }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (
-        samples[samples.len() / 2],
-        samples[0],
-        samples[samples.len() - 1],
-    )
+    Stats {
+        median_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+        max_ms: samples[samples.len() - 1],
+        mean_ms: mean,
+    }
 }
 
-pub fn report(name: &str, (med, min, max): (f64, f64, f64)) {
-    println!("bench {name:<28} median {med:>9.2} ms  (min {min:.2}, max {max:.2})");
+fn log() -> &'static Mutex<Vec<(String, Stats)>> {
+    static LOG: OnceLock<Mutex<Vec<(String, Stats)>>> = OnceLock::new();
+    LOG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Print one case line (same format as always) and record it for
+/// [`write_json`].
+pub fn report(name: &str, s: Stats) {
+    println!(
+        "bench {name:<28} median {:>9.2} ms  (min {:.2}, max {:.2})",
+        s.median_ms, s.min_ms, s.max_ms
+    );
+    log().lock().unwrap().push((name.to_string(), s));
+}
+
+/// True when machine-readable output was requested (`--json` arg or
+/// `BENCH_JSON=1`).
+pub fn json_enabled() -> bool {
+    std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--json")
+}
+
+/// Write every reported case to `BENCH_<bench>.json` when JSON output is
+/// enabled. Call once at the end of a bench main.
+pub fn write_json(bench: &str) {
+    if !json_enabled() {
+        return;
+    }
+    let entries = log().lock().unwrap();
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    s.push_str("  \"cases\": [\n");
+    for (i, (name, st)) in entries.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"min_ms\": {}, \"mean_ms\": {}, \"median_ms\": {}, \"max_ms\": {}}}{}\n",
+            st.min_ms,
+            st.mean_ms,
+            st.median_ms,
+            st.max_ms,
+            if i + 1 == entries.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let path = format!("BENCH_{bench}.json");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

@@ -57,4 +57,5 @@ fn main() {
         fig10(&s)
     });
     bench_util::report("fig10_image_domain", t);
+    bench_util::write_json("fig10");
 }

@@ -50,4 +50,5 @@ fn main() {
         fig11(&s)
     });
     bench_util::report("fig11_ml_domain", t);
+    bench_util::write_json("fig11");
 }

@@ -66,4 +66,5 @@ fn main() {
         fig8(&s)
     });
     bench_util::report("fig8_camera_sweep", t);
+    bench_util::write_json("fig8");
 }

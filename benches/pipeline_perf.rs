@@ -87,7 +87,7 @@ fn main() {
     bench_util::report("simulate_1k_pixels", t);
     println!(
         "simulator throughput: {:.1}k pixels/s",
-        1000.0 / t.0 /* ms */
+        1000.0 / t.median_ms
     );
 
     // --- End-to-end DSE (the number a user of the tool experiences; cold
@@ -120,12 +120,17 @@ fn main() {
     bench_util::report("reproduce_all_cold", t_cold);
     println!(
         "stage-caching speedup on `reproduce all`: {:.2}x (cold {:.0} ms -> shared {:.0} ms)",
-        t_cold.0 / t_shared.0,
-        t_cold.0,
-        t_shared.0
+        t_cold.median_ms / t_shared.median_ms,
+        t_cold.median_ms,
+        t_shared.median_ms
     );
+    // Machine-readable results (BENCH_JSON=1 or --json): BENCH_pipeline.json.
+    // Written before the regression assert so CI still gets the artifact
+    // when the assert trips.
+    bench_util::write_json("pipeline");
+
     assert!(
-        t_shared.0 < t_cold.0,
+        t_shared.median_ms < t_cold.median_ms,
         "shared-session reproduce must beat cold-per-figure reproduce"
     );
 }

@@ -43,4 +43,5 @@ fn main() {
     // so repeat runs measure the render + domain-eval path only.
     let t = bench_util::time_ms(3, || table1(&session));
     bench_util::report("table1_simba", t);
+    bench_util::write_json("table1");
 }

@@ -13,7 +13,7 @@
 pub mod ablation;
 
 use crate::frontend::App;
-use crate::ir::{canonical_code, Graph, NodeId, Op};
+use crate::ir::{canon_key, CanonKey, Graph, NodeId, Op};
 use crate::mapper::{map_app, Mapping};
 use crate::mining::{mine, MinedPattern, MinerConfig};
 use crate::mis;
@@ -67,15 +67,20 @@ pub(crate) fn mine_patterns(app: &App, cfg: &DseConfig) -> Vec<MinedPattern> {
     mine(&mut graph, &cfg.miner)
 }
 
-/// Stage 2 — filter + MIS-rank already-mined patterns (§III-B/C).
-pub(crate) fn rank_mined(mined: Vec<MinedPattern>, cfg: &DseConfig) -> Vec<RankedPattern> {
+/// Stage 2 — filter + MIS-rank already-mined patterns (§III-B/C). Takes a
+/// slice so callers sharing a cached mine stage clone only the (few)
+/// patterns that survive the filters.
+pub(crate) fn rank_mined(mined: &[MinedPattern], cfg: &DseConfig) -> Vec<RankedPattern> {
     let mut ranked: Vec<RankedPattern> = mined
-        .into_iter()
+        .iter()
         .filter(|p| p.graph.len() >= 2)
         .filter(|p| has_real_op(&p.graph))
         .filter(|p| external_inputs_of(&p.graph) <= cfg.max_pattern_inputs)
-        .map(|pattern| {
+        .filter_map(|pattern| {
             let mis_size = mis::mis_size(&pattern.distinct);
+            if mis_size < 2 {
+                return None;
+            }
             let real_ops = pattern
                 .graph
                 .nodes
@@ -83,9 +88,8 @@ pub(crate) fn rank_mined(mined: Vec<MinedPattern>, cfg: &DseConfig) -> Vec<Ranke
                 .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
                 .count();
             let savings = mis_size * real_ops.saturating_sub(1);
-            RankedPattern { pattern, mis_size, savings }
+            Some(RankedPattern { pattern: pattern.clone(), mis_size, savings })
         })
-        .filter(|r| r.mis_size >= 2)
         .collect();
     // Paper §III-C ranks by MIS size so overlap-heavy subgraphs come last;
     // we refine the primary key to activation savings (MIS x (ops-1)) —
@@ -102,7 +106,7 @@ pub(crate) fn rank_mined(mined: Vec<MinedPattern>, cfg: &DseConfig) -> Vec<Ranke
 }
 
 pub(crate) fn rank_subgraphs_impl(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
-    rank_mined(mine(app, &cfg.miner), cfg)
+    rank_mined(&mine(app, &cfg.miner), cfg)
 }
 
 /// Mine + MIS-rank the interesting subgraphs of an application (§III).
@@ -274,7 +278,7 @@ pub(crate) fn domain_pe_from_ranked(
     per_app: usize,
 ) -> PeSpec {
     let mut subs: Vec<Graph> = Vec::new();
-    let mut seen_canon: Vec<String> = Vec::new();
+    let mut seen_canon: Vec<CanonKey> = Vec::new();
     for app_ranked in ranked {
         for r in select_complementary(app_ranked, per_app) {
             if seen_canon.contains(&r.pattern.canon) {
@@ -285,10 +289,10 @@ pub(crate) fn domain_pe_from_ranked(
         }
     }
     // Union of single ops across the domain.
-    let mut ops_seen: Vec<String> = Vec::new();
+    let mut ops_seen: Vec<CanonKey> = Vec::new();
     for app in apps {
         for sub in single_op_subs(&app.graph) {
-            let c = canonical_code(&sub);
+            let c = canon_key(&sub);
             if !ops_seen.contains(&c) {
                 ops_seen.push(c);
                 subs.push(sub);

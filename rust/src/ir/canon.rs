@@ -1,23 +1,221 @@
 //! Canonical codes for small pattern graphs.
 //!
-//! The miner deduplicates candidate patterns by a canonical string: the
+//! The miner deduplicates candidate patterns by a canonical form: the
 //! lexicographically minimal encoding over all node orderings that respect
 //! label classes. Patterns are small (the miner caps them well under 10
 //! nodes), so permutation search with label-class pruning is exact and fast.
+//!
+//! The canonical form is a [`CanonKey`]: the code's bytes packed big-endian
+//! into `u64` words, compared word-wise. Packing preserves the code's byte
+//! order exactly (no code byte is NUL, so zero padding acts like the
+//! shorter-string-is-prefix rule), which keeps every downstream
+//! canon-ordered sort byte-identical to the old `String` codes while the
+//! hot permutation search runs allocation-free: the constant label prefix
+//! is rendered once, each permutation renders only its edge section into a
+//! reused buffer, and a permutation is abandoned as soon as a rendered
+//! prefix exceeds the incumbent minimum.
 
 use super::graph::Graph;
+use super::op::LabelId;
+use std::fmt;
 
-/// Encode a graph under a fixed node permutation `perm` (perm[new] = old).
-fn encode(g: &Graph, perm: &[usize]) -> String {
-    let mut inv = vec![0usize; perm.len()];
-    for (new, &old) in perm.iter().enumerate() {
-        inv[old] = new;
+/// Packed canonical code. `Ord`/`Eq` are exactly the byte-lexicographic
+/// order of the rendered string form (see module docs), so it can serve
+/// both as a dedup key and as a deterministic sort tie-break.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CanonKey(Box<[u64]>);
+
+impl CanonKey {
+    fn from_bytes(bytes: &[u8]) -> CanonKey {
+        let mut words = Vec::with_capacity((bytes.len() + 7) / 8);
+        for chunk in bytes.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            words.push(u64::from_be_bytes(w));
+        }
+        CanonKey(words.into_boxed_slice())
     }
-    let mut parts: Vec<String> = Vec::with_capacity(g.len() + g.edges.len());
-    for &old in perm {
-        parts.push(g.nodes[old].op.label().to_string());
+
+    /// Render the human-readable string form (identical to the pre-0.3
+    /// `String` canonical codes), for reports and debugging.
+    pub fn render(&self) -> String {
+        let mut bytes = Vec::with_capacity(self.0.len() * 8);
+        for w in self.0.iter() {
+            bytes.extend_from_slice(&w.to_be_bytes());
+        }
+        while bytes.last() == Some(&0) {
+            bytes.pop();
+        }
+        String::from_utf8(bytes).expect("canon codes are ASCII")
     }
-    let mut edges: Vec<(usize, usize, u8)> = g
+}
+
+impl fmt::Display for CanonKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+impl fmt::Debug for CanonKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CanonKey({})", self.render())
+    }
+}
+
+/// Append `v` in decimal ASCII (what `format!("{v}")` would produce).
+fn push_decimal(buf: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    buf.extend_from_slice(&tmp[i..]);
+}
+
+/// Permutation-search scratch state, reused across every candidate.
+struct Search {
+    /// Pattern edges with ports pre-erased for commutative consumers.
+    edges: Vec<(usize, usize, u8)>,
+    /// `inv[old] = new` position under the current permutation.
+    inv: Vec<u32>,
+    /// Edge tuples mapped through `inv`, sorted per candidate.
+    mapped: Vec<(u32, u32, u8)>,
+    /// Rendered edge-section bytes of the current candidate.
+    buf: Vec<u8>,
+    /// Minimal edge-section bytes seen so far.
+    best: Option<Vec<u8>>,
+}
+
+impl Search {
+    /// Encode the edge section under `perm` and fold it into `best`.
+    /// Rendering compares incrementally against the incumbent and abandons
+    /// the permutation as soon as a prefix is strictly greater.
+    fn consider(&mut self, perm: &[usize]) {
+        for (new, &old) in perm.iter().enumerate() {
+            self.inv[old] = new as u32;
+        }
+        self.mapped.clear();
+        for &(s, d, p) in &self.edges {
+            self.mapped.push((self.inv[s], self.inv[d], p));
+        }
+        self.mapped.sort_unstable();
+        self.buf.clear();
+        // While `decided_less` is false the candidate equals the incumbent
+        // on every byte rendered so far.
+        let mut decided_less = false;
+        for i in 0..self.mapped.len() {
+            let (s, d, p) = self.mapped[i];
+            let from = self.buf.len();
+            self.buf.push(b'|');
+            push_decimal(&mut self.buf, s as u64);
+            self.buf.push(b'>');
+            push_decimal(&mut self.buf, d as u64);
+            self.buf.push(b'@');
+            push_decimal(&mut self.buf, p as u64);
+            if !decided_less {
+                if let Some(best) = &self.best {
+                    for k in from..self.buf.len() {
+                        if k >= best.len() {
+                            // Incumbent is a strict prefix => candidate is
+                            // greater: abandon this permutation.
+                            return;
+                        }
+                        match self.buf[k].cmp(&best[k]) {
+                            std::cmp::Ordering::Less => {
+                                decided_less = true;
+                                break;
+                            }
+                            std::cmp::Ordering::Greater => return,
+                            std::cmp::Ordering::Equal => {}
+                        }
+                    }
+                }
+            }
+        }
+        let replace = match &self.best {
+            None => true,
+            // Equal-prefix-but-shorter is smaller too.
+            Some(best) => decided_less || self.buf.len() < best.len(),
+        };
+        if replace {
+            self.best = Some(self.buf.clone());
+        }
+    }
+}
+
+fn permute_classes(
+    search: &mut Search,
+    perm: &mut Vec<usize>,
+    classes: &[(usize, usize)],
+    ci: usize,
+) {
+    if ci == classes.len() {
+        search.consider(perm);
+        return;
+    }
+    let (lo, hi) = classes[ci];
+    permute_range(search, perm, lo, hi, classes, ci);
+}
+
+fn permute_range(
+    search: &mut Search,
+    perm: &mut Vec<usize>,
+    lo: usize,
+    hi: usize,
+    classes: &[(usize, usize)],
+    ci: usize,
+) {
+    if hi - lo <= 1 {
+        permute_classes(search, perm, classes, ci + 1);
+        return;
+    }
+    for i in lo..hi {
+        perm.swap(lo, i);
+        permute_range(search, perm, lo + 1, hi, classes, ci);
+        perm.swap(lo, i);
+    }
+}
+
+/// Canonical key: minimum encoding over all label-respecting permutations.
+pub fn canon_key(g: &Graph) -> CanonKey {
+    let n = g.len();
+    if n == 0 {
+        return CanonKey(Vec::new().into_boxed_slice());
+    }
+    // Only permutations that keep labels in sorted order can be minimal, so
+    // sort nodes by label and permute within label classes. LabelId order
+    // equals label-string order (see `op::LABELS`), so this matches the
+    // string sort byte for byte.
+    let lids: Vec<LabelId> = g.nodes.iter().map(|nd| nd.op.label_id()).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| lids[i]);
+
+    // Label class boundaries.
+    let mut classes: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0;
+    for i in 1..=n {
+        if i == n || lids[order[i]] != lids[order[start]] {
+            classes.push((start, i));
+            start = i;
+        }
+    }
+
+    // The label section is identical for every candidate permutation —
+    // render it exactly once.
+    let mut prefix: Vec<u8> = Vec::new();
+    for (k, &old) in order.iter().enumerate() {
+        if k > 0 {
+            prefix.push(b'|');
+        }
+        prefix.extend_from_slice(g.nodes[old].op.label().as_bytes());
+    }
+
+    let edges: Vec<(usize, usize, u8)> = g
         .edges
         .iter()
         .map(|e| {
@@ -27,80 +225,31 @@ fn encode(g: &Graph, perm: &[usize]) -> String {
             } else {
                 e.dst_port
             };
-            (inv[e.src.index()], inv[e.dst.index()], port)
+            (e.src.index(), e.dst.index(), port)
         })
         .collect();
-    edges.sort_unstable();
-    for (s, d, p) in edges {
-        parts.push(format!("{s}>{d}@{p}"));
-    }
-    parts.join("|")
+
+    let n_edges = edges.len();
+    let mut search = Search {
+        edges,
+        inv: vec![0u32; n],
+        mapped: Vec::with_capacity(n_edges),
+        buf: Vec::new(),
+        best: None,
+    };
+    let mut perm = order;
+    permute_classes(&mut search, &mut perm, &classes, 0);
+
+    let mut bytes = prefix;
+    bytes.extend_from_slice(&search.best.unwrap_or_default());
+    CanonKey::from_bytes(&bytes)
 }
 
-/// Canonical code: minimum encoding over all label-respecting permutations.
+/// Canonical code in string form — a thin rendering shim over [`canon_key`]
+/// kept for reports and external comparisons. Byte-identical to the
+/// pre-0.3 `String` canonical codes.
 pub fn canonical_code(g: &Graph) -> String {
-    let n = g.len();
-    if n == 0 {
-        return String::new();
-    }
-    // Only permutations that keep labels in sorted order can be minimal, so
-    // sort nodes by label and permute within label classes.
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by_key(|&i| g.nodes[i].op.label());
-
-    // Label class boundaries.
-    let mut classes: Vec<(usize, usize)> = Vec::new();
-    let mut start = 0;
-    for i in 1..=n {
-        if i == n || g.nodes[order[i]].op.label() != g.nodes[order[start]].op.label() {
-            classes.push((start, i));
-            start = i;
-        }
-    }
-
-    let mut best: Option<String> = None;
-    let mut perm = order.clone();
-    permute_classes(g, &mut perm, &classes, 0, &mut best);
-    best.unwrap()
-}
-
-fn permute_classes(
-    g: &Graph,
-    perm: &mut Vec<usize>,
-    classes: &[(usize, usize)],
-    ci: usize,
-    best: &mut Option<String>,
-) {
-    if ci == classes.len() {
-        let code = encode(g, perm);
-        if best.as_ref().map_or(true, |b| code < *b) {
-            *best = Some(code);
-        }
-        return;
-    }
-    let (lo, hi) = classes[ci];
-    heap_permute(g, perm, lo, hi, classes, ci, best);
-}
-
-fn heap_permute(
-    g: &Graph,
-    perm: &mut Vec<usize>,
-    lo: usize,
-    hi: usize,
-    classes: &[(usize, usize)],
-    ci: usize,
-    best: &mut Option<String>,
-) {
-    // Recursive permutation of perm[lo..hi].
-    if hi - lo <= 1 {
-        permute_classes(g, perm, classes, ci + 1, best);
-        return;
-    }
-    for i in lo..hi {
-        perm.swap(lo, i);
-        heap_permute(g, perm, lo + 1, hi, classes, ci, best);
-        perm.swap(lo, i);
-    }
+    canon_key(g).render()
 }
 
 #[cfg(test)]
@@ -126,6 +275,7 @@ mod tests {
     fn isomorphic_graphs_share_code() {
         // add is commutative so port differences are erased too.
         assert_eq!(canonical_code(&mul_add(false)), canonical_code(&mul_add(true)));
+        assert_eq!(canon_key(&mul_add(false)), canon_key(&mul_add(true)));
     }
 
     #[test]
@@ -135,6 +285,7 @@ mod tests {
         let mut g2 = Graph::new("b");
         g2.add_op(Op::Mul);
         assert_ne!(canonical_code(&g1), canonical_code(&g2));
+        assert_ne!(canon_key(&g1), canon_key(&g2));
     }
 
     #[test]
@@ -181,5 +332,65 @@ mod tests {
         g2.connect(b1, b2, 0);
 
         assert_eq!(canonical_code(&g1), canonical_code(&g2));
+        assert_eq!(canon_key(&g1), canon_key(&g2));
+    }
+
+    #[test]
+    fn key_order_matches_string_order() {
+        // CanonKey's packed-word Ord must equal the rendered string Ord —
+        // downstream sorts tie-break on it.
+        let mut graphs: Vec<Graph> = Vec::new();
+        graphs.push(mul_add(false));
+        graphs.push({
+            let mut g = Graph::new("s");
+            let a = g.add_op(Op::Sub);
+            let b = g.add_op(Op::Sub);
+            g.connect(a, b, 1);
+            g
+        });
+        graphs.push({
+            let mut g = Graph::new("one");
+            g.add_op(Op::Abs);
+            g
+        });
+        graphs.push({
+            let mut g = Graph::new("chain");
+            let m = g.add_op(Op::Mul);
+            let a = g.add_op(Op::Add);
+            let x = g.add_op(Op::Xor);
+            g.connect(m, a, 0);
+            g.connect(a, x, 1);
+            g
+        });
+        let keys: Vec<CanonKey> = graphs.iter().map(canon_key).collect();
+        let strs: Vec<String> = keys.iter().map(|k| k.render()).collect();
+        for i in 0..keys.len() {
+            for j in 0..keys.len() {
+                assert_eq!(
+                    keys[i].cmp(&keys[j]),
+                    strs[i].cmp(&strs[j]),
+                    "{} vs {}",
+                    strs[i],
+                    strs[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn render_roundtrip_and_empty() {
+        let g = Graph::new("empty");
+        assert_eq!(canonical_code(&g), "");
+        let k = canon_key(&mul_add(false));
+        assert_eq!(CanonKey::from_bytes(k.render().as_bytes()), k);
+    }
+
+    #[test]
+    fn decimal_rendering_matches_format() {
+        for v in [0u64, 1, 9, 10, 99, 255, 1000] {
+            let mut buf = Vec::new();
+            push_decimal(&mut buf, v);
+            assert_eq!(String::from_utf8(buf).unwrap(), format!("{v}"));
+        }
     }
 }

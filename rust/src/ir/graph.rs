@@ -4,7 +4,7 @@
 //! output to a consumer input *port*. Graphs are append-only: passes build
 //! new graphs rather than mutating.
 
-use super::op::{Op, Word};
+use super::op::{LabelId, Op, Word};
 use std::collections::HashMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -41,14 +41,24 @@ pub struct Edge {
 }
 
 /// A word-level dataflow graph.
+///
+/// `freeze` builds a CSR (compressed sparse row) adjacency — flat in/out
+/// edge arrays plus offset tables — so the matcher and miner walk
+/// contiguous slices instead of chasing `Vec<Vec<_>>`.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
     pub name: String,
     pub nodes: Vec<Node>,
     pub edges: Vec<Edge>,
-    /// `in_edges[n][p]` = producer feeding port `p` of node `n`.
-    in_cache: Vec<Vec<Option<NodeId>>>,
-    out_cache: Vec<Vec<(NodeId, u8)>>,
+    /// Flat in-edge slots: node `n`'s producers live at
+    /// `in_flat[in_off[n]..in_off[n+1]]`, one slot per input port.
+    in_flat: Vec<Option<NodeId>>,
+    in_off: Vec<u32>,
+    /// Flat out-edge list `(consumer, consumer_port)`, grouped by source.
+    out_flat: Vec<(NodeId, u8)>,
+    out_off: Vec<u32>,
+    /// Interned label per node (parallel to `nodes`).
+    label_ids: Vec<LabelId>,
     cache_valid: bool,
 }
 
@@ -114,22 +124,53 @@ impl Graph {
 
     fn build_cache(&mut self) {
         let n = self.nodes.len();
-        let mut ins: Vec<Vec<Option<NodeId>>> = self
-            .nodes
-            .iter()
-            .map(|nd| vec![None; nd.op.arity()])
-            .collect();
-        let mut outs: Vec<Vec<(NodeId, u8)>> = vec![Vec::new(); n];
-        for e in &self.edges {
-            ins[e.dst.index()][e.dst_port as usize] = Some(e.src);
-            outs[e.src.index()].push((e.dst, e.dst_port));
+        self.label_ids.clear();
+        self.label_ids.extend(self.nodes.iter().map(|nd| nd.op.label_id()));
+        // In-edge CSR: one slot per input port, offsets are arity prefix
+        // sums.
+        self.in_off.clear();
+        self.in_off.push(0);
+        let mut acc = 0u32;
+        for nd in &self.nodes {
+            acc += nd.op.arity() as u32;
+            self.in_off.push(acc);
         }
-        self.in_cache = ins;
-        self.out_cache = outs;
+        self.in_flat.clear();
+        self.in_flat.resize(acc as usize, None);
+        // Out-edge CSR via counting sort by source; per-source edge order
+        // follows `edges` order (stable), matching the old Vec-push order.
+        let mut deg = vec![0u32; n];
+        for e in &self.edges {
+            deg[e.src.index()] += 1;
+        }
+        self.out_off.clear();
+        self.out_off.push(0);
+        let mut acc = 0u32;
+        for d in &deg {
+            acc += d;
+            self.out_off.push(acc);
+        }
+        self.out_flat.clear();
+        self.out_flat.resize(acc as usize, (NodeId(0), 0));
+        let mut cursor: Vec<u32> = self.out_off[..n].to_vec();
+        for e in &self.edges {
+            let slot = self.in_off[e.dst.index()] + e.dst_port as u32;
+            // Flat indexing would silently land in the next node's span on
+            // an out-of-range port; keep the old per-node-Vec panic.
+            assert!(
+                slot < self.in_off[e.dst.index() + 1],
+                "edge {e:?} port out of range for {:?}",
+                self.nodes[e.dst.index()].op
+            );
+            self.in_flat[slot as usize] = Some(e.src);
+            let c = &mut cursor[e.src.index()];
+            self.out_flat[*c as usize] = (e.dst, e.dst_port);
+            *c += 1;
+        }
         self.cache_valid = true;
     }
 
-    /// (Re)build adjacency caches if stale. Called by all accessors; cheap
+    /// (Re)build the CSR adjacency if stale. Called by all accessors; cheap
     /// when already valid.
     pub fn freeze(&mut self) {
         if !self.cache_valid {
@@ -137,16 +178,31 @@ impl Graph {
         }
     }
 
+    /// True when the CSR adjacency is current (i.e. `freeze` has been
+    /// called since the last mutation).
+    pub fn is_frozen(&self) -> bool {
+        self.cache_valid
+    }
+
     /// Producers per input port (None = unconnected). Requires `freeze`.
+    #[inline]
     pub fn inputs_of(&self, id: NodeId) -> &[Option<NodeId>] {
         debug_assert!(self.cache_valid, "call freeze() first");
-        &self.in_cache[id.index()]
+        &self.in_flat[self.in_off[id.index()] as usize..self.in_off[id.index() + 1] as usize]
     }
 
     /// Consumers `(node, port)` of a node's output. Requires `freeze`.
+    #[inline]
     pub fn outputs_of(&self, id: NodeId) -> &[(NodeId, u8)] {
         debug_assert!(self.cache_valid, "call freeze() first");
-        &self.out_cache[id.index()]
+        &self.out_flat[self.out_off[id.index()] as usize..self.out_off[id.index() + 1] as usize]
+    }
+
+    /// Interned label per node (parallel to `nodes`). Requires `freeze`.
+    #[inline]
+    pub fn label_ids(&self) -> &[LabelId] {
+        debug_assert!(self.cache_valid, "call freeze() first");
+        &self.label_ids
     }
 
     /// Fan-out (consumer count) of a node.
@@ -203,7 +259,7 @@ impl Graph {
         let mut order = Vec::with_capacity(n);
         while let Some(id) = stack.pop() {
             order.push(id);
-            for &(dst, _) in &self.out_cache[id.index()] {
+            for &(dst, _) in self.outputs_of(id) {
                 indeg[dst.index()] -= 1;
                 if indeg[dst.index()] == 0 {
                     stack.push(dst);
@@ -232,7 +288,8 @@ impl Graph {
             if op == Op::Input {
                 continue;
             }
-            let args: Vec<Word> = self.in_cache[id.index()]
+            let args: Vec<Word> = self
+                .inputs_of(id)
                 .iter()
                 .map(|src| vals[src.expect("unconnected port in eval").index()])
                 .collect();

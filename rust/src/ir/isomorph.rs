@@ -8,24 +8,67 @@
 //!   may be permuted (injectively) for commutative consumers,
 //! - extra target edges are allowed (non-induced matching — a mined `add`
 //!   may have fan-out in the application).
+//!
+//! The search is an iterative backtracker over a rarest-label-first visit
+//! order with a `u64`-bitset used-set, per-depth precomputed candidate
+//! lists and edge checks, and incremental port-feasibility (exact ports
+//! per edge for non-commutative consumers; the injective port assignment
+//! of a commutative consumer runs the moment its last in-neighbour is
+//! bound). Occurrences land in a flat [`OccurrenceArena`] (one `Vec` +
+//! stride — no per-occurrence allocation) and are re-sorted into the
+//! classic BFS-from-node-0 enumeration order, so downstream consumers see
+//! the exact sequence the original recursive matcher produced.
 
 use super::graph::{Graph, NodeId};
-use std::collections::{BTreeSet, HashMap};
+use super::op::NUM_LABELS;
+use std::collections::BTreeSet;
 
-/// A single occurrence: `map[i]` is the target node that pattern node `i`
-/// maps to.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Occurrence {
-    pub map: Vec<NodeId>,
+/// Flat occurrence storage: row `i` is `data[i*stride..(i+1)*stride]`,
+/// where slot `p` of a row is the target node pattern node `p` maps to.
+#[derive(Debug, Clone, Default)]
+pub struct OccurrenceArena {
+    data: Vec<NodeId>,
+    stride: usize,
 }
 
-impl Occurrence {
-    /// The set of target nodes covered, as a sorted vec (occurrences that
-    /// differ only by pattern automorphism share this).
-    pub fn node_set(&self) -> Vec<NodeId> {
-        let mut v = self.map.clone();
-        v.sort_unstable();
-        v
+impl OccurrenceArena {
+    pub fn new(stride: usize) -> Self {
+        OccurrenceArena {
+            data: Vec::new(),
+            stride,
+        }
+    }
+
+    /// Pattern size (row width).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Number of occurrences.
+    pub fn len(&self) -> usize {
+        if self.stride == 0 {
+            0
+        } else {
+            self.data.len() / self.stride
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i`: `row[p]` is the target node pattern node `p` maps to.
+    pub fn get(&self, i: usize) -> &[NodeId] {
+        &self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[NodeId]> + '_ {
+        self.data.chunks_exact(self.stride.max(1))
+    }
+
+    fn push(&mut self, row: &[NodeId]) {
+        debug_assert_eq!(row.len(), self.stride);
+        self.data.extend_from_slice(row);
     }
 }
 
@@ -45,7 +88,8 @@ impl Default for MatchConfig {
 }
 
 /// BFS order over pattern nodes starting at 0; pattern must be connected
-/// (undirected sense). Returns None if disconnected.
+/// (undirected sense). Returns None if disconnected. This is the order the
+/// result arena is sorted by (the legacy enumeration order).
 fn bfs_order(pattern: &Graph) -> Option<Vec<usize>> {
     let n = pattern.len();
     if n == 0 {
@@ -73,69 +117,56 @@ fn bfs_order(pattern: &Graph) -> Option<Vec<usize>> {
     (order.len() == n).then_some(order)
 }
 
-/// Check that the in-edges of every pattern node admit an injective port
-/// assignment onto the target's in-edges under the full node map.
-fn ports_feasible(pattern: &Graph, target: &Graph, map: &[NodeId]) -> bool {
-    for pd in pattern.node_ids() {
-        let op = pattern.node(pd).op;
-        let in_edges: Vec<_> = pattern
-            .edges
-            .iter()
-            .filter(|e| e.dst == pd)
-            .collect();
-        if in_edges.is_empty() {
-            continue;
-        }
-        let td = map[pd.index()];
-        let tins = target.inputs_of(td);
-        if !op.commutative() {
-            for e in &in_edges {
-                let want = map[e.src.index()];
-                if tins.get(e.dst_port as usize).copied().flatten() != Some(want) {
-                    return false;
-                }
+/// Search visit order: start at the pattern node whose label is rarest in
+/// the target, then repeatedly take the rarest-label node connected to the
+/// already-visited set (ties broken by node index — deterministic).
+/// Requires a connected pattern.
+fn visit_order(pattern: &Graph, label_count: &[usize; NUM_LABELS]) -> Vec<usize> {
+    let n = pattern.len();
+    let mut adj = vec![Vec::new(); n];
+    for e in &pattern.edges {
+        adj[e.src.index()].push(e.dst.index());
+        adj[e.dst.index()].push(e.src.index());
+    }
+    let rarity = |i: usize| label_count[pattern.nodes[i].op.label_id().index()];
+    let start = (0..n).min_by_key(|&i| (rarity(i), i)).expect("non-empty");
+    let mut visited = vec![false; n];
+    let mut reachable = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    visited[start] = true;
+    order.push(start);
+    for &v in &adj[start] {
+        reachable[v] = true;
+    }
+    while order.len() < n {
+        let next = (0..n)
+            .filter(|&i| !visited[i] && reachable[i])
+            .min_by_key(|&i| (rarity(i), i))
+            .expect("pattern connected (checked by bfs_order)");
+        visited[next] = true;
+        order.push(next);
+        for &v in &adj[next] {
+            if !visited[v] {
+                reachable[v] = true;
             }
-        } else {
-            // Injective assignment of pattern in-edges to target ports whose
-            // drivers match; arity <= 3 so brute-force.
-            let k = in_edges.len();
-            let ports: Vec<usize> = (0..tins.len()).collect();
-            if !assign(&in_edges, &ports, tins, map, 0, &mut vec![false; tins.len()]) {
-                return false;
-            }
-            fn assign(
-                in_edges: &[&super::graph::Edge],
-                ports: &[usize],
-                tins: &[Option<NodeId>],
-                map: &[NodeId],
-                i: usize,
-                used: &mut Vec<bool>,
-            ) -> bool {
-                if i == in_edges.len() {
-                    return true;
-                }
-                let want = map[in_edges[i].src.index()];
-                for &p in ports {
-                    if !used[p] && tins[p] == Some(want) {
-                        used[p] = true;
-                        if assign(in_edges, ports, tins, map, i + 1, used) {
-                            used[p] = false;
-                            return true;
-                        }
-                        used[p] = false;
-                    }
-                }
-                false
-            }
-            let _ = k;
         }
     }
-    true
+    order
 }
 
-/// Weaker incremental check used during backtracking: every pattern edge
-/// between mapped nodes has *some* corresponding target edge (ports checked
-/// by the final `ports_feasible`).
+/// A pattern edge incident to the node assigned at some depth, with its
+/// other endpoint already assigned (checked at assignment time).
+struct EdgeCheck {
+    /// Depth of the already-assigned endpoint.
+    other_depth: usize,
+    /// True when the node being assigned is the edge's *source*.
+    new_is_src: bool,
+    port: u8,
+    commutative: bool,
+}
+
+/// Does target edge `ts -> td` exist with the required port semantics?
+#[inline]
 fn edge_exists(target: &Graph, ts: NodeId, td: NodeId, port: u8, commutative: bool) -> bool {
     let tins = target.inputs_of(td);
     if commutative {
@@ -145,108 +176,227 @@ fn edge_exists(target: &Graph, ts: NodeId, td: NodeId, port: u8, commutative: bo
     }
 }
 
+/// Injective port assignment for a commutative consumer `c` whose in-edge
+/// sources `srcs` (pattern indices) are all bound: each pattern in-edge
+/// must claim a distinct target port whose driver is the mapped source.
+fn consumer_ports_ok(target: &Graph, map: &[NodeId], c: usize, srcs: &[usize]) -> bool {
+    let tins = target.inputs_of(map[c]);
+    let mut used = [false; 8];
+    debug_assert!(tins.len() <= 8 && srcs.len() <= 8);
+    fn assign(
+        srcs: &[usize],
+        map: &[NodeId],
+        tins: &[Option<NodeId>],
+        used: &mut [bool; 8],
+        i: usize,
+    ) -> bool {
+        if i == srcs.len() {
+            return true;
+        }
+        let want = map[srcs[i]];
+        for p in 0..tins.len() {
+            if !used[p] && tins[p] == Some(want) {
+                used[p] = true;
+                if assign(srcs, map, tins, used, i + 1) {
+                    used[p] = false;
+                    return true;
+                }
+                used[p] = false;
+            }
+        }
+        false
+    }
+    assign(srcs, map, tins, &mut used, 0)
+}
+
 /// Find all occurrences of `pattern` in `target`. Both graphs must be
-/// frozen (the function freezes them itself — needs `&mut`).
-pub fn find_occurrences(pattern: &mut Graph, target: &mut Graph, cfg: &MatchConfig) -> Vec<Occurrence> {
+/// frozen (the function freezes them itself — needs `&mut`). See
+/// [`find_occurrences_frozen`] for the shared-reference variant used by
+/// parallel callers.
+pub fn find_occurrences(
+    pattern: &mut Graph,
+    target: &mut Graph,
+    cfg: &MatchConfig,
+) -> OccurrenceArena {
     pattern.freeze();
     target.freeze();
-    let order = match bfs_order(pattern) {
-        Some(o) => o,
-        None => return vec![],
+    find_occurrences_frozen(pattern, target, cfg)
+}
+
+/// [`find_occurrences`] over already-frozen graphs; takes shared
+/// references so concurrent matchers can share one target.
+///
+/// Occurrences are returned in the legacy enumeration order (BFS pattern
+/// order from node 0, candidates ascending by target id). When
+/// `cfg.max_occurrences` truncates the search, the *set* of returned
+/// occurrences may differ from the recursive matcher's first-k (the
+/// internal visit order is optimized); the cap is a pathological-pattern
+/// guard, not an expected operating point.
+pub fn find_occurrences_frozen(
+    pattern: &Graph,
+    target: &Graph,
+    cfg: &MatchConfig,
+) -> OccurrenceArena {
+    debug_assert!(pattern.is_frozen() && target.is_frozen(), "freeze first");
+    let k = pattern.len();
+    if k == 0 {
+        return OccurrenceArena::new(0);
+    }
+    let Some(bfs) = bfs_order(pattern) else {
+        return OccurrenceArena::new(k);
     };
-    if order.is_empty() {
-        return vec![];
-    }
 
-    // Candidate target nodes per label.
-    let mut by_label: HashMap<&'static str, Vec<NodeId>> = HashMap::new();
-    for n in &target.nodes {
-        if n.op.is_compute() {
-            by_label.entry(n.op.label()).or_default().push(n.id);
+    // Candidate target nodes per label, ascending id (compute nodes only),
+    // off the frozen graphs' interned-label caches.
+    let mut label_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); NUM_LABELS];
+    let mut label_count = [0usize; NUM_LABELS];
+    for (nd, &lid) in target.nodes.iter().zip(target.label_ids()) {
+        if nd.op.is_compute() {
+            label_nodes[lid.index()].push(nd.id);
+            label_count[lid.index()] += 1;
         }
     }
 
-    let mut results = Vec::new();
-    let mut map: Vec<Option<NodeId>> = vec![None; pattern.len()];
-    let mut used: BTreeSet<NodeId> = BTreeSet::new();
+    let order = visit_order(pattern, &label_count);
+    let mut depth_of = vec![0usize; k];
+    for (d, &p) in order.iter().enumerate() {
+        depth_of[p] = d;
+    }
 
-    fn backtrack(
-        pattern: &Graph,
-        target: &Graph,
-        order: &[usize],
-        depth: usize,
-        by_label: &HashMap<&'static str, Vec<NodeId>>,
-        map: &mut Vec<Option<NodeId>>,
-        used: &mut BTreeSet<NodeId>,
-        results: &mut Vec<Occurrence>,
-        cfg: &MatchConfig,
-    ) {
-        if results.len() >= cfg.max_occurrences {
-            return;
-        }
-        if depth == order.len() {
-            let full: Vec<NodeId> = map.iter().map(|m| m.unwrap()).collect();
-            if ports_feasible(pattern, target, &full) {
-                results.push(Occurrence { map: full });
-            }
-            return;
-        }
-        let p = order[depth];
-        let plabel = pattern.nodes[p].op.label();
-        let Some(cands) = by_label.get(plabel) else {
-            return;
+    // Per-depth edge checks: every pattern edge is checked exactly once, at
+    // the depth where its later endpoint is assigned.
+    let mut checks: Vec<Vec<EdgeCheck>> = (0..k).map(|_| Vec::new()).collect();
+    for e in &pattern.edges {
+        let ds = depth_of[e.src.index()];
+        let dd = depth_of[e.dst.index()];
+        let commutative = pattern.nodes[e.dst.index()].op.commutative();
+        let (at, other_depth, new_is_src) = if ds > dd {
+            (ds, dd, true)
+        } else {
+            (dd, ds, false)
         };
-        'cand: for &t in cands {
-            if used.contains(&t) {
+        checks[at].push(EdgeCheck {
+            other_depth,
+            new_is_src,
+            port: e.dst_port,
+            commutative,
+        });
+    }
+
+    // Commutative consumers with >= 2 in-edges need an injective port
+    // check, run at the depth where their last in-neighbour (or they
+    // themselves) are bound.
+    let mut consumer_srcs: Vec<Vec<usize>> = (0..k).map(|_| Vec::new()).collect();
+    for e in &pattern.edges {
+        consumer_srcs[e.dst.index()].push(e.src.index());
+    }
+    let mut complete: Vec<Vec<usize>> = (0..k).map(|_| Vec::new()).collect();
+    for c in 0..k {
+        if consumer_srcs[c].len() >= 2 && pattern.nodes[c].op.commutative() {
+            let at = consumer_srcs[c]
+                .iter()
+                .map(|&s| depth_of[s])
+                .chain(std::iter::once(depth_of[c]))
+                .max()
+                .unwrap();
+            complete[at].push(c);
+        }
+    }
+
+    // Per-depth candidate slices (by the visited node's label).
+    let plids = pattern.label_ids();
+    let cands_at: Vec<&[NodeId]> = order
+        .iter()
+        .map(|&p| label_nodes[plids[p].index()].as_slice())
+        .collect();
+
+    // --- Iterative backtracking.
+    let words = (target.len() + 63) / 64;
+    let mut used = vec![0u64; words];
+    let mut map: Vec<NodeId> = vec![NodeId(0); k];
+    let mut cursor = vec![0usize; k];
+    let mut arena = OccurrenceArena::new(k);
+    let mut depth = 0usize;
+    'search: loop {
+        let mut advanced = false;
+        let cands = cands_at[depth];
+        'cand: while cursor[depth] < cands.len() {
+            let t = cands[cursor[depth]];
+            cursor[depth] += 1;
+            let (w, b) = (t.index() / 64, t.index() % 64);
+            if used[w] >> b & 1 == 1 {
                 continue;
             }
-            // Check edges between p and already-mapped pattern nodes.
-            for e in &pattern.edges {
-                let (ps, pd) = (e.src.index(), e.dst.index());
-                if ps == p && map[pd].is_some() {
-                    let commut = pattern.nodes[pd].op.commutative();
-                    if !edge_exists(target, t, map[pd].unwrap(), e.dst_port, commut) {
-                        continue 'cand;
-                    }
-                } else if pd == p && map[ps].is_some() {
-                    let commut = pattern.nodes[pd].op.commutative();
-                    if !edge_exists(target, map[ps].unwrap(), t, e.dst_port, commut) {
-                        continue 'cand;
-                    }
+            map[order[depth]] = t;
+            for chk in &checks[depth] {
+                let other = map[order[chk.other_depth]];
+                let (ts, td) = if chk.new_is_src { (t, other) } else { (other, t) };
+                if !edge_exists(target, ts, td, chk.port, chk.commutative) {
+                    continue 'cand;
                 }
             }
-            map[p] = Some(t);
-            used.insert(t);
-            backtrack(
-                pattern, target, order, depth + 1, by_label, map, used, results, cfg,
-            );
-            used.remove(&t);
-            map[p] = None;
+            for &c in &complete[depth] {
+                if !consumer_ports_ok(target, &map, c, &consumer_srcs[c]) {
+                    continue 'cand;
+                }
+            }
+            if depth + 1 == k {
+                arena.push(&map);
+                if arena.len() >= cfg.max_occurrences {
+                    break 'search;
+                }
+                // Keep scanning candidates at this (last) depth.
+            } else {
+                used[w] |= 1 << b;
+                depth += 1;
+                cursor[depth] = 0;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+            let t = map[order[depth]];
+            used[t.index() / 64] &= !(1 << (t.index() % 64));
         }
     }
 
-    backtrack(
-        pattern,
-        target,
-        &order,
-        0,
-        &by_label,
-        &mut map,
-        &mut used,
-        &mut results,
-        cfg,
-    );
-    results
+    // Restore the legacy enumeration order: rows are distinct maps, so
+    // sorting by the BFS-order assignment tuple reproduces the recursive
+    // matcher's emission sequence exactly.
+    let mut idx: Vec<usize> = (0..arena.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        let (ra, rb) = (arena.get(a), arena.get(b));
+        for &p in &bfs {
+            match ra[p].cmp(&rb[p]) {
+                std::cmp::Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    });
+    let mut sorted = OccurrenceArena::new(k);
+    sorted.data.reserve(arena.data.len());
+    for &i in &idx {
+        sorted.push(arena.get(i));
+    }
+    sorted
 }
 
 /// Deduplicate occurrences that cover the same target node set (pattern
-/// automorphisms). Keeps the first representative of each set.
-pub fn distinct_node_sets(occs: &[Occurrence]) -> Vec<Occurrence> {
+/// automorphisms). Returns the distinct *sorted* node sets in order of
+/// first appearance.
+pub fn distinct_node_sets(occs: &OccurrenceArena) -> Vec<Vec<NodeId>> {
     let mut seen: BTreeSet<Vec<NodeId>> = BTreeSet::new();
     let mut out = Vec::new();
-    for o in occs {
-        if seen.insert(o.node_set()) {
-            out.push(o.clone());
+    for row in occs.iter() {
+        let mut s = row.to_vec();
+        s.sort_unstable();
+        if seen.insert(s.clone()) {
+            out.push(s);
         }
     }
     out
@@ -254,20 +404,37 @@ pub fn distinct_node_sets(occs: &[Occurrence]) -> Vec<Occurrence> {
 
 /// GRAMI-style MNI (minimum node image) support: for each pattern node, the
 /// number of distinct target nodes it maps to across all occurrences; the
-/// support is the minimum over pattern nodes.
-pub fn mni_support(pattern_len: usize, occs: &[Occurrence]) -> usize {
-    if occs.is_empty() {
+/// support is the minimum over pattern nodes. Counted with a reused
+/// per-pattern-node bitset over target ids.
+pub fn mni_support(pattern_len: usize, occs: &OccurrenceArena) -> usize {
+    if occs.is_empty() || pattern_len == 0 {
         return 0;
     }
-    (0..pattern_len)
-        .map(|i| {
-            occs.iter()
-                .map(|o| o.map[i])
-                .collect::<BTreeSet<_>>()
-                .len()
-        })
-        .min()
-        .unwrap_or(0)
+    let max_id = occs
+        .data
+        .iter()
+        .map(|id| id.index())
+        .max()
+        .unwrap_or(0);
+    let words = max_id / 64 + 1;
+    let mut bits = vec![0u64; words];
+    let mut best = usize::MAX;
+    for i in 0..pattern_len {
+        for w in bits.iter_mut() {
+            *w = 0;
+        }
+        let mut count = 0usize;
+        for row in occs.iter() {
+            let t = row[i].index();
+            let (w, b) = (t / 64, t % 64);
+            if bits[w] >> b & 1 == 0 {
+                bits[w] |= 1 << b;
+                count += 1;
+            }
+        }
+        best = best.min(count);
+    }
+    best
 }
 
 #[cfg(test)]
@@ -368,6 +535,42 @@ mod tests {
     }
 
     #[test]
+    fn repeated_source_needs_two_ports() {
+        // pattern: one mul feeding BOTH ports of an add (x*y + x*y shape);
+        // a target add fed by the same mul twice matches, one fed by two
+        // different muls does not bind both edges to one source.
+        let mut t = Graph::new("t");
+        let a = t.add_op(Op::Input);
+        let b = t.add_op(Op::Input);
+        let m = t.add(Op::Mul, &[a, b]);
+        let s = t.add(Op::Add, &[m, m]);
+        t.add(Op::Output, &[s]);
+
+        let mut pat = Graph::new("p");
+        let pm = pat.add_op(Op::Mul);
+        let pa = pat.add_op(Op::Add);
+        pat.connect(pm, pa, 0);
+        pat.connect(pm, pa, 1);
+        assert_eq!(find_occurrences(&mut pat, &mut t, &MatchConfig::default()).len(), 1);
+
+        // Same pattern against add(m1, m2) with distinct muls: the doubled
+        // edge cannot claim two ports driven by one node.
+        let mut t2 = Graph::new("t2");
+        let a = t2.add_op(Op::Input);
+        let b = t2.add_op(Op::Input);
+        let m1 = t2.add(Op::Mul, &[a, b]);
+        let m2 = t2.add(Op::Mul, &[b, a]);
+        let s = t2.add(Op::Add, &[m1, m2]);
+        t2.add(Op::Output, &[s]);
+        let mut pat2 = Graph::new("p2");
+        let pm = pat2.add_op(Op::Mul);
+        let pa = pat2.add_op(Op::Add);
+        pat2.connect(pm, pa, 0);
+        pat2.connect(pm, pa, 1);
+        assert_eq!(find_occurrences(&mut pat2, &mut t2, &MatchConfig::default()).len(), 0);
+    }
+
+    #[test]
     fn mni_support_on_overlapping_pattern() {
         let mut target = conv_chain();
         // pattern: add -> add (paper Fig 3d analogue at smaller scale).
@@ -395,5 +598,35 @@ mod tests {
         let mut pat = mul_pattern();
         let cfg = MatchConfig { max_occurrences: 2 };
         assert_eq!(find_occurrences(&mut pat, &mut target, &cfg).len(), 2);
+    }
+
+    #[test]
+    fn rows_come_out_in_bfs_lexicographic_order() {
+        let mut target = conv_chain();
+        let mut pat = Graph::new("muladd");
+        let m = pat.add_op(Op::Mul);
+        let a = pat.add_op(Op::Add);
+        pat.connect(m, a, 0);
+        let occs = find_occurrences(&mut pat, &mut target, &MatchConfig::default());
+        let rows: Vec<Vec<NodeId>> = occs.iter().map(|r| r.to_vec()).collect();
+        let mut sorted = rows.clone();
+        // BFS order from pattern node 0 is [mul, add] = column order here.
+        sorted.sort();
+        assert_eq!(rows, sorted);
+    }
+
+    #[test]
+    fn arena_accessors() {
+        let mut target = conv_chain();
+        let mut pat = mul_pattern();
+        let occs = find_occurrences(&mut pat, &mut target, &MatchConfig::default());
+        assert_eq!(occs.stride(), 1);
+        assert_eq!(occs.iter().count(), occs.len());
+        for i in 0..occs.len() {
+            assert_eq!(occs.get(i).len(), 1);
+        }
+        let empty = OccurrenceArena::new(0);
+        assert_eq!(empty.len(), 0);
+        assert_eq!(empty.iter().count(), 0);
     }
 }

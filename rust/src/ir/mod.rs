@@ -5,7 +5,10 @@ pub mod graph;
 pub mod isomorph;
 pub mod op;
 
-pub use canon::canonical_code;
+pub use canon::{canon_key, canonical_code, CanonKey};
 pub use graph::{Edge, Graph, Node, NodeId};
-pub use isomorph::{distinct_node_sets, find_occurrences, mni_support, MatchConfig, Occurrence};
-pub use op::{truncate, HwClass, Op, Word, WORD_BITS};
+pub use isomorph::{
+    distinct_node_sets, find_occurrences, find_occurrences_frozen, mni_support, MatchConfig,
+    OccurrenceArena,
+};
+pub use op::{truncate, HwClass, LabelId, Op, Word, NUM_LABELS, WORD_BITS};

@@ -187,6 +187,96 @@ impl Op {
     }
 }
 
+/// Number of distinct op labels (the size of the interning table).
+pub const NUM_LABELS: usize = 21;
+
+/// All op labels in **alphabetical order**. `LabelId` values index this
+/// table, so the numeric order of `LabelId` is identical to the
+/// lexicographic order of the label strings — the canonical-code and
+/// extension-ordering machinery depends on this invariant (pinned by
+/// `tests::label_table_is_sorted`).
+const LABELS: [&str; NUM_LABELS] = [
+    "abs", "add", "and", "ashr", "clamp", "const", "eq", "gt", "in", "lshr", "lt", "max", "min",
+    "mul", "not", "or", "out", "sel", "shl", "sub", "xor",
+];
+
+/// Densely interned op label: the matcher and miner compare/index these
+/// `u8`s instead of hashing `&'static str`. Const values and input indices
+/// are erased, exactly like [`Op::label`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LabelId(pub u8);
+
+impl LabelId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// The label string this id interns.
+    pub fn label(self) -> &'static str {
+        LABELS[self.0 as usize]
+    }
+
+    /// Representative op per label (const value erased to 0) — the inverse
+    /// of [`Op::label_id`] up to const-value erasure.
+    pub fn op(self) -> Op {
+        match self.0 {
+            0 => Op::Abs,
+            1 => Op::Add,
+            2 => Op::And,
+            3 => Op::Ashr,
+            4 => Op::Clamp,
+            5 => Op::Const(0),
+            6 => Op::Eq,
+            7 => Op::Gt,
+            8 => Op::Input,
+            9 => Op::Lshr,
+            10 => Op::Lt,
+            11 => Op::Max,
+            12 => Op::Min,
+            13 => Op::Mul,
+            14 => Op::Not,
+            15 => Op::Or,
+            16 => Op::Output,
+            17 => Op::Sel,
+            18 => Op::Shl,
+            19 => Op::Sub,
+            20 => Op::Xor,
+            other => panic!("invalid LabelId {other}"),
+        }
+    }
+}
+
+impl Op {
+    /// Interned label id (see [`LabelId`]).
+    #[inline]
+    pub fn label_id(&self) -> LabelId {
+        LabelId(match self {
+            Op::Abs => 0,
+            Op::Add => 1,
+            Op::And => 2,
+            Op::Ashr => 3,
+            Op::Clamp => 4,
+            Op::Const(_) => 5,
+            Op::Eq => 6,
+            Op::Gt => 7,
+            Op::Input => 8,
+            Op::Lshr => 9,
+            Op::Lt => 10,
+            Op::Max => 11,
+            Op::Min => 12,
+            Op::Mul => 13,
+            Op::Not => 14,
+            Op::Or => 15,
+            Op::Output => 16,
+            Op::Sel => 17,
+            Op::Shl => 18,
+            Op::Sub => 19,
+            Op::Xor => 20,
+        })
+    }
+}
+
 /// Functional-unit classes used for merging compatibility and cost lookup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum HwClass {
@@ -262,5 +352,30 @@ mod tests {
     #[test]
     fn const_label_erases_value() {
         assert_eq!(Op::Const(1).label(), Op::Const(99).label());
+    }
+
+    #[test]
+    fn label_table_is_sorted() {
+        // LabelId numeric order must equal label-string order (the canon
+        // machinery sorts label classes by id).
+        for w in LABELS.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn label_id_roundtrips() {
+        let mut all = Op::all_compute();
+        all.push(Op::Input);
+        all.push(Op::Output);
+        for op in all {
+            let lid = op.label_id();
+            assert_eq!(lid.label(), op.label(), "{op:?}");
+            assert_eq!(lid.op().label(), op.label(), "{op:?}");
+            assert_eq!(lid.op().label_id(), lid, "{op:?}");
+        }
+        for i in 0..NUM_LABELS {
+            assert_eq!(LabelId(i as u8).op().label_id(), LabelId(i as u8));
+        }
     }
 }

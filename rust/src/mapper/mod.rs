@@ -130,16 +130,15 @@ pub fn map_app(app: &mut Graph, pe: &PeSpec) -> Result<Mapping, MapError> {
             .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
             .count();
         let mut seen_sets: BTreeSet<Vec<NodeId>> = BTreeSet::new();
-        for occ in occs {
+        for occ in occs.iter() {
             let node_set: BTreeSet<NodeId> = occ
-                .map
                 .iter()
                 .copied()
                 .filter(|&t| !matches!(app.node(t).op, Op::Const(_)))
                 .collect();
             // Legality: non-root, non-const images keep all consumers
             // inside (consts replicate freely).
-            let legal = occ.map.iter().enumerate().all(|(pi, &t)| {
+            let legal = occ.iter().enumerate().all(|(pi, &t)| {
                 roots.contains(&pi)
                     || matches!(app.node(t).op, Op::Const(_))
                     || app
@@ -155,15 +154,15 @@ pub fn map_app(app: &mut Graph, pe: &PeSpec) -> Result<Mapping, MapError> {
             // occurrence (or by a const): a commutative match can otherwise
             // pick an occurrence whose "external" port is really wired to a
             // covered non-root node, which a PE cannot express.
-            let port_map = app_port_map(app, &pattern, &occ.map);
+            let port_map = app_port_map(app, &pattern, occ);
             let ext_ok = pe.modes[mode].ext_pattern_ports.iter().all(|&(pi, q)| {
                 let Some(&ap) = port_map.get(&(pi, q)) else {
                     return false;
                 };
-                match app.inputs_of(occ.map[pi])[ap as usize] {
+                match app.inputs_of(occ[pi])[ap as usize] {
                     Some(src) => {
                         matches!(app.node(src).op, Op::Const(_) | Op::Input)
-                            || !occ.map.contains(&src)
+                            || !occ.contains(&src)
                     }
                     None => false,
                 }
@@ -171,12 +170,17 @@ pub fn map_app(app: &mut Graph, pe: &PeSpec) -> Result<Mapping, MapError> {
             if !ext_ok {
                 continue;
             }
-            if !seen_sets.insert(occ.node_set()) {
+            let sorted_set = {
+                let mut s = occ.to_vec();
+                s.sort_unstable();
+                s
+            };
+            if !seen_sets.insert(sorted_set) {
                 continue;
             }
             candidates.push(Candidate {
                 mode,
-                occ: occ.map,
+                occ: occ.to_vec(),
                 node_set,
                 ops,
             });

@@ -6,19 +6,29 @@
 //! kept when their GRAMI-style MNI (minimum node image) support meets the
 //! threshold. Patterns contain only compute nodes (ops and consts) — graph
 //! inputs/outputs are the boundary, exactly like the paper's CoreIR graphs.
+//!
+//! The explore loop is a parallel frontier: for each parent popped, its
+//! canon-deduped candidate children are matched against the (frozen,
+//! shared) application concurrently on [`crate::runtime::parallel_map`],
+//! with order-preserving merges — the dedup bookkeeping, exploration
+//! budget, frontier order, and result set are bit-identical to the
+//! sequential walk. Dedup keys are packed integer [`CanonKey`]s; parents
+//! are *moved* into `results` (no occurrence-list clones).
 
 use crate::ir::{
-    canonical_code, find_occurrences, mni_support, Graph, MatchConfig, NodeId, Occurrence, Op,
+    canon_key, distinct_node_sets, find_occurrences_frozen, mni_support, CanonKey, Graph, LabelId,
+    MatchConfig, NodeId, OccurrenceArena, Op, NUM_LABELS,
 };
-use std::collections::{BTreeSet, HashMap};
+use crate::runtime::{default_width, parallel_map};
+use std::collections::HashSet;
 
 /// A mined frequent subgraph with its occurrences in the application.
 #[derive(Debug, Clone)]
 pub struct MinedPattern {
     pub graph: Graph,
-    pub canon: String,
-    /// All occurrences (including automorphic duplicates).
-    pub occurrences: Vec<Occurrence>,
+    pub canon: CanonKey,
+    /// All occurrences (including automorphic duplicates), flat storage.
+    pub occurrences: OccurrenceArena,
     /// Occurrences deduplicated by covered node set.
     pub distinct: Vec<Vec<NodeId>>,
     /// GRAMI MNI support.
@@ -44,6 +54,10 @@ pub struct MinerConfig {
     pub match_cfg: MatchConfig,
     /// Drop patterns that are pure const nodes or contain no real op.
     pub require_real_op: bool,
+    /// Worker width for the parallel frontier (0 = available parallelism).
+    /// Results are identical for every width; deliberately excluded from
+    /// the session config fingerprint.
+    pub threads: usize,
 }
 
 impl Default for MinerConfig {
@@ -54,11 +68,15 @@ impl Default for MinerConfig {
             max_patterns: 6000,
             match_cfg: MatchConfig::default(),
             require_real_op: true,
+            threads: 0,
         }
     }
 }
 
-/// One candidate extension of a pattern: attach `new_label` via an edge.
+/// One candidate extension of a pattern: attach a node labelled `new_op`
+/// via an edge. Variant and field order define the `Ord` used for the
+/// deterministic extension sweep (`LabelId` order equals label-string
+/// order, so this matches the old string-keyed ordering exactly).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 enum Extension {
     /// New node is the *source* of an edge into pattern node `pat_dst` at
@@ -66,102 +84,103 @@ enum Extension {
     InEdge {
         pat_dst: usize,
         port: u8,
-        new_op: OpKey,
+        new_op: LabelId,
     },
     /// New node consumes the output of pattern node `pat_src` (port on the
     /// new node).
     OutEdge {
         pat_src: usize,
         port: u8,
-        new_op: OpKey,
+        new_op: LabelId,
     },
     /// Close an edge between two existing pattern nodes.
     Internal { pat_src: usize, pat_dst: usize, port: u8 },
 }
 
-/// Op key with const values erased, so extension dedup matches mining
-/// semantics.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-struct OpKey(&'static str);
-
-fn op_for_key(k: OpKey) -> Op {
-    // Representative op per label; const value erased to 0.
-    match k.0 {
-        "const" => Op::Const(0),
-        "add" => Op::Add,
-        "sub" => Op::Sub,
-        "mul" => Op::Mul,
-        "shl" => Op::Shl,
-        "lshr" => Op::Lshr,
-        "ashr" => Op::Ashr,
-        "min" => Op::Min,
-        "max" => Op::Max,
-        "abs" => Op::Abs,
-        "lt" => Op::Lt,
-        "gt" => Op::Gt,
-        "eq" => Op::Eq,
-        "sel" => Op::Sel,
-        "and" => Op::And,
-        "or" => Op::Or,
-        "xor" => Op::Xor,
-        "not" => Op::Not,
-        "clamp" => Op::Clamp,
-        other => panic!("unknown op label {other}"),
+/// Run `jobs` on the worker pool (order-preserving); small batches run
+/// inline because scoped-thread spawn overhead would dominate the
+/// matching work they carry. Results are identical either way.
+fn run_jobs<T, F>(jobs: Vec<F>, width: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    if width <= 1 || jobs.len() <= 2 {
+        jobs.into_iter().map(|j| j()).collect()
+    } else {
+        parallel_map(jobs, width)
     }
 }
 
 /// Mine all frequent subgraphs of `app`.
 pub fn mine(app: &mut Graph, cfg: &MinerConfig) -> Vec<MinedPattern> {
     app.freeze();
+    let app: &Graph = app;
+    let width = if cfg.threads == 0 { default_width() } else { cfg.threads };
 
     // Seed patterns: one per distinct compute label that clears support.
-    let mut label_count: HashMap<&'static str, usize> = HashMap::new();
+    let mut label_count = [0usize; NUM_LABELS];
     for n in &app.nodes {
         if n.op.is_compute() {
-            *label_count.entry(n.op.label()).or_insert(0) += 1;
+            label_count[n.op.label_id().index()] += 1;
         }
     }
 
     let mut results: Vec<MinedPattern> = Vec::new();
-    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut seen: HashSet<CanonKey> = HashSet::new();
     let mut frontier: Vec<MinedPattern> = Vec::new();
 
-    let mut labels: Vec<&'static str> = label_count.keys().copied().collect();
-    labels.sort_unstable();
-    for label in labels {
-        if label_count[label] < cfg.min_support {
-            continue;
-        }
-        let mut p = Graph::new(format!("pat_{label}"));
-        p.add_op(op_for_key(OpKey(label)));
-        let code = canonical_code(&p);
-        if let Some(m) = evaluate_pattern(p, code.clone(), app, cfg) {
-            seen.insert(code);
-            frontier.push(m);
-        }
+    // Ascending LabelId == sorted label order; evaluate seeds in parallel
+    // (order-preserving), then push kept ones in that order.
+    let seed_jobs: Vec<_> = (0..NUM_LABELS)
+        .filter(|&l| label_count[l] > 0 && label_count[l] >= cfg.min_support)
+        .map(|l| LabelId(l as u8))
+        .map(|lid| {
+            move || {
+                let mut p = Graph::new(format!("pat_{}", lid.label()));
+                p.add_op(lid.op());
+                let key = canon_key(&p);
+                evaluate_pattern(p, key, app, cfg)
+            }
+        })
+        .collect();
+    for m in run_jobs(seed_jobs, width).into_iter().flatten() {
+        seen.insert(m.canon.clone());
+        frontier.push(m);
     }
 
     let mut explored = frontier.len();
     while let Some(parent) = frontier.pop() {
         // Single-op patterns are seeds, not results (a PE always implements
         // single ops); still report them — the DSE filters by size.
-        results.push(parent.clone());
-        if parent.graph.len() >= cfg.max_nodes || explored >= cfg.max_patterns {
-            continue;
+        //
+        // Gather and canon-dedup this parent's candidate children *before*
+        // moving the parent into `results`, so no occurrence list is ever
+        // cloned. The dedup/budget bookkeeping runs sequentially in
+        // extension order — identical to the sequential walk — and only
+        // the expensive matching fans out.
+        let mut pending: Vec<(Graph, CanonKey)> = Vec::new();
+        if parent.graph.len() < cfg.max_nodes && explored < cfg.max_patterns {
+            for ext in collect_extensions(&parent, app) {
+                if explored >= cfg.max_patterns {
+                    break;
+                }
+                let child = apply_extension(&parent.graph, &ext);
+                let key = canon_key(&child);
+                if !seen.insert(key.clone()) {
+                    continue;
+                }
+                explored += 1;
+                pending.push((child, key));
+            }
         }
-        for ext in collect_extensions(&parent, app) {
-            if explored >= cfg.max_patterns {
-                break;
-            }
-            let child = apply_extension(&parent.graph, &ext);
-            let code = canonical_code(&child);
-            if !seen.insert(code.clone()) {
-                continue;
-            }
-            explored += 1;
-            if let Some(m) = evaluate_pattern(child, code, app, cfg) {
-                frontier.push(m);
-            }
+        results.push(parent);
+        let jobs: Vec<_> = pending
+            .into_iter()
+            .map(|(child, key)| move || evaluate_pattern(child, key, app, cfg))
+            .collect();
+        for m in run_jobs(jobs, width).into_iter().flatten() {
+            frontier.push(m);
         }
     }
 
@@ -184,26 +203,21 @@ pub fn mine(app: &mut Graph, cfg: &MinerConfig) -> Vec<MinedPattern> {
 }
 
 /// Run the matcher and keep the pattern if it clears the support threshold.
-/// `canon` is the pre-computed canonical code (the dedup pass already paid
-/// for it).
+/// `canon` is the pre-computed canonical key (the dedup pass already paid
+/// for it). `app` must be frozen.
 fn evaluate_pattern(
     mut pattern: Graph,
-    canon: String,
-    app: &mut Graph,
+    canon: CanonKey,
+    app: &Graph,
     cfg: &MinerConfig,
 ) -> Option<MinedPattern> {
-    let occs = find_occurrences(&mut pattern, app, &cfg.match_cfg);
+    pattern.freeze();
+    let occs = find_occurrences_frozen(&pattern, app, &cfg.match_cfg);
     let support = mni_support(pattern.len(), &occs);
     if support < cfg.min_support {
         return None;
     }
-    let distinct: Vec<Vec<NodeId>> = {
-        let mut seen = BTreeSet::new();
-        occs.iter()
-            .map(|o| o.node_set())
-            .filter(|s| seen.insert(s.clone()))
-            .collect()
-    };
+    let distinct = distinct_node_sets(&occs);
     Some(MinedPattern {
         graph: pattern,
         canon,
@@ -222,11 +236,23 @@ fn evaluate_pattern(
 const EXT_SCAN_CAP: usize = 384;
 
 fn collect_extensions(parent: &MinedPattern, app: &Graph) -> Vec<Extension> {
-    let mut exts: BTreeSet<Extension> = BTreeSet::new();
+    let mut exts: std::collections::BTreeSet<Extension> = std::collections::BTreeSet::new();
     let plen = parent.graph.len();
+    // Existing pattern edges as a (src, dst) bitmask — port-insensitive,
+    // like the old linear scan.
+    let mut edge_bits = vec![0u64; (plen * plen + 63) / 64];
+    for e in &parent.graph.edges {
+        let idx = e.src.index() * plen + e.dst.index();
+        edge_bits[idx / 64] |= 1 << (idx % 64);
+    }
+    // Inverse app-node -> pattern-index map, rebuilt (sparsely) per
+    // occurrence; doubles as the occurrence-image membership test.
+    let mut inv: Vec<u32> = vec![u32::MAX; app.len()];
     for occ in parent.occurrences.iter().take(EXT_SCAN_CAP) {
-        let image: BTreeSet<NodeId> = occ.map.iter().copied().collect();
-        for (pi, &t) in occ.map.iter().enumerate() {
+        for (pi, &t) in occ.iter().enumerate() {
+            inv[t.index()] = pi as u32;
+        }
+        for (pi, &t) in occ.iter().enumerate() {
             // Incoming edges to the image node: candidate InEdge / Internal.
             for (port, src) in app.inputs_of(t).iter().enumerate() {
                 let Some(src) = *src else { continue };
@@ -234,42 +260,41 @@ fn collect_extensions(parent: &MinedPattern, app: &Graph) -> Vec<Extension> {
                 if !sop.is_compute() {
                     continue;
                 }
-                if image.contains(&src) {
+                let ps = inv[src.index()];
+                if ps != u32::MAX {
                     // Internal edge if not already in the pattern.
-                    if let Some(ps) = occ.map.iter().position(|&m| m == src) {
-                        let already = parent.graph.edges.iter().any(|e| {
-                            e.src.index() == ps && e.dst.index() == pi
+                    let idx = ps as usize * plen + pi;
+                    if edge_bits[idx / 64] >> (idx % 64) & 1 == 0 {
+                        exts.insert(Extension::Internal {
+                            pat_src: ps as usize,
+                            pat_dst: pi,
+                            port: port as u8,
                         });
-                        if !already {
-                            exts.insert(Extension::Internal {
-                                pat_src: ps,
-                                pat_dst: pi,
-                                port: port as u8,
-                            });
-                        }
                     }
                 } else {
                     exts.insert(Extension::InEdge {
                         pat_dst: pi,
                         port: port as u8,
-                        new_op: OpKey(sop.label()),
+                        new_op: sop.label_id(),
                     });
                 }
             }
             // Outgoing edges: candidate OutEdge.
             for &(dst, port) in app.outputs_of(t) {
                 let dop = app.node(dst).op;
-                if !dop.is_compute() || image.contains(&dst) {
+                if !dop.is_compute() || inv[dst.index()] != u32::MAX {
                     continue;
                 }
                 exts.insert(Extension::OutEdge {
                     pat_src: pi,
                     port,
-                    new_op: OpKey(dop.label()),
+                    new_op: dop.label_id(),
                 });
             }
         }
-        let _ = plen;
+        for &t in occ {
+            inv[t.index()] = u32::MAX;
+        }
     }
     exts.into_iter().collect()
 }
@@ -280,11 +305,11 @@ fn apply_extension(parent: &Graph, ext: &Extension) -> Graph {
     g.name = format!("{}+", parent.name);
     match *ext {
         Extension::InEdge { pat_dst, port, new_op } => {
-            let n = g.add_op(op_for_key(new_op));
+            let n = g.add_op(new_op.op());
             g.connect(n, NodeId(pat_dst as u32), port);
         }
         Extension::OutEdge { pat_src, port, new_op } => {
-            let n = g.add_op(op_for_key(new_op));
+            let n = g.add_op(new_op.op());
             g.connect(NodeId(pat_src as u32), n, port);
         }
         Extension::Internal { pat_src, pat_dst, port } => {
@@ -298,6 +323,7 @@ fn apply_extension(parent: &Graph, ext: &Extension) -> Graph {
 mod tests {
     use super::*;
     use crate::frontend::micro;
+    use std::collections::BTreeSet;
 
     #[test]
     fn fig3_mining_finds_mul_add() {
@@ -355,7 +381,7 @@ mod tests {
     fn patterns_are_unique_by_canon() {
         let mut app = crate::frontend::imaging::gaussian_blur();
         let patterns = mine(&mut app, &MinerConfig::default());
-        let mut codes: Vec<&String> = patterns.iter().map(|p| &p.canon).collect();
+        let mut codes: Vec<&CanonKey> = patterns.iter().map(|p| &p.canon).collect();
         let n = codes.len();
         codes.sort();
         codes.dedup();
@@ -371,9 +397,9 @@ mod tests {
             // Every occurrence must reference distinct app nodes with
             // matching labels.
             for occ in p.occurrences.iter().take(20) {
-                let set: BTreeSet<_> = occ.map.iter().collect();
-                assert_eq!(set.len(), occ.map.len());
-                for (pi, &t) in occ.map.iter().enumerate() {
+                let set: BTreeSet<_> = occ.iter().collect();
+                assert_eq!(set.len(), occ.len());
+                for (pi, &t) in occ.iter().enumerate() {
                     assert_eq!(
                         p.graph.node(NodeId(pi as u32)).op.label(),
                         app.node(t).op.label()
@@ -407,6 +433,31 @@ mod tests {
         };
         for p in mine(&mut app, &cfg) {
             assert!(p.graph.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn thread_width_does_not_change_results() {
+        // The parallel frontier must be bit-identical to the sequential
+        // walk: same patterns, same canon, same supports, same order.
+        let mk = |threads| {
+            let mut app = crate::frontend::imaging::gaussian_blur();
+            let cfg = MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                threads,
+                ..Default::default()
+            };
+            mine(&mut app, &cfg)
+        };
+        let seq = mk(1);
+        let par = mk(4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.canon, b.canon);
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.distinct, b.distinct);
+            assert_eq!(a.graph.edges, b.graph.edges);
         }
     }
 }

@@ -13,12 +13,34 @@ use crate::util::SplitMix64;
 /// Build the overlap graph: one vertex per occurrence (node set), an edge
 /// whenever two occurrences share an application node. Returns an adjacency
 /// list.
+///
+/// Each occurrence's node set is expanded once into a membership bitset
+/// over app node ids, so the pairwise test is an O(words) word-AND instead
+/// of a sorted-vec merge.
 pub fn overlap_graph(occ_sets: &[Vec<NodeId>]) -> Vec<Vec<usize>> {
     let n = occ_sets.len();
     let mut adj = vec![Vec::new(); n];
+    if n == 0 {
+        return adj;
+    }
+    let max_id = occ_sets
+        .iter()
+        .flat_map(|s| s.iter())
+        .map(|id| id.index())
+        .max()
+        .unwrap_or(0);
+    let words = max_id / 64 + 1;
+    let mut bits = vec![0u64; n * words];
+    for (i, s) in occ_sets.iter().enumerate() {
+        for id in s {
+            bits[i * words + id.index() / 64] |= 1 << (id.index() % 64);
+        }
+    }
     for i in 0..n {
         for j in (i + 1)..n {
-            if shares_node(&occ_sets[i], &occ_sets[j]) {
+            let overlap =
+                (0..words).any(|w| bits[i * words + w] & bits[j * words + w] != 0);
+            if overlap {
                 adj[i].push(j);
                 adj[j].push(i);
             }
@@ -27,7 +49,8 @@ pub fn overlap_graph(occ_sets: &[Vec<NodeId>]) -> Vec<Vec<usize>> {
     adj
 }
 
-/// Two sorted node sets share an element?
+/// Two sorted node sets share an element? (Reference check used by tests.)
+#[cfg(test)]
 fn shares_node(a: &[NodeId], b: &[NodeId]) -> bool {
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
@@ -154,13 +177,7 @@ mod tests {
         let a2 = pat.add_op(Op::Add);
         pat.connect(a1, a2, 0);
         let occs = find_occurrences(&mut pat, &mut app, &MatchConfig::default());
-        let sets: Vec<Vec<NodeId>> = {
-            let mut seen = std::collections::BTreeSet::new();
-            occs.iter()
-                .map(|o| o.node_set())
-                .filter(|s| seen.insert(s.clone()))
-                .collect()
-        };
+        let sets: Vec<Vec<NodeId>> = crate::ir::distinct_node_sets(&occs);
         assert_eq!(sets.len(), 3);
         assert_eq!(mis_size(&sets), 2);
     }

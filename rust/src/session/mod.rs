@@ -68,6 +68,8 @@ pub enum Stage {
 /// ties every stage result to the exact configuration that produced it.
 pub fn config_fingerprint(cfg: &DseConfig) -> u64 {
     // FNV-1a over the config's scalar fields, with extra avalanche mixing.
+    // `miner.threads` is deliberately excluded: worker width never changes
+    // results, so it must not invalidate cached stages.
     let mut h: u64 = 0xcbf29ce484222325;
     let fields = [
         cfg.miner.min_support as u64,
@@ -364,7 +366,13 @@ impl DseSession {
         if let Some(Value::Mine(v)) = self.lookup(&key) {
             return v;
         }
-        let (cfg, fp) = self.snapshot_cfg();
+        let (mut cfg, fp) = self.snapshot_cfg();
+        // The miner's parallel frontier inherits the session's worker width
+        // unless the config pins one explicitly (width never changes
+        // results — see `config_fingerprint`).
+        if cfg.miner.threads == 0 {
+            cfg.miner.threads = self.threads;
+        }
         self.counters.mine.fetch_add(1, Ordering::Relaxed);
         let v = Arc::new(dse::mine_patterns(app, &cfg));
         match self.insert(key, Value::Mine(v.clone()), fp) {
@@ -385,7 +393,7 @@ impl DseSession {
                 continue;
             }
             self.counters.rank.fetch_add(1, Ordering::Relaxed);
-            let v = Arc::new(dse::rank_mined(mined.as_ref().clone(), &cfg));
+            let v = Arc::new(dse::rank_mined(&mined, &cfg));
             return match self.insert(key, Value::Rank(v.clone()), fp) {
                 Some(Value::Rank(canon)) => canon,
                 _ => v,

@@ -1,0 +1,427 @@
+//! Differential tests for the zero-allocation matching core: the packed
+//! integer canonical codes and the iterative bitset matcher must be
+//! behaviorally indistinguishable from the pre-0.3 `String`-canon and
+//! recursive-backtracking implementations, which are reproduced here
+//! verbatim as oracles.
+
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::ir::{
+    canon_key, canonical_code, find_occurrences, Graph, MatchConfig, NodeId,
+};
+use cgra_dse::mining::{mine, MinedPattern, MinerConfig};
+use std::collections::{BTreeSet, HashMap};
+
+// ---- legacy canonical-code oracle (pre-0.3 String implementation) ------
+
+fn legacy_encode(g: &Graph, perm: &[usize]) -> String {
+    let mut inv = vec![0usize; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old] = new;
+    }
+    let mut parts: Vec<String> = Vec::with_capacity(g.len() + g.edges.len());
+    for &old in perm {
+        parts.push(g.nodes[old].op.label().to_string());
+    }
+    let mut edges: Vec<(usize, usize, u8)> = g
+        .edges
+        .iter()
+        .map(|e| {
+            let port = if g.nodes[e.dst.index()].op.commutative() {
+                u8::MAX
+            } else {
+                e.dst_port
+            };
+            (inv[e.src.index()], inv[e.dst.index()], port)
+        })
+        .collect();
+    edges.sort_unstable();
+    for (s, d, p) in edges {
+        parts.push(format!("{s}>{d}@{p}"));
+    }
+    parts.join("|")
+}
+
+fn legacy_canonical_code(g: &Graph) -> String {
+    let n = g.len();
+    if n == 0 {
+        return String::new();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| g.nodes[i].op.label());
+
+    let mut classes: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0;
+    for i in 1..=n {
+        if i == n || g.nodes[order[i]].op.label() != g.nodes[order[start]].op.label() {
+            classes.push((start, i));
+            start = i;
+        }
+    }
+
+    let mut best: Option<String> = None;
+    let mut perm = order.clone();
+    legacy_permute_classes(g, &mut perm, &classes, 0, &mut best);
+    best.unwrap()
+}
+
+fn legacy_permute_classes(
+    g: &Graph,
+    perm: &mut Vec<usize>,
+    classes: &[(usize, usize)],
+    ci: usize,
+    best: &mut Option<String>,
+) {
+    if ci == classes.len() {
+        let code = legacy_encode(g, perm);
+        if best.as_ref().map_or(true, |b| code < *b) {
+            *best = Some(code);
+        }
+        return;
+    }
+    let (lo, hi) = classes[ci];
+    legacy_heap_permute(g, perm, lo, hi, classes, ci, best);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn legacy_heap_permute(
+    g: &Graph,
+    perm: &mut Vec<usize>,
+    lo: usize,
+    hi: usize,
+    classes: &[(usize, usize)],
+    ci: usize,
+    best: &mut Option<String>,
+) {
+    if hi - lo <= 1 {
+        legacy_permute_classes(g, perm, classes, ci + 1, best);
+        return;
+    }
+    for i in lo..hi {
+        perm.swap(lo, i);
+        legacy_heap_permute(g, perm, lo + 1, hi, classes, ci, best);
+        perm.swap(lo, i);
+    }
+}
+
+// ---- legacy recursive-matcher oracle (pre-0.3 implementation) ----------
+
+fn legacy_bfs_order(pattern: &Graph) -> Option<Vec<usize>> {
+    let n = pattern.len();
+    if n == 0 {
+        return Some(vec![]);
+    }
+    let mut adj = vec![Vec::new(); n];
+    for e in &pattern.edges {
+        adj[e.src.index()].push(e.dst.index());
+        adj[e.dst.index()].push(e.src.index());
+    }
+    let mut seen = vec![false; n];
+    let mut order = vec![0usize];
+    seen[0] = true;
+    let mut head = 0;
+    while head < order.len() {
+        let u = order[head];
+        head += 1;
+        for &v in &adj[u] {
+            if !seen[v] {
+                seen[v] = true;
+                order.push(v);
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+fn legacy_ports_feasible(pattern: &Graph, target: &Graph, map: &[NodeId]) -> bool {
+    for pd in pattern.node_ids() {
+        let op = pattern.node(pd).op;
+        let in_edges: Vec<_> = pattern.edges.iter().filter(|e| e.dst == pd).collect();
+        if in_edges.is_empty() {
+            continue;
+        }
+        let td = map[pd.index()];
+        let tins = target.inputs_of(td);
+        if !op.commutative() {
+            for e in &in_edges {
+                let want = map[e.src.index()];
+                if tins.get(e.dst_port as usize).copied().flatten() != Some(want) {
+                    return false;
+                }
+            }
+        } else {
+            fn assign(
+                in_edges: &[&cgra_dse::ir::Edge],
+                tins: &[Option<NodeId>],
+                map: &[NodeId],
+                i: usize,
+                used: &mut Vec<bool>,
+            ) -> bool {
+                if i == in_edges.len() {
+                    return true;
+                }
+                let want = map[in_edges[i].src.index()];
+                for p in 0..tins.len() {
+                    if !used[p] && tins[p] == Some(want) {
+                        used[p] = true;
+                        if assign(in_edges, tins, map, i + 1, used) {
+                            used[p] = false;
+                            return true;
+                        }
+                        used[p] = false;
+                    }
+                }
+                false
+            }
+            if !assign(&in_edges, tins, map, 0, &mut vec![false; tins.len()]) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn legacy_edge_exists(target: &Graph, ts: NodeId, td: NodeId, port: u8, commutative: bool) -> bool {
+    let tins = target.inputs_of(td);
+    if commutative {
+        tins.iter().any(|&x| x == Some(ts))
+    } else {
+        tins.get(port as usize).copied().flatten() == Some(ts)
+    }
+}
+
+/// The pre-0.3 matcher: returns full maps in its emission order.
+fn legacy_find_occurrences(
+    pattern: &mut Graph,
+    target: &mut Graph,
+    cfg: &MatchConfig,
+) -> Vec<Vec<NodeId>> {
+    pattern.freeze();
+    target.freeze();
+    let order = match legacy_bfs_order(pattern) {
+        Some(o) => o,
+        None => return vec![],
+    };
+    if order.is_empty() {
+        return vec![];
+    }
+
+    let mut by_label: HashMap<&'static str, Vec<NodeId>> = HashMap::new();
+    for n in &target.nodes {
+        if n.op.is_compute() {
+            by_label.entry(n.op.label()).or_default().push(n.id);
+        }
+    }
+
+    let mut results: Vec<Vec<NodeId>> = Vec::new();
+    let mut map: Vec<Option<NodeId>> = vec![None; pattern.len()];
+    let mut used: BTreeSet<NodeId> = BTreeSet::new();
+
+    #[allow(clippy::too_many_arguments)]
+    fn backtrack(
+        pattern: &Graph,
+        target: &Graph,
+        order: &[usize],
+        depth: usize,
+        by_label: &HashMap<&'static str, Vec<NodeId>>,
+        map: &mut Vec<Option<NodeId>>,
+        used: &mut BTreeSet<NodeId>,
+        results: &mut Vec<Vec<NodeId>>,
+        cfg: &MatchConfig,
+    ) {
+        if results.len() >= cfg.max_occurrences {
+            return;
+        }
+        if depth == order.len() {
+            let full: Vec<NodeId> = map.iter().map(|m| m.unwrap()).collect();
+            if legacy_ports_feasible(pattern, target, &full) {
+                results.push(full);
+            }
+            return;
+        }
+        let p = order[depth];
+        let plabel = pattern.nodes[p].op.label();
+        let Some(cands) = by_label.get(plabel) else {
+            return;
+        };
+        'cand: for &t in cands {
+            if used.contains(&t) {
+                continue;
+            }
+            for e in &pattern.edges {
+                let (ps, pd) = (e.src.index(), e.dst.index());
+                if ps == p && map[pd].is_some() {
+                    let commut = pattern.nodes[pd].op.commutative();
+                    if !legacy_edge_exists(target, t, map[pd].unwrap(), e.dst_port, commut) {
+                        continue 'cand;
+                    }
+                } else if pd == p && map[ps].is_some() {
+                    let commut = pattern.nodes[pd].op.commutative();
+                    if !legacy_edge_exists(target, map[ps].unwrap(), t, e.dst_port, commut) {
+                        continue 'cand;
+                    }
+                }
+            }
+            map[p] = Some(t);
+            used.insert(t);
+            backtrack(
+                pattern, target, order, depth + 1, by_label, map, used, results, cfg,
+            );
+            used.remove(&t);
+            map[p] = None;
+        }
+    }
+
+    backtrack(
+        pattern,
+        target,
+        &order,
+        0,
+        &by_label,
+        &mut map,
+        &mut used,
+        &mut results,
+        cfg,
+    );
+    results
+}
+
+// ---- harness -----------------------------------------------------------
+
+fn mined_corpus() -> Vec<(String, Graph, Vec<MinedPattern>)> {
+    let mut out = Vec::new();
+    for (name, cfg) in [
+        (
+            "conv1d",
+            MinerConfig {
+                min_support: 2,
+                max_nodes: 4,
+                ..Default::default()
+            },
+        ),
+        (
+            "gaussian",
+            MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                ..Default::default()
+            },
+        ),
+        (
+            "camera",
+            MinerConfig {
+                min_support: 3,
+                max_nodes: 4,
+                max_patterns: 500,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let mut app = AppSuite::by_name(name).unwrap().graph;
+        let patterns = mine(&mut app, &cfg);
+        assert!(!patterns.is_empty(), "{name}: no patterns mined");
+        out.push((name.to_string(), app, patterns));
+    }
+    out
+}
+
+#[test]
+fn integer_canon_is_byte_identical_to_legacy_string_canon() {
+    for (name, _, patterns) in mined_corpus() {
+        let mut keys = Vec::new();
+        for p in &patterns {
+            let new_str = canonical_code(&p.graph);
+            let legacy = legacy_canonical_code(&p.graph);
+            assert_eq!(new_str, legacy, "{name}: canon mismatch");
+            assert_eq!(p.canon.render(), legacy, "{name}: mined key mismatch");
+            keys.push((p.canon.clone(), legacy));
+        }
+        // Equal keys iff the legacy canon is equal, and key order equals
+        // legacy string order (sort tie-breaks depend on it).
+        for i in 0..keys.len() {
+            for j in 0..keys.len() {
+                assert_eq!(
+                    keys[i].0 == keys[j].0,
+                    keys[i].1 == keys[j].1,
+                    "{name}: equality drift between {} and {}",
+                    keys[i].1,
+                    keys[j].1
+                );
+                assert_eq!(
+                    keys[i].0.cmp(&keys[j].0),
+                    keys[i].1.cmp(&keys[j].1),
+                    "{name}: order drift between {} and {}",
+                    keys[i].1,
+                    keys[j].1
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn canon_matches_legacy_on_induced_subgraphs() {
+    // Cover shapes the miner's growth order never constructs directly.
+    for (name, app, _) in mined_corpus() {
+        let compute: Vec<NodeId> = app
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute())
+            .map(|n| n.id)
+            .take(6)
+            .collect();
+        for w in 2..=compute.len().min(4) {
+            let sub = app.induced_subgraph(&compute[..w], "sub");
+            assert_eq!(
+                canonical_code(&sub),
+                legacy_canonical_code(&sub),
+                "{name} induced[{w}]"
+            );
+            assert_eq!(canon_key(&sub).render(), legacy_canonical_code(&sub));
+        }
+    }
+}
+
+#[test]
+fn matcher_matches_legacy_on_mined_patterns() {
+    let cfg = MatchConfig::default();
+    for (name, app, patterns) in mined_corpus() {
+        for p in &patterns {
+            let mut pat_new = p.graph.clone();
+            let mut pat_old = p.graph.clone();
+            let mut app_new = app.clone();
+            let mut app_old = app.clone();
+            let occs = find_occurrences(&mut pat_new, &mut app_new, &cfg);
+            let legacy = legacy_find_occurrences(&mut pat_old, &mut app_old, &cfg);
+
+            // Identical occurrence sequences (maps, in emission order).
+            let rows: Vec<Vec<NodeId>> = occs.iter().map(|r| r.to_vec()).collect();
+            assert_eq!(rows, legacy, "{name} pattern {}: occurrence drift", p.canon);
+
+            // Identical MNI support.
+            let legacy_mni = if legacy.is_empty() {
+                0
+            } else {
+                (0..p.graph.len())
+                    .map(|i| legacy.iter().map(|o| o[i]).collect::<BTreeSet<_>>().len())
+                    .min()
+                    .unwrap()
+            };
+            assert_eq!(p.support, legacy_mni, "{name} pattern {}: support drift", p.canon);
+
+            // Identical distinct node-sets, in first-seen order.
+            let legacy_distinct: Vec<Vec<NodeId>> = {
+                let mut seen = BTreeSet::new();
+                legacy
+                    .iter()
+                    .map(|o| {
+                        let mut s = o.clone();
+                        s.sort_unstable();
+                        s
+                    })
+                    .filter(|s| seen.insert(s.clone()))
+                    .collect()
+            };
+            assert_eq!(p.distinct, legacy_distinct, "{name} pattern {}", p.canon);
+        }
+    }
+}

@@ -120,7 +120,7 @@ fn prop_mined_occurrences_are_exact_matches() {
         let mut g = random_app(seed + 100, 4, 18);
         for p in mine(&mut g, &cfg) {
             for occ in p.occurrences.iter().take(10) {
-                for (pi, &t) in occ.map.iter().enumerate() {
+                for (pi, &t) in occ.iter().enumerate() {
                     assert_eq!(
                         p.graph.nodes[pi].op.label(),
                         g.node(t).op.label(),
@@ -191,7 +191,7 @@ fn prop_occurrences_of_extracted_subgraph_include_itself() {
         }
         let occs = find_occurrences(&mut pat, &mut g2, &MatchConfig::default());
         let found = occs.iter().any(|o| {
-            let mut s = o.node_set();
+            let mut s = o.to_vec();
             s.sort_unstable();
             s == {
                 let mut v = vec![edge.src, edge.dst];
