@@ -15,8 +15,9 @@ use cgra_dse::session::DseSession;
 use cgra_dse::util::SplitMix64;
 
 fn fresh_session(cfg: &DseConfig) -> DseSession {
+    // Every registry domain: `reproduce all` now includes the DSP figure.
     DseSession::builder()
-        .paper_suite()
+        .registry_suite()
         .config(cfg.clone())
         .build()
 }

@@ -44,9 +44,11 @@ fn fir_detect() -> Graph {
 fn main() {
     let mut graph = fir_detect();
     graph.validate().expect("valid dataflow graph");
+    // Domains are open-ended: out-of-tree apps can coin their own tag
+    // instead of reusing a registry domain.
     let app = App {
         name: "fir_detect",
-        domain: Domain::Micro,
+        domain: Domain("custom"),
         graph,
     };
     println!("custom app `{}`: {} compute ops", app.name, app.graph.compute_len());

@@ -1,16 +1,18 @@
 //! Experiment coordinator: thin renderers that turn [`DseSession`] stage
-//! results into the paper's figures and tables (§V), plus result
-//! persistence under `results/`.
+//! results into the paper's figures and tables (§V) plus the registry
+//! domain experiments, with result persistence under `results/`.
 //!
 //! All heavy lifting — mining, ranking, merging, mapping, evaluation — is
 //! computed (and memoized) by the session; a `reproduce all` run therefore
 //! mines and merges each application exactly once, no matter how many
-//! figures consume it. The pre-0.2 free functions (`run_fig8(&cfg)`, …)
-//! remain as `#[deprecated]` one-shot shims for a single PR cycle.
+//! figures consume it. The domain figures (Fig. 10, Fig. 11, and the DSP
+//! figure) are one generic engine, [`domain_fig`], parameterized by the
+//! [`crate::frontend::DomainRegistry`] descriptors — a new domain gets its
+//! experiment by declaring a `DomainFig` in the registry, no code here.
 
 use crate::arch::{hop_energy, mem_tile_cost};
 use crate::dse::{self, pe_spec_of, DseConfig, SweepPoint, VariantEval};
-use crate::frontend::{App, AppSuite};
+use crate::frontend::{App, DomainRegistry};
 use crate::mapper::DataSrc;
 use crate::power::tables;
 use crate::report::json::Json;
@@ -25,9 +27,24 @@ pub fn fig8_freqs() -> Vec<f64> {
     vec![0.6, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0, 2.2]
 }
 
-/// Every valid `reproduce` target, in canonical order.
-pub const REPRODUCE_TARGETS: [&str; 6] =
-    ["fig8", "fig9", "fig10", "fig11", "table1", "io_sweep"];
+/// Every valid `reproduce` target, in canonical order. The domain-figure
+/// targets (`fig10`, `fig11`, `fig_dsp`) come from the registry's
+/// `DomainFig` specs; a unit test pins that every registry target is
+/// listed here.
+pub const REPRODUCE_TARGETS: [&str; 7] =
+    ["fig8", "fig9", "fig10", "fig11", "fig_dsp", "table1", "io_sweep"];
+
+/// Resolve a user-supplied `reproduce` target: exact target names plus
+/// registry domain keys as aliases (`dsp` → `fig_dsp`, `imaging` →
+/// `fig10`, `ml` → `fig11`).
+pub fn resolve_target(name: &str) -> Option<&'static str> {
+    if let Some(&t) = REPRODUCE_TARGETS.iter().find(|&&t| t == name) {
+        return Some(t);
+    }
+    DomainRegistry::domain(name)
+        .and_then(|d| d.fig.as_ref())
+        .map(|f| f.target)
+}
 
 fn camera(session: &DseSession) -> crate::session::AppStages<'_> {
     session
@@ -76,14 +93,17 @@ pub fn fig9(session: &DseSession) -> String {
     s
 }
 
-/// Shared engine for Figs. 10/11: evaluate every named app of a domain on
-/// {baseline, domain PE, app-specialized PE}, fanning per-app work out
-/// over the session's pool (each app's ladder is itself cached).
+/// Shared engine for the domain figures (Fig. 10/11 and the DSP figure):
+/// evaluate every named app of a domain on {baseline, domain PE,
+/// app-specialized PE}, fanning per-app work out over the session's pool
+/// (each app's ladder is itself cached). `title` is the figure heading;
+/// the registry-driven callers pass their `DomainFig::title`.
 pub fn domain_fig(
     session: &DseSession,
     members: &[&str],
     domain_name: &str,
     per_app: usize,
+    title: &str,
 ) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
     let dom_pe = session.domain_pe(domain_name, per_app, members);
     let rows: Vec<_> = parallel_map(
@@ -107,33 +127,52 @@ pub fn domain_fig(
             .collect(),
         session.threads(),
     );
-    let title = if domain_name.contains("ip") {
-        "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)"
-    } else {
-        "Fig. 11 — ML kernels: PE ML vs PE Spec (normalized to baseline)"
-    };
     let text = report::render_domain_fig(title, domain_name, &rows);
     (text, rows)
 }
 
-fn imaging_names() -> Vec<&'static str> {
-    AppSuite::imaging().iter().map(|a| a.name).collect()
+/// Run [`domain_fig`] for a registry domain, entirely from its
+/// [`crate::frontend::DomainFig`] spec. Panics when the domain has no fig
+/// spec (micro) or its apps are not registered in the session.
+pub fn domain_fig_for(
+    session: &DseSession,
+    domain_key: &str,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    let dom = DomainRegistry::domain(domain_key)
+        .unwrap_or_else(|| panic!("unknown domain `{domain_key}`"));
+    let fig = dom
+        .fig
+        .as_ref()
+        .unwrap_or_else(|| panic!("domain `{domain_key}` drives no experiment"));
+    let names = dom.app_names();
+    domain_fig(session, &names, fig.pe_name, fig.per_app, fig.title)
 }
 
 fn ml_names() -> Vec<&'static str> {
-    AppSuite::ml().iter().map(|a| a.name).collect()
+    DomainRegistry::domain("ml").unwrap().app_names()
 }
 
+/// Fig. 10 — imaging domain: every §V-A app on {baseline, PE IP, PE Spec}.
 pub fn fig10(
     session: &DseSession,
 ) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    domain_fig(session, &imaging_names(), "pe_ip", 1)
+    domain_fig_for(session, "imaging")
 }
 
+/// Fig. 11 — ML domain: every §V-B kernel on {baseline, PE ML, PE Spec}.
 pub fn fig11(
     session: &DseSession,
 ) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    domain_fig(session, &ml_names(), "pe_ml", 1)
+    domain_fig_for(session, "ml")
+}
+
+/// The DSP-domain experiment: every DSP/audio kernel on {baseline, PE DSP,
+/// PE Spec} — the third-domain analogue of Figs. 10/11. Requires a session
+/// that registered the DSP apps (`registry_suite` or `.domain("dsp")`).
+pub fn fig_dsp(
+    session: &DseSession,
+) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
+    domain_fig_for(session, "dsp")
 }
 
 /// CGRA-level energy per op for a variant evaluation: PE core +
@@ -235,10 +274,10 @@ pub fn io_sweep(session: &DseSession) -> (String, Vec<(usize, f64, f64)>) {
     );
     for tracks in [3usize, 5, 8, 12, 16] {
         let tcfg = DseConfig { tracks, ..cfg.clone() };
-        let base = dse::evaluate_variant_impl(app, "base", &ladder[0].1, &tcfg)
+        let base = dse::evaluate_variant(app, "base", &ladder[0].1, &tcfg)
             .expect("baseline maps");
         let (vname, pe) = ladder.last().unwrap();
-        let spec = dse::evaluate_variant_impl(app, vname, pe, &tcfg).expect("spec maps");
+        let spec = dse::evaluate_variant(app, vname, pe, &tcfg).expect("spec maps");
         text.push_str(&format!(
             "{tracks:>6}   {:>8.1}   {:>11.1}   {:.2}x
 ",
@@ -260,8 +299,10 @@ specialized PEs internalize constants into configuration registers \
 }
 
 /// Run the named experiments over one session and bundle the results.
-/// Valid targets are [`REPRODUCE_TARGETS`]; unknown targets panic (the CLI
-/// validates first).
+/// Valid targets are [`REPRODUCE_TARGETS`] plus any registry domain's fig
+/// target; unknown targets panic (the CLI validates first). Domain-figure
+/// targets (`fig10`, `fig11`, `fig_dsp`, …) are resolved through the
+/// registry, so a new domain's experiment needs no arm here.
 pub fn reproduce(session: &DseSession, targets: &[&str]) -> SessionReport {
     let mut rep = SessionReport::new(session);
     for &t in targets {
@@ -274,14 +315,6 @@ pub fn reproduce(session: &DseSession, targets: &[&str]) -> SessionReport {
                 let text = fig9(session);
                 rep.push("fig9", text, Json::Null);
             }
-            "fig10" => {
-                let (text, rows) = fig10(session);
-                rep.push("fig10", text, sjson::domain_json(&rows));
-            }
-            "fig11" => {
-                let (text, rows) = fig11(session);
-                rep.push("fig11", text, sjson::domain_json(&rows));
-            }
             "table1" => {
                 let (text, rows) = table1(session);
                 rep.push("table1", text, sjson::table1_json(&rows));
@@ -290,94 +323,18 @@ pub fn reproduce(session: &DseSession, targets: &[&str]) -> SessionReport {
                 let (text, rows) = io_sweep(session);
                 rep.push("io_sweep", text, sjson::io_sweep_json(&rows));
             }
-            other => panic!("unknown reproduce target `{other}`"),
+            other => {
+                let dom = DomainRegistry::domains()
+                    .iter()
+                    .find(|d| d.fig.as_ref().map_or(false, |f| f.target == other))
+                    .unwrap_or_else(|| panic!("unknown reproduce target `{other}`"));
+                let fig = dom.fig.as_ref().unwrap();
+                let (text, rows) = domain_fig_for(session, dom.key);
+                rep.push(fig.target, text, sjson::domain_json(fig.pe_name, &rows));
+            }
         }
     }
     rep
-}
-
-fn one_shot(cfg: &DseConfig) -> DseSession {
-    DseSession::builder()
-        .paper_suite()
-        .config(cfg.clone())
-        .build()
-}
-
-/// Fig. 8 over a throwaway session.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::fig8(&session)"
-)]
-pub fn run_fig8(cfg: &DseConfig) -> (String, Vec<(String, Vec<SweepPoint>)>) {
-    fig8(&one_shot(cfg))
-}
-
-/// Fig. 9 over a throwaway session.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::fig9(&session)"
-)]
-pub fn run_fig9(cfg: &DseConfig) -> String {
-    fig9(&one_shot(cfg))
-}
-
-/// Figs. 10/11 engine over a throwaway session of the given apps.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::domain_fig(&session, ...)"
-)]
-pub fn run_domain_fig(
-    apps: &[App],
-    domain_name: &str,
-    per_app: usize,
-    cfg: &DseConfig,
-) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    let session = DseSession::builder()
-        .apps(apps.to_vec())
-        .config(cfg.clone())
-        .build();
-    let names: Vec<&str> = apps.iter().map(|a| a.name).collect();
-    domain_fig(&session, &names, domain_name, per_app)
-}
-
-/// Fig. 10 over a throwaway session.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::fig10(&session)"
-)]
-pub fn run_fig10(
-    cfg: &DseConfig,
-) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    fig10(&one_shot(cfg))
-}
-
-/// Fig. 11 over a throwaway session.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::fig11(&session)"
-)]
-pub fn run_fig11(
-    cfg: &DseConfig,
-) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
-    fig11(&one_shot(cfg))
-}
-
-/// Table I over a throwaway session.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::table1(&session)"
-)]
-pub fn run_table1(cfg: &DseConfig) -> (String, Vec<Table1Row>) {
-    table1(&one_shot(cfg))
-}
-
-/// I/O sweep over a throwaway session.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession once and call coordinator::io_sweep(&session)"
-)]
-pub fn run_io_sweep(cfg: &DseConfig) -> (String, Vec<(usize, f64, f64)>) {
-    io_sweep(&one_shot(cfg))
 }
 
 /// Persist a report under `results/`.
@@ -458,5 +415,63 @@ mod tests {
         assert_eq!(s.stage_computes(Stage::Mine), 1);
         assert_eq!(s.stage_computes(Stage::Rank), 1);
         assert_eq!(s.stage_computes(Stage::Variants), 1);
+    }
+
+    #[test]
+    fn every_registry_fig_target_is_a_reproduce_target() {
+        for d in DomainRegistry::domains() {
+            if let Some(fig) = &d.fig {
+                assert!(
+                    REPRODUCE_TARGETS.contains(&fig.target),
+                    "registry target `{}` missing from REPRODUCE_TARGETS",
+                    fig.target
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_target_accepts_names_and_domain_keys() {
+        assert_eq!(resolve_target("fig8"), Some("fig8"));
+        assert_eq!(resolve_target("fig_dsp"), Some("fig_dsp"));
+        assert_eq!(resolve_target("dsp"), Some("fig_dsp"));
+        assert_eq!(resolve_target("imaging"), Some("fig10"));
+        assert_eq!(resolve_target("ml"), Some("fig11"));
+        assert_eq!(resolve_target("micro"), None);
+        assert_eq!(resolve_target("nope"), None);
+    }
+
+    #[test]
+    fn fig_dsp_reports_specialized_vs_baseline() {
+        use crate::session::Stage;
+        let s = DseSession::builder()
+            .registry_suite()
+            .config(cfg())
+            .build();
+        let (text, rows) = fig_dsp(&s);
+        assert!(text.contains("PE DSP"), "{text}");
+        assert_eq!(rows.len(), 4);
+        // The DSP apps are mined exactly once for the whole figure (the
+        // domain merge and every ladder share the cached rank stage).
+        assert_eq!(s.stage_computes(Stage::Mine), 4);
+        assert_eq!(s.stage_computes(Stage::Domain), 1);
+        for (app, base, dom, spec) in &rows {
+            // The merged PE DSP must beat the generic baseline on energy
+            // for every member (the Fig. 10/11 shape), and the per-app
+            // specialized PE must not lose to it badly.
+            assert!(
+                dom.pe_energy_per_op < base.pe_energy_per_op,
+                "{app}: PE DSP energy {} !< baseline {}",
+                dom.pe_energy_per_op,
+                base.pe_energy_per_op
+            );
+            assert!(
+                dom.total_area < base.total_area * 1.05,
+                "{app}: PE DSP area {} vs baseline {}",
+                dom.total_area,
+                base.total_area
+            );
+            assert!(spec.pe_energy_per_op > 0.0, "{app}");
+        }
     }
 }

@@ -12,7 +12,7 @@
 //!    (the Fig. 2c axis)?
 
 use super::{
-    evaluate_variant_impl, rank_subgraphs_impl, variant_ladder_impl, DseConfig, VariantEval,
+    evaluate_variant, rank_subgraphs, variant_ladder, DseConfig, VariantEval,
 };
 use crate::frontend::App;
 use crate::ir::Graph;
@@ -46,7 +46,7 @@ impl AblationRow {
 /// (support), ignoring MIS — the §III-B ablation.
 fn ladder_frequency_ranked(app: &App, cfg: &DseConfig) -> Option<PeSpec> {
     let mut graph = app.graph.clone();
-    let mut ranked = rank_subgraphs_impl(&mut graph, cfg);
+    let mut ranked = rank_subgraphs(&mut graph, cfg);
     // Re-sort by support only (what a miner without MIS analysis would do).
     ranked.sort_by(|a, b| {
         b.pattern
@@ -67,7 +67,7 @@ fn ladder_frequency_ranked(app: &App, cfg: &DseConfig) -> Option<PeSpec> {
 /// ablation.
 fn ladder_topk(app: &App, cfg: &DseConfig) -> Option<PeSpec> {
     let mut graph = app.graph.clone();
-    let ranked = rank_subgraphs_impl(&mut graph, cfg);
+    let ranked = rank_subgraphs(&mut graph, cfg);
     let chosen: Vec<Graph> = ranked
         .iter()
         .take(cfg.max_merged)
@@ -97,9 +97,9 @@ pub fn run_ablation(app: &App, cfg: &DseConfig) -> Vec<AblationRow> {
     let mut rows = Vec::new();
 
     // Reference: the real flow (MIS ranking + complementary selection).
-    let ladder: Vec<VariantEval> = variant_ladder_impl(app, cfg)
+    let ladder: Vec<VariantEval> = variant_ladder(app, cfg)
         .into_iter()
-        .filter_map(|(name, pe)| evaluate_variant_impl(app, &name, &pe, cfg))
+        .filter_map(|(name, pe)| evaluate_variant(app, &name, &pe, cfg))
         .collect();
     let base = ladder.first().expect("baseline evaluates");
     rows.push(AblationRow::from_eval("baseline PE", base));
@@ -108,14 +108,14 @@ pub fn run_ablation(app: &App, cfg: &DseConfig) -> Vec<AblationRow> {
 
     // Ablation 1: frequency-only ranking.
     if let Some(pe) = ladder_frequency_ranked(app, cfg) {
-        if let Some(ve) = evaluate_variant_impl(app, "freq_ranked", &pe, cfg) {
+        if let Some(ve) = evaluate_variant(app, "freq_ranked", &pe, cfg) {
             rows.push(AblationRow::from_eval("frequency-only ranking", &ve));
         }
     }
 
     // Ablation 2: top-k selection.
     if let Some(pe) = ladder_topk(app, cfg) {
-        if let Some(ve) = evaluate_variant_impl(app, "topk", &pe, cfg) {
+        if let Some(ve) = evaluate_variant(app, "topk", &pe, cfg) {
             rows.push(AblationRow::from_eval("top-k selection (no marginal)", &ve));
         }
     }
@@ -123,7 +123,7 @@ pub fn run_ablation(app: &App, cfg: &DseConfig) -> Vec<AblationRow> {
     // Ablation 3: KCM disabled on the full-flow PE (re-cost the same
     // mapped design without constant-coefficient multipliers).
     {
-        let ladder_specs = variant_ladder_impl(app, cfg);
+        let ladder_specs = variant_ladder(app, cfg);
         let (_, pe) = ladder_specs.last().expect("ladder");
         let mut graph = app.graph.clone();
         if let Ok(mapping) = map_app(&mut graph, pe) {

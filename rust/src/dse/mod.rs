@@ -4,11 +4,13 @@
 //! (PE IP, PE ML), map each application onto each variant, and evaluate
 //! area / energy / frequency.
 //!
-//! The free functions in this module are the *primitives*; the supported
-//! entry point is [`crate::session::DseSession`], which runs them as a
-//! staged pipeline with per-stage memoization and parallel fan-out. The
-//! old free-function API is kept as `#[deprecated]` shims for one PR cycle
-//! (see DESIGN.md §4 for the migration table).
+//! The free functions in this module are the *stage primitives* — pure,
+//! sequential, and config-driven. The supported entry point is
+//! [`crate::session::DseSession`], which runs them as a staged pipeline
+//! with per-stage memoization and parallel fan-out; the primitives stay
+//! public for one-shot composition (the golden tests reconstruct the
+//! sequential pipeline from them to pin the session's byte-identity — see
+//! `rust/tests/golden.rs` and DESIGN.md §4).
 
 pub mod ablation;
 
@@ -24,6 +26,7 @@ use crate::power::{evaluate_pe, interconnect_per_pe, synthesis_scale, PeEval};
 /// DSE-wide configuration.
 #[derive(Debug, Clone)]
 pub struct DseConfig {
+    /// Frequent-subgraph miner configuration (§III-A).
     pub miner: MinerConfig,
     /// Maximum merged subgraphs (PE 2..=1+max_merged).
     pub max_merged: usize,
@@ -32,6 +35,7 @@ pub struct DseConfig {
     pub max_pattern_inputs: usize,
     /// Routing tracks for interconnect costing.
     pub tracks: usize,
+    /// Seed for the randomized backend passes (placement annealing).
     pub seed: u64,
 }
 
@@ -50,7 +54,9 @@ impl Default for DseConfig {
 /// A mined pattern with its MIS analysis (the paper's ranking signal).
 #[derive(Debug, Clone)]
 pub struct RankedPattern {
+    /// The mined frequent subgraph and its occurrences.
     pub pattern: MinedPattern,
+    /// Size of a maximal independent set of non-overlapping occurrences.
     pub mis_size: usize,
     /// PE activations saved if this pattern becomes a PE mode:
     /// `mis_size x (real ops - 1)` — the §III-C ranking refined by how many
@@ -58,19 +64,21 @@ pub struct RankedPattern {
     pub savings: usize,
 }
 
-/// Stage 1 — mine the frequent subgraphs of an application (§III-A).
+/// Stage 1 primitive — mine the frequent subgraphs of an application
+/// (§III-A).
 ///
 /// Clones the graph so the caller's `App` stays untouched; the miner
-/// freezes its working copy.
-pub(crate) fn mine_patterns(app: &App, cfg: &DseConfig) -> Vec<MinedPattern> {
+/// freezes its working copy. Session equivalent:
+/// `session.app(name).mine()`.
+pub fn mine_patterns(app: &App, cfg: &DseConfig) -> Vec<MinedPattern> {
     let mut graph = app.graph.clone();
     mine(&mut graph, &cfg.miner)
 }
 
-/// Stage 2 — filter + MIS-rank already-mined patterns (§III-B/C). Takes a
-/// slice so callers sharing a cached mine stage clone only the (few)
-/// patterns that survive the filters.
-pub(crate) fn rank_mined(mined: &[MinedPattern], cfg: &DseConfig) -> Vec<RankedPattern> {
+/// Stage 2 primitive — filter + MIS-rank already-mined patterns
+/// (§III-B/C). Takes a slice so callers sharing a cached mine stage clone
+/// only the (few) patterns that survive the filters.
+pub fn rank_mined(mined: &[MinedPattern], cfg: &DseConfig) -> Vec<RankedPattern> {
     let mut ranked: Vec<RankedPattern> = mined
         .iter()
         .filter(|p| p.graph.len() >= 2)
@@ -105,17 +113,10 @@ pub(crate) fn rank_mined(mined: &[MinedPattern], cfg: &DseConfig) -> Vec<RankedP
     ranked
 }
 
-pub(crate) fn rank_subgraphs_impl(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
-    rank_mined(&mine(app, &cfg.miner), cfg)
-}
-
-/// Mine + MIS-rank the interesting subgraphs of an application (§III).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession and call session.app(name).ranked() instead"
-)]
+/// Mine + MIS-rank the interesting subgraphs of an application (§III) in
+/// one sequential pass. Session equivalent: `session.app(name).ranked()`.
 pub fn rank_subgraphs(app: &mut Graph, cfg: &DseConfig) -> Vec<RankedPattern> {
-    rank_subgraphs_impl(app, cfg)
+    rank_mined(&mine(app, &cfg.miner), cfg)
 }
 
 fn has_real_op(g: &Graph) -> bool {
@@ -224,8 +225,11 @@ fn single_op_subs(app: &Graph) -> Vec<Graph> {
     subs
 }
 
-/// Stage 3 — build the §V variant ladder from already-ranked subgraphs.
-pub(crate) fn ladder_from_ranked(
+/// Stage 3 primitive — build the §V variant ladder from already-ranked
+/// subgraphs: `[("base", …), ("pe1", …), ("pe2", …), … up to pe5]`.
+/// PE k+1 merges the k top-ranked complementary subgraphs with the app's
+/// single-op modes (so every app node stays mappable).
+pub fn ladder_from_ranked(
     app: &App,
     ranked: &[RankedPattern],
     cfg: &DseConfig,
@@ -250,28 +254,19 @@ pub(crate) fn ladder_from_ranked(
     out
 }
 
-pub(crate) fn variant_ladder_impl(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
+/// Mine, rank, and build the §V variant ladder for one application in one
+/// sequential pass. Session equivalent: `session.app(name).variants()`.
+pub fn variant_ladder(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
     let mut graph = app.graph.clone();
-    let ranked = rank_subgraphs_impl(&mut graph, cfg);
+    let ranked = rank_subgraphs(&mut graph, cfg);
     ladder_from_ranked(app, &ranked, cfg)
 }
 
-/// Build the §V variant ladder for one application:
-/// `[("base", …), ("pe1", …), ("pe2", …), … up to pe5]`.
-///
-/// PE k+1 merges the k top-MIS-ranked subgraphs with the app's single-op
-/// modes (so every app node stays mappable).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession and call session.app(name).variants() instead"
-)]
-pub fn variant_ladder(app: &App, cfg: &DseConfig) -> Vec<(String, PeSpec)> {
-    variant_ladder_impl(app, cfg)
-}
-
 /// Cross-application domain-PE merge from already-ranked per-app subgraph
-/// lists (`apps` and `ranked` are parallel slices).
-pub(crate) fn domain_pe_from_ranked(
+/// lists (`apps` and `ranked` are parallel slices): the top `per_app`
+/// complementary subgraphs of every member plus the union of all used
+/// single ops (PE IP / PE ML / PE DSP of the domain figures).
+pub fn domain_pe_from_ranked(
     apps: &[&App],
     ranked: &[&[RankedPattern]],
     name: &str,
@@ -302,17 +297,16 @@ pub(crate) fn domain_pe_from_ranked(
     PeSpec::from_subgraphs(name, &subs)
 }
 
-pub(crate) fn domain_pe_impl(
-    apps: &[App],
-    name: &str,
-    per_app: usize,
-    cfg: &DseConfig,
-) -> PeSpec {
+/// A cross-application domain PE (PE IP / PE ML / PE DSP of the domain
+/// figures), mined and ranked sequentially from scratch. Session
+/// equivalent: `session.domain_pe(name, per_app, &member_names)` (which
+/// reuses each member's cached ranking).
+pub fn domain_pe(apps: &[App], name: &str, per_app: usize, cfg: &DseConfig) -> PeSpec {
     let ranked: Vec<Vec<RankedPattern>> = apps
         .iter()
         .map(|app| {
             let mut g = app.graph.clone();
-            rank_subgraphs_impl(&mut g, cfg)
+            rank_subgraphs(&mut g, cfg)
         })
         .collect();
     let app_refs: Vec<&App> = apps.iter().collect();
@@ -320,22 +314,17 @@ pub(crate) fn domain_pe_impl(
     domain_pe_from_ranked(&app_refs, &ranked_refs, name, per_app)
 }
 
-/// A cross-application domain PE (PE IP / PE ML of §V): merge the top
-/// `per_app` subgraphs of every app plus the union of all used single ops.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession and call session.domain_pe(name, per_app, &app_names) instead"
-)]
-pub fn domain_pe(apps: &[App], name: &str, per_app: usize, cfg: &DseConfig) -> PeSpec {
-    domain_pe_impl(apps, name, per_app, cfg)
-}
-
-/// Evaluation of one (app, PE) pair — the numbers behind Figs. 8/10/11.
+/// Evaluation of one (app, PE) pair — the numbers behind the figure
+/// experiments (Fig. 8/10/11 and the DSP domain figure).
 #[derive(Debug, Clone)]
 pub struct VariantEval {
+    /// Ladder variant name (`"base"`, `"pe2"`, …) or domain-PE name.
     pub variant: String,
+    /// The evaluated application's name.
     pub app: String,
+    /// PE-level area/energy/timing evaluation.
     pub eval: PeEval,
+    /// The (post-prune) covering of the app graph by PE modes.
     pub mapping: Mapping,
     /// PEs used by the app.
     pub n_pes: usize,
@@ -349,9 +338,11 @@ pub struct VariantEval {
     pub fmax_ghz: f64,
 }
 
-/// Stage 4 — map and evaluate an app on a PE. Returns `None` when the app
-/// cannot be covered by the PE's rules.
-pub(crate) fn evaluate_variant_impl(
+/// Stage 4 primitive — map and evaluate an app on a PE. Returns `None`
+/// when the app cannot be covered by the PE's modes. Session equivalents:
+/// `session.app(name).evaluated(variant)` for ladder variants,
+/// `.evaluate_pe(variant, &pe)` for external (e.g. domain) PEs.
+pub fn evaluate_variant(
     app: &App,
     variant: &str,
     pe: &PeSpec,
@@ -405,35 +396,25 @@ pub(crate) fn evaluate_variant_impl(
     })
 }
 
-/// Map and evaluate an app on a PE. Returns `None` when the app cannot be
-/// covered by the PE's rules.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession and call session.app(name).evaluated(variant) \
-            (or .evaluate_pe(variant, &pe) for an external PeSpec) instead"
-)]
-pub fn evaluate_variant(
-    app: &App,
-    variant: &str,
-    pe: &PeSpec,
-    cfg: &DseConfig,
-) -> Option<VariantEval> {
-    evaluate_variant_impl(app, variant, pe, cfg)
-}
-
 /// One row of the Fig. 8 frequency sweep.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Ladder variant the point belongs to.
     pub variant: String,
+    /// Synthesis target frequency, GHz.
     pub freq_ghz: f64,
     /// Energy per op at this synthesis frequency (fJ); `None` = cannot
     /// close timing.
     pub energy_per_op: Option<f64>,
+    /// Total active-PE area at this frequency (µm²); `None` = cannot
+    /// close timing.
     pub total_area: Option<f64>,
 }
 
-/// Stage 5 — sweep a variant evaluation across synthesis frequencies.
-pub(crate) fn frequency_sweep_impl(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
+/// Stage 5 primitive — sweep a variant evaluation across synthesis
+/// frequencies (Fig. 8). Session equivalent:
+/// `session.app(name).sweep(&freqs)`.
+pub fn frequency_sweep(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
     freqs
         .iter()
         .map(|&f| {
@@ -448,31 +429,15 @@ pub(crate) fn frequency_sweep_impl(ve: &VariantEval, freqs: &[f64]) -> Vec<Sweep
         .collect()
 }
 
-/// Sweep a variant evaluation across synthesis frequencies (Fig. 8).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession and call session.app(name).sweep(&freqs) instead"
-)]
-pub fn frequency_sweep(ve: &VariantEval, freqs: &[f64]) -> Vec<SweepPoint> {
-    frequency_sweep_impl(ve, freqs)
-}
-
-/// Sequential ladder evaluation (the session fans the same work out over
-/// the worker pool; results are identical either way).
-pub(crate) fn evaluate_ladder_impl(app: &App, cfg: &DseConfig) -> Vec<VariantEval> {
-    variant_ladder_impl(app, cfg)
-        .into_iter()
-        .filter_map(|(name, pe)| evaluate_variant_impl(app, &name, &pe, cfg))
-        .collect()
-}
-
-/// Full per-app ladder evaluation: the engine behind `reproduce fig8/fig9`.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a DseSession and call session.app(name).ladder() instead"
-)]
+/// Sequential full per-app ladder evaluation — unmappable variants are
+/// dropped. Session equivalent: `session.app(name).ladder()` (which fans
+/// the variant evaluations out over the worker pool; results are
+/// bit-identical either way).
 pub fn evaluate_ladder(app: &App, cfg: &DseConfig) -> Vec<VariantEval> {
-    evaluate_ladder_impl(app, cfg)
+    variant_ladder(app, cfg)
+        .into_iter()
+        .filter_map(|(name, pe)| evaluate_variant(app, &name, &pe, cfg))
+        .collect()
 }
 
 /// Pick the most specialized variant that did not increase area or energy
@@ -520,7 +485,7 @@ mod tests {
     fn ranked_subgraphs_sorted_by_savings() {
         let mut app = AppSuite::by_name("gaussian").unwrap().graph;
         let cfg = fast_cfg();
-        let ranked = rank_subgraphs_impl(&mut app, &cfg);
+        let ranked = rank_subgraphs(&mut app, &cfg);
         assert!(!ranked.is_empty());
         for w in ranked.windows(2) {
             assert!(w[0].savings >= w[1].savings);
@@ -534,7 +499,7 @@ mod tests {
     #[test]
     fn ladder_has_base_pe1_and_specializations() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let ladder = variant_ladder_impl(&app, &fast_cfg());
+        let ladder = variant_ladder(&app, &fast_cfg());
         assert!(
             ladder.len() >= 3,
             "ladder: {:?}",
@@ -549,7 +514,7 @@ mod tests {
     fn gaussian_specialization_improves_energy_and_area() {
         let app = AppSuite::by_name("gaussian").unwrap();
         let cfg = fast_cfg();
-        let evals = evaluate_ladder_impl(&app, &cfg);
+        let evals = evaluate_ladder(&app, &cfg);
         assert!(evals.len() >= 3);
         let base = &evals[0];
         let last = pe_spec_of(&evals);
@@ -572,7 +537,7 @@ mod tests {
     #[test]
     fn specialized_fmax_at_least_baseline() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let evals = evaluate_ladder_impl(&app, &fast_cfg());
+        let evals = evaluate_ladder(&app, &fast_cfg());
         let base = &evals[0];
         let spec = pe_spec_of(&evals);
         assert!(spec.fmax_ghz >= base.fmax_ghz * 0.95);
@@ -581,8 +546,8 @@ mod tests {
     #[test]
     fn frequency_sweep_has_wall() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let evals = evaluate_ladder_impl(&app, &fast_cfg());
-        let pts = frequency_sweep_impl(&evals[0], &[0.8, 1.2, 5.0]);
+        let evals = evaluate_ladder(&app, &fast_cfg());
+        let pts = frequency_sweep(&evals[0], &[0.8, 1.2, 5.0]);
         assert!(pts[0].energy_per_op.is_some());
         assert!(pts[2].energy_per_op.is_none(), "5 GHz must be infeasible");
     }
@@ -591,9 +556,9 @@ mod tests {
     fn domain_pe_maps_all_imaging_apps() {
         let apps = AppSuite::imaging();
         let cfg = fast_cfg();
-        let pe_ip = domain_pe_impl(&apps, "pe_ip", 1, &cfg);
+        let pe_ip = domain_pe(&apps, "pe_ip", 1, &cfg);
         for app in &apps {
-            let ve = evaluate_variant_impl(app, "pe_ip", &pe_ip, &cfg);
+            let ve = evaluate_variant(app, "pe_ip", &pe_ip, &cfg);
             assert!(ve.is_some(), "{} failed to map on PE IP", app.name);
         }
     }
@@ -602,34 +567,9 @@ mod tests {
     fn pattern_input_cap_respected() {
         let mut app = AppSuite::by_name("gaussian").unwrap().graph;
         let cfg = fast_cfg();
-        for r in rank_subgraphs_impl(&mut app, &cfg) {
+        for r in rank_subgraphs(&mut app, &cfg) {
             assert!(external_inputs_of(&r.pattern.graph) <= cfg.max_pattern_inputs);
         }
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_impls() {
-        // The one-PR-cycle migration shims must stay behaviorally identical
-        // to the stage impls they wrap.
-        let app = AppSuite::by_name("gaussian").unwrap();
-        let cfg = fast_cfg();
-        let mut g1 = app.graph.clone();
-        let mut g2 = app.graph.clone();
-        let a = rank_subgraphs(&mut g1, &cfg);
-        let b = rank_subgraphs_impl(&mut g2, &cfg);
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.pattern.canon, y.pattern.canon);
-            assert_eq!(x.savings, y.savings);
-        }
-        let l1 = evaluate_ladder(&app, &cfg);
-        let l2 = evaluate_ladder_impl(&app, &cfg);
-        assert_eq!(l1.len(), l2.len());
-        for (x, y) in l1.iter().zip(&l2) {
-            assert_eq!(x.variant, y.variant);
-            assert_eq!(x.total_area.to_bits(), y.total_area.to_bits());
-            assert_eq!(x.pe_energy_per_op.to_bits(), y.pe_energy_per_op.to_bits());
-        }
-    }
 }

@@ -1,0 +1,267 @@
+//! DSP/audio kernels — the third evaluation domain, extending the paper's
+//! imaging + ML suites (§V) with the streaming-DSP workloads embedded CGRAs
+//! typically target (cf. STRELA, Vázquez et al., 2024): a radix-2 FFT
+//! butterfly stage, a biquad IIR cascade, a cross-correlation window, and a
+//! decimating symmetric FIR.
+//!
+//! All graphs follow the repo's per-output-sample convention (the audio
+//! analogue of the imaging apps' per-output-pixel granularity): every
+//! `Input` is one sample of the current window / delay line, every `Output`
+//! one produced sample. Coefficients are Q6 fixed-point configuration
+//! constants (Fig. 2c), products renormalized with arithmetic shifts —
+//! exactly the shape a Halide/CoreIR-style lowering of these kernels
+//! produces in 16-bit integer arithmetic.
+
+use super::imaging::adder_chain;
+use crate::ir::{Graph, NodeId, Op};
+
+/// Q6 twiddle factors `W_8^k = e^{-2πik/8}` for `k = 0..4`, stored as
+/// `(Re, Im)` scaled by 64 — the constants of one 8-point DIT stage.
+pub const TWIDDLES_Q6: [(i64, i64); 4] = [(64, 0), (45, -45), (0, -64), (-45, -45)];
+
+/// Per-section Q6 biquad coefficients `[b0, b1, b2, a1, a2]`. Every `b0`
+/// is 64 (unity) so a zero-state cascade passes the dry signal through
+/// exactly — the property the unit tests pin.
+pub const BIQUAD_SECTIONS_Q6: [[i64; 5]; 3] = [
+    [64, 20, 8, -22, 11],
+    [64, 24, 10, -24, 12],
+    [64, 28, 12, -26, 13],
+];
+
+/// Symmetric half of the 16-tap lowpass prototype (Q6); tap `k` and tap
+/// `15-k` share coefficient `FIR_H_Q6[k]` (DC gain `2·Σh = 600`).
+pub const FIR_H_Q6: [i64; 8] = [2, -4, -6, 12, 38, 70, 90, 98];
+
+/// One radix-2 DIT butterfly stage of an 8-point FFT: four butterflies,
+/// one per twiddle `W_8^k`.
+///
+/// Inputs (per butterfly `b`, in binding order): `a_b.re, a_b.im, b_b.re,
+/// b_b.im`. Outputs (per butterfly): `y0 = a + W·b`, `y1 = a − W·b` as
+/// `re, im` pairs — 16 outputs total. The complex twiddle product is four
+/// Q6 multiplies renormalized by `>>6`; butterfly 0 (`W = 1`) is exact:
+/// `y0 = a + b`, `y1 = a − b`.
+pub fn fft_butterfly_stage() -> Graph {
+    let mut g = Graph::new("fft");
+    for b in 0..4 {
+        let ar = g.add_node(Op::Input, format!("a{b}re"));
+        let ai = g.add_node(Op::Input, format!("a{b}im"));
+        let br = g.add_node(Op::Input, format!("b{b}re"));
+        let bi = g.add_node(Op::Input, format!("b{b}im"));
+        let (wr, wi) = TWIDDLES_Q6[b];
+        let wrc = g.add_node(Op::Const(wr), format!("w{b}re"));
+        let wic = g.add_node(Op::Const(wi), format!("w{b}im"));
+        // t = W·b (complex): t.re = br·wr − bi·wi, t.im = br·wi + bi·wr.
+        let brwr = g.add(Op::Mul, &[br, wrc]);
+        let biwi = g.add(Op::Mul, &[bi, wic]);
+        let brwi = g.add(Op::Mul, &[br, wic]);
+        let biwr = g.add(Op::Mul, &[bi, wrc]);
+        let tr_raw = g.add(Op::Sub, &[brwr, biwi]);
+        let ti_raw = g.add(Op::Add, &[brwi, biwr]);
+        let s1 = g.add_op(Op::Const(6));
+        let tr = g.add(Op::Ashr, &[tr_raw, s1]);
+        let s2 = g.add_op(Op::Const(6));
+        let ti = g.add(Op::Ashr, &[ti_raw, s2]);
+        let y0r = g.add(Op::Add, &[ar, tr]);
+        let y0i = g.add(Op::Add, &[ai, ti]);
+        let y1r = g.add(Op::Sub, &[ar, tr]);
+        let y1i = g.add(Op::Sub, &[ai, ti]);
+        for out in [y0r, y0i, y1r, y1i] {
+            g.add(Op::Output, &[out]);
+        }
+    }
+    g
+}
+
+/// Cascade of three direct-form-I biquad IIR sections, per output sample.
+///
+/// Per-sample granularity means the delay line enters as inputs: binding
+/// order is the live sample `x`, then per section `k` its delayed inputs
+/// `x1, x2` and delayed outputs `y1, y2`. Each section computes
+/// `y = (b0·x0 + b1·x1 + b2·x2 − a1·y1 − a2·y2) >> 6` and feeds the next
+/// section's `x0`. With all-zero state the cascade is an exact passthrough
+/// (`b0 = 64` in every section of [`BIQUAD_SECTIONS_Q6`]).
+pub fn biquad_cascade() -> Graph {
+    let mut g = Graph::new("biquad");
+    let mut x0 = g.add_node(Op::Input, "x");
+    for (k, c) in BIQUAD_SECTIONS_Q6.iter().enumerate() {
+        let x1 = g.add_node(Op::Input, format!("s{k}x1"));
+        let x2 = g.add_node(Op::Input, format!("s{k}x2"));
+        let y1 = g.add_node(Op::Input, format!("s{k}y1"));
+        let y2 = g.add_node(Op::Input, format!("s{k}y2"));
+        let b0c = g.add_node(Op::Const(c[0]), format!("s{k}b0"));
+        let t0 = g.add(Op::Mul, &[x0, b0c]);
+        let b1c = g.add_node(Op::Const(c[1]), format!("s{k}b1"));
+        let t1 = g.add(Op::Mul, &[x1, b1c]);
+        let b2c = g.add_node(Op::Const(c[2]), format!("s{k}b2"));
+        let t2 = g.add(Op::Mul, &[x2, b2c]);
+        let a1c = g.add_node(Op::Const(c[3]), format!("s{k}a1"));
+        let f1 = g.add(Op::Mul, &[y1, a1c]);
+        let a2c = g.add_node(Op::Const(c[4]), format!("s{k}a2"));
+        let f2 = g.add(Op::Mul, &[y2, a2c]);
+        let ff = adder_chain(&mut g, &[t0, t1, t2]);
+        let s = g.add(Op::Sub, &[ff, f1]);
+        let s = g.add(Op::Sub, &[s, f2]);
+        let sh = g.add_op(Op::Const(6));
+        x0 = g.add(Op::Ashr, &[s, sh]);
+    }
+    g.add(Op::Output, &[x0]);
+    g
+}
+
+/// Cross-correlation of two 16-sample windows at one lag:
+/// `out = |(Σ x_k·y_k) >> 5|`.
+///
+/// Unlike the FIR/conv kernels, both multiplicands are *live* inputs
+/// (binding order `x0, y0, x1, y1, …`), so mining sees a genuinely
+/// different multiply-accumulate shape (no constant-coefficient
+/// specialization applies); the magnitude output is what a correlation
+/// peak detector consumes.
+pub fn cross_correlation() -> Graph {
+    let mut g = Graph::new("xcorr");
+    let mut terms = Vec::new();
+    for k in 0..16 {
+        let x = g.add_node(Op::Input, format!("x{k}"));
+        let y = g.add_node(Op::Input, format!("y{k}"));
+        terms.push(g.add(Op::Mul, &[x, y]));
+    }
+    let sum = adder_chain(&mut g, &terms);
+    let sh = g.add_node(Op::Const(5), "norm");
+    let r = g.add(Op::Ashr, &[sum, sh]);
+    let out = g.add(Op::Abs, &[r]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+/// Decimate-by-2 symmetric 16-tap FIR with an output saturator, per
+/// output sample.
+///
+/// Decimation shows up in the data layout (each output consumes a fresh
+/// 16-sample window, binding order `x0..x15`); the compute graph exploits
+/// coefficient symmetry by pre-adding mirrored taps (`x_k + x_{15−k}`)
+/// before the 8 Q6 multiplies — the classic folded FIR datapath, and a
+/// deliberately different minable pattern (add→mul·const) from the
+/// mul→add chains everywhere else. Tail: `>>3` renormalize, then a
+/// 12-bit saturating clamp.
+pub fn fir_decimate() -> Graph {
+    let mut g = Graph::new("firdec");
+    let xs: Vec<NodeId> = (0..16)
+        .map(|k| g.add_node(Op::Input, format!("x{k}")))
+        .collect();
+    let mut terms = Vec::new();
+    for (k, &h) in FIR_H_Q6.iter().enumerate() {
+        let pair = g.add(Op::Add, &[xs[k], xs[15 - k]]);
+        let hc = g.add_node(Op::Const(h), format!("h{k}"));
+        terms.push(g.add(Op::Mul, &[pair, hc]));
+    }
+    let acc = adder_chain(&mut g, &terms);
+    let sh = g.add_op(Op::Const(3));
+    let y = g.add(Op::Ashr, &[acc, sh]);
+    let lo = g.add_node(Op::Const(-2048), "sat_lo");
+    let hi = g.add_node(Op::Const(2047), "sat_hi");
+    let out = g.add(Op::Clamp, &[y, lo, hi]);
+    g.add(Op::Output, &[out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_butterfly0_is_exact_add_sub() {
+        // W_8^0 = 1, so butterfly 0 computes y0 = a + b, y1 = a − b with
+        // no rounding: ((64·b) >> 6 = b).
+        let mut g = fft_butterfly_stage();
+        g.validate().unwrap();
+        let mut inputs = [0i64; 16];
+        inputs[..4].copy_from_slice(&[10, 20, 3, 4]); // ar, ai, br, bi
+        let out = g.eval(&inputs);
+        assert_eq!(&out[..4], &[13, 24, 7, 16]);
+        assert!(out[4..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn fft_butterfly2_rotates_by_minus_j() {
+        // W_8^2 = −j: t = −j·b = (b.im, −b.re).
+        let mut g = fft_butterfly_stage();
+        let mut inputs = [0i64; 16];
+        inputs[8..12].copy_from_slice(&[10, 20, 5, 7]);
+        let out = g.eval(&inputs);
+        assert_eq!(&out[8..12], &[17, 15, 3, 25]);
+    }
+
+    #[test]
+    fn fft_has_sixteen_outputs() {
+        let g = fft_butterfly_stage();
+        assert_eq!(g.output_ids().len(), 16);
+        assert_eq!(g.input_ids().len(), 16);
+    }
+
+    #[test]
+    fn biquad_zero_state_is_passthrough() {
+        // b0 = 64 in every section: (64·x) >> 6 = x exactly.
+        let mut g = biquad_cascade();
+        g.validate().unwrap();
+        let mut inputs = [0i64; 13];
+        inputs[0] = 100;
+        assert_eq!(g.eval(&inputs), vec![100]);
+    }
+
+    #[test]
+    fn biquad_first_section_state_matches_scalar_model() {
+        // Section 0 with state x1=10, x2=4, y1=6, y2=2 and x=0:
+        // s = 20·10 + 8·4 − (−22)·6 − 11·2 = 342; y = 342 >> 6 = 5.
+        // Sections 1–2 are zero-state unity (b0 = 64), so out = 5.
+        let mut g = biquad_cascade();
+        let mut inputs = [0i64; 13];
+        inputs[1..5].copy_from_slice(&[10, 4, 6, 2]);
+        assert_eq!(g.eval(&inputs), vec![5]);
+    }
+
+    #[test]
+    fn xcorr_detects_correlation_magnitude() {
+        let mut g = cross_correlation();
+        g.validate().unwrap();
+        // Perfectly correlated: 16·64 = 1024; 1024 >> 5 = 32.
+        assert_eq!(g.eval(&[8; 32]), vec![32]);
+        // Perfectly anti-correlated: same magnitude via the abs.
+        let anti: Vec<i64> = (0..32).map(|k| if k % 2 == 0 { 8 } else { -8 }).collect();
+        assert_eq!(g.eval(&anti), vec![32]);
+    }
+
+    #[test]
+    fn firdec_dc_gain_matches_coefficient_sum() {
+        // DC input c: every mirrored pair sums to 2c, acc = 2c·Σh = 600c.
+        // c = 16 → 9600 >> 3 = 1200, inside the saturation window.
+        let mut g = fir_decimate();
+        g.validate().unwrap();
+        assert_eq!(g.eval(&[16; 16]), vec![1200]);
+    }
+
+    #[test]
+    fn firdec_saturates_at_12_bits() {
+        // c = 32 → acc = 19200 (fits 16 bits), 19200 >> 3 = 2400 → clamp.
+        let mut g = fir_decimate();
+        assert_eq!(g.eval(&[32; 16]), vec![2047]);
+    }
+
+    #[test]
+    fn firdec_impulse_hits_one_tap_pair() {
+        // Impulse on x3: pair3 = 64, acc = 64·h3 = 768, out = 768 >> 3.
+        let mut g = fir_decimate();
+        let mut imp = [0i64; 16];
+        imp[3] = 64;
+        assert_eq!(g.eval(&imp), vec![96]);
+    }
+
+    #[test]
+    fn dsp_kernels_are_mul_add_heavy() {
+        let h = fft_butterfly_stage().op_histogram();
+        assert_eq!(h["mul"], 16);
+        assert_eq!(h["add"], 12);
+        assert_eq!(h["sub"], 12);
+        let h = cross_correlation().op_histogram();
+        assert_eq!(h["mul"], 16);
+        assert_eq!(h["add"], 15);
+    }
+}

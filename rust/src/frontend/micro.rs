@@ -53,6 +53,7 @@ pub fn fig5_subgraph_a() -> Graph {
     g
 }
 
+/// The second merging example of Fig. 5 (see [`fig5_subgraph_a`]).
 pub fn fig5_subgraph_b() -> Graph {
     let mut g = Graph::new("fig5b");
     let c = g.add_node(Op::Const(7), "b0");

@@ -1,113 +1,424 @@
 //! Application frontend: constructs the CoreIR-equivalent dataflow graphs
-//! the paper's Halide compiler would produce.
+//! the paper's Halide compiler would produce, organized as a data-driven
+//! **domain registry**.
 //!
-//! The analysis passes operate on per-output-pixel dataflow graphs — exactly
+//! The analysis passes operate on per-output-item dataflow graphs — exactly
 //! the granularity the paper mines (e.g. "camera pipeline … needs 221
-//! operations to compute an output pixel"). Each builder returns one such
-//! graph; window layout conventions are documented per app so the CGRA
+//! operations to compute an output pixel"; the DSP kernels use the same
+//! convention per output *sample*). Each builder returns one such graph;
+//! window/delay-line layout conventions are documented per app so the CGRA
 //! simulator and the JAX oracle agree on input ordering.
+//!
+//! # The domain registry
+//!
+//! Evaluation domains are *data*, not code: every domain is a
+//! [`DomainDescriptor`] in [`DomainRegistry::domains`] carrying its
+//! application list ([`AppDescriptor`]s with graph builders and pinned
+//! invariants) and, when it drives a `reproduce` experiment, a
+//! [`DomainFig`] spec (target name, figure title, domain-PE name). Adding a
+//! fourth domain is a data edit here — the session, coordinator, CLI, and
+//! the invariant test suite (`rust/tests/frontend_invariants.rs`) all pick
+//! it up through the registry. Three domains ship: the paper's imaging
+//! (§V-A) and ML (§V-B) suites, and the DSP/audio extension ([`dsp`]),
+//! plus the `micro` illustrative apps (no experiment of their own).
+//!
+//! [`AppSuite`] remains as the stable facade over the registry that all
+//! pre-registry call sites (and the byte-pinned golden tests) use.
 
+pub mod dsp;
 pub mod imaging;
 pub mod micro;
 pub mod ml;
 
 use crate::ir::Graph;
 
-/// Application domain, mirroring the paper's two evaluation domains.
+/// Application-domain identity tag. The wrapped string is the registry key
+/// (`"imaging"`, `"ml"`, `"dsp"`, `"micro"`); the tuple field is public so
+/// out-of-tree applications can coin their own domains (see
+/// `examples/custom_app.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Domain {
-    Imaging,
-    Ml,
-    Micro,
+pub struct Domain(pub &'static str);
+
+impl Domain {
+    /// Image-processing applications (paper §V-A).
+    pub const IMAGING: Domain = Domain("imaging");
+    /// ML kernels (paper §V-B).
+    pub const ML: Domain = Domain("ml");
+    /// DSP/audio kernels (this repo's third domain).
+    pub const DSP: Domain = Domain("dsp");
+    /// Micro applications for figures and tests.
+    pub const MICRO: Domain = Domain("micro");
+
+    /// The registry key this tag wraps.
+    pub fn key(self) -> &'static str {
+        self.0
+    }
 }
 
 /// A named application with its dataflow graph.
 #[derive(Debug, Clone)]
 pub struct App {
+    /// Unique application name (the CLI `--app` key).
     pub name: &'static str,
+    /// The domain the app belongs to.
     pub domain: Domain,
+    /// Per-output-item dataflow graph.
     pub graph: Graph,
 }
 
-/// Registry of every application used in the paper's evaluation.
+/// Registry entry for one application: its graph builder plus the pinned
+/// structural invariants the frontend test suite asserts for every
+/// registered app (`rust/tests/frontend_invariants.rs`).
+pub struct AppDescriptor {
+    /// Unique application name.
+    pub name: &'static str,
+    /// One-line description (docs and the README application table).
+    pub summary: &'static str,
+    /// Pinned number of `Output` nodes.
+    pub outputs: usize,
+    /// Pinned compute-op census as `(label, count)` pairs sorted by label;
+    /// empty means unpinned (the invariant suite then checks structure
+    /// only).
+    pub census: &'static [(&'static str, usize)],
+    /// Graph builder (pure: equal graphs on every call).
+    pub build: fn() -> Graph,
+}
+
+/// The `reproduce` experiment a domain drives: mine every member app, merge
+/// the per-app top subgraphs into one domain PE, and compare
+/// {baseline, domain PE, app-specialized PE} per member.
+pub struct DomainFig {
+    /// Reproduce target name (e.g. `"fig10"`, `"fig_dsp"`).
+    pub target: &'static str,
+    /// Rendered figure title (byte-pinned by `rust/tests/golden.rs`).
+    pub title: &'static str,
+    /// Name of the merged domain PE (e.g. `"pe_ip"`).
+    pub pe_name: &'static str,
+    /// Top complementary subgraphs merged per member app.
+    pub per_app: usize,
+}
+
+/// Registry entry for one evaluation domain.
+pub struct DomainDescriptor {
+    /// Registry key (`Domain::key` of every member app).
+    pub key: &'static str,
+    /// Human-readable domain title.
+    pub title: &'static str,
+    /// The identity tag stamped on built member apps.
+    pub domain: Domain,
+    /// The domain-PE experiment, when the domain drives one.
+    pub fig: Option<DomainFig>,
+    /// Member applications, in canonical order.
+    pub apps: &'static [AppDescriptor],
+}
+
+impl DomainDescriptor {
+    /// Build every member application, in registry order.
+    pub fn build_apps(&self) -> Vec<App> {
+        self.apps
+            .iter()
+            .map(|d| App {
+                name: d.name,
+                domain: self.domain,
+                graph: (d.build)(),
+            })
+            .collect()
+    }
+
+    /// Member app names, in registry order.
+    pub fn app_names(&self) -> Vec<&'static str> {
+        self.apps.iter().map(|d| d.name).collect()
+    }
+}
+
+static IMAGING_APPS: [AppDescriptor; 4] = [
+    AppDescriptor {
+        name: "harris",
+        summary: "Harris corner detection over a 5x5 window, fully unrolled",
+        outputs: 1,
+        census: &[],
+        build: imaging::harris,
+    },
+    AppDescriptor {
+        name: "gaussian",
+        summary: "3x3 gaussian blur with the 1-2-1 kernel",
+        outputs: 1,
+        census: &[("add", 8), ("ashr", 1), ("const", 10), ("mul", 9)],
+        build: imaging::gaussian_blur,
+    },
+    AppDescriptor {
+        name: "camera",
+        summary: "demosaic->WB->CCM->tone-curve camera pipeline (~221 ops)",
+        outputs: 3,
+        census: &[],
+        build: imaging::camera_pipeline,
+    },
+    AppDescriptor {
+        name: "laplacian",
+        summary: "one Laplacian-pyramid level with detail remap",
+        outputs: 1,
+        census: &[],
+        build: imaging::laplacian_level,
+    },
+];
+
+static ML_APPS: [AppDescriptor; 4] = [
+    AppDescriptor {
+        name: "conv",
+        summary: "multi-channel 3x3 convolution, 36 MACs + requant + ReLU",
+        outputs: 1,
+        census: &[
+            ("add", 36),
+            ("ashr", 1),
+            ("clamp", 1),
+            ("const", 41),
+            ("max", 1),
+            ("mul", 36),
+        ],
+        build: ml::conv_multichannel,
+    },
+    AppDescriptor {
+        name: "block",
+        summary: "residual-block tail: conv + skip + requant + ReLU",
+        outputs: 1,
+        census: &[
+            ("add", 9),
+            ("ashr", 1),
+            ("clamp", 1),
+            ("const", 13),
+            ("max", 1),
+            ("mul", 9),
+        ],
+        build: ml::residual_block,
+    },
+    AppDescriptor {
+        name: "strc",
+        summary: "strided 3x3 convolution over 2 channels",
+        outputs: 1,
+        census: &[
+            ("add", 17),
+            ("ashr", 1),
+            ("clamp", 1),
+            ("const", 22),
+            ("max", 1),
+            ("mul", 18),
+        ],
+        build: ml::strided_conv,
+    },
+    AppDescriptor {
+        name: "ds",
+        summary: "U-Net downsample: 2x2 max-pool + gain + requant",
+        outputs: 1,
+        census: &[
+            ("ashr", 1),
+            ("clamp", 1),
+            ("const", 5),
+            ("max", 4),
+            ("mul", 1),
+        ],
+        build: ml::downsample,
+    },
+];
+
+static DSP_APPS: [AppDescriptor; 4] = [
+    AppDescriptor {
+        name: "fft",
+        summary: "radix-2 FFT butterfly stage (4 butterflies, Q6 twiddles)",
+        outputs: 16,
+        census: &[
+            ("add", 12),
+            ("ashr", 8),
+            ("const", 16),
+            ("mul", 16),
+            ("sub", 12),
+        ],
+        build: dsp::fft_butterfly_stage,
+    },
+    AppDescriptor {
+        name: "biquad",
+        summary: "three-section direct-form-I biquad IIR cascade",
+        outputs: 1,
+        census: &[
+            ("add", 6),
+            ("ashr", 3),
+            ("const", 18),
+            ("mul", 15),
+            ("sub", 6),
+        ],
+        build: dsp::biquad_cascade,
+    },
+    AppDescriptor {
+        name: "xcorr",
+        summary: "16-sample cross-correlation window with magnitude output",
+        outputs: 1,
+        census: &[
+            ("abs", 1),
+            ("add", 15),
+            ("ashr", 1),
+            ("const", 1),
+            ("mul", 16),
+        ],
+        build: dsp::cross_correlation,
+    },
+    AppDescriptor {
+        name: "firdec",
+        summary: "decimate-by-2 folded symmetric 16-tap FIR + saturator",
+        outputs: 1,
+        census: &[
+            ("add", 15),
+            ("ashr", 1),
+            ("clamp", 1),
+            ("const", 11),
+            ("mul", 8),
+        ],
+        build: dsp::fir_decimate,
+    },
+];
+
+static MICRO_APPS: [AppDescriptor; 1] = [AppDescriptor {
+    name: "conv1d",
+    summary: "the paper's Fig. 3 running example: 4-tap conv + bias",
+    outputs: 1,
+    census: &[("add", 4), ("const", 5), ("mul", 4)],
+    build: micro::conv1d_fig3,
+}];
+
+static DOMAINS: [DomainDescriptor; 4] = [
+    DomainDescriptor {
+        key: "imaging",
+        title: "image processing (paper §V-A)",
+        domain: Domain::IMAGING,
+        fig: Some(DomainFig {
+            target: "fig10",
+            title: "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)",
+            pe_name: "pe_ip",
+            per_app: 1,
+        }),
+        apps: &IMAGING_APPS,
+    },
+    DomainDescriptor {
+        key: "ml",
+        title: "ML kernels (paper §V-B)",
+        domain: Domain::ML,
+        fig: Some(DomainFig {
+            target: "fig11",
+            title: "Fig. 11 — ML kernels: PE ML vs PE Spec (normalized to baseline)",
+            pe_name: "pe_ml",
+            per_app: 1,
+        }),
+        apps: &ML_APPS,
+    },
+    DomainDescriptor {
+        key: "dsp",
+        title: "DSP/audio kernels (repo extension)",
+        domain: Domain::DSP,
+        fig: Some(DomainFig {
+            target: "fig_dsp",
+            title: "Fig. D1 — DSP/audio kernels: PE DSP vs PE Spec (normalized to baseline)",
+            pe_name: "pe_dsp",
+            per_app: 1,
+        }),
+        apps: &DSP_APPS,
+    },
+    DomainDescriptor {
+        key: "micro",
+        title: "micro apps (figures and tests)",
+        domain: Domain::MICRO,
+        fig: None,
+        apps: &MICRO_APPS,
+    },
+];
+
+/// The data-driven domain registry: every evaluation domain and every
+/// registered application, as static descriptors. See the module docs for
+/// how the rest of the toolchain consumes it.
+pub struct DomainRegistry;
+
+impl DomainRegistry {
+    /// Every registered domain, in canonical order
+    /// (imaging, ml, dsp, micro).
+    pub fn domains() -> &'static [DomainDescriptor] {
+        &DOMAINS
+    }
+
+    /// Look a domain up by registry key.
+    pub fn domain(key: &str) -> Option<&'static DomainDescriptor> {
+        DOMAINS.iter().find(|d| d.key == key)
+    }
+
+    /// Build every registered application across all domains, in registry
+    /// order.
+    pub fn all_apps() -> Vec<App> {
+        DOMAINS.iter().flat_map(|d| d.build_apps()).collect()
+    }
+
+    /// Build one application by name, searching every domain.
+    pub fn by_name(name: &str) -> Option<App> {
+        DOMAINS.iter().find_map(|d| {
+            d.apps.iter().find(|a| a.name == name).map(|a| App {
+                name: a.name,
+                domain: d.domain,
+                graph: (a.build)(),
+            })
+        })
+    }
+
+    /// The descriptor of one application by name.
+    pub fn descriptor(name: &str) -> Option<&'static AppDescriptor> {
+        DOMAINS
+            .iter()
+            .flat_map(|d| d.apps.iter())
+            .find(|a| a.name == name)
+    }
+
+    /// Every registered application name, in registry order.
+    pub fn app_names() -> Vec<&'static str> {
+        DOMAINS
+            .iter()
+            .flat_map(|d| d.apps.iter().map(|a| a.name))
+            .collect()
+    }
+}
+
+/// Stable facade over [`DomainRegistry`] used by the paper experiments:
+/// the suite methods return exactly the paper's evaluation apps, so the
+/// byte-pinned golden outputs are independent of registry growth.
 pub struct AppSuite;
 
 impl AppSuite {
     /// The four image-processing applications of §V-A.
     pub fn imaging() -> Vec<App> {
-        vec![
-            App {
-                name: "harris",
-                domain: Domain::Imaging,
-                graph: imaging::harris(),
-            },
-            App {
-                name: "gaussian",
-                domain: Domain::Imaging,
-                graph: imaging::gaussian_blur(),
-            },
-            App {
-                name: "camera",
-                domain: Domain::Imaging,
-                graph: imaging::camera_pipeline(),
-            },
-            App {
-                name: "laplacian",
-                domain: Domain::Imaging,
-                graph: imaging::laplacian_level(),
-            },
-        ]
+        DomainRegistry::domain("imaging").unwrap().build_apps()
     }
 
     /// The four ML kernels of §V-B (ResNet-50 / U-Net building blocks).
     pub fn ml() -> Vec<App> {
-        vec![
-            App {
-                name: "conv",
-                domain: Domain::Ml,
-                graph: ml::conv_multichannel(),
-            },
-            App {
-                name: "block",
-                domain: Domain::Ml,
-                graph: ml::residual_block(),
-            },
-            App {
-                name: "strc",
-                domain: Domain::Ml,
-                graph: ml::strided_conv(),
-            },
-            App {
-                name: "ds",
-                domain: Domain::Ml,
-                graph: ml::downsample(),
-            },
-        ]
+        DomainRegistry::domain("ml").unwrap().build_apps()
     }
 
+    /// The four DSP/audio kernels of the repo's third domain.
+    pub fn dsp() -> Vec<App> {
+        DomainRegistry::domain("dsp").unwrap().build_apps()
+    }
+
+    /// The paper's eight evaluation apps (imaging + ml), in paper order.
+    /// Registry-only domains (dsp, micro) are deliberately excluded — use
+    /// [`DomainRegistry::all_apps`] for everything.
     pub fn all() -> Vec<App> {
         let mut v = Self::imaging();
         v.extend(Self::ml());
         v
     }
 
-    /// Look an application up by name (used by the CLI).
+    /// Look an application up by name across the whole registry (used by
+    /// the CLI).
     pub fn by_name(name: &str) -> Option<App> {
-        let micro = App {
-            name: "conv1d",
-            domain: Domain::Micro,
-            graph: micro::conv1d_fig3(),
-        };
-        Self::all()
-            .into_iter()
-            .chain(std::iter::once(micro))
-            .find(|a| a.name == name)
+        DomainRegistry::by_name(name)
     }
 
+    /// Every registered application name (used by the CLI help).
     pub fn names() -> Vec<&'static str> {
-        let mut v: Vec<_> = Self::all().iter().map(|a| a.name).collect();
-        v.push("conv1d");
-        v
+        DomainRegistry::app_names()
     }
 }
 
@@ -117,7 +428,7 @@ mod tests {
 
     #[test]
     fn all_apps_validate() {
-        for mut app in AppSuite::all() {
+        for mut app in DomainRegistry::all_apps() {
             app.graph
                 .validate()
                 .unwrap_or_else(|e| panic!("{}: {e}", app.name));
@@ -128,18 +439,47 @@ mod tests {
     fn suite_has_eight_paper_apps() {
         assert_eq!(AppSuite::imaging().len(), 4);
         assert_eq!(AppSuite::ml().len(), 4);
+        assert_eq!(AppSuite::all().len(), 8);
+    }
+
+    #[test]
+    fn dsp_domain_has_four_apps() {
+        assert_eq!(AppSuite::dsp().len(), 4);
+        for app in AppSuite::dsp() {
+            assert_eq!(app.domain, Domain::DSP);
+        }
     }
 
     #[test]
     fn lookup_by_name() {
         assert!(AppSuite::by_name("camera").is_some());
         assert!(AppSuite::by_name("conv1d").is_some());
+        assert!(AppSuite::by_name("biquad").is_some());
         assert!(AppSuite::by_name("nope").is_none());
     }
 
     #[test]
+    fn registry_names_are_unique() {
+        let names = DomainRegistry::app_names();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "duplicate app names: {names:?}");
+    }
+
+    #[test]
+    fn registry_keys_match_domain_tags() {
+        for d in DomainRegistry::domains() {
+            assert_eq!(d.key, d.domain.key());
+            for app in d.build_apps() {
+                assert_eq!(app.domain, d.domain);
+            }
+        }
+    }
+
+    #[test]
     fn apps_are_nontrivial() {
-        for app in AppSuite::all() {
+        for app in DomainRegistry::all_apps() {
             assert!(
                 app.graph.compute_len() >= 5,
                 "{} too small: {}",

@@ -9,11 +9,14 @@
 //!
 //! The supported entry point is [`session::DseSession`] — a staged, cached,
 //! parallel pipeline over the stage primitives in [`dse`]; the experiment
-//! renderers in [`coordinator`] consume it. The pre-0.2 free-function API
-//! survives as `#[deprecated]` shims for one PR cycle.
+//! renderers in [`coordinator`] consume it. Applications are organized as
+//! a data-driven domain registry ([`frontend::DomainRegistry`]): the
+//! paper's imaging and ML suites plus a DSP/audio extension domain
+//! ([`frontend::dsp`]), each driving its own domain-PE experiment.
 //!
-//! See `DESIGN.md` for the module inventory, the per-experiment index, and
-//! the `DseSession` stage diagram, and `examples/quickstart.rs` for the
+//! See `README.md` for the quickstart and figure-reproduction table,
+//! `DESIGN.md` for the module inventory, the per-experiment index, and the
+//! `DseSession` stage diagram, and `examples/quickstart.rs` for the
 //! 60-second tour.
 
 pub mod error;

@@ -8,14 +8,27 @@
 
 use cgra_dse::coordinator;
 use cgra_dse::dse::DseConfig;
-use cgra_dse::frontend::AppSuite;
+use cgra_dse::frontend::{self, AppSuite};
 use cgra_dse::mining::MinerConfig;
 use cgra_dse::pe::verilog::emit_verilog;
 use cgra_dse::runtime;
 use cgra_dse::session::{report as sjson, AppStages, DseSession};
 use cgra_dse::util::SplitMix64;
 
-const USAGE: &str = "\
+/// Usage text, with the target/app/domain lists generated from the
+/// registry so a new domain shows up in `--help` without a code edit.
+fn usage() -> String {
+    let domains: Vec<&str> = frontend::DomainRegistry::domains()
+        .iter()
+        .filter(|d| d.fig.is_some())
+        .map(|d| d.key)
+        .collect();
+    let apps: Vec<String> = frontend::DomainRegistry::domains()
+        .iter()
+        .map(|d| d.app_names().join(" "))
+        .collect();
+    format!(
+        "\
 cgra-dse — automated DSE of CGRA processing element architectures
            (frequent-subgraph analysis reproduction)
 
@@ -25,7 +38,8 @@ USAGE:
   cgra-dse verilog --app <name> [--variant peK] [--out FILE]
   cgra-dse map --app <name> [--variant peK]
   cgra-dse sim --app <name> [--variant peK] [--items N]
-  cgra-dse reproduce <fig8|fig9|fig10|fig11|table1|io_sweep|all> [--fast] [--save] [--json]
+  cgra-dse reproduce <{targets}|all> [--fast] [--save] [--json]
+  cgra-dse reproduce <{domains}>   (domain aliases: dsp -> fig_dsp, ...)
   cgra-dse validate [--app gaussian|conv|block] [--items N]
   cgra-dse apps
 
@@ -33,13 +47,18 @@ GLOBAL FLAGS:
   --threads N   worker-pool width for parallel stages (default: all cores)
   --json        machine-readable JSON output (pes, reproduce)
 
-Apps: harris gaussian camera laplacian conv block strc ds conv1d
-";
+Apps: {apps}
+",
+        targets = coordinator::REPRODUCE_TARGETS.join("|"),
+        domains = domains.join("|"),
+        apps = apps.join(" | "),
+    )
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
-        eprint!("{USAGE}");
+        eprint!("{}", usage());
         std::process::exit(2);
     }
     let cmd = args[0].as_str();
@@ -57,7 +76,7 @@ fn main() {
             0
         }
         _ => {
-            eprint!("{USAGE}");
+            eprint!("{}", usage());
             2
         }
     };
@@ -132,11 +151,13 @@ fn dse_config(flags: &Flags) -> DseConfig {
     }
 }
 
-/// One session per invocation: the paper suite, the flag-derived config,
-/// and the requested worker width.
+/// One session per invocation: every registry domain (so all `reproduce`
+/// targets and `--app` names resolve), the flag-derived config, and the
+/// requested worker width. Stages are computed lazily, so unused apps
+/// cost nothing.
 fn session_for(flags: &Flags) -> DseSession {
     DseSession::builder()
-        .paper_suite()
+        .registry_suite()
         .config(dse_config(flags))
         .threads(flags.get_usize("threads", runtime::default_width()))
         .build()
@@ -291,11 +312,16 @@ fn cmd_reproduce(args: &[String], flags: &Flags) -> i32 {
     let what = args.first().map(|s| s.as_str()).unwrap_or("all");
     let targets: Vec<&str> = match what {
         "all" => coordinator::REPRODUCE_TARGETS.to_vec(),
-        t if coordinator::REPRODUCE_TARGETS.contains(&t) => vec![t],
-        other => {
-            eprintln!("unknown target `{other}` (fig8|fig9|fig10|fig11|table1|all)");
-            return 2;
-        }
+        t => match coordinator::resolve_target(t) {
+            Some(t) => vec![t],
+            None => {
+                eprintln!(
+                    "unknown target `{t}` (valid: {} | domain keys imaging|ml|dsp | all)",
+                    coordinator::REPRODUCE_TARGETS.join("|")
+                );
+                return 2;
+            }
+        },
     };
     let session = session_for(flags);
     let report = coordinator::reproduce(&session, &targets);

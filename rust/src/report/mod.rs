@@ -166,7 +166,7 @@ pub fn render_ladder(app: &str, evals: &[VariantEval]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dse::{evaluate_ladder_impl, frequency_sweep_impl, DseConfig};
+    use crate::dse::{evaluate_ladder, frequency_sweep, DseConfig};
     use crate::frontend::AppSuite;
     use crate::mining::MinerConfig;
 
@@ -186,10 +186,10 @@ mod tests {
     #[test]
     fn fig8_renders() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let evals = evaluate_ladder_impl(&app, &cfg());
+        let evals = evaluate_ladder(&app, &cfg());
         let sweeps: Vec<(String, Vec<_>)> = evals
             .iter()
-            .map(|v| (v.variant.clone(), frequency_sweep_impl(v, &[0.8, 1.4, 2.0])))
+            .map(|v| (v.variant.clone(), frequency_sweep(v, &[0.8, 1.4, 2.0])))
             .collect();
         let out = render_fig8(&sweeps);
         assert!(out.contains("base"));
@@ -199,7 +199,7 @@ mod tests {
     #[test]
     fn ladder_renders() {
         let app = AppSuite::by_name("gaussian").unwrap();
-        let evals = evaluate_ladder_impl(&app, &cfg());
+        let evals = evaluate_ladder(&app, &cfg());
         let out = render_ladder("gaussian", &evals);
         assert!(out.contains("variant"));
         assert!(out.contains("pe1"));

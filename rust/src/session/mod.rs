@@ -40,7 +40,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::dse::{self, DseConfig, RankedPattern, SweepPoint, VariantEval};
-use crate::frontend::{App, AppSuite};
+use crate::frontend::{App, AppSuite, DomainRegistry};
 use crate::mapper::Mapping;
 use crate::mining::MinedPattern;
 use crate::pe::PeSpec;
@@ -161,14 +161,35 @@ impl DseSessionBuilder {
         self
     }
 
-    /// Register the paper's full evaluation suite (4 imaging + 4 ML apps)
-    /// plus the Fig. 3 `conv1d` micro-app — what the CLI and the
-    /// `reproduce` experiments expect.
+    /// Register the paper's evaluation suite (4 imaging + 4 ML apps) plus
+    /// the Fig. 3 `conv1d` micro-app — what the byte-pinned paper
+    /// experiments (Fig. 8–Table I) expect. Registry-only domains (dsp)
+    /// are *not* included; see [`Self::registry_suite`].
     pub fn paper_suite(mut self) -> Self {
         self.apps.extend(AppSuite::all());
         if let Some(micro) = AppSuite::by_name("conv1d") {
             self.apps.push(micro);
         }
+        self
+    }
+
+    /// Register every member application of one registry domain
+    /// (`"imaging"`, `"ml"`, `"dsp"`, `"micro"`).
+    ///
+    /// Panics on an unknown key — the keys are static registry data, so a
+    /// miss is a programming error, not an input error.
+    pub fn domain(mut self, key: &str) -> Self {
+        let dom = DomainRegistry::domain(key)
+            .unwrap_or_else(|| panic!("unknown domain `{key}` (see DomainRegistry::domains)"));
+        self.apps.extend(dom.build_apps());
+        self
+    }
+
+    /// Register every application of every registry domain (imaging, ml,
+    /// dsp, micro) — what the CLI uses, so every `reproduce` target and
+    /// `--app` name resolves against one shared session.
+    pub fn registry_suite(mut self) -> Self {
+        self.apps.extend(DomainRegistry::all_apps());
         self
     }
 
@@ -227,6 +248,7 @@ pub struct DseSession {
 }
 
 impl DseSession {
+    /// Start building a session (apps + config + worker width).
     pub fn builder() -> DseSessionBuilder {
         DseSessionBuilder::default()
     }
@@ -441,7 +463,7 @@ impl DseSession {
                 let name = name.clone();
                 let pe = pe.clone();
                 let cfg = cfg.clone();
-                move || dse::evaluate_variant_impl(app, &name, &pe, &cfg)
+                move || dse::evaluate_variant(app, &name, &pe, &cfg)
             })
             .collect();
         let evals: Vec<VariantEval> = parallel_map(jobs, self.threads)
@@ -472,7 +494,7 @@ impl DseSession {
         let v = Arc::new(
             ladder
                 .iter()
-                .map(|ve| (ve.variant.clone(), dse::frequency_sweep_impl(ve, freqs)))
+                .map(|ve| (ve.variant.clone(), dse::frequency_sweep(ve, freqs)))
                 .collect::<Vec<_>>(),
         );
         match self.insert(key, Value::Sweep(v.clone()), fp) {
@@ -549,7 +571,7 @@ impl<'s> AppStages<'s> {
     /// arbitrary `PeSpec`s have no stable cache identity.
     pub fn evaluate_pe(&self, variant: &str, pe: &PeSpec) -> Option<VariantEval> {
         let cfg = self.session.config();
-        dse::evaluate_variant_impl(self.app, variant, pe, &cfg)
+        dse::evaluate_variant(self.app, variant, pe, &cfg)
     }
 }
 
@@ -594,6 +616,22 @@ mod tests {
     #[test]
     fn unknown_app_yields_none() {
         assert!(session().app("nope").is_none());
+    }
+
+    #[test]
+    fn registry_suite_registers_every_domain() {
+        let s = DseSession::builder().registry_suite().build();
+        for name in ["camera", "conv", "biquad", "conv1d"] {
+            assert!(s.app(name).is_some(), "{name} missing from registry suite");
+        }
+    }
+
+    #[test]
+    fn domain_builder_registers_members_only() {
+        let s = DseSession::builder().domain("dsp").build();
+        assert_eq!(s.apps().len(), 4);
+        assert!(s.app("fft").is_some());
+        assert!(s.app("camera").is_none());
     }
 
     #[test]

@@ -141,20 +141,48 @@ pub fn sweep_json(sweeps: &[(String, Vec<SweepPoint>)]) -> Json {
     )
 }
 
-/// JSON view of a Fig. 10/11 domain comparison.
-pub fn domain_json(rows: &[(String, VariantEval, VariantEval, VariantEval)]) -> Json {
-    Json::Arr(
-        rows.iter()
-            .map(|(app, base, dom, spec)| {
-                Json::obj(vec![
-                    ("app", Json::str(app)),
-                    ("base", eval_json(base)),
-                    ("domain", eval_json(dom)),
-                    ("spec", eval_json(spec)),
-                ])
-            })
-            .collect(),
-    )
+/// JSON view of a domain comparison (Fig. 10/11 and the DSP figure):
+/// the merged domain-PE name plus one row per member app with the
+/// {baseline, domain-PE, app-specialized} evaluations and the
+/// specialized-vs-baseline energy/area ratios.
+pub fn domain_json(
+    pe_name: &str,
+    rows: &[(String, VariantEval, VariantEval, VariantEval)],
+) -> Json {
+    Json::obj(vec![
+        ("pe", Json::str(pe_name)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|(app, base, dom, spec)| {
+                        Json::obj(vec![
+                            ("app", Json::str(app)),
+                            ("base", eval_json(base)),
+                            ("domain", eval_json(dom)),
+                            ("spec", eval_json(spec)),
+                            (
+                                "domain_energy_ratio",
+                                Json::num(dom.pe_energy_per_op / base.pe_energy_per_op),
+                            ),
+                            (
+                                "domain_area_ratio",
+                                Json::num(dom.total_area / base.total_area),
+                            ),
+                            (
+                                "spec_energy_ratio",
+                                Json::num(spec.pe_energy_per_op / base.pe_energy_per_op),
+                            ),
+                            (
+                                "spec_area_ratio",
+                                Json::num(spec.total_area / base.total_area),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// JSON view of Table I.

@@ -9,7 +9,7 @@
 
 use crate::arch::{Fabric, FabricConfig};
 use crate::bail;
-use crate::dse::{variant_ladder_impl, DseConfig};
+use crate::dse::{variant_ladder, DseConfig};
 use crate::error::{Context, Error, Result};
 use crate::frontend::AppSuite;
 use crate::ir::Word;
@@ -42,7 +42,7 @@ pub fn validate_app(rt: &Runtime, name: &str, items: usize) -> Result<String> {
     let app = AppSuite::by_name(name).context("unknown app")?;
     let oracle = rt.load_artifact(name)?;
     let cfg = fast_cfg();
-    let ladder = variant_ladder_impl(&app, &cfg);
+    let ladder = variant_ladder(&app, &cfg);
     // Most specialized variant: exercises subgraph merging end to end.
     let (variant, pe) = ladder.last().context("empty ladder")?;
     let mut graph = app.graph.clone();

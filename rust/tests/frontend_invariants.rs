@@ -1,0 +1,186 @@
+//! Registry-driven frontend invariant suite: every application registered
+//! in `frontend::DomainRegistry` — including any future domain added as a
+//! data edit — is checked for the structural contracts the rest of the
+//! toolchain assumes: builder determinism, validity (all ports driven
+//! exactly once, ports in range, acyclic), pinned output arity, port/arity
+//! consistency, and (where the descriptor pins one) an exact compute-op
+//! census. The four DSP apps are covered automatically by walking the
+//! registry.
+
+use std::collections::BTreeMap;
+
+use cgra_dse::frontend::DomainRegistry;
+use cgra_dse::ir::Op;
+
+#[test]
+fn builders_are_deterministic() {
+    for d in DomainRegistry::domains() {
+        for a in d.apps {
+            let g1 = (a.build)();
+            let g2 = (a.build)();
+            assert_eq!(g1.nodes.len(), g2.nodes.len(), "{}", a.name);
+            assert_eq!(g1.edges.len(), g2.edges.len(), "{}", a.name);
+            for (n1, n2) in g1.nodes.iter().zip(&g2.nodes) {
+                assert_eq!(n1.op, n2.op, "{}: node {} differs", a.name, n1.id);
+                assert_eq!(n1.name, n2.name, "{}: node {} tag differs", a.name, n1.id);
+            }
+            for (e1, e2) in g1.edges.iter().zip(&g2.edges) {
+                assert_eq!(e1, e2, "{}: edge differs", a.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_registered_graph_validates_acyclic_and_fully_wired() {
+    // `Graph::validate` checks exactly the invariants the miner, mapper,
+    // and simulator assume: every input port driven exactly once, ports in
+    // range, no cycles.
+    for mut app in DomainRegistry::all_apps() {
+        app.graph
+            .validate()
+            .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+    }
+}
+
+#[test]
+fn output_arity_matches_descriptor() {
+    for d in DomainRegistry::domains() {
+        for a in d.apps {
+            let g = (a.build)();
+            assert_eq!(
+                g.output_ids().len(),
+                a.outputs,
+                "{}: output count drifted from its descriptor",
+                a.name
+            );
+            assert!(a.outputs >= 1, "{}: descriptor pins no outputs", a.name);
+        }
+    }
+}
+
+#[test]
+fn port_arity_is_consistent() {
+    // Redundant with validate() but spelled out: the edge set drives every
+    // port of every node exactly arity() times in total, and no node has
+    // an out-of-range port reference.
+    for app in DomainRegistry::all_apps() {
+        let g = &app.graph;
+        let mut driven = vec![0usize; g.nodes.len()];
+        for e in &g.edges {
+            assert!(
+                (e.dst_port as usize) < g.nodes[e.dst.index()].op.arity(),
+                "{}: port {} out of range on {:?}",
+                app.name,
+                e.dst_port,
+                g.nodes[e.dst.index()].op
+            );
+            driven[e.dst.index()] += 1;
+        }
+        for n in &g.nodes {
+            assert_eq!(
+                driven[n.id.index()],
+                n.op.arity(),
+                "{}: node {} ({:?}) drive count != arity",
+                app.name,
+                n.id,
+                n.op
+            );
+        }
+    }
+}
+
+#[test]
+fn io_nodes_are_boundary_only() {
+    // Inputs never consume, outputs never produce — the mining/mapping
+    // boundary convention.
+    for app in DomainRegistry::all_apps() {
+        let g = &app.graph;
+        for e in &g.edges {
+            assert_ne!(
+                g.nodes[e.src.index()].op,
+                Op::Output,
+                "{}: an Output node feeds another node",
+                app.name
+            );
+            assert_ne!(
+                g.nodes[e.dst.index()].op,
+                Op::Input,
+                "{}: an Input node has an input port",
+                app.name
+            );
+        }
+    }
+}
+
+#[test]
+fn pinned_op_census_is_exact() {
+    let mut pinned = 0;
+    for d in DomainRegistry::domains() {
+        for a in d.apps {
+            if a.census.is_empty() {
+                continue;
+            }
+            pinned += 1;
+            let g = (a.build)();
+            let got: BTreeMap<&str, usize> = g.op_histogram().into_iter().collect();
+            let want: BTreeMap<&str, usize> = a.census.iter().copied().collect();
+            assert_eq!(
+                got, want,
+                "{}: compute-op census drifted from the descriptor",
+                a.name
+            );
+            // Descriptor hygiene: sorted by label, no zero counts.
+            for w in a.census.windows(2) {
+                assert!(w[0].0 < w[1].0, "{}: census not sorted", a.name);
+            }
+            assert!(a.census.iter().all(|&(_, c)| c > 0), "{}", a.name);
+        }
+    }
+    // All four DSP apps (plus ml/micro and gaussian) carry a census.
+    assert!(pinned >= 10, "only {pinned} censuses pinned");
+}
+
+#[test]
+fn dsp_apps_use_only_baseline_datapath_ops() {
+    // The DSP domain must be mappable on the baseline PE: arithmetic,
+    // shifts, abs and clamp only — no LUT bit ops, no select.
+    for app in DomainRegistry::domain("dsp").unwrap().build_apps() {
+        for n in &app.graph.nodes {
+            assert!(
+                matches!(
+                    n.op,
+                    Op::Input
+                        | Op::Output
+                        | Op::Const(_)
+                        | Op::Add
+                        | Op::Sub
+                        | Op::Mul
+                        | Op::Ashr
+                        | Op::Abs
+                        | Op::Clamp
+                ),
+                "{}: unexpected op {:?}",
+                app.name,
+                n.op
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_lookup_is_total_and_exact() {
+    for d in DomainRegistry::domains() {
+        for a in d.apps {
+            let app = DomainRegistry::by_name(a.name)
+                .unwrap_or_else(|| panic!("{} not resolvable by name", a.name));
+            assert_eq!(app.name, a.name);
+            assert_eq!(app.domain, d.domain);
+            let desc = DomainRegistry::descriptor(a.name).unwrap();
+            assert_eq!(desc.name, a.name);
+            assert!(!desc.summary.is_empty(), "{}: empty summary", a.name);
+        }
+    }
+    assert!(DomainRegistry::by_name("no_such_app").is_none());
+    assert!(DomainRegistry::descriptor("no_such_app").is_none());
+}

@@ -1,10 +1,11 @@
 //! Golden-output tests: `reproduce` through the cached, parallel
-//! `DseSession` pipeline must be byte-identical to the pre-0.2
-//! free-function pipeline (reconstructed here, sequentially, from the
-//! deprecated primitives). This pins the refactor's "same text, less
-//! work" contract.
-
-#![allow(deprecated)]
+//! `DseSession` pipeline must be byte-identical to the sequential
+//! pipeline reconstructed here from the public stage primitives in
+//! `dse` (`rank_subgraphs`, `variant_ladder`, `evaluate_ladder`,
+//! `domain_pe`, `evaluate_variant`, `frequency_sweep`) — exactly the
+//! free-function composition the pre-session CLI ran. This pins the
+//! session's "same text, less work" contract, including for the new DSP
+//! domain figure.
 
 use cgra_dse::coordinator;
 use cgra_dse::dse::{self, DseConfig, SweepPoint, VariantEval};
@@ -27,11 +28,12 @@ fn cfg() -> DseConfig {
 }
 
 fn session() -> DseSession {
-    DseSession::builder().paper_suite().config(cfg()).build()
+    DseSession::builder().registry_suite().config(cfg()).build()
 }
 
-// ---- the pre-0.2 figure pipelines, reconstructed from the deprecated
-// ---- free functions exactly as rust/src/coordinator/mod.rs composed them
+// ---- the sequential figure pipelines, reconstructed from the public
+// ---- stage primitives exactly as the pre-session coordinator composed
+// ---- them
 
 fn legacy_fig8(cfg: &DseConfig) -> String {
     let app = AppSuite::by_name("camera").unwrap();
@@ -78,6 +80,7 @@ fn legacy_domain_fig(
     apps: &[App],
     domain_name: &str,
     per_app: usize,
+    title: &str,
     cfg: &DseConfig,
 ) -> String {
     let dom_pe = dse::domain_pe(apps, domain_name, per_app, cfg);
@@ -92,13 +95,14 @@ fn legacy_domain_fig(
             (app.name.to_string(), base, dom, spec)
         })
         .collect();
-    let title = if domain_name.contains("ip") {
-        "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)"
-    } else {
-        "Fig. 11 — ML kernels: PE ML vs PE Spec (normalized to baseline)"
-    };
     report::render_domain_fig(title, domain_name, &rows)
 }
+
+const FIG10_TITLE: &str =
+    "Fig. 10 — image-processing domain: PE IP vs PE Spec (normalized to baseline)";
+const FIG11_TITLE: &str = "Fig. 11 — ML kernels: PE ML vs PE Spec (normalized to baseline)";
+const FIG_DSP_TITLE: &str =
+    "Fig. D1 — DSP/audio kernels: PE DSP vs PE Spec (normalized to baseline)";
 
 fn legacy_table1(cfg: &DseConfig) -> String {
     let apps = AppSuite::ml();
@@ -180,14 +184,30 @@ fn fig9_is_byte_identical() {
 fn fig10_is_byte_identical() {
     let s = session();
     let (text, _) = coordinator::fig10(&s);
-    assert_eq!(text, legacy_domain_fig(&AppSuite::imaging(), "pe_ip", 1, &cfg()));
+    assert_eq!(
+        text,
+        legacy_domain_fig(&AppSuite::imaging(), "pe_ip", 1, FIG10_TITLE, &cfg())
+    );
 }
 
 #[test]
 fn fig11_is_byte_identical() {
     let s = session();
     let (text, _) = coordinator::fig11(&s);
-    assert_eq!(text, legacy_domain_fig(&AppSuite::ml(), "pe_ml", 1, &cfg()));
+    assert_eq!(
+        text,
+        legacy_domain_fig(&AppSuite::ml(), "pe_ml", 1, FIG11_TITLE, &cfg())
+    );
+}
+
+#[test]
+fn fig_dsp_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::fig_dsp(&s);
+    assert_eq!(
+        text,
+        legacy_domain_fig(&AppSuite::dsp(), "pe_dsp", 1, FIG_DSP_TITLE, &cfg())
+    );
 }
 
 #[test]
@@ -206,17 +226,18 @@ fn io_sweep_is_byte_identical() {
 
 #[test]
 fn reproduce_all_is_byte_identical() {
-    // The CLI's `reproduce all` path: one shared session, six sections,
-    // printed in canonical order — against the six legacy pipelines run
-    // back to back, each from scratch.
+    // The CLI's `reproduce all` path: one shared session, seven sections,
+    // printed in canonical order — against the seven sequential pipelines
+    // run back to back, each from scratch.
     let s = session();
     let rep = coordinator::reproduce(&s, &coordinator::REPRODUCE_TARGETS);
     let mut legacy = String::new();
     for text in [
         legacy_fig8(&cfg()),
         legacy_fig9(&cfg()),
-        legacy_domain_fig(&AppSuite::imaging(), "pe_ip", 1, &cfg()),
-        legacy_domain_fig(&AppSuite::ml(), "pe_ml", 1, &cfg()),
+        legacy_domain_fig(&AppSuite::imaging(), "pe_ip", 1, FIG10_TITLE, &cfg()),
+        legacy_domain_fig(&AppSuite::ml(), "pe_ml", 1, FIG11_TITLE, &cfg()),
+        legacy_domain_fig(&AppSuite::dsp(), "pe_dsp", 1, FIG_DSP_TITLE, &cfg()),
         legacy_table1(&cfg()),
         legacy_io_sweep(&cfg()),
     ] {
@@ -227,11 +248,24 @@ fn reproduce_all_is_byte_identical() {
 }
 
 #[test]
-fn deprecated_run_shims_delegate_to_the_session_pipeline() {
-    // The one-PR-cycle shims must produce the same bytes as the session
-    // renderers they wrap.
-    let (text, _) = coordinator::run_table1(&cfg());
-    let s = session();
-    let (new_text, _) = coordinator::table1(&s);
-    assert_eq!(text, new_text);
+fn reproduce_is_idempotent_and_width_invariant() {
+    // The same targets through a cold single-threaded session, a cold
+    // wide session, and a warm re-run must all render identical bytes —
+    // the session-API determinism contract the old shim test pinned.
+    let seq = DseSession::builder()
+        .registry_suite()
+        .config(cfg())
+        .threads(1)
+        .build();
+    let par = DseSession::builder()
+        .registry_suite()
+        .config(cfg())
+        .threads(8)
+        .build();
+    let targets = ["fig8", "fig_dsp", "table1"];
+    let a = coordinator::reproduce(&seq, &targets).render_text();
+    let b = coordinator::reproduce(&par, &targets).render_text();
+    let c = coordinator::reproduce(&par, &targets).render_text();
+    assert_eq!(a, b, "thread width changed reproduce output");
+    assert_eq!(b, c, "warm re-run changed reproduce output");
 }
