@@ -22,8 +22,11 @@ pub struct Stats {
     pub mean_ms: f64,
 }
 
-/// Time `f` over `iters` runs.
+/// Time `f` over `iters` runs. `iters` below the minimum of 1 is clamped
+/// up (an empty sample set has no median/min/max and a NaN mean — rather
+/// than panic on the `samples[0]` indexing, measure once).
 pub fn time_ms<T>(iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    let iters = iters.max(1);
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();

@@ -438,6 +438,10 @@ mod tests {
         assert_eq!(resolve_target("imaging"), Some("fig10"));
         assert_eq!(resolve_target("ml"), Some("fig11"));
         assert_eq!(resolve_target("micro"), None);
+        // Fig-less registry domains (micro, synth) are not reproduce
+        // targets; the synth domain is exercised by `stress`, not
+        // `reproduce`.
+        assert_eq!(resolve_target("synth"), None);
         assert_eq!(resolve_target("nope"), None);
     }
 

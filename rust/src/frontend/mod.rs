@@ -20,7 +20,10 @@
 //! the invariant test suite (`rust/tests/frontend_invariants.rs`) all pick
 //! it up through the registry. Three domains ship: the paper's imaging
 //! (§V-A) and ML (§V-B) suites, and the DSP/audio extension ([`dsp`]),
-//! plus the `micro` illustrative apps (no experiment of their own).
+//! plus the `micro` illustrative apps (no experiment of their own) and
+//! the seeded `synth` domain (one fixed-seed representative per
+//! [`synth::SynthProfile`] — the generator behind the stress harness,
+//! `crate::stress`).
 //!
 //! [`AppSuite`] remains as the stable facade over the registry that all
 //! pre-registry call sites (and the byte-pinned golden tests) use.
@@ -29,12 +32,13 @@ pub mod dsp;
 pub mod imaging;
 pub mod micro;
 pub mod ml;
+pub mod synth;
 
 use crate::ir::Graph;
 
 /// Application-domain identity tag. The wrapped string is the registry key
-/// (`"imaging"`, `"ml"`, `"dsp"`, `"micro"`); the tuple field is public so
-/// out-of-tree applications can coin their own domains (see
+/// (`"imaging"`, `"ml"`, `"dsp"`, `"micro"`, `"synth"`); the tuple field is
+/// public so out-of-tree applications can coin their own domains (see
 /// `examples/custom_app.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Domain(pub &'static str);
@@ -48,6 +52,8 @@ impl Domain {
     pub const DSP: Domain = Domain("dsp");
     /// Micro applications for figures and tests.
     pub const MICRO: Domain = Domain("micro");
+    /// Seeded synthetic workloads (the [`synth`] engine / stress harness).
+    pub const SYNTH: Domain = Domain("synth");
 
     /// The registry key this tag wraps.
     pub fn key(self) -> &'static str {
@@ -74,7 +80,8 @@ pub struct AppDescriptor {
     pub name: &'static str,
     /// One-line description (docs and the README application table).
     pub summary: &'static str,
-    /// Pinned number of `Output` nodes.
+    /// Pinned number of `Output` nodes; `0` means unpinned (seed-derived
+    /// synthetic builders — the invariant suite then only checks `>= 1`).
     pub outputs: usize,
     /// Pinned compute-op census as `(label, count)` pairs sorted by label;
     /// empty means unpinned (the invariant suite then checks structure
@@ -283,7 +290,7 @@ static MICRO_APPS: [AppDescriptor; 1] = [AppDescriptor {
     build: micro::conv1d_fig3,
 }];
 
-static DOMAINS: [DomainDescriptor; 4] = [
+static DOMAINS: [DomainDescriptor; 5] = [
     DomainDescriptor {
         key: "imaging",
         title: "image processing (paper §V-A)",
@@ -327,6 +334,13 @@ static DOMAINS: [DomainDescriptor; 4] = [
         fig: None,
         apps: &MICRO_APPS,
     },
+    DomainDescriptor {
+        key: "synth",
+        title: "seeded synthetic workloads (stress engine)",
+        domain: Domain::SYNTH,
+        fig: None,
+        apps: &synth::REGISTRY_APPS,
+    },
 ];
 
 /// The data-driven domain registry: every evaluation domain and every
@@ -336,7 +350,7 @@ pub struct DomainRegistry;
 
 impl DomainRegistry {
     /// Every registered domain, in canonical order
-    /// (imaging, ml, dsp, micro).
+    /// (imaging, ml, dsp, micro, synth).
     pub fn domains() -> &'static [DomainDescriptor] {
         &DOMAINS
     }
@@ -456,6 +470,16 @@ mod tests {
         assert!(AppSuite::by_name("conv1d").is_some());
         assert!(AppSuite::by_name("biquad").is_some());
         assert!(AppSuite::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn synth_domain_is_registered_without_a_fig() {
+        let d = DomainRegistry::domain("synth").unwrap();
+        assert!(d.fig.is_none(), "synth drives no reproduce experiment");
+        assert_eq!(d.apps.len(), synth::profiles().len());
+        assert!(AppSuite::by_name("deep_chain").is_some());
+        // Registry growth must not leak into the paper suite.
+        assert_eq!(AppSuite::all().len(), 8);
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Synthetic workload engine: deterministic, seeded dataflow-graph
+//! generation driven by named **profiles**.
+//!
+//! The paper evaluates the toolchain on a fixed suite of hand-built
+//! kernels; this module generates *unbounded, reproducible* scenario
+//! diversity for the same pipeline. Every profile is a pure data
+//! descriptor ([`SynthProfile`]): a weighted op alphabet, input/size
+//! ranges, a constant density, and an operand-selection bias that shapes
+//! the graph (deep chains, high-fanout hubs, or uniform reuse). Generation
+//! is driven entirely by [`SplitMix64`], so a `(profile, seed)` pair
+//! always produces the same graph on every platform — the replay handle
+//! the stress harness ([`crate::stress`]) prints on failure.
+//!
+//! Three profiles approximate the paper's domains (imaging-, ML-, and
+//! DSP-like op mixes) and four are adversarial (deep chains, wide fanout,
+//! commutative-heavy, const-heavy). Every alphabet is restricted to
+//! baseline-PE ops, so every generated graph is coverable by
+//! [`crate::pe::baseline::baseline_pe`] and flows through mining → MIS →
+//! merging → mapping → evaluation like any hand-built app.
+//!
+//! The profiles are also registered as the `synth` domain of the
+//! [`super::DomainRegistry`] (one fixed-seed representative app per
+//! profile, see [`REGISTRY_SEED`]), so synthetic suites ride through
+//! `DseSession`, the coordinator, and the CLI exactly like the paper
+//! domains; the domain drives no `reproduce` figure (`fig: None`, like
+//! `micro`).
+
+use super::{App, AppDescriptor, Domain};
+use crate::ir::{Graph, NodeId, Op};
+use crate::util::SplitMix64;
+
+/// How operands are drawn from the live-value pool while a graph grows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandBias {
+    /// Uniform over all values produced so far.
+    Uniform,
+    /// With probability `pct`%, draw from the `window` most recently
+    /// produced values — yields long dependence chains.
+    Recent { pct: u32, window: usize },
+    /// With probability `pct`%, draw from the `window` *oldest* values —
+    /// yields a few high-fanout hub nodes.
+    Hub { pct: u32, window: usize },
+}
+
+/// A named synthetic-workload profile: a pure data descriptor the
+/// generator interprets. All fields are `'static` so profiles can live in
+/// the registry statics below.
+#[derive(Debug)]
+pub struct SynthProfile {
+    /// Unique profile name (the `stress --profiles` / registry app key).
+    pub name: &'static str,
+    /// One-line description (docs, `stress` output, registry summary).
+    pub summary: &'static str,
+    /// Weighted compute-op alphabet. Every op must be baseline-supported
+    /// (pinned by `tests::alphabets_are_baseline_only`).
+    pub ops: &'static [(Op, u32)],
+    /// Inclusive range of `Input` nodes.
+    pub inputs: (usize, usize),
+    /// Inclusive range of compute ops (excluding consts).
+    pub ops_range: (usize, usize),
+    /// Const nodes created per 16 compute ops (at least one when > 0).
+    pub consts_per_16: u32,
+    /// Operand-selection bias (graph shape).
+    pub bias: OperandBias,
+}
+
+/// Seed used for the fixed registry representative of each profile (the
+/// `synth` domain's apps must be deterministic zero-argument builders).
+pub const REGISTRY_SEED: u64 = 0x5EED;
+
+impl SynthProfile {
+    /// Generate the profile's graph for `seed`, with sizes drawn from the
+    /// profile's ranges. Deterministic: same `(profile, seed)` → same
+    /// graph, bit for bit.
+    pub fn build(&self, seed: u64) -> Graph {
+        let mut rng = SplitMix64::new(seed);
+        let n_inputs = self.inputs.0 + rng.below(self.inputs.1 - self.inputs.0 + 1);
+        let n_ops = self.ops_range.0 + rng.below(self.ops_range.1 - self.ops_range.0 + 1);
+        self.emit(rng, seed, n_inputs, n_ops)
+    }
+
+    /// [`Self::build`] with explicit sizes (property tests that need small
+    /// or fixed-shape graphs). Still fully seed-deterministic.
+    pub fn build_sized(&self, seed: u64, n_inputs: usize, n_ops: usize) -> Graph {
+        let rng = SplitMix64::new(seed);
+        self.emit(rng, seed, n_inputs, n_ops)
+    }
+
+    /// The generated graph wrapped as a registry-style [`App`] (domain
+    /// `synth`), ready for a `DseSession`.
+    pub fn app(&'static self, seed: u64) -> App {
+        App {
+            name: self.name,
+            domain: Domain::SYNTH,
+            graph: self.build(seed),
+        }
+    }
+
+    fn emit(&self, mut rng: SplitMix64, seed: u64, n_inputs: usize, n_ops: usize) -> Graph {
+        assert!(n_inputs >= 1 && n_ops >= 1, "degenerate synth size");
+        assert!(!self.ops.is_empty(), "empty op alphabet");
+        let mut g = Graph::new(format!("{}_s{seed}", self.name));
+        let mut values: Vec<NodeId> = (0..n_inputs)
+            .map(|k| g.add_node(Op::Input, format!("x{k}")))
+            .collect();
+        if self.consts_per_16 > 0 {
+            let n_consts = (n_ops * self.consts_per_16 as usize / 16).max(1);
+            for _ in 0..n_consts {
+                let v = rng.below(201) as i64 - 100;
+                values.push(g.add_node(Op::Const(v), ""));
+            }
+        }
+        let total_w: u64 = self.ops.iter().map(|&(_, w)| w as u64).sum();
+        for _ in 0..n_ops {
+            let mut r = (rng.next_u64() % total_w) as i64;
+            let mut op = self.ops[0].0;
+            for &(o, w) in self.ops {
+                r -= w as i64;
+                if r < 0 {
+                    op = o;
+                    break;
+                }
+            }
+            let args: Vec<NodeId> = (0..op.arity())
+                .map(|_| self.pick_operand(&mut rng, &values))
+                .collect();
+            values.push(g.add(op, &args));
+        }
+        // Every compute sink becomes an Output, keeping the whole graph
+        // observable (same convention as the hand-built apps).
+        g.freeze();
+        let sinks: Vec<NodeId> = g
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute())
+            .map(|n| n.id)
+            .filter(|&id| g.outputs_of(id).is_empty())
+            .collect();
+        for s in sinks {
+            g.add(Op::Output, &[s]);
+        }
+        g
+    }
+
+    fn pick_operand(&self, rng: &mut SplitMix64, values: &[NodeId]) -> NodeId {
+        match self.bias {
+            OperandBias::Uniform => values[rng.below(values.len())],
+            OperandBias::Recent { pct, window } => {
+                if (rng.below(100) as u32) < pct && values.len() > window {
+                    values[values.len() - 1 - rng.below(window)]
+                } else {
+                    values[rng.below(values.len())]
+                }
+            }
+            OperandBias::Hub { pct, window } => {
+                if (rng.below(100) as u32) < pct {
+                    values[rng.below(window.min(values.len()))]
+                } else {
+                    values[rng.below(values.len())]
+                }
+            }
+        }
+    }
+}
+
+const S_IMAGING: &str = "synthetic stencil-ish mul/add reduction mix with shifts and clamps";
+const S_ML: &str = "synthetic MAC-chain mix with requant shifts, ReLU maxes and clamps";
+const S_DSP: &str = "synthetic butterfly-ish mul/add/sub mix with shifts and abs";
+const S_DEEP: &str = "adversarial: near-linear dependence chains (worst-case depth)";
+const S_WIDE: &str = "adversarial: a few hub values with very high fanout";
+const S_COMM: &str = "adversarial: all-commutative alphabet (canon/matcher port permutations)";
+const S_CONST: &str = "adversarial: constant-dominated graphs (const-register/merging paths)";
+
+static PROFILES: [SynthProfile; 7] = [
+    SynthProfile {
+        name: "imaging_like",
+        summary: S_IMAGING,
+        ops: &[
+            (Op::Mul, 4),
+            (Op::Add, 5),
+            (Op::Sub, 1),
+            (Op::Ashr, 1),
+            (Op::Min, 1),
+            (Op::Max, 1),
+            (Op::Clamp, 1),
+        ],
+        inputs: (3, 6),
+        ops_range: (16, 40),
+        consts_per_16: 4,
+        bias: OperandBias::Recent { pct: 30, window: 8 },
+    },
+    SynthProfile {
+        name: "ml_like",
+        summary: S_ML,
+        ops: &[
+            (Op::Mul, 5),
+            (Op::Add, 5),
+            (Op::Max, 2),
+            (Op::Ashr, 1),
+            (Op::Clamp, 1),
+        ],
+        inputs: (4, 8),
+        ops_range: (20, 48),
+        consts_per_16: 4,
+        bias: OperandBias::Recent { pct: 40, window: 6 },
+    },
+    SynthProfile {
+        name: "dsp_like",
+        summary: S_DSP,
+        ops: &[
+            (Op::Mul, 4),
+            (Op::Add, 3),
+            (Op::Sub, 3),
+            (Op::Ashr, 1),
+            (Op::Abs, 1),
+        ],
+        inputs: (4, 8),
+        ops_range: (16, 40),
+        consts_per_16: 5,
+        bias: OperandBias::Recent { pct: 35, window: 6 },
+    },
+    SynthProfile {
+        name: "deep_chain",
+        summary: S_DEEP,
+        ops: &[
+            (Op::Add, 3),
+            (Op::Sub, 2),
+            (Op::Mul, 2),
+            (Op::Xor, 1),
+            (Op::Ashr, 1),
+        ],
+        inputs: (2, 4),
+        ops_range: (24, 48),
+        consts_per_16: 2,
+        bias: OperandBias::Recent { pct: 90, window: 2 },
+    },
+    SynthProfile {
+        name: "wide_fanout",
+        summary: S_WIDE,
+        ops: &[
+            (Op::Add, 3),
+            (Op::Mul, 2),
+            (Op::Min, 1),
+            (Op::Max, 1),
+            (Op::And, 1),
+            (Op::Or, 1),
+        ],
+        inputs: (2, 4),
+        ops_range: (16, 40),
+        consts_per_16: 2,
+        bias: OperandBias::Hub { pct: 70, window: 3 },
+    },
+    SynthProfile {
+        name: "commutative_heavy",
+        summary: S_COMM,
+        ops: &[
+            (Op::Add, 3),
+            (Op::Mul, 3),
+            (Op::Min, 2),
+            (Op::Max, 2),
+            (Op::And, 1),
+            (Op::Or, 1),
+            (Op::Xor, 1),
+            (Op::Eq, 1),
+        ],
+        inputs: (3, 6),
+        ops_range: (14, 32),
+        consts_per_16: 3,
+        bias: OperandBias::Uniform,
+    },
+    SynthProfile {
+        name: "const_heavy",
+        summary: S_CONST,
+        ops: &[(Op::Add, 3), (Op::Mul, 3), (Op::Sub, 1), (Op::Ashr, 1)],
+        inputs: (2, 4),
+        ops_range: (12, 32),
+        consts_per_16: 12,
+        bias: OperandBias::Uniform,
+    },
+];
+
+/// Every registered profile, in canonical order.
+pub fn profiles() -> &'static [SynthProfile] {
+    &PROFILES
+}
+
+/// Look a profile up by name.
+pub fn profile(name: &str) -> Option<&'static SynthProfile> {
+    PROFILES.iter().find(|p| p.name == name)
+}
+
+/// One [`App`] per profile at the given seed — a full synthetic suite for
+/// a `DseSession`.
+pub fn suite(seed: u64) -> Vec<App> {
+    PROFILES.iter().map(|p| p.app(seed)).collect()
+}
+
+/// A plain `Input -> add-const chain -> Output` graph of the given depth —
+/// the degenerate fixture behind latency-monotonicity property tests
+/// (deterministic, no randomness; kept here so *all* test-graph generation
+/// lives in `frontend::synth`).
+pub fn chain(depth: usize) -> Graph {
+    let mut g = Graph::new(format!("chain{depth}"));
+    let mut v = g.add_op(Op::Input);
+    for k in 0..depth {
+        let c = g.add_op(Op::Const(k as i64 + 1));
+        v = g.add(Op::Add, &[v, c]);
+    }
+    g.add(Op::Output, &[v]);
+    g
+}
+
+/// Fixed-seed registry builder for profile `I` (the `synth` domain's
+/// zero-argument `AppDescriptor::build` entries).
+fn registry_build<const I: usize>() -> Graph {
+    PROFILES[I].build(REGISTRY_SEED)
+}
+
+/// The `synth` domain's registry entries: one fixed-seed representative
+/// app per profile. `outputs: 0` marks the output arity as unpinned — it
+/// is seed-derived data, not a hand-pinned contract (the invariant suite
+/// then checks `>= 1` only).
+pub static REGISTRY_APPS: [AppDescriptor; 7] = [
+    AppDescriptor {
+        name: "imaging_like",
+        summary: S_IMAGING,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<0>,
+    },
+    AppDescriptor {
+        name: "ml_like",
+        summary: S_ML,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<1>,
+    },
+    AppDescriptor {
+        name: "dsp_like",
+        summary: S_DSP,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<2>,
+    },
+    AppDescriptor {
+        name: "deep_chain",
+        summary: S_DEEP,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<3>,
+    },
+    AppDescriptor {
+        name: "wide_fanout",
+        summary: S_WIDE,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<4>,
+    },
+    AppDescriptor {
+        name: "commutative_heavy",
+        summary: S_COMM,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<5>,
+    },
+    AppDescriptor {
+        name: "const_heavy",
+        summary: S_CONST,
+        outputs: 0,
+        census: &[],
+        build: registry_build::<6>,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::baseline::{baseline_ops, baseline_pe};
+
+    #[test]
+    fn generation_is_deterministic() {
+        for p in profiles() {
+            let a = p.build(17);
+            let b = p.build(17);
+            assert_eq!(a.nodes.len(), b.nodes.len(), "{}", p.name);
+            assert_eq!(a.edges.len(), b.edges.len(), "{}", p.name);
+            for (x, y) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!(x.op, y.op, "{}", p.name);
+            }
+            for (x, y) in a.edges.iter().zip(&b.edges) {
+                assert_eq!(x, y, "{}", p.name);
+            }
+            // Different seeds diverge (overwhelmingly likely by design).
+            let c = p.build(18);
+            assert!(
+                a.nodes.len() != c.nodes.len() || a.edges != c.edges,
+                "{}: seeds 17 and 18 collided",
+                p.name
+            );
+        }
+    }
+
+    #[test]
+    fn every_profile_generates_valid_graphs() {
+        for p in profiles() {
+            for seed in 0..20 {
+                let mut g = p.build(seed);
+                g.validate()
+                    .unwrap_or_else(|e| panic!("{} seed {seed}: {e}", p.name));
+                assert!(g.output_ids().len() >= 1, "{} seed {seed}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_respect_profile_ranges() {
+        for p in profiles() {
+            for seed in 0..10 {
+                let g = p.build(seed);
+                let n_in = g.input_ids().len();
+                assert!(
+                    (p.inputs.0..=p.inputs.1).contains(&n_in),
+                    "{} seed {seed}: {n_in} inputs",
+                    p.name
+                );
+                let real = g
+                    .nodes
+                    .iter()
+                    .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+                    .count();
+                assert!(
+                    (p.ops_range.0..=p.ops_range.1).contains(&real),
+                    "{} seed {seed}: {real} ops",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alphabets_are_baseline_only() {
+        let allowed: Vec<&str> = baseline_ops().iter().map(|o| o.label()).collect();
+        for p in profiles() {
+            for &(op, w) in p.ops {
+                assert!(w > 0, "{}: zero weight", p.name);
+                assert!(
+                    allowed.contains(&op.label()),
+                    "{}: {op:?} not baseline-supported",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generated_graphs_map_on_baseline() {
+        let pe = baseline_pe();
+        for p in profiles() {
+            let mut g = p.build(3);
+            crate::mapper::map_app(&mut g, &pe)
+                .unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        }
+    }
+
+    #[test]
+    fn build_sized_pins_sizes() {
+        let p = profile("dsp_like").unwrap();
+        let g = p.build_sized(9, 3, 10);
+        assert_eq!(g.input_ids().len(), 3);
+        let real = g
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+            .count();
+        assert_eq!(real, 10);
+    }
+
+    #[test]
+    fn profile_lookup() {
+        assert_eq!(profiles().len(), 7);
+        assert!(profile("deep_chain").is_some());
+        assert!(profile("nope").is_none());
+        let names: Vec<_> = profiles().iter().map(|p| p.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "duplicate profile names");
+    }
+
+    #[test]
+    fn chain_has_linear_shape() {
+        let mut g = chain(5);
+        g.validate().unwrap();
+        assert_eq!(g.input_ids().len(), 1);
+        assert_eq!(g.output_ids().len(), 1);
+        assert_eq!(g.op_histogram().get("add"), Some(&5));
+        assert_eq!(g.eval(&[0]), vec![1 + 2 + 3 + 4 + 5]);
+    }
+
+    #[test]
+    fn suite_builds_one_app_per_profile() {
+        let apps = suite(2);
+        assert_eq!(apps.len(), profiles().len());
+        for app in &apps {
+            assert_eq!(app.domain, Domain::SYNTH);
+        }
+    }
+}

@@ -12,7 +12,9 @@
 //! renderers in [`coordinator`] consume it. Applications are organized as
 //! a data-driven domain registry ([`frontend::DomainRegistry`]): the
 //! paper's imaging and ML suites plus a DSP/audio extension domain
-//! ([`frontend::dsp`]), each driving its own domain-PE experiment.
+//! ([`frontend::dsp`]), each driving its own domain-PE experiment, and a
+//! seeded synthetic-workload domain ([`frontend::synth`]) that feeds the
+//! metamorphic stress harness ([`stress`], CLI `stress` subcommand).
 //!
 //! See `README.md` for the quickstart and figure-reproduction table,
 //! `DESIGN.md` for the module inventory, the per-experiment index, and the
@@ -43,6 +45,7 @@ pub mod dse;
 pub mod report;
 pub mod runtime;
 pub mod session;
+pub mod stress;
 
 pub mod util;
 pub mod validate;

@@ -13,6 +13,7 @@ use cgra_dse::mining::MinerConfig;
 use cgra_dse::pe::verilog::emit_verilog;
 use cgra_dse::runtime;
 use cgra_dse::session::{report as sjson, AppStages, DseSession};
+use cgra_dse::stress::{self, Mutation, StressConfig};
 use cgra_dse::util::SplitMix64;
 
 /// Usage text, with the target/app/domain lists generated from the
@@ -40,8 +41,14 @@ USAGE:
   cgra-dse sim --app <name> [--variant peK] [--items N]
   cgra-dse reproduce <{targets}|all> [--fast] [--save] [--json]
   cgra-dse reproduce <{domains}>   (domain aliases: dsp -> fig_dsp, ...)
+  cgra-dse stress [--seeds N] [--seed0 N] [--profiles all|p1,p2,...]
+                  [--stimuli N] [--out FILE] [--json]
+                  [--inject <invariant>] [--shrink-budget N]
   cgra-dse validate [--app gaussian|conv|block] [--items N]
   cgra-dse apps
+
+Stress profiles: {profiles}
+Stress invariants (--inject keys): {invariants}
 
 GLOBAL FLAGS:
   --threads N   worker-pool width for parallel stages (default: all cores)
@@ -52,6 +59,12 @@ Apps: {apps}
         targets = coordinator::REPRODUCE_TARGETS.join("|"),
         domains = domains.join("|"),
         apps = apps.join(" | "),
+        profiles = frontend::synth::profiles()
+            .iter()
+            .map(|p| p.name)
+            .collect::<Vec<_>>()
+            .join(" "),
+        invariants = stress::INVARIANTS.join(" "),
     )
 }
 
@@ -70,6 +83,7 @@ fn main() {
         "map" => cmd_map(&flags),
         "sim" => cmd_sim(&flags),
         "reproduce" => cmd_reproduce(&args[1..], &flags),
+        "stress" => cmd_stress(&flags),
         "validate" => cmd_validate(&flags),
         "apps" => {
             println!("{}", AppSuite::names().join(" "));
@@ -350,6 +364,118 @@ fn cmd_reproduce(args: &[String], flags: &Flags) -> i32 {
         }
     }
     0
+}
+
+/// `stress`: run the synthetic-workload metamorphic harness
+/// (`cgra_dse::stress`) and persist the machine-readable summary as
+/// `STRESS.json` (or `--out FILE`). Exit 0 on a clean run with the
+/// summary written, 1 when any invariant fired (the minimal repro +
+/// replay line is printed) or the summary could not be written, 2 on bad
+/// arguments.
+fn cmd_stress(flags: &Flags) -> i32 {
+    let profiles = match flags.get("profiles").unwrap_or("all") {
+        "all" => frontend::synth::profiles().iter().collect(),
+        list => {
+            let mut v = Vec::new();
+            for name in list.split(',').filter(|s| !s.is_empty()) {
+                match frontend::synth::profile(name) {
+                    Some(p) => v.push(p),
+                    None => {
+                        eprintln!(
+                            "unknown profile `{name}`; valid: all {}",
+                            frontend::synth::profiles()
+                                .iter()
+                                .map(|p| p.name)
+                                .collect::<Vec<_>>()
+                                .join(" ")
+                        );
+                        return 2;
+                    }
+                }
+            }
+            v
+        }
+    };
+    let mutation = match flags.get("inject") {
+        None => Mutation::None,
+        Some(key) => match Mutation::for_invariant(key) {
+            Some(m) => m,
+            None => {
+                eprintln!(
+                    "unknown invariant `{key}`; valid --inject keys: {}",
+                    stress::INVARIANTS.join(" ")
+                );
+                return 2;
+            }
+        },
+    };
+    // Replay fidelity: every numeric stress flag must error on a
+    // malformed value, not silently fall back to its default (replay
+    // lines are pasted from CI logs; a mangled `--stimuli` run with the
+    // default would mis-report the violation as unreproducible).
+    fn strict<T: std::str::FromStr>(flags: &Flags, key: &str, default: T) -> Result<T, i32> {
+        match flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                eprintln!("invalid --{key} `{v}` (expected an unsigned integer)");
+                2
+            }),
+        }
+    }
+    let seed0: u64 = match strict(flags, "seed0", 1) {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    // Seeds are serialized as JSON numbers (f64) in STRESS.json; past
+    // 2^53 they would silently lose precision there and the artifact's
+    // replay coordinates would lie.
+    if seed0 > (1u64 << 53) {
+        eprintln!("--seed0 {seed0} exceeds 2^53 (not exactly representable in STRESS.json)");
+        return 2;
+    }
+    let cfg = match (
+        strict(flags, "seeds", 64usize),
+        strict(flags, "stimuli", stress::DEFAULT_STIMULI),
+        strict(flags, "threads", 0usize),
+        strict(flags, "shrink-budget", 256usize),
+    ) {
+        (Ok(seeds), Ok(stimuli), Ok(threads), Ok(shrink_budget)) => StressConfig {
+            seeds,
+            seed0,
+            profiles,
+            stimuli,
+            threads,
+            shrink_budget,
+            mutation,
+            ..Default::default()
+        },
+        _ => return 2,
+    };
+    let report = stress::run(&cfg);
+    // Report first — the shrunk repros and replay lines must reach the
+    // user even if persisting the JSON summary fails afterwards.
+    let json = report.to_json().render();
+    if flags.has("json") {
+        println!("{json}");
+    } else {
+        print!("{}", report.render());
+    }
+    let out = flags.get("out").unwrap_or("STRESS.json");
+    let wrote = match std::fs::write(out, &json) {
+        Ok(()) => {
+            eprintln!("[wrote {out}]");
+            true
+        }
+        Err(e) => {
+            eprintln!("write {out}: {e}");
+            false
+        }
+    };
+    if report.passed() && wrote {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_validate(flags: &Flags) -> i32 {

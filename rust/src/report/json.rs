@@ -143,4 +143,76 @@ mod tests {
     fn whole_floats_render_as_integers() {
         assert_eq!(Json::num(2.0).render(), "2");
     }
+
+    // ---- RFC 8259 conformance of the string escaper --------------------
+
+    #[test]
+    fn quotes_and_backslashes_escape() {
+        assert_eq!(Json::str(r#"say "hi""#).render(), r#""say \"hi\"""#);
+        assert_eq!(Json::str(r"C:\x\y").render(), r#""C:\\x\\y""#);
+        // Solidus needs no escaping (RFC 8259 §7 allows it raw).
+        assert_eq!(Json::str("a/b").render(), "\"a/b\"");
+    }
+
+    #[test]
+    fn named_control_chars_use_short_escapes() {
+        assert_eq!(Json::str("a\nb").render(), "\"a\\nb\"");
+        assert_eq!(Json::str("a\rb").render(), "\"a\\rb\"");
+        assert_eq!(Json::str("a\tb").render(), "\"a\\tb\"");
+    }
+
+    #[test]
+    fn every_remaining_control_char_uses_u_escape() {
+        // All of U+0000..U+001F must be escaped; those without a short
+        // form render as \u00XX.
+        for c in (0u32..0x20).filter_map(char::from_u32) {
+            let rendered = Json::str(c.to_string()).render();
+            let ok = match c {
+                '\n' => rendered == "\"\\n\"",
+                '\r' => rendered == "\"\\r\"",
+                '\t' => rendered == "\"\\t\"",
+                _ => rendered == format!("\"\\u{:04x}\"", c as u32),
+            };
+            assert!(ok, "U+{:04X} rendered as {rendered}", c as u32);
+        }
+        assert_eq!(Json::str("\u{0}").render(), "\"\\u0000\"");
+        assert_eq!(Json::str("\u{8}").render(), "\"\\u0008\"");
+        assert_eq!(Json::str("\u{1f}").render(), "\"\\u001f\"");
+        // U+007F is not in the RFC's mandatory-escape set: raw is valid.
+        assert_eq!(Json::str("\u{7f}").render(), "\"\u{7f}\"");
+    }
+
+    #[test]
+    fn non_bmp_and_multibyte_chars_pass_through_as_utf8() {
+        // RFC 8259 permits raw UTF-8 for everything above U+001F; non-BMP
+        // characters (surrogate pairs in \u-escaped form) stay raw here.
+        assert_eq!(Json::str("😀").render(), "\"😀\""); // U+1F600
+        assert_eq!(Json::str("𝔘𝔫𝔦").render(), "\"𝔘𝔫𝔦\"");
+        assert_eq!(Json::str("漢字µm²").render(), "\"漢字µm²\"");
+        // Mixed: escapes and raw multibyte in one string.
+        assert_eq!(
+            Json::str("a\"😀\\n\nb").render(),
+            "\"a\\\"😀\\\\n\\nb\""
+        );
+    }
+
+    #[test]
+    fn object_keys_are_escaped_too() {
+        let j = Json::Obj(vec![("a\"\n".to_string(), Json::int(1))]);
+        assert_eq!(j.render(), "{\"a\\\"\\n\":1}");
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        // JSON has no NaN/Infinity; `num` must degrade to null for every
+        // non-finite input, including through `opt`.
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::num(f64::NEG_INFINITY).render(), "null");
+        assert_eq!(Json::opt(Some(f64::NAN)).render(), "null");
+        assert_eq!(Json::opt(Some(f64::INFINITY)).render(), "null");
+        // Finite extremes still render as numbers.
+        assert!(matches!(Json::num(f64::MIN_POSITIVE), Json::Num(_)));
+        assert_eq!(Json::num(-0.0).render(), "-0");
+    }
 }

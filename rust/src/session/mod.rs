@@ -174,7 +174,7 @@ impl DseSessionBuilder {
     }
 
     /// Register every member application of one registry domain
-    /// (`"imaging"`, `"ml"`, `"dsp"`, `"micro"`).
+    /// (`"imaging"`, `"ml"`, `"dsp"`, `"micro"`, `"synth"`).
     ///
     /// Panics on an unknown key — the keys are static registry data, so a
     /// miss is a programming error, not an input error.
@@ -186,8 +186,10 @@ impl DseSessionBuilder {
     }
 
     /// Register every application of every registry domain (imaging, ml,
-    /// dsp, micro) — what the CLI uses, so every `reproduce` target and
-    /// `--app` name resolves against one shared session.
+    /// dsp, micro, synth) — what the CLI uses, so every `reproduce` target
+    /// and `--app` name resolves against one shared session. Stages are
+    /// lazy, so unused registrations (e.g. the synthetic apps) cost
+    /// nothing until asked for.
     pub fn registry_suite(mut self) -> Self {
         self.apps.extend(DomainRegistry::all_apps());
         self
@@ -621,9 +623,28 @@ mod tests {
     #[test]
     fn registry_suite_registers_every_domain() {
         let s = DseSession::builder().registry_suite().build();
-        for name in ["camera", "conv", "biquad", "conv1d"] {
+        for name in ["camera", "conv", "biquad", "conv1d", "deep_chain"] {
             assert!(s.app(name).is_some(), "{name} missing from registry suite");
         }
+    }
+
+    #[test]
+    fn synth_apps_flow_through_session_stages() {
+        // A synthetic registry app runs the staged pipeline exactly like a
+        // paper app: mine/rank compute once, ladder starts with base+pe1.
+        let s = DseSession::builder()
+            .domain("synth")
+            .config(fast_cfg())
+            .threads(2)
+            .build();
+        let app = s.app("const_heavy").unwrap();
+        let ladder = app.variants();
+        assert!(ladder.len() >= 2);
+        assert_eq!(ladder[0].0, "base");
+        assert_eq!(ladder[1].0, "pe1");
+        let _ = app.ranked();
+        assert_eq!(s.stage_computes(Stage::Mine), 1);
+        assert_eq!(s.stage_computes(Stage::Rank), 1);
     }
 
     #[test]

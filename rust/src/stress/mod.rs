@@ -1,0 +1,1332 @@
+//! Metamorphic/differential stress harness over the full DSE pipeline.
+//!
+//! For every `(profile, seed)` scenario the harness generates a synthetic
+//! application with [`crate::frontend::synth`], runs it through the whole
+//! toolchain (mining → MIS → merging → mapping → evaluation → reporting,
+//! via `DseSession` where the stage is session-shaped), and checks seven
+//! invariants ([`INVARIANTS`]):
+//!
+//! 1. `canon_relabel` — canonical codes are invariant under node
+//!    relabeling (permuted insertion order) and operand permutation on
+//!    commutative consumers.
+//! 2. `support_antimonotone` — every connected sub-pattern of a frequent
+//!    pattern has MNI support ≥ the pattern's (the property that makes
+//!    MNI a sound mining measure).
+//! 3. `mis_bound` — the MIS of a pattern's occurrence-overlap graph is
+//!    no larger than its distinct occurrence count, the selected set is
+//!    truly independent, and `support ≤ occurrences`.
+//! 4. `merged_remap` — every source pattern merged into a PE re-maps
+//!    onto that PE via `map_app` (merging must not lose its own modes).
+//! 5. `eval_equiv` — `execute_mapping` on the baseline PE equals
+//!    `Graph::eval` on random stimuli (covering + configuration never
+//!    change the computed function).
+//! 6. `ladder_monotone` — every ladder evaluation is positive and
+//!    finite, and the synthesis-frequency sweep is monotone: area/energy
+//!    never decrease with target frequency and timing never re-closes
+//!    after the wall.
+//! 7. `report_identity` — warm (cached) and cold (fresh-session) runs
+//!    render byte-identical machine-readable reports.
+//!
+//! On failure the harness greedily **shrinks** the graph by node removal
+//! to a minimal reproduction and reports the `(profile, seed)` replay
+//! line, so any red run is a one-liner to reproduce:
+//!
+//! ```text
+//! cgra-dse stress --profiles dsp_like --seed0 1742 --seeds 1
+//! ```
+//!
+//! The [`Mutation`] hook injects one deliberate violation per invariant —
+//! `stress --inject <invariant>` proves, live, that each checker fires
+//! and shrinks (the mutation self-tests in `rust/tests/stress_mutation.rs`
+//! and the CLI-level checks in `rust/tests/failure_injection.rs` pin
+//! this). A machine-readable summary is emitted as `STRESS.json` through
+//! [`crate::report::json`].
+
+use std::cell::OnceCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::dse::{self, DseConfig};
+use crate::frontend::synth::{self, SynthProfile};
+use crate::frontend::{App, Domain};
+use crate::ir::{canon_key, find_occurrences, mni_support, Edge, Graph, NodeId, Op};
+use crate::mapper::{execute_mapping, map_app};
+use crate::mining::{mine, MinedPattern, MinerConfig};
+use crate::mis;
+use crate::pe::baseline::baseline_pe;
+use crate::report::json::Json;
+use crate::runtime::{default_width, parallel_map};
+use crate::session::{report as sjson, DseSession};
+use crate::util::SplitMix64;
+
+/// The seven checked invariants, in run order. These names are the
+/// `--inject` keys, the `STRESS.json` check-count keys, and the
+/// `Violation::invariant` values.
+pub const INVARIANTS: [&str; 7] = [
+    "canon_relabel",
+    "support_antimonotone",
+    "mis_bound",
+    "merged_remap",
+    "eval_equiv",
+    "ladder_monotone",
+    "report_identity",
+];
+
+/// Fault injection: each variant corrupts the observation of exactly one
+/// invariant checker, proving the checker (and the shrinker behind it)
+/// actually fires. Exposed on the CLI as `stress --inject <invariant>` so
+/// harness liveness can be demonstrated in CI; [`Mutation::None`] is the
+/// production setting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// No fault injected (the default).
+    None,
+    /// Substitute one op in the relabeled copy before comparing codes.
+    CanonRelabel,
+    /// Inflate the parent pattern's support before the ≥ comparison.
+    SupportInflate,
+    /// Inflate the observed MIS size past the occurrence count.
+    MisInflate,
+    /// Substitute an op the PE cannot implement into the re-mapped
+    /// pattern.
+    MergedForeignOp,
+    /// Flip the low bit of the first mapped output before comparison.
+    EvalBitflip,
+    /// Negate the observed per-op energy before the positivity check.
+    LadderNegate,
+    /// Append a byte to the warm report before the identity comparison.
+    ReportStamp,
+}
+
+impl Mutation {
+    /// The mutation that violates the named invariant.
+    pub fn for_invariant(key: &str) -> Option<Mutation> {
+        Some(match key {
+            "canon_relabel" => Mutation::CanonRelabel,
+            "support_antimonotone" => Mutation::SupportInflate,
+            "mis_bound" => Mutation::MisInflate,
+            "merged_remap" => Mutation::MergedForeignOp,
+            "eval_equiv" => Mutation::EvalBitflip,
+            "ladder_monotone" => Mutation::LadderNegate,
+            "report_identity" => Mutation::ReportStamp,
+            _ => return None,
+        })
+    }
+
+    /// The invariant this mutation violates (`None` for
+    /// [`Mutation::None`]).
+    pub fn invariant(self) -> Option<&'static str> {
+        Some(match self {
+            Mutation::None => return None,
+            Mutation::CanonRelabel => "canon_relabel",
+            Mutation::SupportInflate => "support_antimonotone",
+            Mutation::MisInflate => "mis_bound",
+            Mutation::MergedForeignOp => "merged_remap",
+            Mutation::EvalBitflip => "eval_equiv",
+            Mutation::LadderNegate => "ladder_monotone",
+            Mutation::ReportStamp => "report_identity",
+        })
+    }
+}
+
+/// Stress-run configuration.
+pub struct StressConfig {
+    /// Seeds per profile.
+    pub seeds: usize,
+    /// First seed (scenario seeds are `seed0..seed0 + seeds`).
+    pub seed0: u64,
+    /// Profiles to run (default: every registered profile).
+    pub profiles: Vec<&'static SynthProfile>,
+    /// Pipeline configuration every scenario runs under.
+    pub dse: DseConfig,
+    /// Random stimulus vectors per `eval_equiv` check.
+    pub stimuli: usize,
+    /// Scenario-level worker width (0 = available parallelism).
+    pub threads: usize,
+    /// Max invariant re-checks the shrinker may spend per violation.
+    pub shrink_budget: usize,
+    /// Fault injection (see [`Mutation`]).
+    pub mutation: Mutation,
+}
+
+/// Default random stimulus vectors per `eval_equiv` check (the CLI
+/// default too; replay lines carry `--stimuli` only when it differs).
+pub const DEFAULT_STIMULI: usize = 4;
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        StressConfig {
+            seeds: 16,
+            seed0: 1,
+            profiles: synth::profiles().iter().collect(),
+            dse: stress_dse_config(),
+            stimuli: DEFAULT_STIMULI,
+            threads: 0,
+            shrink_budget: 256,
+            mutation: Mutation::None,
+        }
+    }
+}
+
+/// The pipeline configuration stress scenarios run under: small mining
+/// caps so thousands of scenarios stay fast, but every stage still
+/// exercised (merging included via `max_merged`). `miner.threads` is
+/// pinned to 1 for the same reason sessions run with `threads(1)` —
+/// scenario-level fan-out already saturates the machine, and a
+/// full-width miner inside every scenario would oversubscribe
+/// cores-squared.
+pub fn stress_dse_config() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 2,
+            max_nodes: 4,
+            max_patterns: 300,
+            threads: 1,
+            ..Default::default()
+        },
+        max_merged: 3,
+        ..Default::default()
+    }
+}
+
+/// One invariant violation, already shrunk to a minimal reproduction.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Which invariant fired (an [`INVARIANTS`] entry, or `"generate"`
+    /// when the generator itself produced an invalid graph).
+    pub invariant: &'static str,
+    /// Profile of the failing scenario.
+    pub profile: &'static str,
+    /// Seed of the failing scenario.
+    pub seed: u64,
+    /// Node count of the originally failing graph.
+    pub nodes_original: usize,
+    /// Node count after greedy shrinking.
+    pub nodes_shrunk: usize,
+    /// One-line structural description of the minimal reproduction.
+    pub graph: String,
+    /// What exactly failed (from the checker, on the shrunk graph).
+    pub detail: String,
+    /// One-line CLI replay of this scenario.
+    pub replay: String,
+}
+
+/// Aggregate result of a stress run.
+#[derive(Debug, Clone)]
+pub struct StressReport {
+    /// First seed of every profile's scenario range.
+    pub seed0: u64,
+    /// Seeds run per profile.
+    pub seeds: usize,
+    /// Profile names, in run order.
+    pub profiles: Vec<&'static str>,
+    /// Total scenarios (`profiles × seeds`).
+    pub scenarios: usize,
+    /// Fault injection the run executed under.
+    pub mutation: Mutation,
+    /// Executed sub-checks per invariant, in [`INVARIANTS`] order.
+    pub checks: Vec<(&'static str, usize)>,
+    /// Every violation, in deterministic scenario order.
+    pub violations: Vec<Violation>,
+}
+
+impl StressReport {
+    /// True when no invariant fired.
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Total executed sub-checks across all invariants.
+    pub fn total_checks(&self) -> usize {
+        self.checks.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Human-readable summary (the default `stress` CLI output).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "stress: {} profiles x {} seeds = {} scenarios, {} invariants, {} checks\n",
+            self.profiles.len(),
+            self.seeds,
+            self.scenarios,
+            INVARIANTS.len(),
+            self.total_checks()
+        );
+        s.push_str(&format!("  profiles: {}\n", self.profiles.join(", ")));
+        let per: Vec<String> = self
+            .checks
+            .iter()
+            .map(|(k, n)| format!("{k}={n}"))
+            .collect();
+        s.push_str(&format!("  checks: {}\n", per.join(" ")));
+        if let Some(inv) = self.mutation.invariant() {
+            s.push_str(&format!("  fault injected: {inv}\n"));
+        }
+        if self.passed() {
+            s.push_str("PASS (0 violations)\n");
+        } else {
+            s.push_str(&format!("FAIL ({} violations)\n", self.violations.len()));
+            for (i, v) in self.violations.iter().enumerate() {
+                s.push_str(&format!(
+                    "[{}] invariant `{}` profile `{}` seed {}\n",
+                    i + 1,
+                    v.invariant,
+                    v.profile,
+                    v.seed
+                ));
+                s.push_str(&format!(
+                    "    minimal repro: shrunk {} -> {} nodes; {}\n",
+                    v.nodes_original, v.nodes_shrunk, v.graph
+                ));
+                s.push_str(&format!("    detail: {}\n", v.detail));
+                s.push_str(&format!("    replay: {}\n", v.replay));
+            }
+        }
+        s
+    }
+
+    /// Machine-readable summary (the `STRESS.json` document).
+    ///
+    /// Seeds are emitted as JSON numbers, which are exact only up to
+    /// 2^53; the CLI rejects larger `--seed0` values so the artifact's
+    /// replay coordinates can never silently drift from the run's.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tool", Json::str("cgra-dse-stress")),
+            ("seed0", Json::int(self.seed0 as usize)),
+            ("seeds", Json::int(self.seeds)),
+            (
+                "profiles",
+                Json::Arr(self.profiles.iter().map(|p| Json::str(*p)).collect()),
+            ),
+            ("scenarios", Json::int(self.scenarios)),
+            (
+                "mutation",
+                match self.mutation.invariant() {
+                    Some(k) => Json::str(k),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "checks",
+                Json::obj(
+                    self.checks
+                        .iter()
+                        .map(|&(k, n)| (k, Json::int(n)))
+                        .chain(std::iter::once(("total", Json::int(self.total_checks()))))
+                        .collect(),
+                ),
+            ),
+            (
+                "violations",
+                Json::Arr(
+                    self.violations
+                        .iter()
+                        .map(|v| {
+                            Json::obj(vec![
+                                ("invariant", Json::str(v.invariant)),
+                                ("profile", Json::str(v.profile)),
+                                ("seed", Json::int(v.seed as usize)),
+                                ("nodes_original", Json::int(v.nodes_original)),
+                                ("nodes_shrunk", Json::int(v.nodes_shrunk)),
+                                ("graph", Json::str(&v.graph)),
+                                ("detail", Json::str(&v.detail)),
+                                ("replay", Json::str(&v.replay)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("passed", Json::Bool(self.passed())),
+        ])
+    }
+}
+
+/// Run the full stress harness. Scenarios fan out over the worker pool;
+/// results are aggregated in deterministic `(profile, seed)` order, so a
+/// report is byte-stable for a given configuration.
+pub fn run(cfg: &StressConfig) -> StressReport {
+    let width = if cfg.threads == 0 {
+        default_width()
+    } else {
+        cfg.threads
+    };
+    let jobs: Vec<_> = cfg
+        .profiles
+        .iter()
+        .flat_map(|&p| (0..cfg.seeds).map(move |k| (p, k)))
+        .map(|(profile, k)| {
+            let seed = cfg.seed0.wrapping_add(k as u64);
+            move || run_scenario(profile, seed, cfg)
+        })
+        .collect();
+    let results = parallel_map(jobs, width);
+
+    let mut checks: Vec<(&'static str, usize)> = INVARIANTS.iter().map(|&k| (k, 0)).collect();
+    let mut violations = Vec::new();
+    for r in results {
+        for (slot, n) in checks.iter_mut().zip(r.checks) {
+            slot.1 += n;
+        }
+        violations.extend(r.violations);
+    }
+    StressReport {
+        seed0: cfg.seed0,
+        seeds: cfg.seeds,
+        profiles: cfg.profiles.iter().map(|p| p.name).collect(),
+        scenarios: cfg.profiles.len() * cfg.seeds,
+        mutation: cfg.mutation,
+        checks,
+        violations,
+    }
+}
+
+// ---- scenario execution ------------------------------------------------
+
+struct Ctx {
+    profile: &'static SynthProfile,
+    seed: u64,
+    dse: DseConfig,
+    stimuli: usize,
+    mutation: Mutation,
+}
+
+struct ScenarioResult {
+    checks: [usize; 7],
+    violations: Vec<Violation>,
+}
+
+/// Lazily computed per-graph pipeline state shared by the checkers: one
+/// mining pass serves `support_antimonotone` and `mis_bound`, and one
+/// session serves `merged_remap`, `ladder_monotone`, and the warm half of
+/// `report_identity` (its second, cold session stays fresh by design).
+/// A cache is valid for exactly one graph — the scenario runner keeps one
+/// for the generated graph and the shrinker makes a fresh one per
+/// candidate.
+struct ScenarioCache {
+    mined: OnceCell<Vec<MinedPattern>>,
+    session: OnceCell<DseSession>,
+}
+
+impl ScenarioCache {
+    fn new() -> Self {
+        ScenarioCache {
+            mined: OnceCell::new(),
+            session: OnceCell::new(),
+        }
+    }
+
+    fn mined(&self, g: &Graph, ctx: &Ctx) -> &[MinedPattern] {
+        self.mined.get_or_init(|| {
+            let mut app = g.clone();
+            mine(&mut app, &ctx.dse.miner)
+        })
+    }
+
+    fn session(&self, g: &Graph, ctx: &Ctx) -> &DseSession {
+        self.session
+            .get_or_init(|| one_app_session(as_app(ctx.profile, g), &ctx.dse))
+    }
+}
+
+fn replay_line(profile: &SynthProfile, seed: u64, stimuli: usize, mutation: Mutation) -> String {
+    let mut s = format!(
+        "cgra-dse stress --profiles {} --seed0 {seed} --seeds 1",
+        profile.name
+    );
+    // Detection depends on the stimulus count (an eval mismatch on
+    // stimulus k needs k+1 stimuli to resurface), so non-default counts
+    // must travel with the replay.
+    if stimuli != DEFAULT_STIMULI {
+        s.push_str(&format!(" --stimuli {stimuli}"));
+    }
+    if let Some(k) = mutation.invariant() {
+        s.push_str(&format!(" --inject {k}"));
+    }
+    s
+}
+
+fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -> ScenarioResult {
+    let ctx = Ctx {
+        profile,
+        seed,
+        dse: cfg.dse.clone(),
+        stimuli: cfg.stimuli.max(1),
+        mutation: cfg.mutation,
+    };
+    let mut out = ScenarioResult {
+        checks: [0; 7],
+        violations: Vec::new(),
+    };
+    let built = catch_unwind(AssertUnwindSafe(|| {
+        let mut g = profile.build(seed);
+        g.validate().map(|_| g)
+    }));
+    let g = match built {
+        Ok(Ok(g)) => g,
+        Ok(Err(e)) => {
+            out.violations.push(Violation {
+                invariant: "generate",
+                profile: profile.name,
+                seed,
+                nodes_original: 0,
+                nodes_shrunk: 0,
+                graph: String::new(),
+                detail: format!("generated graph fails validate(): {e}"),
+                replay: replay_line(profile, seed, cfg.stimuli.max(1), cfg.mutation),
+            });
+            return out;
+        }
+        Err(p) => {
+            out.violations.push(Violation {
+                invariant: "generate",
+                profile: profile.name,
+                seed,
+                nodes_original: 0,
+                nodes_shrunk: 0,
+                graph: String::new(),
+                detail: format!("generator panicked: {}", panic_msg(&p)),
+                replay: replay_line(profile, seed, cfg.stimuli.max(1), cfg.mutation),
+            });
+            return out;
+        }
+    };
+    let cache = ScenarioCache::new();
+    for (i, &inv) in INVARIANTS.iter().enumerate() {
+        let (n, fail) = check_one(inv, &g, &ctx, &cache);
+        out.checks[i] += n;
+        if let Some(detail) = fail {
+            let (min_g, min_detail) = shrink(&g, detail, inv, &ctx, cfg.shrink_budget);
+            out.violations.push(Violation {
+                invariant: inv,
+                profile: profile.name,
+                seed,
+                nodes_original: g.len(),
+                nodes_shrunk: min_g.len(),
+                graph: describe(&min_g),
+                detail: min_detail,
+                replay: replay_line(profile, seed, cfg.stimuli.max(1), cfg.mutation),
+            });
+        }
+    }
+    out
+}
+
+/// Run one invariant checker; a checker panic is itself a finding, not a
+/// harness crash.
+fn check_one(inv: &str, g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<String>) {
+    let r = catch_unwind(AssertUnwindSafe(|| match inv {
+        "canon_relabel" => check_canon(g, ctx),
+        "support_antimonotone" => check_support(g, ctx, cache),
+        "mis_bound" => check_mis(g, ctx, cache),
+        "merged_remap" => check_merged(g, ctx, cache),
+        "eval_equiv" => check_eval(g, ctx),
+        "ladder_monotone" => check_ladder(g, ctx, cache),
+        "report_identity" => check_report(g, ctx, cache),
+        other => panic!("unknown invariant `{other}`"),
+    }));
+    match r {
+        Ok(v) => v,
+        Err(p) => (1, Some(format!("checker panicked: {}", panic_msg(&p)))),
+    }
+}
+
+fn panic_msg(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---- invariant checkers ------------------------------------------------
+
+fn check_canon(g: &Graph, ctx: &Ctx) -> (usize, Option<String>) {
+    let mut g2 = g.clone();
+    g2.freeze();
+    let compute: Vec<NodeId> = g2
+        .nodes
+        .iter()
+        .filter(|n| n.op.is_compute())
+        .map(|n| n.id)
+        .collect();
+    if compute.len() < 2 {
+        return (0, None);
+    }
+    let mut rng = SplitMix64::new(ctx.seed ^ 0xCA17_0001);
+    let mut checks = 0usize;
+    for trial in 0..3 {
+        // Grow a random connected compute subset (2..=5 nodes).
+        let mut subset: Vec<NodeId> = vec![compute[rng.below(compute.len())]];
+        let target_k = 2 + rng.below(4);
+        while subset.len() < target_k {
+            let mut cands: Vec<NodeId> = Vec::new();
+            for &id in &subset {
+                for src in g2.inputs_of(id).iter().flatten() {
+                    if g2.node(*src).op.is_compute() && !subset.contains(src) {
+                        cands.push(*src);
+                    }
+                }
+                for &(dst, _) in g2.outputs_of(id) {
+                    if g2.node(dst).op.is_compute() && !subset.contains(&dst) {
+                        cands.push(dst);
+                    }
+                }
+            }
+            cands.sort_unstable();
+            cands.dedup();
+            if cands.is_empty() {
+                break;
+            }
+            subset.push(cands[rng.below(cands.len())]);
+        }
+        if subset.len() < 2 {
+            continue;
+        }
+        let pat = g.induced_subgraph(&subset, "p");
+        let mut shuffled = subset.clone();
+        rng.shuffle(&mut shuffled);
+        let mut pat2 = g.induced_subgraph(&shuffled, "q");
+        if ctx.mutation == Mutation::CanonRelabel {
+            if let Some(m) = substitute_op(&pat2) {
+                pat2 = m;
+            }
+        }
+        checks += 1;
+        if canon_key(&pat) != canon_key(&pat2) {
+            return (
+                checks,
+                Some(format!(
+                    "canonical code changed under node relabeling (trial {trial}, \
+                     subset {subset:?}): `{}` vs `{}`",
+                    canon_key(&pat),
+                    canon_key(&pat2)
+                )),
+            );
+        }
+        let pat3 = swap_commutative_ports(&pat);
+        checks += 1;
+        if canon_key(&pat) != canon_key(&pat3) {
+            return (
+                checks,
+                Some(format!(
+                    "canonical code changed under commutative operand permutation \
+                     (trial {trial}, subset {subset:?}): `{}` vs `{}`",
+                    canon_key(&pat),
+                    canon_key(&pat3)
+                )),
+            );
+        }
+    }
+    (checks, None)
+}
+
+fn check_support(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<String>) {
+    let mined = cache.mined(g, ctx);
+    let mut app = g.clone();
+    app.freeze();
+    let mut checks = 0usize;
+    for p in mined.iter().filter(|p| p.graph.len() >= 2).take(8) {
+        let parent_support = if ctx.mutation == Mutation::SupportInflate {
+            p.support + 1_000_000
+        } else {
+            p.support
+        };
+        for drop_idx in 0..p.graph.len() {
+            let Some(mut sub) = remove_pattern_node(&p.graph, drop_idx) else {
+                continue;
+            };
+            let occs = find_occurrences(&mut sub, &mut app, &ctx.dse.miner.match_cfg);
+            let s = mni_support(sub.len(), &occs);
+            checks += 1;
+            if s < parent_support {
+                return (
+                    checks,
+                    Some(format!(
+                        "anti-monotone support violated: pattern `{}` has support \
+                         {parent_support} but its sub-pattern `{}` only {s}",
+                        p.canon,
+                        canon_key(&sub)
+                    )),
+                );
+            }
+        }
+    }
+    (checks, None)
+}
+
+fn check_mis(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<String>) {
+    let mined = cache.mined(g, ctx);
+    let mut checks = 0usize;
+    for p in mined {
+        // Same restart/seed discipline as `mis::mis_size`.
+        let r = mis::mis(&p.distinct, 32, 0xC0FFEE);
+        let observed = if ctx.mutation == Mutation::MisInflate {
+            r.size + p.distinct.len() + 1
+        } else {
+            r.size
+        };
+        checks += 1;
+        if observed > p.distinct.len() {
+            return (
+                checks,
+                Some(format!(
+                    "MIS size {observed} exceeds distinct occurrence count {} \
+                     for pattern `{}`",
+                    p.distinct.len(),
+                    p.canon
+                )),
+            );
+        }
+        for (i, &a) in r.set.iter().enumerate() {
+            for &b in &r.set[i + 1..] {
+                if node_sets_overlap(&p.distinct[a], &p.distinct[b]) {
+                    return (
+                        checks,
+                        Some(format!(
+                            "MIS set is not independent: occurrences {a} and {b} of \
+                             pattern `{}` share a node",
+                            p.canon
+                        )),
+                    );
+                }
+            }
+        }
+        checks += 1;
+        if p.support > p.occurrences.len() {
+            return (
+                checks,
+                Some(format!(
+                    "MNI support {} exceeds occurrence count {} for pattern `{}`",
+                    p.support,
+                    p.occurrences.len(),
+                    p.canon
+                )),
+            );
+        }
+    }
+    (checks, None)
+}
+
+fn check_merged(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<String>) {
+    if !has_real_op(g) {
+        return (0, None);
+    }
+    let session = cache.session(g, ctx);
+    let stages = session.app(ctx.profile.name).expect("registered above");
+    let variants = stages.variants();
+    // The most-merged ladder entry; always at least ["base", "pe1"].
+    let (vname, pe) = variants.last().expect("ladder never empty");
+    let mut checks = 0usize;
+    for (m, pat) in pe.mode_patterns.iter().enumerate() {
+        let mut wrapper = pattern_to_app(pat);
+        if ctx.mutation == Mutation::MergedForeignOp {
+            if let Some(w) = inject_foreign_op(&wrapper, g) {
+                wrapper = w;
+            }
+        }
+        checks += 1;
+        if let Err(e) = map_app(&mut wrapper, pe) {
+            return (
+                checks,
+                Some(format!(
+                    "source pattern of mode {m} ({} nodes) does not re-map onto \
+                     its own merged PE `{vname}`: {e}",
+                    pat.len()
+                )),
+            );
+        }
+    }
+    (checks, None)
+}
+
+fn check_eval(g: &Graph, ctx: &Ctx) -> (usize, Option<String>) {
+    let mut g2 = g.clone();
+    let pe = baseline_pe();
+    let mapping = match map_app(&mut g2, &pe) {
+        Ok(m) => m,
+        Err(e) => {
+            return (
+                1,
+                Some(format!("baseline PE cannot cover a synthetic app: {e}")),
+            )
+        }
+    };
+    let n_in = g2.input_ids().len();
+    let mut rng = SplitMix64::new(ctx.seed ^ 0xE7A1_0002);
+    let mut checks = 1usize; // the covering itself
+    for k in 0..ctx.stimuli {
+        let xs: Vec<i64> = (0..n_in).map(|_| rng.word()).collect();
+        let want = g2.eval(&xs);
+        let mut got = execute_mapping(&mut g2, &pe, &mapping, &xs);
+        if ctx.mutation == Mutation::EvalBitflip {
+            if let Some(v) = got.first_mut() {
+                *v ^= 1;
+            }
+        }
+        checks += 1;
+        if got != want {
+            return (
+                checks,
+                Some(format!(
+                    "execute_mapping != Graph::eval on stimulus {k}: got {got:?}, \
+                     want {want:?}, inputs {xs:?}"
+                )),
+            );
+        }
+    }
+    (checks, None)
+}
+
+fn check_ladder(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<String>) {
+    if !has_real_op(g) {
+        return (0, None);
+    }
+    let session = cache.session(g, ctx);
+    let stages = session.app(ctx.profile.name).expect("registered above");
+    let ladder = stages.ladder();
+    if ladder.is_empty() {
+        return (
+            1,
+            Some("ladder evaluation dropped every variant (baseline unmappable)".into()),
+        );
+    }
+    // The Fig. 8 frequency grid, reused verbatim as the monotonicity probe.
+    let sweep_freqs = crate::coordinator::fig8_freqs();
+    let mut checks = 0usize;
+    for ve in ladder.iter() {
+        let e_obs = if ctx.mutation == Mutation::LadderNegate {
+            -ve.pe_energy_per_op
+        } else {
+            ve.pe_energy_per_op
+        };
+        checks += 1;
+        if !(e_obs > 0.0 && e_obs.is_finite())
+            || !(ve.total_area > 0.0 && ve.total_area.is_finite())
+            || !(ve.fmax_ghz > 0.0 && ve.fmax_ghz.is_finite())
+        {
+            return (
+                checks,
+                Some(format!(
+                    "non-positive/non-finite evaluation for variant `{}`: \
+                     energy {e_obs} fJ/op, area {} um2, fmax {} GHz",
+                    ve.variant, ve.total_area, ve.fmax_ghz
+                )),
+            );
+        }
+        let pts = dse::frequency_sweep(ve, &sweep_freqs);
+        let mut wall = false;
+        let mut prev: Option<(f64, f64)> = None;
+        for p in &pts {
+            checks += 1;
+            match (p.energy_per_op, p.total_area) {
+                (Some(e), Some(a)) => {
+                    if wall {
+                        return (
+                            checks,
+                            Some(format!(
+                                "variant `{}` re-closes timing at {} GHz after \
+                                 failing at a lower frequency",
+                                ve.variant, p.freq_ghz
+                            )),
+                        );
+                    }
+                    if let Some((pe_, pa)) = prev {
+                        if e < pe_ * (1.0 - 1e-9) || a < pa * (1.0 - 1e-9) {
+                            return (
+                                checks,
+                                Some(format!(
+                                    "variant `{}` sweep not monotone at {} GHz: \
+                                     energy {pe_} -> {e}, area {pa} -> {a}",
+                                    ve.variant, p.freq_ghz
+                                )),
+                            );
+                        }
+                    }
+                    prev = Some((e, a));
+                }
+                (None, None) => wall = true,
+                _ => {
+                    return (
+                        checks,
+                        Some(format!(
+                            "variant `{}` sweep point at {} GHz is half-feasible \
+                             (energy xor area)",
+                            ve.variant, p.freq_ghz
+                        )),
+                    )
+                }
+            }
+        }
+    }
+    (checks, None)
+}
+
+fn check_report(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<String>) {
+    if !has_real_op(g) {
+        return (0, None);
+    }
+    // Warm side: the shared scenario session, already exercised by the
+    // earlier checkers (its ladder is a cache hit here). Rendered twice
+    // to also pin render idempotency.
+    let s1 = cache.session(g, ctx);
+    let st1 = s1.app(ctx.profile.name).expect("registered above");
+    let warm1 = sjson::ladder_json(ctx.profile.name, &st1.ladder()).render();
+    let mut warm2 = sjson::ladder_json(ctx.profile.name, &st1.ladder()).render();
+    if ctx.mutation == Mutation::ReportStamp {
+        warm2.push('!');
+    }
+    let mut checks = 1usize;
+    if warm2 != warm1 {
+        return (
+            checks,
+            Some(format!(
+                "warm session re-render differs from its first render: {} vs \
+                 {} bytes, first difference at byte {}",
+                warm2.len(),
+                warm1.len(),
+                first_diff(&warm2, &warm1)
+            )),
+        );
+    }
+    // Cold side: a genuinely fresh session over the same graph must
+    // render byte-identically to the warm one.
+    let s2 = one_app_session(as_app(ctx.profile, g), &ctx.dse);
+    let cold = sjson::ladder_json(ctx.profile.name, &s2.app(ctx.profile.name).unwrap().ladder())
+        .render();
+    checks += 1;
+    if cold != warm1 {
+        return (
+            checks,
+            Some(format!(
+                "warm (cached) session report differs from a cold session's: \
+                 {} vs {} bytes, first difference at byte {}",
+                warm1.len(),
+                cold.len(),
+                first_diff(&warm1, &cold)
+            )),
+        );
+    }
+    (checks, None)
+}
+
+// ---- shrinking ---------------------------------------------------------
+
+/// Greedily shrink `g` by single-node removal while the named invariant
+/// keeps failing; returns the minimal graph found with the failure detail
+/// observed on it. Bounded by `budget` invariant re-checks.
+fn shrink(
+    g: &Graph,
+    initial_detail: String,
+    inv: &'static str,
+    ctx: &Ctx,
+    mut budget: usize,
+) -> (Graph, String) {
+    let mut cur = g.clone();
+    let mut detail = initial_detail;
+    'outer: loop {
+        // Newest nodes first: outputs and late ops shed fastest.
+        for raw in (0..cur.len() as u32).rev() {
+            if budget == 0 {
+                break 'outer;
+            }
+            let Some(mut cand) = remove_rewire(&cur, NodeId(raw)) else {
+                continue;
+            };
+            if cand.validate().is_err() {
+                continue;
+            }
+            budget -= 1;
+            let cand_cache = ScenarioCache::new();
+            if let (_, Some(d)) = check_one(inv, &cand, ctx, &cand_cache) {
+                cur = cand;
+                detail = d;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, detail)
+}
+
+/// Remove one node from an application graph, rewiring its consumers to
+/// its first producer (or, for sourceless nodes, to another sourceless
+/// node). Returns `None` when the removal cannot produce a well-formed
+/// app (last Output, no replacement driver, or an Output that would end
+/// up driven by an Input).
+fn remove_rewire(g: &Graph, id: NodeId) -> Option<Graph> {
+    let node = g.node(id);
+    let is_output = node.op == Op::Output;
+    if is_output && g.output_ids().len() <= 1 {
+        return None;
+    }
+    let repl: Option<NodeId> = if is_output {
+        None
+    } else {
+        g.edges
+            .iter()
+            .find(|e| e.dst == id)
+            .map(|e| e.src)
+            .or_else(|| {
+                g.nodes
+                    .iter()
+                    .find(|n| n.id != id && n.op.arity() == 0 && n.op != Op::Output)
+                    .map(|n| n.id)
+            })
+    };
+    let consumers: Vec<&Edge> = g.edges.iter().filter(|e| e.src == id).collect();
+    if !is_output && !consumers.is_empty() {
+        let r = repl?;
+        // The mapper has no source kind for an app Output driven directly
+        // by an app Input; never create that shape.
+        if g.node(r).op == Op::Input && consumers.iter().any(|e| g.node(e.dst).op == Op::Output) {
+            return None;
+        }
+    }
+    let mut out = Graph::new(g.name.clone());
+    let mut remap: Vec<Option<NodeId>> = vec![None; g.len()];
+    for n in &g.nodes {
+        if n.id != id {
+            remap[n.id.index()] = Some(out.add_node(n.op, n.name.clone()));
+        }
+    }
+    for e in &g.edges {
+        if e.dst == id {
+            continue;
+        }
+        let src = if e.src == id { repl.expect("checked above") } else { e.src };
+        out.connect(
+            remap[src.index()].expect("src survives"),
+            remap[e.dst.index()].expect("dst survives"),
+            e.dst_port,
+        );
+    }
+    Some(out)
+}
+
+// ---- helpers -----------------------------------------------------------
+
+fn as_app(profile: &'static SynthProfile, g: &Graph) -> App {
+    App {
+        name: profile.name,
+        domain: Domain::SYNTH,
+        graph: g.clone(),
+    }
+}
+
+fn one_app_session(app: App, dse: &DseConfig) -> DseSession {
+    // Scenario-level parallelism already saturates the pool; stages run
+    // single-threaded inside a scenario.
+    DseSession::builder()
+        .app(app)
+        .config(dse.clone())
+        .threads(1)
+        .build()
+}
+
+fn has_real_op(g: &Graph) -> bool {
+    g.nodes
+        .iter()
+        .any(|n| n.op.is_compute() && !matches!(n.op, Op::Const(_)))
+}
+
+fn node_sets_overlap(a: &[NodeId], b: &[NodeId]) -> bool {
+    a.iter().any(|x| b.contains(x))
+}
+
+fn first_diff(a: &str, b: &str) -> usize {
+    a.bytes()
+        .zip(b.bytes())
+        .position(|(x, y)| x != y)
+        .unwrap_or_else(|| a.len().min(b.len()))
+}
+
+/// One-line structural description: node/edge counts plus a sorted op
+/// census, e.g. `7 nodes (add x2, const x1, in x2, out x2), 6 edges`.
+pub fn describe(g: &Graph) -> String {
+    let mut census: Vec<(&str, usize)> = Vec::new();
+    for n in &g.nodes {
+        let label = n.op.label();
+        match census.iter_mut().find(|(l, _)| *l == label) {
+            Some(slot) => slot.1 += 1,
+            None => census.push((label, 1)),
+        }
+    }
+    census.sort_unstable();
+    let parts: Vec<String> = census
+        .iter()
+        .map(|(l, c)| format!("{l} x{c}"))
+        .collect();
+    format!(
+        "{} nodes ({}), {} edges",
+        g.len(),
+        parts.join(", "),
+        g.edges.len()
+    )
+}
+
+/// A same-arity substitute with a different label, for fault injection.
+fn alt_op(op: Op) -> Option<Op> {
+    Some(match op {
+        Op::Add => Op::Sub,
+        Op::Sub => Op::Add,
+        Op::Mul => Op::Add,
+        Op::Shl => Op::Ashr,
+        Op::Lshr => Op::Ashr,
+        Op::Ashr => Op::Shl,
+        Op::Min => Op::Max,
+        Op::Max => Op::Min,
+        Op::Abs => Op::Not,
+        Op::Not => Op::Abs,
+        Op::Lt => Op::Gt,
+        Op::Gt => Op::Lt,
+        Op::Eq => Op::Lt,
+        Op::Sel => Op::Clamp,
+        Op::Clamp => Op::Sel,
+        Op::And => Op::Or,
+        Op::Or => Op::And,
+        Op::Xor => Op::And,
+        Op::Const(_) | Op::Input | Op::Output => return None,
+    })
+}
+
+/// Rebuild `g` with the first substitutable node's op replaced (fault
+/// injection for `canon_relabel`).
+fn substitute_op(g: &Graph) -> Option<Graph> {
+    let idx = g.nodes.iter().position(|n| alt_op(n.op).is_some())?;
+    let mut out = Graph::new(g.name.clone());
+    for (i, n) in g.nodes.iter().enumerate() {
+        let op = if i == idx { alt_op(n.op).unwrap() } else { n.op };
+        out.add_node(op, n.name.clone());
+    }
+    for e in &g.edges {
+        out.connect(e.src, e.dst, e.dst_port);
+    }
+    Some(out)
+}
+
+/// Rebuild `g` with every commutative binary consumer's in-edge ports
+/// swapped — a semantics-preserving operand permutation the canonical
+/// code must be blind to.
+fn swap_commutative_ports(g: &Graph) -> Graph {
+    let mut out = Graph::new(g.name.clone());
+    for n in &g.nodes {
+        out.add_node(n.op, n.name.clone());
+    }
+    for e in &g.edges {
+        let op = g.nodes[e.dst.index()].op;
+        let port = if op.commutative() && op.arity() == 2 {
+            1 - e.dst_port
+        } else {
+            e.dst_port
+        };
+        out.connect(e.src, e.dst, port);
+    }
+    out
+}
+
+/// Remove node `idx` from a (compute-only) pattern graph; `None` when the
+/// remainder is empty or disconnected (the matcher requires connected
+/// patterns).
+fn remove_pattern_node(g: &Graph, idx: usize) -> Option<Graph> {
+    if g.len() <= 1 {
+        return None;
+    }
+    let keep: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .map(|n| n.id)
+        .filter(|id| id.index() != idx)
+        .collect();
+    let sub = g.induced_subgraph(&keep, "sub");
+    is_connected_undirected(&sub).then_some(sub)
+}
+
+fn is_connected_undirected(g: &Graph) -> bool {
+    let n = g.len();
+    if n <= 1 {
+        return true;
+    }
+    let mut adj = vec![Vec::new(); n];
+    for e in &g.edges {
+        adj[e.src.index()].push(e.dst.index());
+        adj[e.dst.index()].push(e.src.index());
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(u) = stack.pop() {
+        for &v in &adj[u] {
+            if !seen[v] {
+                seen[v] = true;
+                count += 1;
+                stack.push(v);
+            }
+        }
+    }
+    count == n
+}
+
+/// Wrap a PE mode pattern (compute-only, possibly with unbound ports)
+/// into a well-formed application: fresh `Input`s drive every unbound
+/// port, every sink gets an `Output`.
+fn pattern_to_app(pat: &Graph) -> Graph {
+    let mut g = pat.clone();
+    g.name = format!("{}_as_app", pat.name);
+    let driven: std::collections::BTreeSet<(u32, u8)> =
+        pat.edges.iter().map(|e| (e.dst.0, e.dst_port)).collect();
+    for id in 0..pat.len() as u32 {
+        let arity = pat.nodes[id as usize].op.arity() as u8;
+        for p in 0..arity {
+            if !driven.contains(&(id, p)) {
+                let input = g.add_op(Op::Input);
+                g.connect(input, NodeId(id), p);
+            }
+        }
+    }
+    let consumed: std::collections::BTreeSet<u32> =
+        pat.edges.iter().map(|e| e.src.0).collect();
+    for id in 0..pat.len() as u32 {
+        if !consumed.contains(&id) {
+            g.add(Op::Output, &[NodeId(id)]);
+        }
+    }
+    g
+}
+
+/// Rebuild an app wrapper with one node's op replaced by a same-arity op
+/// the underlying application never uses (so no PE mode can cover it) —
+/// fault injection for `merged_remap`.
+fn inject_foreign_op(wrapper: &Graph, app: &Graph) -> Option<Graph> {
+    let used = app.op_histogram();
+    let mut pick: Option<(usize, Op)> = None;
+    'outer: for (i, n) in wrapper.nodes.iter().enumerate() {
+        if !n.op.is_compute() || matches!(n.op, Op::Const(_)) {
+            continue;
+        }
+        for cand in Op::all_compute() {
+            if matches!(cand, Op::Const(_)) {
+                continue;
+            }
+            if cand.arity() == n.op.arity()
+                && cand.label() != n.op.label()
+                && !used.contains_key(cand.label())
+            {
+                pick = Some((i, cand));
+                break 'outer;
+            }
+        }
+    }
+    let (idx, op) = pick?;
+    let mut out = Graph::new(wrapper.name.clone());
+    for (i, n) in wrapper.nodes.iter().enumerate() {
+        out.add_node(if i == idx { op } else { n.op }, n.name.clone());
+    }
+    for e in &wrapper.edges {
+        out.connect(e.src, e.dst, e.dst_port);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(profile: &str, seeds: usize) -> StressConfig {
+        StressConfig {
+            seeds,
+            seed0: 1,
+            profiles: vec![synth::profile(profile).unwrap()],
+            stimuli: 2,
+            threads: 1,
+            shrink_budget: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn clean_tiny_run_passes_every_invariant() {
+        let rep = run(&tiny_cfg("const_heavy", 2));
+        assert!(rep.passed(), "{}", rep.render());
+        assert_eq!(rep.scenarios, 2);
+        // Every invariant actually executed checks.
+        for (k, n) in &rep.checks {
+            assert!(*n > 0, "invariant {k} ran no checks");
+        }
+    }
+
+    #[test]
+    fn report_json_is_wellformed_and_stable() {
+        let a = run(&tiny_cfg("deep_chain", 1)).to_json().render();
+        let b = run(&tiny_cfg("deep_chain", 1)).to_json().render();
+        assert_eq!(a, b, "stress report must be byte-stable");
+        assert!(a.starts_with('{') && a.ends_with('}'));
+        for key in INVARIANTS {
+            assert!(a.contains(&format!("\"{key}\"")), "missing {key} in {a}");
+        }
+        assert!(a.contains("\"passed\":true"));
+        assert!(a.contains("\"violations\":[]"));
+    }
+
+    #[test]
+    fn mutation_keys_roundtrip() {
+        for inv in INVARIANTS {
+            let m = Mutation::for_invariant(inv).unwrap();
+            assert_eq!(m.invariant(), Some(inv));
+        }
+        assert!(Mutation::for_invariant("nope").is_none());
+        assert_eq!(Mutation::None.invariant(), None);
+    }
+
+    #[test]
+    fn replay_line_mentions_profile_seed_and_injection() {
+        let p = synth::profile("dsp_like").unwrap();
+        let line = replay_line(p, 42, DEFAULT_STIMULI, Mutation::EvalBitflip);
+        assert!(line.contains("--profiles dsp_like"), "{line}");
+        assert!(line.contains("--seed0 42"), "{line}");
+        assert!(line.contains("--inject eval_equiv"), "{line}");
+        assert!(!replay_line(p, 42, DEFAULT_STIMULI, Mutation::None).contains("--inject"));
+        let with_stim = replay_line(p, 42, 9, Mutation::None);
+        assert!(with_stim.contains("--stimuli 9"), "{with_stim}");
+    }
+
+    #[test]
+    fn remove_rewire_preserves_validity() {
+        let p = synth::profile("imaging_like").unwrap();
+        let g = p.build(5);
+        let mut removed = 0;
+        for raw in 0..g.len() as u32 {
+            if let Some(mut cand) = remove_rewire(&g, NodeId(raw)) {
+                cand.validate().unwrap_or_else(|e| {
+                    panic!("removal of node {raw} broke validity: {e}")
+                });
+                assert_eq!(cand.len(), g.len() - 1);
+                removed += 1;
+            }
+        }
+        assert!(removed > 0, "no node was removable");
+    }
+
+    #[test]
+    fn pattern_to_app_yields_valid_mappable_graph() {
+        // mul->add MAC pattern with unbound ports.
+        let mut pat = Graph::new("mac");
+        let m = pat.add_op(Op::Mul);
+        let a = pat.add_op(Op::Add);
+        pat.connect(m, a, 0);
+        let mut app = pattern_to_app(&pat);
+        app.validate().unwrap();
+        assert_eq!(app.input_ids().len(), 3);
+        assert_eq!(app.output_ids().len(), 1);
+        map_app(&mut app, &baseline_pe()).unwrap();
+    }
+
+    #[test]
+    fn describe_lists_census() {
+        let g = synth::chain(2);
+        let d = describe(&g);
+        assert!(d.contains("add x2"), "{d}");
+        assert!(d.contains("nodes"), "{d}");
+    }
+}

@@ -1,5 +1,8 @@
 //! Failure-injection tests: every stage must fail *cleanly* (typed errors,
-//! no panics) when given impossible resources or uncoverable inputs.
+//! no panics) when given impossible resources or uncoverable inputs —
+//! including the `stress` CLI path, exercised against the real binary
+//! (clean run → exit 0 + well-formed `STRESS.json`; injected violation →
+//! exit 1 + minimal repro with seed, profile, and replay line).
 
 use cgra_dse::arch::{Fabric, FabricConfig};
 use cgra_dse::frontend::AppSuite;
@@ -100,6 +103,116 @@ fn runtime_load_missing_artifact_is_an_error() {
             assert!(e.to_string().contains("pjrt"), "{e}");
         }
     }
+}
+
+// ---- stress CLI path ---------------------------------------------------
+
+/// Run the real `cgra-dse` binary with the given args; returns
+/// `(exit_code, stdout, stderr)`.
+fn run_cli(args: &[&str]) -> (i32, String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cgra-dse"))
+        .args(args)
+        .output()
+        .expect("spawn cgra-dse");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn temp_json(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cgra_stress_{tag}_{}.json", std::process::id()))
+}
+
+#[test]
+fn stress_clean_run_exits_zero_with_wellformed_stress_json() {
+    let out = temp_json("clean");
+    let out_s = out.to_str().unwrap();
+    let (code, stdout, stderr) = run_cli(&[
+        "stress",
+        "--seeds",
+        "2",
+        "--profiles",
+        "deep_chain,const_heavy",
+        "--threads",
+        "2",
+        "--out",
+        out_s,
+    ]);
+    assert_eq!(code, 0, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("PASS"), "{stdout}");
+    let json = std::fs::read_to_string(&out).expect("STRESS.json written");
+    let _ = std::fs::remove_file(&out);
+    // Well-formed: one JSON object carrying the full summary shape.
+    assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+    assert!(json.contains("\"tool\":\"cgra-dse-stress\""), "{json}");
+    assert!(json.contains("\"passed\":true"), "{json}");
+    assert!(json.contains("\"violations\":[]"), "{json}");
+    assert!(json.contains("\"scenarios\":4"), "{json}");
+    for inv in cgra_dse::stress::INVARIANTS {
+        assert!(json.contains(&format!("\"{inv}\"")), "missing {inv}: {json}");
+    }
+    // Balanced braces/brackets (cheap structural sanity for the
+    // hand-rolled renderer; strings contain no braces in a clean run).
+    assert_eq!(
+        json.matches('{').count(),
+        json.matches('}').count(),
+        "{json}"
+    );
+    assert_eq!(
+        json.matches('[').count(),
+        json.matches(']').count(),
+        "{json}"
+    );
+}
+
+#[test]
+fn stress_injected_violation_exits_one_with_minimal_repro() {
+    let out = temp_json("inject");
+    let out_s = out.to_str().unwrap();
+    let (code, stdout, stderr) = run_cli(&[
+        "stress",
+        "--seeds",
+        "1",
+        "--seed0",
+        "5",
+        "--profiles",
+        "const_heavy",
+        "--inject",
+        "eval_equiv",
+        "--shrink-budget",
+        "64",
+        "--out",
+        out_s,
+    ]);
+    assert_eq!(code, 1, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    // The failure report must contain the one-line replay: invariant,
+    // profile, seed.
+    assert!(stdout.contains("FAIL"), "{stdout}");
+    assert!(stdout.contains("invariant `eval_equiv`"), "{stdout}");
+    assert!(stdout.contains("profile `const_heavy`"), "{stdout}");
+    assert!(stdout.contains("seed 5"), "{stdout}");
+    assert!(stdout.contains("minimal repro"), "{stdout}");
+    assert!(
+        stdout.contains("cgra-dse stress --profiles const_heavy --seed0 5 --seeds 1"),
+        "{stdout}"
+    );
+    let json = std::fs::read_to_string(&out).expect("STRESS.json written even on failure");
+    let _ = std::fs::remove_file(&out);
+    assert!(json.contains("\"passed\":false"), "{json}");
+    assert!(json.contains("\"invariant\":\"eval_equiv\""), "{json}");
+    assert!(json.contains("\"seed\":5"), "{json}");
+}
+
+#[test]
+fn stress_rejects_unknown_profile_and_invariant() {
+    let (code, _, stderr) = run_cli(&["stress", "--profiles", "nope"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("unknown profile"), "{stderr}");
+    let (code, _, stderr) = run_cli(&["stress", "--inject", "nope"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("unknown invariant"), "{stderr}");
 }
 
 #[test]

@@ -45,18 +45,31 @@ fn every_registered_graph_validates_acyclic_and_fully_wired() {
 
 #[test]
 fn output_arity_matches_descriptor() {
+    let mut pinned = 0;
     for d in DomainRegistry::domains() {
         for a in d.apps {
             let g = (a.build)();
+            if a.outputs == 0 {
+                // Unpinned (seed-derived synthetic builders): the arity is
+                // generator data, but a well-formed app still needs >= 1.
+                assert!(
+                    !g.output_ids().is_empty(),
+                    "{}: generated app has no outputs",
+                    a.name
+                );
+                continue;
+            }
+            pinned += 1;
             assert_eq!(
                 g.output_ids().len(),
                 a.outputs,
                 "{}: output count drifted from its descriptor",
                 a.name
             );
-            assert!(a.outputs >= 1, "{}: descriptor pins no outputs", a.name);
         }
     }
+    // Every hand-built app (imaging + ml + dsp + micro) stays pinned.
+    assert!(pinned >= 13, "only {pinned} output arities pinned");
 }
 
 #[test]

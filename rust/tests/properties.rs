@@ -1,68 +1,33 @@
 //! Property-based tests over randomly generated dataflow graphs.
 //!
+//! All generation comes from the synthetic workload engine
+//! (`cgra_dse::frontend::synth`) — this file owns no generator of its own.
 //! (`proptest` is not available in this offline registry; generation is
-//! hand-rolled on the deterministic SplitMix64 generator, with the failing
-//! seed printed on assertion failure — same replay discipline.)
+//! profile-driven on the deterministic SplitMix64 engine, with the failing
+//! `(profile, seed)` printed on assertion failure — same replay
+//! discipline, and the same pair replays through
+//! `cgra-dse stress --profiles <p> --seed0 <s> --seeds 1`.)
 
 use cgra_dse::arch::{Fabric, FabricConfig};
-use cgra_dse::ir::{
-    canonical_code, find_occurrences, Graph, MatchConfig, Op,
-};
+use cgra_dse::frontend::synth::{self, SynthProfile};
+use cgra_dse::ir::{canonical_code, find_occurrences, MatchConfig};
 use cgra_dse::mapper::{execute_mapping, map_app};
 use cgra_dse::mining::{mine, MinerConfig};
 use cgra_dse::pe::baseline::baseline_pe;
 use cgra_dse::util::SplitMix64;
 
-/// Generate a random acyclic dataflow graph with `n_ops` compute nodes over
-/// a restricted op alphabet (all baseline-supported).
-fn random_app(seed: u64, n_inputs: usize, n_ops: usize) -> Graph {
-    let mut rng = SplitMix64::new(seed);
-    let ops = [
-        Op::Add,
-        Op::Sub,
-        Op::Mul,
-        Op::Min,
-        Op::Max,
-        Op::Ashr,
-        Op::Abs,
-        Op::And,
-        Op::Xor,
-    ];
-    let mut g = Graph::new(format!("rand{seed}"));
-    let mut values: Vec<cgra_dse::ir::NodeId> = (0..n_inputs)
-        .map(|k| g.add_node(Op::Input, format!("x{k}")))
-        .collect();
-    // A few constants.
-    for k in 0..(n_ops / 4).max(1) {
-        values.push(g.add_node(Op::Const((k as i64 * 37 % 100) - 50), ""));
-    }
-    for _ in 0..n_ops {
-        let op = ops[rng.below(ops.len())];
-        let args: Vec<_> = (0..op.arity())
-            .map(|_| values[rng.below(values.len())])
-            .collect();
-        values.push(g.add(op, &args));
-    }
-    // Every sink becomes an output (keeps the graph fully observable).
-    g.freeze();
-    let sinks: Vec<_> = g
-        .nodes
-        .iter()
-        .filter(|n| n.op.is_compute())
-        .map(|n| n.id)
-        .filter(|&id| g.outputs_of(id).is_empty())
-        .collect();
-    for s in sinks {
-        g.add(Op::Output, &[s]);
-    }
-    g
+fn profile(name: &str) -> &'static SynthProfile {
+    synth::profile(name).unwrap_or_else(|| panic!("unknown profile {name}"))
 }
 
 #[test]
-fn prop_random_apps_validate() {
-    for seed in 0..40 {
-        let mut g = random_app(seed, 4, 20);
-        g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+fn prop_every_profile_generates_valid_apps() {
+    for p in synth::profiles() {
+        for seed in 0..12 {
+            let mut g = p.build(seed);
+            g.validate()
+                .unwrap_or_else(|e| panic!("{} seed {seed}: {e}", p.name));
+        }
     }
 }
 
@@ -71,19 +36,22 @@ fn prop_mapping_preserves_semantics_on_baseline() {
     // THE core invariant: covering + PE configuration never changes the
     // computed function.
     let pe = baseline_pe();
-    for seed in 0..25 {
-        let mut g = random_app(seed, 4, 16);
-        g.validate().unwrap();
-        let mapping = match map_app(&mut g, &pe) {
-            Ok(m) => m,
-            Err(e) => panic!("seed {seed}: {e}"),
-        };
-        let mut rng = SplitMix64::new(seed ^ 0xF00D);
-        for _ in 0..5 {
-            let xs: Vec<i64> = (0..4).map(|_| rng.word() >> 4).collect();
-            let want = g.eval(&xs);
-            let got = execute_mapping(&mut g, &pe, &mapping, &xs);
-            assert_eq!(got, want, "seed {seed} inputs {xs:?}");
+    for pname in ["imaging_like", "dsp_like", "const_heavy"] {
+        let p = profile(pname);
+        for seed in 0..8 {
+            let mut g = p.build_sized(seed, 4, 16);
+            g.validate().unwrap();
+            let mapping = match map_app(&mut g, &pe) {
+                Ok(m) => m,
+                Err(e) => panic!("{pname} seed {seed}: {e}"),
+            };
+            let mut rng = SplitMix64::new(seed ^ 0xF00D);
+            for _ in 0..5 {
+                let xs: Vec<i64> = (0..4).map(|_| rng.word() >> 4).collect();
+                let want = g.eval(&xs);
+                let got = execute_mapping(&mut g, &pe, &mapping, &xs);
+                assert_eq!(got, want, "{pname} seed {seed} inputs {xs:?}");
+            }
         }
     }
 }
@@ -97,14 +65,17 @@ fn prop_full_backend_matches_eval() {
         tracks: 6,
         mem_column_period: 4,
     });
-    for seed in 0..8 {
-        let mut g = random_app(seed * 3 + 1, 3, 10);
-        let mut rng = SplitMix64::new(seed);
-        let batch: Vec<Vec<i64>> = (0..4)
-            .map(|_| (0..3).map(|_| rng.word() >> 4).collect())
-            .collect();
-        cgra_dse::sim::run_and_check(&mut g, &pe, &fabric, &batch, seed)
-            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    for pname in ["deep_chain", "const_heavy"] {
+        let p = profile(pname);
+        for seed in 0..4 {
+            let mut g = p.build_sized(seed * 3 + 1, 3, 10);
+            let mut rng = SplitMix64::new(seed);
+            let batch: Vec<Vec<i64>> = (0..4)
+                .map(|_| (0..3).map(|_| rng.word() >> 4).collect())
+                .collect();
+            cgra_dse::sim::run_and_check(&mut g, &pe, &fabric, &batch, seed)
+                .unwrap_or_else(|e| panic!("{pname} seed {}: {e}", seed * 3 + 1));
+        }
     }
 }
 
@@ -116,22 +87,25 @@ fn prop_mined_occurrences_are_exact_matches() {
         max_patterns: 200,
         ..Default::default()
     };
+    let p = profile("commutative_heavy");
     for seed in 0..10 {
-        let mut g = random_app(seed + 100, 4, 18);
-        for p in mine(&mut g, &cfg) {
-            for occ in p.occurrences.iter().take(10) {
+        let mut g = p.build_sized(seed + 100, 4, 18);
+        for pat in mine(&mut g, &cfg) {
+            for occ in pat.occurrences.iter().take(10) {
                 for (pi, &t) in occ.iter().enumerate() {
                     assert_eq!(
-                        p.graph.nodes[pi].op.label(),
+                        pat.graph.nodes[pi].op.label(),
                         g.node(t).op.label(),
-                        "seed {seed} pattern {}",
-                        p.canon
+                        "{} seed {} pattern {}",
+                        p.name,
+                        seed + 100,
+                        pat.canon
                     );
                 }
             }
             // MNI support is a lower bound on distinct occurrences count
             // per node, hence <= distinct occurrence count.
-            assert!(p.support <= p.occurrences.len(), "seed {seed}");
+            assert!(pat.support <= pat.occurrences.len(), "{} seed {}", p.name, seed + 100);
         }
     }
 }
@@ -140,9 +114,10 @@ fn prop_mined_occurrences_are_exact_matches() {
 fn prop_canonical_code_invariant_under_relabeling() {
     // Rebuilding a pattern with permuted node insertion order must not
     // change its canonical code.
+    let p = profile("ml_like");
     for seed in 0..20 {
         let mut rng = SplitMix64::new(seed + 7);
-        let g = random_app(seed + 200, 3, 6);
+        let g = p.build_sized(seed + 200, 3, 6);
         // Extract a small connected compute subgraph: take a node and its
         // compute ancestors up to 4 nodes.
         let mut g2 = g.clone();
@@ -166,15 +141,18 @@ fn prop_canonical_code_invariant_under_relabeling() {
         assert_eq!(
             canonical_code(&pat),
             canonical_code(&pat2),
-            "seed {seed}"
+            "{} seed {}",
+            p.name,
+            seed + 200
         );
     }
 }
 
 #[test]
 fn prop_occurrences_of_extracted_subgraph_include_itself() {
+    let p = profile("imaging_like");
     for seed in 0..15 {
-        let g = random_app(seed + 300, 3, 12);
+        let g = p.build_sized(seed + 300, 3, 12);
         let mut g2 = g.clone();
         g2.freeze();
         // Pick a connected pair (producer, consumer).
@@ -199,15 +177,21 @@ fn prop_occurrences_of_extracted_subgraph_include_itself() {
                 v
             }
         });
-        assert!(found, "seed {seed}: subgraph not found at its own site");
+        assert!(
+            found,
+            "{} seed {}: subgraph not found at its own site",
+            p.name,
+            seed + 300
+        );
     }
 }
 
 #[test]
 fn prop_merge_preserves_per_mode_op_multiset() {
     use cgra_dse::merging::merge_all;
+    let p = profile("dsp_like");
     for seed in 0..15 {
-        let g = random_app(seed + 400, 3, 8);
+        let g = p.build_sized(seed + 400, 3, 8);
         let compute: Vec<_> = g
             .nodes
             .iter()
@@ -229,7 +213,7 @@ fn prop_merge_preserves_per_mode_op_multiset() {
                 .filter_map(|n| n.op_in(m).map(|o| o.label()))
                 .collect();
             got.sort_unstable();
-            assert_eq!(want, got, "seed {seed} mode {m}");
+            assert_eq!(want, got, "{} seed {} mode {m}", p.name, seed + 400);
         }
     }
 }
@@ -241,13 +225,7 @@ fn prop_sim_latency_monotone_in_depth() {
     let fabric = Fabric::new(FabricConfig::default());
     let mut last = 0usize;
     for depth in [2usize, 6, 12] {
-        let mut g = Graph::new(format!("chain{depth}"));
-        let mut v = g.add_op(Op::Input);
-        for k in 0..depth {
-            let c = g.add_op(Op::Const(k as i64 + 1));
-            v = g.add(Op::Add, &[v, c]);
-        }
-        g.add(Op::Output, &[v]);
+        let mut g = synth::chain(depth);
         let r = cgra_dse::sim::run_and_check(&mut g, &pe, &fabric, &[vec![1]], 0).unwrap();
         assert!(
             r.stats.latency_cycles >= last,
@@ -256,4 +234,23 @@ fn prop_sim_latency_monotone_in_depth() {
         );
         last = r.stats.latency_cycles;
     }
+}
+
+#[test]
+fn prop_stress_invariants_hold_on_sampled_scenarios() {
+    // A small live slice of the stress harness inside tier-1: two
+    // contrasting profiles, two seeds each, all seven invariants.
+    use cgra_dse::stress::{run, StressConfig};
+    let cfg = StressConfig {
+        seeds: 2,
+        seed0: 11,
+        profiles: vec![profile("commutative_heavy"), profile("wide_fanout")],
+        stimuli: 3,
+        threads: 2,
+        ..Default::default()
+    };
+    let rep = run(&cfg);
+    assert!(rep.passed(), "{}", rep.render());
+    assert_eq!(rep.scenarios, 4);
+    assert!(rep.total_checks() > 0);
 }

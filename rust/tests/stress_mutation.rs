@@ -1,0 +1,153 @@
+//! Mutation self-tests for the stress harness: every invariant checker
+//! must be *live*. For each invariant we inject its deliberate violation
+//! through the `Mutation` hook and assert the checker (a) catches it, (b)
+//! shrinks the scenario to a minimal reproduction, and (c) reports a
+//! replayable `(profile, seed)` line including the injection flag — so a
+//! green stress run means seven demonstrably-firing oracles, not seven
+//! no-ops.
+
+use cgra_dse::frontend::synth;
+use cgra_dse::stress::{run, Mutation, StressConfig, INVARIANTS};
+
+/// Run single-seed scenarios with `mutation` injected until the target
+/// invariant fires (a few seeds of slack for graph-dependent checkers
+/// that can legitimately have nothing to check on tiny scenarios), then
+/// assert the violation is well-formed and shrunk.
+fn assert_mutation_fires(invariant: &'static str, profile_name: &str) {
+    let mutation = Mutation::for_invariant(invariant)
+        .unwrap_or_else(|| panic!("no mutation for `{invariant}`"));
+    let profile = synth::profile(profile_name).unwrap();
+    for seed0 in 1..=20u64 {
+        // Small shrink budget: these tests assert the shrinker *runs*, not
+        // that it reaches the global minimum (the dedicated test below
+        // does that for the cheapest invariant); session-heavy invariants
+        // pay a full ladder evaluation per shrink step in debug builds.
+        let cfg = StressConfig {
+            seeds: 1,
+            seed0,
+            profiles: vec![profile],
+            stimuli: 2,
+            threads: 1,
+            shrink_budget: 48,
+            mutation,
+            ..Default::default()
+        };
+        let rep = run(&cfg);
+        let Some(v) = rep.violations.iter().find(|v| v.invariant == invariant) else {
+            continue;
+        };
+        // (a) the right checker fired, with scenario coordinates.
+        assert_eq!(v.profile, profile_name);
+        assert_eq!(v.seed, seed0);
+        assert!(!v.detail.is_empty(), "empty detail for {invariant}");
+        // (b) the shrinker ran and produced a (possibly equal) smaller,
+        // still-failing reproduction.
+        assert!(v.nodes_original > 0, "{invariant}: no original graph");
+        assert!(
+            v.nodes_shrunk <= v.nodes_original,
+            "{invariant}: shrink grew the graph ({} -> {})",
+            v.nodes_original,
+            v.nodes_shrunk
+        );
+        assert!(v.graph.contains("nodes"), "{invariant}: {}", v.graph);
+        // (c) the replay line is a one-liner with seed + profile +
+        // injection.
+        assert!(v.replay.contains("cgra-dse stress"), "{}", v.replay);
+        assert!(
+            v.replay.contains(&format!("--profiles {profile_name}")),
+            "{}",
+            v.replay
+        );
+        assert!(v.replay.contains(&format!("--seed0 {seed0}")), "{}", v.replay);
+        assert!(
+            v.replay.contains(&format!("--inject {invariant}")),
+            "{}",
+            v.replay
+        );
+        // The report must flag the run as failed.
+        assert!(!rep.passed());
+        let json = rep.to_json().render();
+        assert!(json.contains("\"passed\":false"));
+        assert!(json.contains(&format!("\"mutation\":\"{invariant}\"")));
+        return;
+    }
+    panic!("mutation for `{invariant}` never fired within 20 seeds");
+}
+
+#[test]
+fn mutation_fires_canon_relabel() {
+    assert_mutation_fires("canon_relabel", "commutative_heavy");
+}
+
+#[test]
+fn mutation_fires_support_antimonotone() {
+    assert_mutation_fires("support_antimonotone", "const_heavy");
+}
+
+#[test]
+fn mutation_fires_mis_bound() {
+    assert_mutation_fires("mis_bound", "const_heavy");
+}
+
+#[test]
+fn mutation_fires_merged_remap() {
+    assert_mutation_fires("merged_remap", "dsp_like");
+}
+
+#[test]
+fn mutation_fires_eval_equiv() {
+    assert_mutation_fires("eval_equiv", "deep_chain");
+}
+
+#[test]
+fn mutation_fires_ladder_monotone() {
+    assert_mutation_fires("ladder_monotone", "const_heavy");
+}
+
+#[test]
+fn mutation_fires_report_identity() {
+    assert_mutation_fires("report_identity", "const_heavy");
+}
+
+#[test]
+fn every_invariant_has_a_mutation_and_vice_versa() {
+    for inv in INVARIANTS {
+        let m = Mutation::for_invariant(inv).unwrap();
+        assert_eq!(m.invariant(), Some(inv));
+    }
+}
+
+#[test]
+fn shrink_reduces_eval_violation_to_near_minimal() {
+    // The eval_equiv bitflip fires on every scenario regardless of graph
+    // content, so the shrinker must strip a large synthetic graph down to
+    // a handful of nodes (one real op + IO is enough to keep failing).
+    let cfg = StressConfig {
+        seeds: 1,
+        seed0: 3,
+        profiles: vec![synth::profile("ml_like").unwrap()],
+        stimuli: 2,
+        threads: 1,
+        shrink_budget: 2048,
+        mutation: Mutation::for_invariant("eval_equiv").unwrap(),
+        ..Default::default()
+    };
+    let rep = run(&cfg);
+    let v = rep
+        .violations
+        .iter()
+        .find(|v| v.invariant == "eval_equiv")
+        .expect("bitflip must fire");
+    assert!(
+        v.nodes_shrunk < v.nodes_original,
+        "no shrinking happened: {} -> {}",
+        v.nodes_original,
+        v.nodes_shrunk
+    );
+    assert!(
+        v.nodes_shrunk <= 8,
+        "repro not minimal: {} nodes ({})",
+        v.nodes_shrunk,
+        v.graph
+    );
+}
