@@ -1,0 +1,131 @@
+//! Serving-layer throughput bench (§Service throughput of EXPERIMENTS.md):
+//! loadgen over a synth-profile request mix against an in-process
+//! `service::Server`, contrasting the three serving regimes —
+//!
+//!   * **cold**: first-ever request, full pipeline compute;
+//!   * **warm-cache**: repeated request answered from the memory tier;
+//!   * **single-flight-duplicate**: N concurrent identical requests
+//!     deduplicated onto one pipeline execution.
+//!
+//! Machine-readable results via `bench_util::write_json` →
+//! `BENCH_service.json` (run with `--json` or `BENCH_JSON=1`).
+
+mod bench_util;
+
+use std::sync::{Arc, Barrier};
+
+use cgra_dse::service::protocol;
+use cgra_dse::service::server::{fast_config, request_once, ServeConfig, Server};
+
+const LADDER_GAUSSIAN: &str = "{\"req\":\"ladder\",\"app\":\"gaussian\"}";
+const REPRODUCE_FIG9: &str = "{\"req\":\"reproduce\",\"target\":\"fig9\"}";
+
+/// The warm request mix: per-app pipeline queries, a figure reproduction,
+/// a synthetic-workload stress slice, and live stats — roughly what a
+/// layout-exploration client plus a monitoring loop generate.
+const MIX: [&str; 8] = [
+    LADDER_GAUSSIAN,
+    "{\"req\":\"mine\",\"app\":\"gaussian\"}",
+    "{\"req\":\"ladder\",\"app\":\"conv1d\"}",
+    "{\"req\":\"mine\",\"app\":\"fft\"}",
+    REPRODUCE_FIG9,
+    "{\"req\":\"stress\",\"profiles\":\"deep_chain\",\"seeds\":1}",
+    "{\"req\":\"stats\"}",
+    "{\"req\":\"version\"}",
+];
+
+fn spawn_server() -> (
+    String,
+    std::thread::JoinHandle<std::io::Result<cgra_dse::service::ServerStats>>,
+) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        cfg: fast_config(),
+        session_threads: 0,
+        ..Default::default()
+    })
+    .expect("bind 127.0.0.1:0");
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn ask(addr: &str, line: &str) -> String {
+    let resp = request_once(addr, line, 30_000).expect("request");
+    let view = protocol::parse_response(&resp).expect("well-formed response");
+    assert!(view.ok, "{line}: {:?}", view.error);
+    resp
+}
+
+fn stop(addr: &str, handle: std::thread::JoinHandle<std::io::Result<cgra_dse::service::ServerStats>>) {
+    let _ = request_once(addr, "{\"req\":\"shutdown\"}", 5_000);
+    let _ = handle.join();
+}
+
+fn main() {
+    // --- Cold: fresh server per iteration, first pipeline compute.
+    let t_cold = bench_util::time_ms(2, || {
+        let (addr, handle) = spawn_server();
+        let n = ask(&addr, REPRODUCE_FIG9).len();
+        stop(&addr, handle);
+        n
+    });
+    bench_util::report("cold_reproduce_fig9", t_cold);
+
+    // --- Warm cache: one server, the artifact already resident.
+    let (addr, handle) = spawn_server();
+    for line in MIX {
+        let _ = ask(&addr, line); // prime every mix entry
+    }
+    let t_warm = bench_util::time_ms(5, || {
+        (0..64).map(|_| ask(&addr, REPRODUCE_FIG9).len()).sum::<usize>()
+    });
+    bench_util::report("warm_reproduce_x64", t_warm);
+    println!(
+        "warm-cache throughput: {:.0} req/s (sequential loopback)",
+        64.0 * 1000.0 / t_warm.median_ms
+    );
+
+    let t_mix = bench_util::time_ms(5, || {
+        (0..8)
+            .flat_map(|_| MIX.iter())
+            .map(|line| ask(&addr, line).len())
+            .sum::<usize>()
+    });
+    bench_util::report("warm_mix_x64", t_mix);
+    stop(&addr, handle);
+
+    // --- Single-flight duplicates: 16 concurrent identical requests on a
+    // cold server — one compute, 15 deduplicated waits.
+    let t_flight = bench_util::time_ms(2, || {
+        let (addr, handle) = spawn_server();
+        let barrier = Arc::new(Barrier::new(16));
+        let clients: Vec<_> = (0..16)
+            .map(|_| {
+                let addr = addr.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    ask(&addr, LADDER_GAUSSIAN).len()
+                })
+            })
+            .collect();
+        let total: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+        stop(&addr, handle);
+        total
+    });
+    bench_util::report("single_flight_ladder_x16", t_flight);
+    println!(
+        "single-flight amortization: 16 duplicate requests in {:.1} ms (~{:.1} ms/req)",
+        t_flight.median_ms,
+        t_flight.median_ms / 16.0
+    );
+
+    // Machine-readable results (BENCH_JSON=1 or --json): BENCH_service.json.
+    bench_util::write_json("service");
+
+    assert!(
+        t_warm.median_ms < t_cold.median_ms,
+        "64 warm-cache requests must beat one cold compute"
+    );
+}

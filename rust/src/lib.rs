@@ -15,6 +15,10 @@
 //! ([`frontend::dsp`]), each driving its own domain-PE experiment, and a
 //! seeded synthetic-workload domain ([`frontend::synth`]) that feeds the
 //! metamorphic stress harness ([`stress`], CLI `stress` subcommand).
+//! The serving layer ([`service`], CLI `serve`/`request` subcommands)
+//! exposes the whole pipeline over a JSON-lines TCP protocol behind a
+//! two-tier fingerprint-keyed artifact cache with single-flight
+//! deduplication.
 //!
 //! See `README.md` for the quickstart and figure-reproduction table,
 //! `DESIGN.md` for the module inventory, the per-experiment index, and the
@@ -44,6 +48,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod session;
 pub mod stress;
 

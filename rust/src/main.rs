@@ -12,7 +12,8 @@ use cgra_dse::frontend::{self, AppSuite};
 use cgra_dse::mining::MinerConfig;
 use cgra_dse::pe::verilog::emit_verilog;
 use cgra_dse::runtime;
-use cgra_dse::session::{report as sjson, AppStages, DseSession};
+use cgra_dse::service::{protocol, server::request_once, ServeConfig, Server};
+use cgra_dse::session::{report as sjson, AppStages, DseSession, FINGERPRINT_SCHEMA_VERSION};
 use cgra_dse::stress::{self, Mutation, StressConfig};
 use cgra_dse::util::SplitMix64;
 
@@ -44,7 +45,11 @@ USAGE:
   cgra-dse stress [--seeds N] [--seed0 N] [--profiles all|p1,p2,...]
                   [--stimuli N] [--out FILE] [--json]
                   [--inject <invariant>] [--shrink-budget N]
+  cgra-dse serve [--addr HOST:PORT] [--workers N] [--cache-dir DIR]
+                 [--mem-cache N] [--threads N] [--fast]
+  cgra-dse request '<json>' [--addr HOST:PORT] [--timeout MS]
   cgra-dse validate [--app gaussian|conv|block] [--items N]
+  cgra-dse version
   cgra-dse apps
 
 Stress profiles: {profiles}
@@ -84,7 +89,21 @@ fn main() {
         "sim" => cmd_sim(&flags),
         "reproduce" => cmd_reproduce(&args[1..], &flags),
         "stress" => cmd_stress(&flags),
+        "serve" => cmd_serve(&flags),
+        "request" => cmd_request(&args[1..], &flags),
         "validate" => cmd_validate(&flags),
+        "version" => {
+            // Crate version + the schema versions baked into on-disk
+            // artifacts (cache keys) — what a deployment needs to decide
+            // whether an old cache directory is still reachable.
+            println!(
+                "cgra-dse {} fingerprint-schema {} cache-schema {}",
+                env!("CARGO_PKG_VERSION"),
+                FINGERPRINT_SCHEMA_VERSION,
+                cgra_dse::service::CACHE_SCHEMA_VERSION,
+            );
+            0
+        }
         "apps" => {
             println!("{}", AppSuite::names().join(" "));
             0
@@ -141,16 +160,9 @@ impl Flags {
 
 fn dse_config(flags: &Flags) -> DseConfig {
     if flags.has("fast") {
-        DseConfig {
-            miner: MinerConfig {
-                min_support: 3,
-                max_nodes: 4,
-                max_patterns: 600,
-                ..Default::default()
-            },
-            max_merged: 3,
-            ..Default::default()
-        }
+        // The same fast configuration the server serves for `fast:true`
+        // requests — one definition, one fingerprint (golden-pinned).
+        cgra_dse::service::server::fast_config()
     } else {
         DseConfig {
             miner: MinerConfig {
@@ -475,6 +487,103 @@ fn cmd_stress(flags: &Flags) -> i32 {
         0
     } else {
         1
+    }
+}
+
+/// `serve`: run the JSON-lines DSE server until a `shutdown` request
+/// arrives (clean exit 0), printing the final cache/single-flight counters
+/// to stderr. Exit 1 on bind failure.
+fn cmd_serve(flags: &Flags) -> i32 {
+    let sc = ServeConfig {
+        addr: flags.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        workers: flags.get_usize("workers", 4),
+        cache_dir: flags.get("cache-dir").map(std::path::PathBuf::from),
+        mem_cache_entries: flags.get_usize("mem-cache", 256),
+        cfg: dse_config(flags),
+        session_threads: flags.get_usize("threads", 0),
+        ..Default::default()
+    };
+    let cache_desc = sc
+        .cache_dir
+        .as_ref()
+        .map(|d| d.display().to_string())
+        .unwrap_or_else(|| "memory only".to_string());
+    let (addr, workers) = (sc.addr.clone(), sc.workers);
+    let server = match Server::bind(sc) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "cgra-dse serving on {} ({} workers, cache: {})",
+        server.local_addr(),
+        workers,
+        cache_desc
+    );
+    match server.run() {
+        Ok(st) => {
+            eprintln!(
+                "shutdown: {} requests ({} errors), cache hits {} mem / {} disk, \
+                 {} misses, {} single-flight waits, {} stage computes",
+                st.requests,
+                st.errors,
+                st.hits_mem,
+                st.hits_disk,
+                st.misses,
+                st.single_flight_waits,
+                st.stage_computes_total
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+/// `request`: loopback scripting client. Sends one JSON-lines request,
+/// prints the response line to stdout. Exit 0 when the response parses and
+/// carries `ok:true`; 1 on transport failure, server error, or an
+/// unparseable response; 2 on a locally malformed request. `--timeout`
+/// bounds connection establishment; the response wait is unbounded (cold
+/// computes can be long).
+fn cmd_request(rest: &[String], flags: &Flags) -> i32 {
+    let Some(json) = rest.first().filter(|s| !s.starts_with("--")) else {
+        eprintln!(
+            "usage: cgra-dse request '<json>' [--addr HOST:PORT] [--timeout CONNECT_MS]"
+        );
+        return 2;
+    };
+    // Validate locally before touching the network: a malformed request is
+    // a usage error (exit 2), not a server error.
+    if let Err(e) = protocol::Envelope::parse_line(json) {
+        eprintln!("bad request: {e}");
+        return 2;
+    }
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
+    let timeout = flags.get_usize("timeout", 10_000) as u64;
+    match request_once(addr, json, timeout) {
+        Ok(line) => {
+            println!("{line}");
+            match protocol::parse_response(&line) {
+                Ok(view) if view.ok => 0,
+                Ok(view) => {
+                    eprintln!("server error: {}", view.error.unwrap_or_default());
+                    1
+                }
+                Err(e) => {
+                    eprintln!("unparseable response: {e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("request: {e}");
+            1
+        }
     }
 }
 

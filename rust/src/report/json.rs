@@ -1,6 +1,9 @@
 //! Hand-rolled JSON value + writer (serde is unavailable in the offline
-//! registry). Only what the machine-readable `SessionReport` output needs:
-//! construction helpers and a compact, RFC 8259-conformant renderer.
+//! registry): construction helpers, a compact RFC 8259-conformant
+//! renderer, and read-side accessors for decoded values. The matching
+//! parser lives in [`crate::service::protocol`]; `parse(render(x)) == x`
+//! holds for every value this writer can emit (property-tested in
+//! `rust/tests/service.rs`).
 
 use std::fmt::Write as _;
 
@@ -46,6 +49,68 @@ impl Json {
     /// An object from `(key, value)` pairs, preserving order.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // ---- read-side accessors (the service protocol layer decodes
+    // parsed requests and artifacts through these) -----------------------
+
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Number view.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Bool view.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array view.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative integer view. Rejects fractional values and
+    /// anything at or past 2^53: the bound is exclusive because 2^53
+    /// itself is where neighboring integer literals (2^53 + 1) start
+    /// rounding onto representable f64s — accepting it would silently
+    /// accept values the client never sent.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v < (1u64 << 53) as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// [`Self::as_u64`] narrowed to `usize`.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
     }
 
     /// Render to a compact JSON string.
@@ -200,6 +265,34 @@ mod tests {
     fn object_keys_are_escaped_too() {
         let j = Json::Obj(vec![("a\"\n".to_string(), Json::int(1))]);
         assert_eq!(j.render(), "{\"a\\\"\\n\":1}");
+    }
+
+    #[test]
+    fn accessors_view_without_cloning() {
+        let j = Json::obj(vec![
+            ("s", Json::str("x")),
+            ("n", Json::num(2.5)),
+            ("i", Json::int(7)),
+            ("b", Json::Bool(true)),
+            ("a", Json::Arr(vec![Json::Null])),
+        ]);
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.get("n").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(j.get("n").and_then(Json::as_usize), None, "fractional");
+        assert_eq!(j.get("i").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("a").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        assert_eq!(j.get("nope"), None);
+        assert_eq!(Json::Null.get("s"), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None, "negative");
+        assert_eq!(Json::Num(9.1e15).as_u64(), None, "past 2^53");
+        // 2^53 itself is rejected (2^53 + 1 rounds onto it); 2^53 - 1 is
+        // the largest accepted integer.
+        assert_eq!(Json::Num((1u64 << 53) as f64).as_u64(), None);
+        assert_eq!(
+            Json::Num(((1u64 << 53) - 1) as f64).as_u64(),
+            Some((1u64 << 53) - 1)
+        );
     }
 
     #[test]

@@ -1,0 +1,412 @@
+//! Two-tier fingerprint-keyed artifact cache: a sharded in-memory LRU in
+//! front of an on-disk store under `--cache-dir`.
+//!
+//! # Key structure
+//!
+//! ```text
+//!   canonical key = "v{CACHE_SCHEMA_VERSION}:{config_fingerprint:016x}:{kind}:{detail}"
+//!                      │                      │                         │       │
+//!                      │                      │                         │       └ request args ("camera", "fig9", …)
+//!                      │                      │                         └ request kind ("ladder", "reproduce", …)
+//!                      │                      └ session::config_fingerprint (golden-pinned)
+//!                      └ versioned invalidation: a schema bump orphans every old artifact
+//! ```
+//!
+//! The disk tier lives under `<cache-dir>/v{N}/` and stores one file per
+//! artifact, named by a 128-bit hash of the canonical key. Each file
+//! carries the canonical key as its first line and the artifact bytes
+//! (always a single-line JSON document — the renderer escapes every
+//! newline) after it; a read whose stored key line does not match the
+//! probe key is treated as a miss, so hash collisions and stale schemas
+//! degrade to recomputation, never to a wrong answer. Writes go through a
+//! temp file + rename so concurrent readers never observe a partial
+//! artifact. Round-trips are byte-identical: the artifact is stored and
+//! served as the exact rendered bytes.
+//!
+//! The memory tier is sharded ([`SHARDS`] shards, each its own mutex +
+//! LRU clock) so concurrent workers rarely contend on one lock. Eviction
+//! scans the shard for the lowest stamp — O(entries/shard), fine for the
+//! small per-shard capacities a serving cache uses.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Version of the on-disk artifact layout **and** of everything folded
+/// into the canonical key (fingerprint schema, request grammar, artifact
+/// JSON shapes). Bump it whenever any of those changes shape — see
+/// [`crate::session::FINGERPRINT_SCHEMA_VERSION`] for the bump procedure —
+/// and old artifacts become unreachable (a later `v{N-1}` cleanup is
+/// harmless but never required for correctness).
+pub const CACHE_SCHEMA_VERSION: u32 = 1;
+
+/// Memory-tier shard count (keys are distributed by hash).
+pub const SHARDS: usize = 8;
+
+fn fnv1a(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // Final avalanche so nearby keys land in different shards/files.
+    h ^= h >> 29;
+    h.wrapping_mul(0xff51afd7ed558ccd)
+}
+
+/// Identity of one cached artifact: `(config fingerprint, request kind,
+/// request detail)`, versioned by [`CACHE_SCHEMA_VERSION`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub fingerprint: u64,
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+impl CacheKey {
+    pub fn new(fingerprint: u64, kind: &'static str, detail: impl Into<String>) -> CacheKey {
+        CacheKey {
+            fingerprint,
+            kind,
+            detail: detail.into(),
+        }
+    }
+
+    /// The canonical key string (stored verbatim in every disk artifact).
+    pub fn canonical(&self) -> String {
+        format!(
+            "v{}:{:016x}:{}:{}",
+            CACHE_SCHEMA_VERSION, self.fingerprint, self.kind, self.detail
+        )
+    }
+
+    /// 128-bit content address for the disk tier (two independent FNV-1a
+    /// streams; collisions are caught by the stored key line anyway).
+    fn file_stem(&self) -> String {
+        let c = self.canonical();
+        format!(
+            "{:016x}{:016x}",
+            fnv1a(c.as_bytes(), 0xcbf29ce484222325),
+            fnv1a(c.as_bytes(), 0x6c62272e07bb0142)
+        )
+    }
+}
+
+/// Which tier answered a [`TieredCache::get`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Mem,
+    Disk,
+}
+
+impl Tier {
+    /// Stable tag used in the response envelope's `cached` field.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Tier::Mem => "mem",
+            Tier::Disk => "disk",
+        }
+    }
+}
+
+struct Entry {
+    stamp: u64,
+    val: Arc<String>,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<String, Entry>,
+    clock: u64,
+}
+
+/// Counter snapshot (served by the `stats` request).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits_mem: usize,
+    pub hits_disk: usize,
+    pub misses: usize,
+    pub stores: usize,
+    pub mem_entries: usize,
+}
+
+/// The two-tier cache. All methods are `&self` and thread-safe.
+pub struct TieredCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    /// `<cache-dir>/v{CACHE_SCHEMA_VERSION}`, when a disk tier is enabled.
+    disk: Option<PathBuf>,
+    hits_mem: AtomicUsize,
+    hits_disk: AtomicUsize,
+    misses: AtomicUsize,
+    stores: AtomicUsize,
+}
+
+impl TieredCache {
+    /// `mem_capacity` is the total memory-tier entry budget (split across
+    /// shards, min 1 each). `cache_dir` enables the disk tier; its
+    /// versioned subdirectory is created eagerly so a bad path fails at
+    /// startup, not on the first store.
+    pub fn new(mem_capacity: usize, cache_dir: Option<&Path>) -> io::Result<TieredCache> {
+        let disk = match cache_dir {
+            Some(d) => {
+                let v = d.join(format!("v{CACHE_SCHEMA_VERSION}"));
+                std::fs::create_dir_all(&v)?;
+                Some(v)
+            }
+            None => None,
+        };
+        Ok(TieredCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap: (mem_capacity / SHARDS).max(1),
+            disk,
+            hits_mem: AtomicUsize::new(0),
+            hits_disk: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            stores: AtomicUsize::new(0),
+        })
+    }
+
+    fn shard(&self, canon: &str) -> MutexGuard<'_, Shard> {
+        let idx = fnv1a(canon.as_bytes(), 0xcbf29ce484222325) as usize % SHARDS;
+        self.shards[idx].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Look an artifact up: memory first, then disk (a disk hit is
+    /// promoted into the memory tier). Counts exactly one of
+    /// hit_mem/hit_disk/miss per call.
+    pub fn get(&self, key: &CacheKey) -> Option<(Arc<String>, Tier)> {
+        self.lookup(key, true)
+    }
+
+    /// [`Self::get`] without miss accounting — for the single-flight
+    /// leader's double-checked lookup, which re-probes a key whose miss
+    /// was already counted (hits still count: the tier did answer).
+    pub fn recheck(&self, key: &CacheKey) -> Option<(Arc<String>, Tier)> {
+        self.lookup(key, false)
+    }
+
+    fn lookup(&self, key: &CacheKey, count_miss: bool) -> Option<(Arc<String>, Tier)> {
+        let canon = key.canonical();
+        {
+            let mut sh = self.shard(&canon);
+            sh.clock += 1;
+            let clock = sh.clock;
+            if let Some(e) = sh.map.get_mut(&canon) {
+                e.stamp = clock;
+                let val = e.val.clone();
+                self.hits_mem.fetch_add(1, Ordering::Relaxed);
+                return Some((val, Tier::Mem));
+            }
+        }
+        if let Some(dir) = &self.disk {
+            let path = dir.join(format!("{}.art", key.file_stem()));
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Some((stored_key, body)) = text.split_once('\n') {
+                    if stored_key == canon {
+                        let val = Arc::new(body.to_string());
+                        self.insert_mem(&canon, val.clone());
+                        self.hits_disk.fetch_add(1, Ordering::Relaxed);
+                        return Some((val, Tier::Disk));
+                    }
+                }
+            }
+        }
+        if count_miss {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        None
+    }
+
+    /// Store an artifact in both tiers. Disk write failures are silently
+    /// tolerated (the cache is an accelerator, not a source of truth); the
+    /// memory tier always takes the entry.
+    pub fn put(&self, key: &CacheKey, val: Arc<String>) {
+        self.stores.fetch_add(1, Ordering::Relaxed);
+        let canon = key.canonical();
+        self.insert_mem(&canon, val.clone());
+        if let Some(dir) = &self.disk {
+            let stem = key.file_stem();
+            let path = dir.join(format!("{stem}.art"));
+            let tmp = dir.join(format!("{stem}.tmp{}", std::process::id()));
+            let mut content = String::with_capacity(canon.len() + 1 + val.len());
+            content.push_str(&canon);
+            content.push('\n');
+            content.push_str(&val);
+            if std::fs::write(&tmp, &content).is_ok() {
+                let _ = std::fs::rename(&tmp, &path);
+            }
+        }
+    }
+
+    fn insert_mem(&self, canon: &str, val: Arc<String>) {
+        let mut sh = self.shard(canon);
+        sh.clock += 1;
+        let stamp = sh.clock;
+        sh.map.insert(canon.to_string(), Entry { stamp, val });
+        while sh.map.len() > self.per_shard_cap {
+            let lru = sh
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone());
+            match lru {
+                Some(k) => sh.map.remove(&k),
+                None => break,
+            };
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits_mem: self.hits_mem.load(Ordering::Relaxed),
+            hits_disk: self.hits_disk.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            mem_entries: self
+                .shards
+                .iter()
+                .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len())
+                .sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(fp: u64, detail: &str) -> CacheKey {
+        CacheKey::new(fp, "ladder", detail)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "cgra_cache_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn memory_tier_hits_and_counts() {
+        let c = TieredCache::new(64, None).unwrap();
+        let k = key(1, "camera");
+        assert!(c.get(&k).is_none());
+        c.put(&k, Arc::new("{\"x\":1}".to_string()));
+        let (v, tier) = c.get(&k).unwrap();
+        assert_eq!(v.as_str(), "{\"x\":1}");
+        assert_eq!(tier, Tier::Mem);
+        let st = c.stats();
+        assert_eq!((st.hits_mem, st.misses, st.stores), (1, 1, 1));
+        assert_eq!(st.mem_entries, 1);
+    }
+
+    #[test]
+    fn keys_separate_by_fingerprint_kind_and_detail() {
+        let c = TieredCache::new(64, None).unwrap();
+        c.put(&key(1, "camera"), Arc::new("a".into()));
+        assert!(c.get(&key(2, "camera")).is_none(), "fingerprint must split");
+        assert!(c.get(&key(1, "conv")).is_none(), "detail must split");
+        assert!(
+            c.get(&CacheKey::new(1, "mine", "camera")).is_none(),
+            "kind must split"
+        );
+        assert!(c.get(&key(1, "camera")).is_some());
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_capacity() {
+        // Single-entry shards: per_shard_cap = max(8/8, 1) = 1; two keys
+        // in the same shard evict each other, recently-used wins.
+        let c = TieredCache::new(0, None).unwrap(); // per-shard cap clamps to 1
+        let mut k1 = None;
+        let mut k2 = None;
+        // Find two keys that land in the same shard.
+        'outer: for i in 0..64u64 {
+            for j in (i + 1)..64u64 {
+                let a = key(i, "x");
+                let b = key(j, "x");
+                let sa = fnv1a(a.canonical().as_bytes(), 0xcbf29ce484222325) as usize % SHARDS;
+                let sb = fnv1a(b.canonical().as_bytes(), 0xcbf29ce484222325) as usize % SHARDS;
+                if sa == sb {
+                    k1 = Some(a);
+                    k2 = Some(b);
+                    break 'outer;
+                }
+            }
+        }
+        let (k1, k2) = (k1.unwrap(), k2.unwrap());
+        c.put(&k1, Arc::new("one".into()));
+        c.put(&k2, Arc::new("two".into()));
+        assert!(c.get(&k1).is_none(), "k1 must have been evicted");
+        assert!(c.get(&k2).is_some());
+    }
+
+    #[test]
+    fn disk_tier_round_trips_byte_identically_and_promotes() {
+        let dir = tmpdir("disk");
+        let body = "{\"app\":\"camera\",\"µ\":\"漢\",\"n\":1.5}";
+        {
+            let c = TieredCache::new(64, Some(&dir)).unwrap();
+            c.put(&key(7, "camera"), Arc::new(body.to_string()));
+        }
+        // Fresh cache, same dir: memory is cold, disk answers.
+        let c = TieredCache::new(64, Some(&dir)).unwrap();
+        let (v, tier) = c.get(&key(7, "camera")).unwrap();
+        assert_eq!(v.as_str(), body, "disk round-trip must be byte-identical");
+        assert_eq!(tier, Tier::Disk);
+        // Promoted: second read is a memory hit.
+        let (_, tier2) = c.get(&key(7, "camera")).unwrap();
+        assert_eq!(tier2, Tier::Mem);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_disk_artifacts_degrade_to_misses() {
+        let dir = tmpdir("corrupt");
+        let c = TieredCache::new(64, Some(&dir)).unwrap();
+        let k = key(9, "camera");
+        c.put(&k, Arc::new("body".into()));
+        // Overwrite the artifact with a mismatched key line (simulating a
+        // hash collision or a stale schema's leftover file).
+        let vdir = dir.join(format!("v{CACHE_SCHEMA_VERSION}"));
+        let file = std::fs::read_dir(&vdir)
+            .unwrap()
+            .next()
+            .unwrap()
+            .unwrap()
+            .path();
+        std::fs::write(&file, "v0:dead:ladder:other\nbody").unwrap();
+        let cold = TieredCache::new(64, Some(&dir)).unwrap();
+        assert!(cold.get(&k).is_none(), "mismatched key line must miss");
+        // And a keyless file (no newline) must miss too, not panic.
+        std::fs::write(&file, "garbage-without-newline").unwrap();
+        let cold2 = TieredCache::new(64, Some(&dir)).unwrap();
+        assert!(cold2.get(&k).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recheck_counts_hits_but_never_misses() {
+        let c = TieredCache::new(64, None).unwrap();
+        let k = key(3, "camera");
+        assert!(c.recheck(&k).is_none());
+        assert_eq!(c.stats().misses, 0, "recheck must not count a miss");
+        c.put(&k, Arc::new("x".into()));
+        assert!(c.recheck(&k).is_some());
+        assert_eq!(c.stats().hits_mem, 1, "recheck hits still count");
+    }
+
+    #[test]
+    fn canonical_key_embeds_schema_version() {
+        let k = key(0xabc, "camera");
+        assert_eq!(
+            k.canonical(),
+            format!("v{CACHE_SCHEMA_VERSION}:0000000000000abc:ladder:camera")
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! The DSE serving layer: turn the staged library into a servable system.
+//!
+//! The paper's pipeline (mine → rank → merge → evaluate) began as a
+//! one-shot CLI; CGRA flows in practice are dominated by repeated
+//! whole-pipeline reruns over near-identical inputs, and layout-exploration
+//! loops want a queryable PE-evaluation oracle. This subsystem provides
+//! exactly that, with zero external dependencies:
+//!
+//! * [`protocol`] — a strict recursive-descent JSON parser (the read-side
+//!   twin of [`crate::report::json`]) plus the typed request/response
+//!   envelopes of the JSON-lines wire protocol.
+//! * [`cache`] — a two-tier artifact cache: sharded in-memory LRU in front
+//!   of an on-disk store, keyed by
+//!   `(session::config_fingerprint, request kind, request detail)` with
+//!   versioned invalidation and byte-identical round-trips.
+//! * [`server`] — a `std::net::TcpListener` JSON-lines server: fixed
+//!   worker-thread pool over a shared per-fingerprint [`DseSession`] pool,
+//!   single-flight deduplication of identical in-flight requests,
+//!   per-request timing, graceful shutdown, and the loopback client behind
+//!   `cgra-dse request`.
+//!
+//! CLI: `cgra-dse serve --addr HOST:PORT --workers N --cache-dir DIR` and
+//! `cgra-dse request '<json>'`. See README §Serving for the quickstart and
+//! DESIGN.md §2b for the architecture (cache-key diagram, single-flight
+//! semantics, schema versioning).
+//!
+//! [`DseSession`]: crate::session::DseSession
+
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use cache::{CacheKey, TieredCache, CACHE_SCHEMA_VERSION};
+pub use protocol::{parse, Envelope, ParseError, Request};
+pub use server::{request_once, ServeConfig, Server, ServerStats};

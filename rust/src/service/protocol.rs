@@ -1,0 +1,869 @@
+//! Wire protocol of the DSE serving layer: a zero-dependency
+//! recursive-descent JSON **parser** — the read-side twin of the writer in
+//! [`crate::report::json`] — plus the typed request/response envelopes of
+//! the JSON-lines protocol spoken by [`super::server`].
+//!
+//! The parser implements RFC 8259 strictly: `\uXXXX` escapes with
+//! surrogate-pair decoding, rejection of lone surrogates, unescaped
+//! control characters, leading zeros, non-finite numbers, and trailing
+//! garbage, plus a nesting-depth guard ([`MAX_DEPTH`]) because the server
+//! parses untrusted input. It produces the same [`Json`] value type the
+//! writer consumes, so `parse(render(x)) == x` holds for every value the
+//! toolchain emits — property-tested over every report shape in
+//! `rust/tests/service.rs`.
+//!
+//! # Requests
+//!
+//! One JSON object per line. `req` selects the kind; `id` (optional) is
+//! echoed back; `fast` (optional bool) selects the server's fast
+//! configuration (a separate cache fingerprint):
+//!
+//! ```json
+//! {"req":"mine","app":"camera"}
+//! {"req":"ladder","app":"gaussian","id":"42"}
+//! {"req":"domain_pe","domain":"imaging"}
+//! {"req":"reproduce","target":"fig9","fast":true}
+//! {"req":"stress","profiles":"deep_chain","seeds":2,"seed0":1}
+//! {"req":"stats"}
+//! {"req":"version"}
+//! {"req":"shutdown"}
+//! ```
+//!
+//! # Responses
+//!
+//! One JSON object per line. `body` is always the **last** field, spliced
+//! in as raw pre-rendered bytes — a cached artifact is therefore served
+//! byte-identically, and [`parse_response`] can hand the raw body slice
+//! back without a re-render:
+//!
+//! ```json
+//! {"ok":true,"kind":"ladder","cached":"mem","elapsed_us":312,"body":{...}}
+//! {"ok":false,"error":"unknown app `nope`"}
+//! ```
+//!
+//! `cached` is one of `miss` (computed here), `mem`/`disk` (cache tier
+//! that answered), `flight` (deduplicated onto a concurrent identical
+//! in-flight request), or `live` (uncacheable: stats/version/shutdown).
+
+use std::fmt;
+
+use crate::report::json::Json;
+
+/// Maximum nesting depth the parser accepts (arrays/objects). The server
+/// parses untrusted input; without a guard a line of `[[[[…` recurses
+/// once per byte and overflows the stack.
+pub const MAX_DEPTH: usize = 128;
+
+/// A parse failure: byte position plus message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+/// Parse one complete JSON document (trailing garbage is an error).
+pub fn parse(input: &str) -> Result<Json, ParseError> {
+    let mut p = Parser { src: input, i: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.i != p.src.len() {
+        return Err(p.err("trailing characters after JSON value"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError {
+            pos: self.i,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.as_bytes().get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8, ParseError> {
+        let b = self.peek().ok_or_else(|| self.err("unexpected end of input"))?;
+        self.i += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, ParseError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(_) => Err(self.err("expected a JSON value")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, ParseError> {
+        if self.src[self.i..].starts_with(word) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, ParseError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        match self.peek() {
+            Some(b'0') => {
+                self.i += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zeros are not allowed"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.err("expected a digit")),
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected a digit after the decimal point"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected a digit in the exponent"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = &self.src[start..self.i];
+        let v: f64 = text
+            .parse()
+            .map_err(|_| self.err("invalid number"))?;
+        // JSON has no Infinity; an overflowing literal (1e999) parses to
+        // inf in Rust and would re-render invalidly — reject it here.
+        if !v.is_finite() {
+            return Err(self.err("number out of range"));
+        }
+        Ok(Json::Num(v))
+    }
+
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        let mut v: u32 = 0;
+        for _ in 0..4 {
+            let c = self.bump()?;
+            let d = match c {
+                b'0'..=b'9' => (c - b'0') as u32,
+                b'a'..=b'f' => (c - b'a') as u32 + 10,
+                b'A'..=b'F' => (c - b'A') as u32 + 10,
+                _ => return Err(self.err("invalid \\u escape digit")),
+            };
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        if self.bump()? != b'"' {
+            return Err(self.err("expected a string"));
+        }
+        let mut out = String::new();
+        loop {
+            let b = self.bump()?;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => match self.bump()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = self.hex4()?;
+                        if (0xDC00..0xE000).contains(&hi) {
+                            return Err(self.err("lone low surrogate"));
+                        }
+                        if (0xD800..0xDC00).contains(&hi) {
+                            if self.bump()? != b'\\' || self.bump()? != b'u' {
+                                return Err(self.err("high surrogate without \\u pair"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                            out.push(char::from_u32(c).expect("valid supplementary char"));
+                        } else {
+                            out.push(char::from_u32(hi).expect("valid BMP non-surrogate"));
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape sequence")),
+                },
+                0x00..=0x1F => return Err(self.err("unescaped control character in string")),
+                0x20..=0x7F => out.push(b as char),
+                _ => {
+                    // Multibyte UTF-8: the input is a &str, so re-decode the
+                    // full char from the lead byte we just consumed.
+                    let c = self.src[self.i - 1..]
+                        .chars()
+                        .next()
+                        .expect("valid UTF-8 input");
+                    out.push(c);
+                    self.i += c.len_utf8() - 1;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, ParseError> {
+        self.bump()?; // '['
+        self.skip_ws();
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => self.skip_ws(),
+                b']' => return Ok(Json::Arr(items)),
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, ParseError> {
+        self.bump()?; // '{'
+        self.skip_ws();
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            if self.peek() != Some(b'"') {
+                return Err(self.err("expected a string key"));
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            if self.bump()? != b':' {
+                return Err(self.err("expected ':'"));
+            }
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.bump()? {
+                b',' => self.skip_ws(),
+                b'}' => return Ok(Json::Obj(pairs)),
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+// ---- typed requests ----------------------------------------------------
+
+/// A decoded service request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Mined + MIS-ranked patterns for one app.
+    Mine { app: String },
+    /// The fully evaluated variant ladder for one app.
+    Ladder { app: String },
+    /// The cross-app domain-PE comparison for one registry domain.
+    DomainPe { domain: String },
+    /// One experiment target (or `all`) as a full `SessionReport`.
+    Reproduce { target: String },
+    /// A metamorphic stress run over the synthetic-workload engine.
+    Stress {
+        profiles: String,
+        seeds: usize,
+        seed0: u64,
+    },
+    /// Live server statistics (uncacheable).
+    Stats,
+    /// Crate + schema versions (uncacheable).
+    Version,
+    /// Graceful shutdown: drain workers, then exit 0 (uncacheable).
+    Shutdown,
+}
+
+/// Default seeds for a service `stress` request (deliberately small — the
+/// CLI default of 64 is a batch workload, not a serving one).
+pub const STRESS_SEEDS_DEFAULT: usize = 4;
+
+/// Hard cap on a `stress` request's seed count. The server executes
+/// requests from untrusted clients; without a bound one line could pin a
+/// worker on ~2^53 scenarios and make graceful shutdown (which drains
+/// workers) unreachable. Batch-scale runs belong to `cgra-dse stress`.
+pub const STRESS_SEEDS_MAX: usize = 4096;
+
+impl Request {
+    /// Stable kind tag (the `req` field, the response `kind` field, and
+    /// one component of the cache key).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Request::Mine { .. } => "mine",
+            Request::Ladder { .. } => "ladder",
+            Request::DomainPe { .. } => "domain_pe",
+            Request::Reproduce { .. } => "reproduce",
+            Request::Stress { .. } => "stress",
+            Request::Stats => "stats",
+            Request::Version => "version",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// Canonical argument string for the cache key, or `None` when the
+    /// request is a live view and must never be cached.
+    pub fn cache_detail(&self) -> Option<String> {
+        match self {
+            Request::Mine { app } | Request::Ladder { app } => Some(app.clone()),
+            Request::DomainPe { domain } => Some(domain.clone()),
+            Request::Reproduce { target } => Some(target.clone()),
+            Request::Stress {
+                profiles,
+                seeds,
+                seed0,
+            } => Some(format!("{profiles}:{seeds}:{seed0}")),
+            Request::Stats | Request::Version | Request::Shutdown => None,
+        }
+    }
+}
+
+/// A request plus its envelope fields (`id`, `fast`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Opaque client tag, echoed back in the response.
+    pub id: Option<String>,
+    /// Serve under the server's fast configuration (separate fingerprint,
+    /// separate cache entries).
+    pub fast: bool,
+    pub req: Request,
+}
+
+/// Canonical form of a `stress` profiles spec: validated names, duplicates
+/// rejected, sorted, and the full set normalized to `"all"` — so every
+/// spelling of one workload shares one cache entry and one single-flight
+/// (the same principle as `reproduce` target canonicalization).
+fn canonical_profiles(spec: &str) -> Result<String, String> {
+    if spec == "all" {
+        return Ok("all".to_string());
+    }
+    let mut names: Vec<&'static str> = Vec::new();
+    for name in spec.split(',').filter(|s| !s.is_empty()) {
+        let p = crate::frontend::synth::profile(name)
+            .ok_or_else(|| format!("unknown stress profile `{name}`"))?;
+        if names.contains(&p.name) {
+            return Err(format!("duplicate stress profile `{name}`"));
+        }
+        names.push(p.name);
+    }
+    if names.is_empty() {
+        return Err("`stress` field `profiles` must name at least one profile".to_string());
+    }
+    names.sort_unstable();
+    let mut all: Vec<&str> = crate::frontend::synth::profiles()
+        .iter()
+        .map(|p| p.name)
+        .collect();
+    all.sort_unstable();
+    if names == all {
+        return Ok("all".to_string());
+    }
+    Ok(names.join(","))
+}
+
+/// Resolve a canonical profiles spec (the output of `canonical_profiles`,
+/// i.e. `Request::Stress::profiles`) to its profile descriptors. The
+/// single lookup shared by the server's compute path — validation
+/// happened at decode time, so unknown names simply don't resolve.
+pub fn resolve_profiles(spec: &str) -> Vec<&'static crate::frontend::synth::SynthProfile> {
+    if spec == "all" {
+        crate::frontend::synth::profiles().iter().collect()
+    } else {
+        spec.split(',')
+            .filter_map(crate::frontend::synth::profile)
+            .collect()
+    }
+}
+
+fn need_str(v: &Json, key: &str, kind: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("`{kind}` request needs a string `{key}` field"))
+}
+
+impl Envelope {
+    /// Decode a request object.
+    pub fn from_json(v: &Json) -> Result<Envelope, String> {
+        let kind = v
+            .get("req")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "request needs a string `req` field".to_string())?;
+        let req = match kind {
+            "mine" => Request::Mine {
+                app: need_str(v, "app", kind)?,
+            },
+            "ladder" => Request::Ladder {
+                app: need_str(v, "app", kind)?,
+            },
+            "domain_pe" => Request::DomainPe {
+                domain: need_str(v, "domain", kind)?,
+            },
+            // Canonicalize domain aliases (`imaging` → `fig10`, …) at
+            // decode time so every spelling of the same experiment shares
+            // one cache entry and one single-flight — and bad targets are
+            // rejected before they reach a worker.
+            "reproduce" => {
+                let t = need_str(v, "target", kind)?;
+                let target = if t == "all" {
+                    t
+                } else {
+                    crate::coordinator::resolve_target(&t)
+                        .ok_or_else(|| {
+                            format!(
+                                "unknown reproduce target `{t}` (valid: {} | domain keys | all)",
+                                crate::coordinator::REPRODUCE_TARGETS.join("|")
+                            )
+                        })?
+                        .to_string()
+                };
+                Request::Reproduce { target }
+            }
+            // Optional fields are defaulted only when *absent* — a present
+            // field of the wrong type or range is an error, never silently
+            // replaced (the artifact would be cached under parameters the
+            // client did not ask for).
+            "stress" => Request::Stress {
+                profiles: match v.get("profiles") {
+                    None => "all".to_string(),
+                    Some(p) => canonical_profiles(
+                        p.as_str().ok_or("`stress` field `profiles` must be a string")?,
+                    )?,
+                },
+                seeds: match v.get("seeds") {
+                    None => STRESS_SEEDS_DEFAULT,
+                    Some(s) => {
+                        let n = s
+                            .as_usize()
+                            .ok_or("`stress` field `seeds` must be a non-negative integer")?;
+                        if n > STRESS_SEEDS_MAX {
+                            return Err(format!(
+                                "`stress` field `seeds` exceeds the serving cap of \
+                                 {STRESS_SEEDS_MAX} (use `cgra-dse stress` for batch runs)"
+                            ));
+                        }
+                        n
+                    }
+                },
+                seed0: match v.get("seed0") {
+                    None => 1,
+                    Some(s) => s
+                        .as_u64()
+                        .ok_or("`stress` field `seed0` must be a non-negative integer < 2^53")?,
+                },
+            },
+            "stats" => Request::Stats,
+            "version" => Request::Version,
+            "shutdown" => Request::Shutdown,
+            other => {
+                return Err(format!(
+                    "unknown request kind `{other}` (valid: mine ladder domain_pe \
+                     reproduce stress stats version shutdown)"
+                ))
+            }
+        };
+        let id = match v.get("id") {
+            None => None,
+            Some(i) => Some(
+                i.as_str()
+                    .ok_or("envelope field `id` must be a string")?
+                    .to_string(),
+            ),
+        };
+        let fast = match v.get("fast") {
+            None => false,
+            Some(f) => f.as_bool().ok_or("envelope field `fast` must be a boolean")?,
+        };
+        Ok(Envelope { id, fast, req })
+    }
+
+    /// Parse + decode one request line.
+    pub fn parse_line(line: &str) -> Result<Envelope, String> {
+        let v = parse(line).map_err(|e| e.to_string())?;
+        Envelope::from_json(&v)
+    }
+
+    /// Encode back to the wire object (round-trips through
+    /// [`Envelope::from_json`]; used by tests and scripting helpers).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("req", Json::str(self.req.kind()))];
+        match &self.req {
+            Request::Mine { app } | Request::Ladder { app } => {
+                pairs.push(("app", Json::str(app)));
+            }
+            Request::DomainPe { domain } => pairs.push(("domain", Json::str(domain))),
+            Request::Reproduce { target } => pairs.push(("target", Json::str(target))),
+            Request::Stress {
+                profiles,
+                seeds,
+                seed0,
+            } => {
+                pairs.push(("profiles", Json::str(profiles)));
+                pairs.push(("seeds", Json::int(*seeds)));
+                pairs.push(("seed0", Json::int(*seed0 as usize)));
+            }
+            Request::Stats | Request::Version | Request::Shutdown => {}
+        }
+        if let Some(id) = &self.id {
+            pairs.push(("id", Json::str(id)));
+        }
+        if self.fast {
+            pairs.push(("fast", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+// ---- response envelope -------------------------------------------------
+
+/// Render a success line. `body` is spliced in raw as the **last** field —
+/// cached artifacts are served byte-for-byte, and [`parse_response`] can
+/// recover the exact body slice (the byte sequence `,"body":` cannot occur
+/// inside any rendered string, since `"` is always escaped there).
+pub fn ok_line(
+    id: Option<&str>,
+    kind: &str,
+    cached: &str,
+    elapsed_us: u128,
+    body: &str,
+) -> String {
+    let mut s = String::with_capacity(body.len() + 80);
+    s.push_str("{\"ok\":true");
+    if let Some(id) = id {
+        s.push_str(",\"id\":");
+        s.push_str(&Json::str(id).render());
+    }
+    s.push_str(",\"kind\":");
+    s.push_str(&Json::str(kind).render());
+    s.push_str(",\"cached\":");
+    s.push_str(&Json::str(cached).render());
+    s.push_str(",\"elapsed_us\":");
+    s.push_str(&elapsed_us.to_string());
+    s.push_str(",\"body\":");
+    s.push_str(body);
+    s.push('}');
+    s
+}
+
+/// Render an error line.
+pub fn err_line(id: Option<&str>, msg: &str) -> String {
+    let mut s = String::with_capacity(msg.len() + 32);
+    s.push_str("{\"ok\":false");
+    if let Some(id) = id {
+        s.push_str(",\"id\":");
+        s.push_str(&Json::str(id).render());
+    }
+    s.push_str(",\"error\":");
+    s.push_str(&Json::str(msg).render());
+    s.push('}');
+    s
+}
+
+/// A decoded response line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseView {
+    pub ok: bool,
+    pub id: Option<String>,
+    pub kind: Option<String>,
+    /// `miss` | `mem` | `disk` | `flight` | `live` (absent on errors).
+    pub cached: Option<String>,
+    pub elapsed_us: Option<f64>,
+    pub error: Option<String>,
+    /// Parsed body value (success only).
+    pub body: Option<Json>,
+    /// The body's exact raw bytes as they appeared on the wire — the
+    /// byte-identity invariant of the artifact cache is checked on this.
+    pub body_raw: Option<String>,
+}
+
+/// Parse and validate one response line.
+pub fn parse_response(line: &str) -> Result<ResponseView, String> {
+    // Trim *all* surrounding whitespace, not just the frame newline: the
+    // body_raw slice below anchors on the envelope's closing `}` being the
+    // final byte, and the JSON parser would otherwise accept a line whose
+    // trailing space breaks that anchor.
+    let line = line.trim();
+    let v = parse(line).map_err(|e| e.to_string())?;
+    let ok = v
+        .get("ok")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| "response needs a bool `ok` field".to_string())?;
+    let body = v.get("body").cloned();
+    let body_raw = if body.is_some() {
+        // `body` is the last field: its raw bytes run from after the first
+        // `,"body":` marker to the closing `}` of the envelope.
+        let idx = line
+            .find(",\"body\":")
+            .ok_or_else(|| "response body marker missing".to_string())?;
+        Some(line[idx + 8..line.len() - 1].to_string())
+    } else {
+        None
+    };
+    Ok(ResponseView {
+        ok,
+        id: v.get("id").and_then(Json::as_str).map(str::to_string),
+        kind: v.get("kind").and_then(Json::as_str).map(str::to_string),
+        cached: v.get("cached").and_then(Json::as_str).map(str::to_string),
+        elapsed_us: v.get("elapsed_us").and_then(Json::as_f64),
+        error: v.get("error").and_then(Json::as_str).map(str::to_string),
+        body,
+        body_raw,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_parse() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse("  \"hi\"  ").unwrap(), Json::str("hi"));
+    }
+
+    #[test]
+    fn composites_parse_preserving_order() {
+        let v = parse("{\"b\":[1,2],\"a\":\"x\"}").unwrap();
+        assert_eq!(
+            v,
+            Json::obj(vec![
+                ("b", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+                ("a", Json::str("x")),
+            ])
+        );
+        assert_eq!(v.render(), "{\"b\":[1,2],\"a\":\"x\"}");
+    }
+
+    #[test]
+    fn escapes_and_surrogate_pairs_decode() {
+        assert_eq!(parse(r#""a\"b\\c\nd\t\u0001""#).unwrap(), Json::str("a\"b\\c\nd\t\u{1}"));
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap(), Json::str("😀"));
+        assert_eq!(parse(r#""\u00b5m\u00b2""#).unwrap(), Json::str("µm²"));
+        assert_eq!(parse(r#""\/""#).unwrap(), Json::str("/"));
+        assert_eq!(parse(r#""\b\f""#).unwrap(), Json::str("\u{8}\u{c}"));
+    }
+
+    #[test]
+    fn malformed_inputs_are_rejected() {
+        for bad in [
+            "", "  ", "{", "[1,]", "{\"a\":}", "{\"a\"1}", "01", "1.", "1e", "+1", "nan",
+            "Infinity", "1e999", "\"abc", "[1] x", "tru", "{\"a\":1,}", "[,1]", "'a'",
+            "\"\\ud800\"", "\"\\udc00\"", "\"\\ud800x\"", "\"\\q\"",
+        ] {
+            assert!(parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // Raw control char inside a string.
+        assert!(parse("\"a\u{1}b\"").is_err());
+    }
+
+    #[test]
+    fn depth_guard_rejects_pathological_nesting() {
+        let deep = "[".repeat(MAX_DEPTH + 10) + &"]".repeat(MAX_DEPTH + 10);
+        assert!(parse(&deep).is_err());
+        let ok = "[".repeat(MAX_DEPTH - 1) + &"]".repeat(MAX_DEPTH - 1);
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn request_decode_defaults() {
+        let env = Envelope::parse_line(r#"{"req":"stress"}"#).unwrap();
+        assert_eq!(
+            env.req,
+            Request::Stress {
+                profiles: "all".into(),
+                seeds: STRESS_SEEDS_DEFAULT,
+                seed0: 1
+            }
+        );
+        assert!(!env.fast);
+        assert!(env.id.is_none());
+        assert!(Envelope::parse_line(r#"{"req":"ladder"}"#).is_err());
+        assert!(Envelope::parse_line(r#"{"req":"frobnicate"}"#).is_err());
+        assert!(Envelope::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn present_fields_of_the_wrong_type_are_rejected_not_defaulted() {
+        // A mistyped optional field must error — defaulting would cache an
+        // artifact under parameters the client did not request.
+        for bad in [
+            r#"{"req":"stress","profiles":123}"#,
+            r#"{"req":"stress","seeds":-1}"#,
+            r#"{"req":"stress","seeds":"8"}"#,
+            r#"{"req":"stress","seeds":1.5}"#,
+            r#"{"req":"stress","seed0":1e20}"#,
+            r#"{"req":"stats","id":123}"#,
+            r#"{"req":"stats","fast":"yes"}"#,
+            r#"{"req":"mine","app":7}"#,
+        ] {
+            assert!(Envelope::parse_line(bad).is_err(), "accepted {bad}");
+        }
+        // Absent fields still default.
+        assert!(Envelope::parse_line(r#"{"req":"stress"}"#).is_ok());
+    }
+
+    #[test]
+    fn stress_seed_count_is_capped_at_decode_time() {
+        let line = format!(r#"{{"req":"stress","seeds":{}}}"#, STRESS_SEEDS_MAX);
+        assert!(Envelope::parse_line(&line).is_ok());
+        let line = format!(r#"{{"req":"stress","seeds":{}}}"#, STRESS_SEEDS_MAX + 1);
+        let err = Envelope::parse_line(&line).unwrap_err();
+        assert!(err.contains("serving cap"), "{err}");
+    }
+
+    #[test]
+    fn stress_profiles_canonicalize_order_dups_and_full_set() {
+        let get = |line: &str| match Envelope::parse_line(line).unwrap().req {
+            Request::Stress { profiles, .. } => profiles,
+            other => panic!("{other:?}"),
+        };
+        // Order-insensitive: both spellings share one cache identity.
+        assert_eq!(
+            get(r#"{"req":"stress","profiles":"deep_chain,const_heavy"}"#),
+            "const_heavy,deep_chain"
+        );
+        assert_eq!(
+            get(r#"{"req":"stress","profiles":"const_heavy,deep_chain"}"#),
+            "const_heavy,deep_chain"
+        );
+        // The explicit full set normalizes to "all".
+        let full = crate::frontend::synth::profiles()
+            .iter()
+            .map(|p| p.name)
+            .collect::<Vec<_>>()
+            .join(",");
+        assert_eq!(get(&format!(r#"{{"req":"stress","profiles":"{full}"}}"#)), "all");
+        // Unknown, duplicate, and empty lists are rejected.
+        for bad in [
+            r#"{"req":"stress","profiles":"nope"}"#,
+            r#"{"req":"stress","profiles":"deep_chain,deep_chain"}"#,
+            r#"{"req":"stress","profiles":""}"#,
+            r#"{"req":"stress","profiles":","}"#,
+        ] {
+            assert!(Envelope::parse_line(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn reproduce_targets_canonicalize_domain_aliases() {
+        // Every spelling of one experiment must share one cache identity.
+        for (alias, canonical) in
+            [("imaging", "fig10"), ("ml", "fig11"), ("dsp", "fig_dsp"), ("fig8", "fig8")]
+        {
+            let env =
+                Envelope::parse_line(&format!(r#"{{"req":"reproduce","target":"{alias}"}}"#))
+                    .unwrap();
+            assert_eq!(
+                env.req,
+                Request::Reproduce {
+                    target: canonical.to_string()
+                },
+                "{alias}"
+            );
+        }
+        assert!(Envelope::parse_line(r#"{"req":"reproduce","target":"all"}"#).is_ok());
+        let err = Envelope::parse_line(r#"{"req":"reproduce","target":"nope"}"#).unwrap_err();
+        assert!(err.contains("unknown reproduce target"), "{err}");
+    }
+
+    #[test]
+    fn response_lines_roundtrip_with_raw_body() {
+        let body = "{\"app\":\"camera\",\"n\":3}";
+        let line = ok_line(Some("id,\"body\":x"), "ladder", "mem", 1234, body);
+        let view = parse_response(&line).unwrap();
+        assert!(view.ok);
+        assert_eq!(view.id.as_deref(), Some("id,\"body\":x"));
+        assert_eq!(view.kind.as_deref(), Some("ladder"));
+        assert_eq!(view.cached.as_deref(), Some("mem"));
+        assert_eq!(view.elapsed_us, Some(1234.0));
+        assert_eq!(view.body_raw.as_deref(), Some(body));
+        assert_eq!(view.body, Some(parse(body).unwrap()));
+
+        let e = parse_response(&err_line(None, "nope `x`")).unwrap();
+        assert!(!e.ok);
+        assert_eq!(e.error.as_deref(), Some("nope `x`"));
+        assert!(e.body_raw.is_none());
+    }
+
+    #[test]
+    fn cache_detail_covers_exactly_the_cacheable_kinds() {
+        let cacheable = [
+            Request::Mine { app: "a".into() },
+            Request::Ladder { app: "a".into() },
+            Request::DomainPe { domain: "d".into() },
+            Request::Reproduce { target: "fig9".into() },
+            Request::Stress {
+                profiles: "all".into(),
+                seeds: 1,
+                seed0: 1,
+            },
+        ];
+        for r in &cacheable {
+            assert!(r.cache_detail().is_some(), "{:?}", r.kind());
+        }
+        for r in [Request::Stats, Request::Version, Request::Shutdown] {
+            assert!(r.cache_detail().is_none(), "{:?}", r.kind());
+        }
+    }
+}

@@ -1,0 +1,728 @@
+//! The JSON-lines TCP server: a fixed worker-thread pool over a shared
+//! [`DseSession`] pool, fronted by the two-tier artifact cache
+//! ([`super::cache`]) with **single-flight deduplication** of identical
+//! in-flight requests, per-request timing, and graceful shutdown.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//!   accept ──> worker ──> parse line ──> cache.get ──hit──> reply (mem|disk)
+//!                                          │ miss
+//!                                          ▼
+//!                                   flights: first?
+//!                                    │yes        │no
+//!                                    ▼           ▼
+//!                              compute once   wait on the leader's
+//!                              (session pool) condvar ("flight")
+//!                                    │           │
+//!                                    └── cache.put ──> reply
+//! ```
+//!
+//! Single-flight means N concurrent identical requests trigger exactly one
+//! pipeline execution: the first becomes the *leader* and computes; the
+//! rest block on the leader's flight and are answered from the same
+//! rendered artifact (`cached:"flight"`). Combined with the session's own
+//! stage memoization this gives the strong guarantee the integration tests
+//! pin: repeated or concurrent identical requests never recompute a stage.
+//!
+//! Sessions are pooled per config fingerprint (the default config and the
+//! `fast:true` config each get one), so every worker shares one memoized
+//! pipeline per configuration.
+//!
+//! # Shutdown
+//!
+//! A `shutdown` request flips the stop flag, wakes the accept loop with a
+//! loopback connection, and lets every worker drain its queue before the
+//! listener returns the final [`ServerStats`] — the CLI then exits 0.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::cache::{CacheKey, CacheStats, TieredCache, CACHE_SCHEMA_VERSION};
+use super::protocol::{self, Envelope, Request};
+use crate::coordinator;
+use crate::dse::DseConfig;
+use crate::frontend::DomainRegistry;
+use crate::mining::MinerConfig;
+use crate::report::json::Json;
+use crate::runtime::default_width;
+use crate::session::{
+    config_fingerprint, report as sjson, DseSession, Stage, FINGERPRINT_SCHEMA_VERSION,
+};
+use crate::stress::{self, Mutation, StressConfig};
+
+/// The reduced-effort configuration served for `fast:true` requests (and
+/// the CLI's `--fast` flag): coarser mining bounds, smaller merge ladder.
+/// Fingerprints differently from [`DseConfig::default`], so fast artifacts
+/// never shadow full-effort ones (both values are golden-pinned in
+/// `session::tests::config_fingerprint_golden`).
+pub fn fast_config() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 600,
+            ..Default::default()
+        },
+        max_merged: 3,
+        ..Default::default()
+    }
+}
+
+/// Server configuration (CLI: `cgra-dse serve`).
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Worker-thread count (each handles one connection at a time).
+    pub workers: usize,
+    /// Disk-tier directory; `None` serves from memory only.
+    pub cache_dir: Option<PathBuf>,
+    /// Memory-tier entry budget.
+    pub mem_cache_entries: usize,
+    /// Configuration served by default.
+    pub cfg: DseConfig,
+    /// Configuration served for `fast:true` requests.
+    pub fast_cfg: DseConfig,
+    /// Worker width of each pooled session (0 = available parallelism).
+    pub session_threads: usize,
+    /// Hard cap on one request line (protects worker memory).
+    pub max_line_bytes: usize,
+    /// Per-connection read timeout while *waiting* for the next request
+    /// line (a slow compute never trips it — the worker is not reading).
+    /// Also bounds how long an idle persistent connection can delay a
+    /// graceful shutdown's worker drain; `None` removes that bound.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 4,
+            cache_dir: None,
+            mem_cache_entries: 256,
+            cfg: DseConfig::default(),
+            fast_cfg: fast_config(),
+            session_threads: 0,
+            max_line_bytes: 1 << 20,
+            read_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+/// Final counters, returned by [`Server::run`] after a graceful shutdown
+/// (the same numbers the `stats` request serves live).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub errors: usize,
+    pub hits_mem: usize,
+    pub hits_disk: usize,
+    pub misses: usize,
+    pub single_flight_waits: usize,
+    /// Total stage computes across every pooled session.
+    pub stage_computes_total: usize,
+}
+
+enum FlightState {
+    Pending,
+    Done(Result<Arc<String>, String>),
+}
+
+struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight {
+            state: Mutex::new(FlightState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+struct Shared {
+    sc: ServeConfig,
+    cache: TieredCache,
+    /// Sessions are fixed at bind time (one per distinct config
+    /// fingerprint — default and fast, shared when they coincide), so the
+    /// per-request path never takes a pool lock or re-derives a
+    /// fingerprint.
+    session_default: Arc<DseSession>,
+    session_fast: Arc<DseSession>,
+    flights: Mutex<HashMap<String, Arc<Flight>>>,
+    stop: AtomicBool,
+    requests: AtomicUsize,
+    errors: AtomicUsize,
+    flight_waits: AtomicUsize,
+    started: Instant,
+    local_addr: SocketAddr,
+}
+
+impl Shared {
+    fn session_for(&self, fast: bool) -> &Arc<DseSession> {
+        if fast {
+            &self.session_fast
+        } else {
+            &self.session_default
+        }
+    }
+
+    /// The distinct pooled sessions (one when default == fast).
+    fn sessions(&self) -> Vec<&Arc<DseSession>> {
+        if Arc::ptr_eq(&self.session_default, &self.session_fast) {
+            vec![&self.session_default]
+        } else {
+            vec![&self.session_default, &self.session_fast]
+        }
+    }
+
+    /// Per-stage compute counters summed over the session pool.
+    fn stage_computes(&self) -> (Vec<(&'static str, usize)>, usize) {
+        let pool = self.sessions();
+        let per: Vec<(&'static str, usize)> = Stage::ALL
+            .iter()
+            .map(|&st| {
+                (
+                    st.key(),
+                    pool.iter().map(|s| s.stage_computes(st)).sum::<usize>(),
+                )
+            })
+            .collect();
+        let total = per.iter().map(|(_, n)| n).sum();
+        (per, total)
+    }
+
+    fn final_stats(&self) -> ServerStats {
+        let cs: CacheStats = self.cache.stats();
+        let (_, total) = self.stage_computes();
+        ServerStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            hits_mem: cs.hits_mem,
+            hits_disk: cs.hits_disk,
+            misses: cs.misses,
+            single_flight_waits: self.flight_waits.load(Ordering::Relaxed),
+            stage_computes_total: total,
+        }
+    }
+
+    /// Unblock the accept loop after the stop flag flips. A listener bound
+    /// to an unspecified address (0.0.0.0/::) is not connectable as such —
+    /// substitute the matching loopback. If the wake still fails, say so:
+    /// the accept loop then only exits on the next real connection.
+    fn wake_acceptor(&self) {
+        let mut addr = self.local_addr;
+        if addr.ip().is_unspecified() {
+            if addr.is_ipv4() {
+                addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+            } else {
+                addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST));
+            }
+        }
+        if let Err(e) = TcpStream::connect(addr) {
+            eprintln!(
+                "shutdown wake-connect to {addr} failed ({e}); \
+                 the server will finish shutting down on the next incoming connection"
+            );
+        }
+    }
+}
+
+/// A bound (not yet serving) server. Bind first, then [`Server::run`] —
+/// tests and benches bind port 0 and read [`Server::local_addr`] before
+/// spawning `run` on a thread.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    pub fn bind(sc: ServeConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&sc.addr)?;
+        let local_addr = listener.local_addr()?;
+        let cache = TieredCache::new(sc.mem_cache_entries, sc.cache_dir.as_deref())?;
+        let threads = if sc.session_threads == 0 {
+            default_width()
+        } else {
+            sc.session_threads
+        };
+        let build = |cfg: DseConfig| {
+            Arc::new(
+                DseSession::builder()
+                    .registry_suite()
+                    .config(cfg)
+                    .threads(threads)
+                    .build(),
+            )
+        };
+        let session_default = build(sc.cfg.clone());
+        let session_fast = if config_fingerprint(&sc.fast_cfg) == session_default.fingerprint() {
+            session_default.clone()
+        } else {
+            build(sc.fast_cfg.clone())
+        };
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                sc,
+                cache,
+                session_default,
+                session_fast,
+                flights: Mutex::new(HashMap::new()),
+                stop: AtomicBool::new(false),
+                requests: AtomicUsize::new(0),
+                errors: AtomicUsize::new(0),
+                flight_waits: AtomicUsize::new(0),
+                started: Instant::now(),
+                local_addr,
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Accept and serve until a `shutdown` request arrives, then drain the
+    /// worker queue and return the final stats.
+    pub fn run(self) -> std::io::Result<ServerStats> {
+        let shared = self.shared.clone();
+        let res: std::io::Result<()> = std::thread::scope(|s| {
+            let (tx, rx) = mpsc::channel::<TcpStream>();
+            let rx = Arc::new(Mutex::new(rx));
+            let mut handles = Vec::new();
+            for _ in 0..self.shared.sc.workers.max(1) {
+                let rx = rx.clone();
+                let shared = shared.clone();
+                handles.push(s.spawn(move || worker_loop(rx, shared)));
+            }
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        if shared.stop.load(Ordering::SeqCst) {
+                            break; // the wake connection (or a racing client)
+                        }
+                        let _ = stream.set_read_timeout(shared.sc.read_timeout);
+                        let _ = tx.send(stream);
+                    }
+                    Err(_) if shared.stop.load(Ordering::SeqCst) => break,
+                    Err(e) => {
+                        // Transient accept failure (EMFILE, aborted
+                        // handshake): log, back off briefly so a
+                        // persistent condition doesn't spin a core, and
+                        // keep serving.
+                        eprintln!("accept: {e}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+            drop(tx); // workers drain the queue, then recv() errors out
+            for h in handles {
+                let _ = h.join();
+            }
+            Ok(())
+        });
+        res?;
+        Ok(self.shared.final_stats())
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, shared: Arc<Shared>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_conn(s, &shared),
+            Err(_) => return, // channel closed: shutdown
+        }
+    }
+}
+
+/// Serve one connection: JSON-lines, one response line per request line,
+/// until EOF, a write failure, or an oversized/undecodable frame.
+fn handle_conn(stream: TcpStream, shared: &Shared) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut out = stream;
+    let mut buf = Vec::new();
+    loop {
+        // A shutdown drains the workers; close persistent connections at
+        // the next frame boundary so the drain terminates (an idle
+        // connection is bounded by `read_timeout`).
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        buf.clear();
+        // +2 leaves room for a CRLF frame ending on a line whose content
+        // is exactly at the cap.
+        let limit = shared.sc.max_line_bytes as u64 + 2;
+        let n = match (&mut reader).take(limit).read_until(b'\n', &mut buf) {
+            Ok(n) => n,
+            Err(_) => return, // timeout or reset
+        };
+        if n == 0 {
+            return; // EOF
+        }
+        // Strip the frame's CR/LF ending only when the read actually saw
+        // the newline: a cap-truncated read must stay intact so the
+        // length check below rejects it (a payload byte that happens to
+        // be '\r' at the truncation boundary must not be popped), while a
+        // newline-less final line before EOF is still served.
+        if matches!(buf.last(), Some(&b'\n')) {
+            buf.pop();
+            while matches!(buf.last(), Some(&b'\r')) {
+                buf.pop();
+            }
+        }
+        if buf.len() > shared.sc.max_line_bytes {
+            let _ = writeln!(out, "{}", protocol::err_line(None, "request line too long"));
+            return;
+        }
+        let Ok(text) = std::str::from_utf8(&buf) else {
+            let _ = writeln!(out, "{}", protocol::err_line(None, "request is not UTF-8"));
+            return;
+        };
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = handle_line(line, shared);
+        if writeln!(out, "{reply}").is_err() || out.flush().is_err() {
+            return;
+        }
+    }
+}
+
+fn handle_line(line: &str, shared: &Shared) -> String {
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let parsed = protocol::parse(line);
+    // Echo the id even when the request fails to decode as an envelope —
+    // clients correlate errors by it.
+    let id: Option<String> = parsed
+        .as_ref()
+        .ok()
+        .and_then(|v| v.get("id").and_then(Json::as_str).map(str::to_string));
+    let env = match parsed
+        .map_err(|e| e.to_string())
+        .and_then(|v| Envelope::from_json(&v))
+    {
+        Ok(e) => e,
+        Err(msg) => {
+            shared.errors.fetch_add(1, Ordering::Relaxed);
+            return protocol::err_line(id.as_deref(), &msg);
+        }
+    };
+    match serve_request(&env, shared) {
+        Ok((body, cached)) => protocol::ok_line(
+            id.as_deref(),
+            env.req.kind(),
+            cached,
+            t0.elapsed().as_micros(),
+            &body,
+        ),
+        Err(msg) => {
+            shared.errors.fetch_add(1, Ordering::Relaxed);
+            protocol::err_line(id.as_deref(), &msg)
+        }
+    }
+}
+
+fn serve_request(env: &Envelope, shared: &Shared) -> Result<(Arc<String>, &'static str), String> {
+    match &env.req {
+        Request::Stats => Ok((Arc::new(stats_body(shared)), "live")),
+        Request::Version => Ok((Arc::new(version_body()), "live")),
+        Request::Shutdown => {
+            shared.stop.store(true, Ordering::SeqCst);
+            shared.wake_acceptor();
+            Ok((Arc::new("{\"stopping\":true}".to_string()), "live"))
+        }
+        req => {
+            let session = shared.session_for(env.fast);
+            let detail = req.cache_detail().expect("non-live requests are cacheable");
+            // Stress artifacts don't depend on the serving session's
+            // config (the harness runs its own pipeline config), so they
+            // are keyed by the harness fingerprint instead: editing
+            // `stress_dse_config()`/`DEFAULT_STIMULI` re-keys (recompute,
+            // never stale), and `fast` vs default requests share one
+            // artifact.
+            let fingerprint = match req {
+                Request::Stress { .. } => stress_fingerprint(),
+                _ => session.fingerprint(),
+            };
+            let key = CacheKey::new(fingerprint, req.kind(), detail);
+            serve_cached(shared, session, &key, req)
+        }
+    }
+}
+
+/// Cache-key fingerprint for `stress` artifacts: the harness's own
+/// pipeline config mixed with its stimulus count (the two determinants of
+/// a stress result besides the request's own `profiles:seeds:seed0`
+/// detail).
+fn stress_fingerprint() -> u64 {
+    let def = StressConfig::default();
+    config_fingerprint(&def.dse) ^ (def.stimuli as u64).wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+/// Cache lookup + single-flight compute. Exactly one leader per canonical
+/// key computes; concurrent identical requests wait and share its result.
+fn serve_cached(
+    shared: &Shared,
+    session: &DseSession,
+    key: &CacheKey,
+    req: &Request,
+) -> Result<(Arc<String>, &'static str), String> {
+    if let Some((val, tier)) = shared.cache.get(key) {
+        return Ok((val, tier.tag()));
+    }
+    let canon = key.canonical();
+    let (flight, leader) = {
+        let mut fl = shared.flights.lock().unwrap_or_else(|e| e.into_inner());
+        match fl.get(&canon) {
+            Some(f) => (f.clone(), false),
+            None => {
+                let f = Arc::new(Flight::new());
+                fl.insert(canon.clone(), f.clone());
+                (f, true)
+            }
+        }
+    };
+    if leader {
+        // Double-checked lookup: a previous leader publishes to the cache
+        // *before* dropping its flight, so a request that found the
+        // flights map empty right after a completion finds the artifact
+        // here — no second pipeline execution, ever. (`recheck` skips miss
+        // accounting; this key's miss was already counted above.)
+        let (result, tag): (Result<Arc<String>, String>, &'static str) =
+            match shared.cache.recheck(key) {
+                Some((val, tier)) => (Ok(val), tier.tag()),
+                None => {
+                    // Panics inside the pipeline (coordinator `expect`s,
+                    // worker-pool joins) become error responses, never a
+                    // dead worker thread.
+                    let result =
+                        std::panic::catch_unwind(AssertUnwindSafe(|| compute(req, session)))
+                            .unwrap_or_else(|p| Err(panic_message(&p)))
+                            .map(Arc::new);
+                    if let Ok(val) = &result {
+                        shared.cache.put(key, val.clone());
+                    }
+                    (result, "miss")
+                }
+            };
+        shared
+            .flights
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&canon);
+        let mut st = flight.state.lock().unwrap_or_else(|e| e.into_inner());
+        *st = FlightState::Done(result.clone());
+        drop(st);
+        flight.cv.notify_all();
+        result.map(|v| (v, tag))
+    } else {
+        shared.flight_waits.fetch_add(1, Ordering::Relaxed);
+        let mut st = flight.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            match &*st {
+                FlightState::Done(result) => {
+                    return result.clone().map(|v| (v, "flight"));
+                }
+                FlightState::Pending => {
+                    st = flight.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+}
+
+fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
+    let msg = p
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".to_string());
+    format!("internal error: {msg}")
+}
+
+/// Execute one cacheable request against a pooled session and render its
+/// artifact body (a single-line JSON document).
+fn compute(req: &Request, session: &DseSession) -> Result<String, String> {
+    match req {
+        Request::Mine { app } => {
+            let stages = session
+                .app(app)
+                .ok_or_else(|| format!("unknown app `{app}`"))?;
+            Ok(sjson::ranked_json(app, &stages.ranked()).render())
+        }
+        Request::Ladder { app } => {
+            let stages = session
+                .app(app)
+                .ok_or_else(|| format!("unknown app `{app}`"))?;
+            Ok(sjson::ladder_json(app, &stages.ladder()).render())
+        }
+        Request::DomainPe { domain } => {
+            let dom = DomainRegistry::domain(domain)
+                .ok_or_else(|| format!("unknown domain `{domain}`"))?;
+            let fig = dom.fig.as_ref().ok_or_else(|| {
+                format!("domain `{domain}` drives no domain-PE experiment")
+            })?;
+            let (_text, rows) = coordinator::domain_fig_for(session, dom.key);
+            Ok(sjson::domain_json(fig.pe_name, &rows).render())
+        }
+        // Target and profiles were canonicalized and validated when the
+        // envelope decoded (`Envelope::from_json`) — compute trusts them.
+        Request::Reproduce { target } => {
+            let targets: Vec<&str> = if target == "all" {
+                coordinator::REPRODUCE_TARGETS.to_vec()
+            } else {
+                vec![target.as_str()]
+            };
+            Ok(coordinator::reproduce(session, &targets).to_json())
+        }
+        Request::Stress {
+            profiles,
+            seeds,
+            seed0,
+        } => {
+            let cfg = StressConfig {
+                seeds: *seeds,
+                seed0: *seed0,
+                profiles: protocol::resolve_profiles(profiles),
+                mutation: Mutation::None,
+                // Respect the server's configured width (the session was
+                // built with it) instead of StressConfig's full-machine
+                // default — `serve --threads 1` must bound stress too.
+                threads: session.threads(),
+                ..Default::default()
+            };
+            Ok(stress::run(&cfg).to_json().render())
+        }
+        Request::Stats | Request::Version | Request::Shutdown => {
+            unreachable!("live requests are served before the cache layer")
+        }
+    }
+}
+
+fn stats_body(shared: &Shared) -> String {
+    let cs = shared.cache.stats();
+    let (per_stage, total) = shared.stage_computes();
+    let sessions = shared.sessions().len();
+    let mut stage_pairs: Vec<(String, Json)> = per_stage
+        .into_iter()
+        .map(|(k, n)| (k.to_string(), Json::int(n)))
+        .collect();
+    stage_pairs.push(("total".to_string(), Json::int(total)));
+    Json::obj(vec![
+        (
+            "uptime_ms",
+            Json::num(shared.started.elapsed().as_millis() as f64),
+        ),
+        ("requests", Json::int(shared.requests.load(Ordering::Relaxed))),
+        ("errors", Json::int(shared.errors.load(Ordering::Relaxed))),
+        ("hits_mem", Json::int(cs.hits_mem)),
+        ("hits_disk", Json::int(cs.hits_disk)),
+        ("misses", Json::int(cs.misses)),
+        ("stores", Json::int(cs.stores)),
+        ("mem_entries", Json::int(cs.mem_entries)),
+        (
+            "single_flight_waits",
+            Json::int(shared.flight_waits.load(Ordering::Relaxed)),
+        ),
+        ("sessions", Json::int(sessions)),
+        ("stage_computes", Json::Obj(stage_pairs)),
+        (
+            "fingerprint_schema",
+            Json::int(FINGERPRINT_SCHEMA_VERSION as usize),
+        ),
+        ("cache_schema", Json::int(CACHE_SCHEMA_VERSION as usize)),
+    ])
+    .render()
+}
+
+/// Body of the `version` request (the CLI `version` subcommand prints the
+/// same fields in text form).
+pub fn version_body() -> String {
+    Json::obj(vec![
+        ("crate", Json::str(env!("CARGO_PKG_VERSION"))),
+        (
+            "fingerprint_schema",
+            Json::int(FINGERPRINT_SCHEMA_VERSION as usize),
+        ),
+        ("cache_schema", Json::int(CACHE_SCHEMA_VERSION as usize)),
+    ])
+    .render()
+}
+
+/// Loopback client: connect (retrying until `timeout_ms` — the server may
+/// still be starting), send one request line, return the raw response
+/// line. `timeout_ms` bounds **connection establishment only**; the wait
+/// for the response is deliberately unbounded, because a cold
+/// `reproduce all` legitimately computes for minutes. Used by `cgra-dse
+/// request`, the CI smoke job, the throughput bench, and the integration
+/// tests.
+pub fn request_once(addr: &str, line: &str, timeout_ms: u64) -> Result<String, String> {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!("connect {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    let mut out = stream.try_clone().map_err(|e| format!("clone: {e}"))?;
+    writeln!(out, "{line}").map_err(|e| format!("send: {e}"))?;
+    out.flush().map_err(|e| format!("flush: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader
+        .read_line(&mut resp)
+        .map_err(|e| format!("recv: {e}"))?;
+    if resp.is_empty() {
+        return Err("server closed the connection without a response".to_string());
+    }
+    Ok(resp.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_config_fingerprints_differently_from_default() {
+        assert_ne!(
+            config_fingerprint(&fast_config()),
+            config_fingerprint(&DseConfig::default())
+        );
+    }
+
+    #[test]
+    fn version_body_is_valid_json_with_schema_fields() {
+        let v = protocol::parse(&version_body()).unwrap();
+        assert_eq!(
+            v.get("crate").and_then(Json::as_str),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        assert_eq!(
+            v.get("fingerprint_schema").and_then(Json::as_usize),
+            Some(FINGERPRINT_SCHEMA_VERSION as usize)
+        );
+    }
+}

@@ -46,6 +46,23 @@ use crate::mining::MinedPattern;
 use crate::pe::PeSpec;
 use crate::runtime::{default_width, parallel_map};
 
+/// Version of the *fingerprint schema*: the field list and mixing function
+/// of [`config_fingerprint`]. The service layer's on-disk artifact cache
+/// keys every artifact by this fingerprint, so its stability across runs
+/// and platforms is load-bearing (golden-pinned by
+/// `tests::config_fingerprint_golden`).
+///
+/// Bump procedure — whenever `DseConfig` gains, loses, or reorders a
+/// fingerprinted field, or the mixing changes:
+///
+/// 1. bump this constant and [`crate::service::CACHE_SCHEMA_VERSION`]
+///    (the cache stores artifacts under a `v{N}/` directory, so every
+///    old artifact becomes unreachable rather than wrong);
+/// 2. re-pin the golden values in `config_fingerprint_golden` (the test
+///    comment shows how to recompute them);
+/// 3. note the bump in CHANGES.md and DESIGN.md §2b.
+pub const FINGERPRINT_SCHEMA_VERSION: u32 = 1;
+
 /// Pipeline stages with per-session compute counters (see
 /// [`DseSession::stage_computes`]; the memoization tests key off these).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -62,6 +79,31 @@ pub enum Stage {
     Sweep,
     /// Cross-application domain-PE merge (PE IP / PE ML).
     Domain,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order (the service `stats` request reports
+    /// compute counters in this order).
+    pub const ALL: [Stage; 6] = [
+        Stage::Mine,
+        Stage::Rank,
+        Stage::Variants,
+        Stage::Evaluate,
+        Stage::Sweep,
+        Stage::Domain,
+    ];
+
+    /// Stable lowercase key for reporting.
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::Mine => "mine",
+            Stage::Rank => "rank",
+            Stage::Variants => "variants",
+            Stage::Evaluate => "evaluate",
+            Stage::Sweep => "sweep",
+            Stage::Domain => "domain",
+        }
+    }
 }
 
 /// Stable fingerprint of a [`DseConfig`] — the cache key component that
@@ -653,6 +695,46 @@ mod tests {
         assert_eq!(s.apps().len(), 4);
         assert!(s.app("fft").is_some());
         assert!(s.app("camera").is_none());
+    }
+
+    #[test]
+    fn config_fingerprint_golden() {
+        // Pinned under fingerprint schema v1: these exact values are
+        // embedded in the service layer's on-disk cache keys, so they must
+        // be stable across runs and platforms. If this test fails you
+        // changed the fingerprinted field set or the mixing — bump
+        // FINGERPRINT_SCHEMA_VERSION (see its docs for the full
+        // procedure) and re-pin. Recompute with: FNV-1a/avalanche over
+        // [min_support, max_nodes, max_patterns, max_occurrences,
+        // require_real_op, max_merged, max_pattern_inputs, tracks, seed]
+        // (h ^= v; h *= 0x100000001b3; h ^= h >> 29, from
+        // h = 0xcbf29ce484222325).
+        assert_eq!(
+            config_fingerprint(&DseConfig::default()),
+            0xb96e_28a7_73be_abe9,
+            "default-config fingerprint drifted"
+        );
+        assert_eq!(
+            config_fingerprint(&crate::service::server::fast_config()),
+            0xa7fb_7e5f_1c23_7105,
+            "fast-config fingerprint drifted"
+        );
+        // Width must never invalidate artifacts.
+        let mut threaded = DseConfig::default();
+        threaded.miner.threads = 7;
+        assert_eq!(
+            config_fingerprint(&threaded),
+            config_fingerprint(&DseConfig::default())
+        );
+    }
+
+    #[test]
+    fn stage_all_covers_every_counter() {
+        assert_eq!(Stage::ALL.len(), 6);
+        let mut keys: Vec<&str> = Stage::ALL.iter().map(|s| s.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 6, "stage keys must be distinct");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! the CLI either as the byte-stable figure text or, with `--json`, as one
 //! JSON document.
 
-use crate::dse::{SweepPoint, VariantEval};
+use crate::dse::{RankedPattern, SweepPoint, VariantEval};
 use crate::report::json::Json;
 use crate::report::Table1Row;
 
@@ -64,6 +64,12 @@ impl SessionReport {
     /// One JSON document with both the structured data and the rendered
     /// text of every section.
     pub fn to_json(&self) -> String {
+        self.to_json_value().render()
+    }
+
+    /// The [`Self::to_json`] document as a structured value — the service
+    /// layer caches and re-parses report artifacts through this shape.
+    pub fn to_json_value(&self) -> Json {
         Json::obj(vec![
             ("tool", Json::str("cgra-dse")),
             (
@@ -87,8 +93,44 @@ impl SessionReport {
                 ),
             ),
         ])
-        .render()
     }
+}
+
+/// JSON view of the mined + MIS-ranked patterns (the service `mine`
+/// request's artifact).
+pub fn ranked_json(app: &str, ranked: &[RankedPattern]) -> Json {
+    Json::obj(vec![
+        ("app", Json::str(app)),
+        (
+            "patterns",
+            Json::Arr(
+                ranked
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        Json::obj(vec![
+                            ("rank", Json::int(i)),
+                            ("mis", Json::int(r.mis_size)),
+                            ("support", Json::int(r.pattern.support)),
+                            ("nodes", Json::int(r.pattern.graph.len())),
+                            ("savings", Json::int(r.savings)),
+                            (
+                                "ops",
+                                Json::Arr(
+                                    r.pattern
+                                        .graph
+                                        .nodes
+                                        .iter()
+                                        .map(|n| Json::str(n.op.label()))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// JSON view of one variant evaluation (the Fig. 8/10/11 row datum).

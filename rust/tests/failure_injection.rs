@@ -215,6 +215,68 @@ fn stress_rejects_unknown_profile_and_invariant() {
     assert!(stderr.contains("unknown invariant"), "{stderr}");
 }
 
+// ---- CLI exit-code contract ---------------------------------------------
+
+#[test]
+fn unknown_subcommand_and_no_args_exit_two_with_usage() {
+    // Exit code 2 is the "bad invocation" contract across every entry
+    // point: unknown subcommand, missing subcommand, unknown app/target.
+    let (code, _, stderr) = run_cli(&["frobnicate"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("USAGE"), "{stderr}");
+    let (code, _, stderr) = run_cli(&[]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("USAGE"), "{stderr}");
+    let (code, _, stderr) = run_cli(&["mine", "--app", "nope"]);
+    assert_eq!(code, 2, "{stderr}");
+}
+
+#[test]
+fn version_prints_crate_and_schema_versions() {
+    let (code, stdout, _) = run_cli(&["version"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains(env!("CARGO_PKG_VERSION")), "{stdout}");
+    assert!(stdout.contains("fingerprint-schema 1"), "{stdout}");
+    assert!(stdout.contains("cache-schema 1"), "{stdout}");
+}
+
+#[test]
+fn request_rejects_malformed_json_locally_with_exit_two() {
+    // A bad request is a usage error (2), caught before any network I/O.
+    let (code, _, stderr) = run_cli(&["request", "{not json"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("bad request"), "{stderr}");
+    let (code, _, stderr) = run_cli(&["request", "{\"req\":\"frobnicate\"}"]);
+    assert_eq!(code, 2, "{stderr}");
+    let (code, _, stderr) = run_cli(&["request"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("usage"), "{stderr}");
+}
+
+#[test]
+fn request_against_dead_server_exits_one() {
+    // Port 1 on loopback is never served; connect must fail fast and the
+    // client must report a transport error (exit 1, not 2 — the request
+    // itself was well-formed).
+    let (code, _, stderr) = run_cli(&[
+        "request",
+        "{\"req\":\"stats\"}",
+        "--addr",
+        "127.0.0.1:1",
+        "--timeout",
+        "300",
+    ]);
+    assert_eq!(code, 1, "{stderr}");
+    assert!(stderr.contains("request:"), "{stderr}");
+}
+
+#[test]
+fn serve_rejects_unbindable_address_with_exit_one() {
+    let (code, _, stderr) = run_cli(&["serve", "--addr", "999.999.999.999:0"]);
+    assert_eq!(code, 1, "{stderr}");
+    assert!(stderr.contains("bind"), "{stderr}");
+}
+
 #[test]
 fn graph_eval_panics_are_prevented_by_validate() {
     // A malformed graph (dangling port) must be caught by validate() so

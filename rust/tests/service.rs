@@ -1,0 +1,449 @@
+//! Integration tests for the serving layer (`cgra_dse::service`):
+//!
+//! * the acceptance invariants — a warm `serve` answers a repeated request
+//!   from cache with a **byte-identical body and zero additional stage
+//!   computes**, and N concurrent identical requests trigger **exactly one
+//!   pipeline execution** (single-flight);
+//! * disk-tier persistence across a server restart;
+//! * `parse(render(x)) == x` property tests over every report shape the
+//!   repo emits (ladder/domain/sweep/table1/io_sweep/ranked JSON, the
+//!   `SessionReport` document, `STRESS.json`, `BENCH_*.json`), including
+//!   the RFC 8259 edge cases from the PR 4 writer tests;
+//! * protocol error paths over a live socket.
+
+use std::sync::{Arc, Barrier};
+
+use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::{synth, AppSuite};
+use cgra_dse::mining::MinerConfig;
+use cgra_dse::report::json::Json;
+use cgra_dse::report::Table1Row;
+use cgra_dse::service::protocol::{self, parse, Envelope, Request};
+use cgra_dse::service::server::{request_once, ServeConfig, Server, ServerStats};
+use cgra_dse::service::CACHE_SCHEMA_VERSION;
+use cgra_dse::session::{report as sjson, DseSession, FINGERPRINT_SCHEMA_VERSION};
+use cgra_dse::stress::{self, StressConfig};
+
+fn fast_cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 400,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg(cache_dir: Option<std::path::PathBuf>) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        cache_dir,
+        cfg: fast_cfg(),
+        fast_cfg: fast_cfg(),
+        session_threads: 2,
+        ..Default::default()
+    }
+}
+
+type ServerHandle = std::thread::JoinHandle<std::io::Result<ServerStats>>;
+
+fn spawn_server(sc: ServeConfig) -> (String, ServerHandle) {
+    let server = Server::bind(sc).expect("bind 127.0.0.1:0");
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn req(addr: &str, line: &str) -> protocol::ResponseView {
+    let raw = request_once(addr, line, 10_000).expect("request");
+    protocol::parse_response(&raw).expect("well-formed response line")
+}
+
+fn shutdown(addr: &str, handle: ServerHandle) -> ServerStats {
+    let view = req(addr, "{\"req\":\"shutdown\"}");
+    assert!(view.ok, "shutdown must succeed");
+    handle
+        .join()
+        .expect("server thread")
+        .expect("clean server exit")
+}
+
+fn stage_compute(view: &protocol::ResponseView, stage: &str) -> usize {
+    view.body
+        .as_ref()
+        .and_then(|b| b.get("stage_computes"))
+        .and_then(|s| s.get(stage))
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("stats body missing stage_computes.{stage}"))
+}
+
+fn stats_total(addr: &str) -> usize {
+    let view = req(addr, "{\"req\":\"stats\"}");
+    assert!(view.ok);
+    stage_compute(&view, "total")
+}
+
+// ---- acceptance: warm cache ---------------------------------------------
+
+#[test]
+fn warm_reproduce_is_byte_identical_with_zero_additional_computes() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    let line = "{\"req\":\"reproduce\",\"target\":\"fig9\"}";
+
+    let first = req(&addr, line);
+    assert!(first.ok, "{:?}", first.error);
+    assert_eq!(first.cached.as_deref(), Some("miss"));
+    let computes = stats_total(&addr);
+    assert!(computes > 0, "the cold request must have computed stages");
+
+    let second = req(&addr, line);
+    assert!(second.ok);
+    assert_eq!(second.cached.as_deref(), Some("mem"));
+    // The cached artifact is served byte-for-byte.
+    assert_eq!(
+        first.body_raw, second.body_raw,
+        "warm response body must be byte-identical"
+    );
+    assert!(second.body_raw.as_deref().unwrap_or("").contains("fig9"));
+    // ...and computed nothing: stage_computes is unchanged.
+    assert_eq!(
+        stats_total(&addr),
+        computes,
+        "a warm hit must not recompute any stage"
+    );
+
+    let final_stats = shutdown(&addr, handle);
+    assert!(final_stats.hits_mem >= 1);
+    assert_eq!(final_stats.errors, 0);
+}
+
+// ---- acceptance: single-flight ------------------------------------------
+
+#[test]
+fn concurrent_identical_requests_run_the_pipeline_exactly_once() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    const N: usize = 8;
+    let barrier = Arc::new(Barrier::new(N));
+    let clients: Vec<_> = (0..N)
+        .map(|_| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                request_once(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}", 30_000)
+                    .expect("request")
+            })
+        })
+        .collect();
+    let lines: Vec<String> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let views: Vec<_> = lines
+        .iter()
+        .map(|l| protocol::parse_response(l).expect("parse response"))
+        .collect();
+    let bodies: Vec<&str> = views
+        .iter()
+        .map(|v| {
+            assert!(v.ok, "{:?}", v.error);
+            v.body_raw.as_deref().expect("body")
+        })
+        .collect();
+    for b in &bodies[1..] {
+        assert_eq!(*b, bodies[0], "all concurrent replies share one artifact");
+    }
+    // Exactly one pipeline execution: each stage computed once, total.
+    let stats = req(&addr, "{\"req\":\"stats\"}");
+    for stage in ["mine", "rank", "variants", "evaluate"] {
+        assert_eq!(
+            stage_compute(&stats, stage),
+            1,
+            "stage `{stage}` must compute exactly once across {N} concurrent requests"
+        );
+    }
+    // Every non-leader was answered by the flight or the warm cache.
+    let waits = stats
+        .body
+        .as_ref()
+        .and_then(|b| b.get("single_flight_waits"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    let hits_mem = stats
+        .body
+        .as_ref()
+        .and_then(|b| b.get("hits_mem"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert_eq!(
+        waits + hits_mem,
+        N - 1,
+        "every follower deduplicates onto the leader or hits the warm cache"
+    );
+    shutdown(&addr, handle);
+}
+
+// ---- disk tier across restart -------------------------------------------
+
+#[test]
+fn disk_cache_survives_a_server_restart_byte_identically() {
+    let dir = std::env::temp_dir().join(format!("cgra_service_disk_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let line = "{\"req\":\"mine\",\"app\":\"gaussian\"}";
+
+    let (addr, handle) = spawn_server(serve_cfg(Some(dir.clone())));
+    let first = req(&addr, line);
+    assert!(first.ok, "{:?}", first.error);
+    assert_eq!(first.cached.as_deref(), Some("miss"));
+    shutdown(&addr, handle);
+
+    // Fresh process-equivalent: new server, new sessions, same cache dir.
+    let (addr2, handle2) = spawn_server(serve_cfg(Some(dir.clone())));
+    let second = req(&addr2, line);
+    assert!(second.ok);
+    assert_eq!(
+        second.cached.as_deref(),
+        Some("disk"),
+        "the restarted server must answer from the disk tier"
+    );
+    assert_eq!(first.body_raw, second.body_raw, "disk round-trip bytes");
+    assert_eq!(
+        stats_total(&addr2),
+        0,
+        "a disk hit must not run any pipeline stage"
+    );
+    let stats = shutdown(&addr2, handle2);
+    assert_eq!(stats.hits_disk, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- protocol over a live socket ----------------------------------------
+
+#[test]
+fn malformed_and_unknown_requests_get_error_lines_not_hangups() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    for (line, needle) in [
+        ("this is not json", "parse error"),
+        ("{\"req\":\"frobnicate\"}", "unknown request kind"),
+        ("{\"req\":\"ladder\"}", "needs a string `app`"),
+        ("{\"req\":\"ladder\",\"app\":\"nope\"}", "unknown app"),
+        ("{\"req\":\"reproduce\",\"target\":\"nope\"}", "unknown reproduce target"),
+        ("{\"req\":\"domain_pe\",\"domain\":\"micro\"}", "drives no domain-PE"),
+        ("{\"req\":\"stress\",\"profiles\":\"nope\"}", "unknown stress profile"),
+    ] {
+        let view = req(&addr, line);
+        assert!(!view.ok, "{line} must fail");
+        let err = view.error.unwrap_or_default();
+        assert!(err.contains(needle), "{line}: error `{err}` missing `{needle}`");
+    }
+    // The id is echoed back on both success and failure.
+    let view = req(&addr, "{\"req\":\"version\",\"id\":\"v-1\"}");
+    assert!(view.ok);
+    assert_eq!(view.id.as_deref(), Some("v-1"));
+    assert_eq!(view.cached.as_deref(), Some("live"));
+    let view = req(&addr, "{\"req\":\"ladder\",\"id\":\"l-1\"}");
+    assert!(!view.ok);
+    assert_eq!(view.id.as_deref(), Some("l-1"));
+
+    let stats = shutdown(&addr, handle);
+    assert!(stats.errors >= 7);
+}
+
+#[test]
+fn version_and_stats_carry_schema_versions() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    let version = req(&addr, "{\"req\":\"version\"}");
+    assert!(version.ok);
+    let body = version.body.unwrap();
+    assert_eq!(
+        body.get("fingerprint_schema").and_then(Json::as_usize),
+        Some(FINGERPRINT_SCHEMA_VERSION as usize)
+    );
+    assert_eq!(
+        body.get("cache_schema").and_then(Json::as_usize),
+        Some(CACHE_SCHEMA_VERSION as usize)
+    );
+    let stats = req(&addr, "{\"req\":\"stats\"}");
+    assert!(stats.ok);
+    let body = stats.body.unwrap();
+    for field in ["uptime_ms", "requests", "hits_mem", "hits_disk", "misses", "sessions"] {
+        assert!(body.get(field).is_some(), "stats missing `{field}`");
+    }
+    shutdown(&addr, handle);
+}
+
+// ---- schema pins ---------------------------------------------------------
+
+#[test]
+fn artifact_schema_versions_are_pinned() {
+    // On-disk artifacts embed these; bumping either orphans every cached
+    // artifact, so a bump must be deliberate (see the constants' docs).
+    assert_eq!(FINGERPRINT_SCHEMA_VERSION, 1);
+    assert_eq!(CACHE_SCHEMA_VERSION, 1);
+}
+
+// ---- parse(render(x)) == x over every report shape ----------------------
+
+fn assert_roundtrip(label: &str, j: &Json) {
+    let rendered = j.render();
+    let back = parse(&rendered).unwrap_or_else(|e| panic!("{label}: {e}\n{rendered}"));
+    assert_eq!(&back, j, "{label}: parse(render(x)) != x");
+    // And the fixpoint: re-rendering the parsed value is byte-identical.
+    assert_eq!(back.render(), rendered, "{label}: render not a fixpoint");
+}
+
+#[test]
+fn every_session_report_shape_roundtrips_through_the_parser() {
+    let session = DseSession::builder()
+        .app(AppSuite::by_name("gaussian").unwrap())
+        .config(fast_cfg())
+        .threads(2)
+        .build();
+    let stages = session.app("gaussian").unwrap();
+    let ladder = stages.ladder();
+    assert!(!ladder.is_empty());
+
+    assert_roundtrip("ranked_json", &sjson::ranked_json("gaussian", &stages.ranked()));
+    assert_roundtrip("ladder_json", &sjson::ladder_json("gaussian", &ladder));
+    assert_roundtrip("eval_json", &sjson::eval_json(&ladder[0]));
+    assert_roundtrip(
+        "sweep_json",
+        &sjson::sweep_json(&stages.sweep(&[0.6, 1.0, 2.2])),
+    );
+    // domain_json's shape only needs (app, base, dom, spec) rows.
+    let ve = ladder[0].clone();
+    assert_roundtrip(
+        "domain_json",
+        &sjson::domain_json(
+            "pe_test",
+            &[("gaussian".to_string(), ve.clone(), ve.clone(), ve)],
+        ),
+    );
+    assert_roundtrip(
+        "table1_json",
+        &sjson::table1_json(&[Table1Row {
+            design: "Generic CGRA (baseline PE)".into(),
+            energy_per_op_fj: 123.456,
+            rel_to_simba: 2.5,
+            notes: "incl. MEM tiles".into(),
+        }]),
+    );
+    assert_roundtrip(
+        "io_sweep_json",
+        &sjson::io_sweep_json(&[(3, 1.5, 0.75), (16, 22.25, 3.125)]),
+    );
+}
+
+#[test]
+fn session_report_document_roundtrips_including_awkward_text() {
+    let session = DseSession::builder().config(fast_cfg()).build();
+    let mut rep = cgra_dse::session::SessionReport::new(&session);
+    // Section text exercises the writer's full escape surface.
+    rep.push(
+        "fig_x",
+        "line one\n\ttabbed \"quoted\" µm² 😀 \\backslash\u{1f}".to_string(),
+        Json::obj(vec![("rows", Json::Arr(vec![Json::num(1.5), Json::Null]))]),
+    );
+    let value = rep.to_json_value();
+    assert_roundtrip("session_report", &value);
+    assert_eq!(rep.to_json(), value.render());
+}
+
+#[test]
+fn stress_json_roundtrips_through_the_parser() {
+    let cfg = StressConfig {
+        seeds: 1,
+        profiles: vec![synth::profile("deep_chain").unwrap()],
+        threads: 2,
+        ..Default::default()
+    };
+    let j = stress::run(&cfg).to_json();
+    assert_roundtrip("STRESS.json", &j);
+}
+
+#[test]
+fn bench_json_files_parse_into_the_expected_shape() {
+    // bench_util::write_json renders BENCH_*.json by hand (it predates the
+    // Json value type); pin that its exact output stays parseable.
+    let text = format!(
+        "{{\n  \"bench\": \"service\",\n  \"cases\": [\n    \
+         {{\"name\": \"warm_mixed_x64\", \"min_ms\": {}, \"mean_ms\": {}, \"median_ms\": {}, \"max_ms\": {}}},\n    \
+         {{\"name\": \"cold_reproduce\", \"min_ms\": {}, \"mean_ms\": {}, \"median_ms\": {}, \"max_ms\": {}}}\n  ]\n}}\n",
+        0.125, 0.25, 0.1875, 1.5, 100.0, 150.5, 125.25, 200.75
+    );
+    let v = parse(&text).expect("BENCH json parses");
+    assert_eq!(v.get("bench").and_then(Json::as_str), Some("service"));
+    let cases = v.get("cases").and_then(Json::as_arr).unwrap();
+    assert_eq!(cases.len(), 2);
+    assert_eq!(
+        cases[0].get("name").and_then(Json::as_str),
+        Some("warm_mixed_x64")
+    );
+    assert_eq!(cases[0].get("median_ms").and_then(Json::as_f64), Some(0.1875));
+    assert_roundtrip("bench_reparse", &v);
+}
+
+#[test]
+fn rfc8259_edge_strings_roundtrip() {
+    // The PR 4 writer edge cases, now through the full write→read loop.
+    for s in [
+        "a\"b\\c\nd",
+        "\u{1}",
+        "\u{0}",
+        "\u{8}",
+        "\u{1f}",
+        "\u{7f}",
+        "µm²",
+        "😀",
+        "𝔘𝔫𝔦",
+        "漢字µm²",
+        "a\"😀\\n\nb",
+        "a/b",
+        "",
+    ] {
+        assert_roundtrip(&format!("str {s:?}"), &Json::str(s));
+    }
+    // Numbers: whole floats render as integers and must parse back equal;
+    // -0.0 compares equal to 0.0 under IEEE and PartialEq.
+    for v in [2.0, -0.0, 0.1, 1e-12, 9.007199254740991e15, -123.456] {
+        assert_roundtrip(&format!("num {v}"), &Json::num(v));
+    }
+    // Non-finite degrade to null on write, which parses as Null.
+    assert_eq!(parse(&Json::num(f64::NAN).render()).unwrap(), Json::Null);
+}
+
+// ---- typed envelope round-trip ------------------------------------------
+
+#[test]
+fn request_envelopes_roundtrip_through_encode_decode() {
+    let reqs = vec![
+        Request::Mine { app: "camera".into() },
+        Request::Ladder { app: "gaussian".into() },
+        Request::DomainPe { domain: "imaging".into() },
+        Request::Reproduce { target: "all".into() },
+        // Profiles in canonical (sorted) form — decode canonicalizes, so
+        // only canonical envelopes round-trip exactly.
+        Request::Stress {
+            profiles: "const_heavy,deep_chain".into(),
+            seeds: 3,
+            seed0: 99,
+        },
+        Request::Stats,
+        Request::Version,
+        Request::Shutdown,
+    ];
+    for r in reqs {
+        let env = Envelope {
+            id: Some("id-1".into()),
+            fast: true,
+            req: r.clone(),
+        };
+        let decoded = Envelope::from_json(&env.to_json())
+            .unwrap_or_else(|e| panic!("{}: {e}", r.kind()));
+        assert_eq!(decoded, env, "{} envelope must round-trip", r.kind());
+        // And through the rendered wire form.
+        let wire = env.to_json().render();
+        assert_eq!(Envelope::parse_line(&wire).unwrap(), env);
+    }
+}
