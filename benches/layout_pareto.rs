@@ -1,0 +1,65 @@
+//! Layout-explorer bench: regenerate the interconnect-aware Pareto front
+//! for the imaging domain — merge the domain PE, place-and-route every
+//! member app on both fabric sizes, cost mesh vs 1-hop and uniform vs
+//! heterogeneous mixes, and reduce to the non-dominated set.
+//!
+//! Expected shape: the front spans both topologies and both fabric sizes
+//! (the mesh-vs-1-hop energy/area trade plus the size-vs-congestion
+//! trade), and every reported point is pairwise non-dominated.
+
+mod bench_util;
+
+use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::layout::{self, default_spec, dominates, Topology};
+use cgra_dse::mining::MinerConfig;
+
+fn cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 500,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let apps = AppSuite::imaging();
+    let cfg = cfg();
+    let spec = default_spec();
+    let front = layout::explore(&apps, "imaging", "pe_ip", 1, &cfg, &spec);
+    print!("{}", layout::render(&front));
+
+    assert!(!front.points.is_empty(), "imaging front must be non-empty");
+    assert!(front.points.iter().any(|p| p.topology == Topology::Mesh));
+    assert!(front.points.iter().any(|p| p.topology == Topology::OneHop));
+    assert!(front.points.iter().any(|p| p.width == 20));
+    assert!(front.points.iter().any(|p| p.width == 24));
+    for (i, p) in front.points.iter().enumerate() {
+        for (j, q) in front.points.iter().enumerate() {
+            if i != j {
+                assert!(!dominates(q, p), "front point {j} dominates point {i}");
+            }
+        }
+    }
+
+    // Timing: the full layout stage from an already-merged PE is what the
+    // session memoizes, so time the end-to-end path (merge + PnR + cost)
+    // and the re-cost-only path separately.
+    let t_full = bench_util::time_ms(3, || {
+        layout::explore(&apps, "imaging", "pe_ip", 1, &cfg, &spec)
+    });
+    bench_util::report("layout_pareto_full", t_full);
+
+    let dom_pe = cgra_dse::dse::domain_pe(&apps, "pe_ip", 1, &cfg);
+    let t_layout = bench_util::time_ms(3, || {
+        layout::explore_with_pe(&apps, "imaging", &dom_pe, &cfg, &spec)
+    });
+    bench_util::report("layout_pareto_stage", t_layout);
+
+    bench_util::write_json("layout");
+}

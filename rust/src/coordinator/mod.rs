@@ -31,8 +31,9 @@ pub fn fig8_freqs() -> Vec<f64> {
 /// targets (`fig10`, `fig11`, `fig_dsp`) come from the registry's
 /// `DomainFig` specs; a unit test pins that every registry target is
 /// listed here.
-pub const REPRODUCE_TARGETS: [&str; 7] =
-    ["fig8", "fig9", "fig10", "fig11", "fig_dsp", "table1", "io_sweep"];
+pub const REPRODUCE_TARGETS: [&str; 8] = [
+    "fig8", "fig9", "fig10", "fig11", "fig_dsp", "table1", "io_sweep", "fig_layout",
+];
 
 /// Resolve a user-supplied `reproduce` target: exact target names plus
 /// registry domain keys as aliases (`dsp` → `fig_dsp`, `imaging` →
@@ -173,6 +174,17 @@ pub fn fig_dsp(
     session: &DseSession,
 ) -> (String, Vec<(String, VariantEval, VariantEval, VariantEval)>) {
     domain_fig_for(session, "dsp")
+}
+
+/// The layout experiment: the imaging domain PE vs the baseline placed,
+/// routed, and costed on mesh / 1-hop fabrics — the spatial Pareto-front
+/// artifact of [`crate::layout`]. Requires a session that registered the
+/// imaging apps (`paper_suite` or `registry_suite`).
+pub fn fig_layout(
+    session: &DseSession,
+) -> (String, std::sync::Arc<crate::layout::LayoutFront>) {
+    let front = session.layout("imaging");
+    (crate::layout::render(&front), front)
 }
 
 /// CGRA-level energy per op for a variant evaluation: PE core +
@@ -322,6 +334,10 @@ pub fn reproduce(session: &DseSession, targets: &[&str]) -> SessionReport {
             "io_sweep" => {
                 let (text, rows) = io_sweep(session);
                 rep.push("io_sweep", text, sjson::io_sweep_json(&rows));
+            }
+            "fig_layout" => {
+                let (text, front) = fig_layout(session);
+                rep.push("fig_layout", text, sjson::layout_json(&front));
             }
             other => {
                 let dom = DomainRegistry::domains()

@@ -18,7 +18,10 @@
 //! The serving layer ([`service`], CLI `serve`/`request` subcommands)
 //! exposes the whole pipeline over a JSON-lines TCP protocol behind a
 //! two-tier fingerprint-keyed artifact cache with single-flight
-//! deduplication.
+//! deduplication. Past the domain stage, the spatial layout explorer
+//! ([`layout`], CLI `layout` subcommand) places and routes every domain
+//! app on parameterized mesh / 1-hop fabrics and reports the non-dominated
+//! `(energy, area, congestion)` Pareto front.
 //!
 //! See `README.md` for the quickstart and figure-reproduction table,
 //! `DESIGN.md` for the module inventory, the per-experiment index, and the
@@ -38,6 +41,7 @@ pub mod pe;
 
 pub mod arch;
 pub mod bitstream;
+pub mod layout;
 pub mod mapper;
 pub mod pnr;
 pub mod sim;

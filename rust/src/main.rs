@@ -3,7 +3,7 @@
 //! has no clap.)
 //!
 //! Every subcommand builds one [`DseSession`] and drives it; stages shared
-//! between subcommand steps (e.g. the six `reproduce all` experiments) are
+//! between subcommand steps (e.g. the `reproduce all` experiments) are
 //! mined/merged once and served from the session cache.
 
 use cgra_dse::coordinator;
@@ -42,6 +42,7 @@ USAGE:
   cgra-dse sim --app <name> [--variant peK] [--items N]
   cgra-dse reproduce <{targets}|all> [--fast] [--save] [--json]
   cgra-dse reproduce <{domains}>   (domain aliases: dsp -> fig_dsp, ...)
+  cgra-dse layout --domain <{domains}> [--fast] [--json]
   cgra-dse stress [--seeds N] [--seed0 N] [--profiles all|p1,p2,...]
                   [--stimuli N] [--out FILE] [--json]
                   [--inject <invariant>] [--shrink-budget N]
@@ -88,6 +89,7 @@ fn main() {
         "map" => cmd_map(&flags),
         "sim" => cmd_sim(&flags),
         "reproduce" => cmd_reproduce(&args[1..], &flags),
+        "layout" => cmd_layout(&flags),
         "stress" => cmd_stress(&flags),
         "serve" => cmd_serve(&flags),
         "request" => cmd_request(&args[1..], &flags),
@@ -374,6 +376,29 @@ fn cmd_reproduce(args: &[String], flags: &Flags) -> i32 {
                 }
             }
         }
+    }
+    0
+}
+
+/// `layout`: explore fabric topologies / sizes / PE mixes for one
+/// registry domain's PE and print the (energy, area, congestion) Pareto
+/// front (see `cgra_dse::layout`). Accepts the paper's `image` alias for
+/// the imaging domain. Exit 2 on a missing or unknown domain.
+fn cmd_layout(flags: &Flags) -> i32 {
+    let Some(name) = flags.get("domain") else {
+        eprintln!("usage: cgra-dse layout --domain <imaging|ml|dsp> [--fast] [--json]");
+        return 2;
+    };
+    let Some(domain) = cgra_dse::layout::resolve_domain(name) else {
+        eprintln!("unknown layout domain `{name}` (valid: imaging ml dsp; alias: image)");
+        return 2;
+    };
+    let session = session_for(flags);
+    let front = session.layout(domain);
+    if flags.has("json") {
+        println!("{}", sjson::layout_json(&front).render());
+    } else {
+        print!("{}", cgra_dse::layout::render(&front));
     }
     0
 }

@@ -7,6 +7,5 @@ pub mod tables;
 
 pub use pe_model::{evaluate_pe, evaluate_pe_opts, interconnect_per_pe, synthesis_scale, PeEval, PeModelOpts};
 pub use tables::{
-    cb_cost, class_cost, config_bit_cost, mux_input_cost, op_delay, op_energy, sb_cost,
-    word_reg_cost, Cost,
+    cb_cost, class_cost, config_bit_cost, mux_input_cost, sb_cost, word_reg_cost, Cost,
 };

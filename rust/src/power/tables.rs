@@ -9,7 +9,7 @@
 //! adder's area and ~13× its energy, a mux input is ~20× cheaper than an
 //! adder, configuration bits are almost free in energy but not in area.
 
-use crate::ir::{HwClass, Op};
+use crate::ir::HwClass;
 
 /// Per-activation cost of one primitive hardware block.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,17 +58,6 @@ pub fn config_bit_cost() -> Cost {
 /// Pipeline/output register for one 16-bit word.
 pub fn word_reg_cost() -> Cost {
     Cost { area: 58.0, energy: 4.4, delay: 60.0 }
-}
-
-/// Per-op activation energy (fJ): the energy of the class unit doing this
-/// op; cheaper ops on a shared unit still burn close to the unit's cost.
-pub fn op_energy(op: Op) -> f64 {
-    class_cost(op.hw_class()).energy
-}
-
-/// Per-op intrinsic delay (ps) through the class unit.
-pub fn op_delay(op: Op) -> f64 {
-    class_cost(op.hw_class()).delay
 }
 
 /// Interconnect: one connection-box (CB) port on a routing fabric with

@@ -22,6 +22,7 @@
 //! {"req":"mine","app":"camera"}
 //! {"req":"ladder","app":"gaussian","id":"42"}
 //! {"req":"domain_pe","domain":"imaging"}
+//! {"req":"layout","domain":"imaging"}
 //! {"req":"reproduce","target":"fig9","fast":true}
 //! {"req":"stress","profiles":"deep_chain","seeds":2,"seed0":1}
 //! {"req":"stats"}
@@ -316,6 +317,9 @@ pub enum Request {
     Ladder { app: String },
     /// The cross-app domain-PE comparison for one registry domain.
     DomainPe { domain: String },
+    /// The spatial layout exploration's Pareto front for one registry
+    /// domain (the [`crate::layout`] artifact).
+    Layout { domain: String },
     /// One experiment target (or `all`) as a full `SessionReport`.
     Reproduce { target: String },
     /// A metamorphic stress run over the synthetic-workload engine.
@@ -350,6 +354,7 @@ impl Request {
             Request::Mine { .. } => "mine",
             Request::Ladder { .. } => "ladder",
             Request::DomainPe { .. } => "domain_pe",
+            Request::Layout { .. } => "layout",
             Request::Reproduce { .. } => "reproduce",
             Request::Stress { .. } => "stress",
             Request::Stats => "stats",
@@ -363,7 +368,7 @@ impl Request {
     pub fn cache_detail(&self) -> Option<String> {
         match self {
             Request::Mine { app } | Request::Ladder { app } => Some(app.clone()),
-            Request::DomainPe { domain } => Some(domain.clone()),
+            Request::DomainPe { domain } | Request::Layout { domain } => Some(domain.clone()),
             Request::Reproduce { target } => Some(target.clone()),
             Request::Stress {
                 profiles,
@@ -456,6 +461,18 @@ impl Envelope {
             "domain_pe" => Request::DomainPe {
                 domain: need_str(v, "domain", kind)?,
             },
+            // Canonicalize the domain name (`image` → `imaging`) at decode
+            // time, same principle as `reproduce` target aliases below —
+            // and reject fig-less domains before they reach a worker.
+            "layout" => {
+                let d = need_str(v, "domain", kind)?;
+                let domain = crate::layout::resolve_domain(&d)
+                    .ok_or_else(|| {
+                        format!("unknown layout domain `{d}` (valid: imaging|ml|dsp)")
+                    })?
+                    .to_string();
+                Request::Layout { domain }
+            }
             // Canonicalize domain aliases (`imaging` → `fig10`, …) at
             // decode time so every spelling of the same experiment shares
             // one cache entry and one single-flight — and bad targets are
@@ -515,7 +532,7 @@ impl Envelope {
             other => {
                 return Err(format!(
                     "unknown request kind `{other}` (valid: mine ladder domain_pe \
-                     reproduce stress stats version shutdown)"
+                     layout reproduce stress stats version shutdown)"
                 ))
             }
         };
@@ -548,7 +565,9 @@ impl Envelope {
             Request::Mine { app } | Request::Ladder { app } => {
                 pairs.push(("app", Json::str(app)));
             }
-            Request::DomainPe { domain } => pairs.push(("domain", Json::str(domain))),
+            Request::DomainPe { domain } | Request::Layout { domain } => {
+                pairs.push(("domain", Json::str(domain)));
+            }
             Request::Reproduce { target } => pairs.push(("target", Json::str(target))),
             Request::Stress {
                 profiles,
@@ -828,6 +847,33 @@ mod tests {
     }
 
     #[test]
+    fn layout_domains_canonicalize_and_figless_domains_are_rejected() {
+        // The paper's alias and the canonical key share one cache identity.
+        for (alias, canonical) in [("image", "imaging"), ("imaging", "imaging"), ("dsp", "dsp")] {
+            let env =
+                Envelope::parse_line(&format!(r#"{{"req":"layout","domain":"{alias}"}}"#))
+                    .unwrap();
+            assert_eq!(
+                env.req,
+                Request::Layout {
+                    domain: canonical.to_string()
+                },
+                "{alias}"
+            );
+        }
+        // Fig-less (micro, synth) and unknown domains are rejected at
+        // decode time, before a worker is occupied.
+        for bad in [
+            r#"{"req":"layout","domain":"micro"}"#,
+            r#"{"req":"layout","domain":"synth"}"#,
+            r#"{"req":"layout","domain":"nope"}"#,
+            r#"{"req":"layout"}"#,
+        ] {
+            assert!(Envelope::parse_line(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
     fn response_lines_roundtrip_with_raw_body() {
         let body = "{\"app\":\"camera\",\"n\":3}";
         let line = ok_line(Some("id,\"body\":x"), "ladder", "mem", 1234, body);
@@ -852,6 +898,7 @@ mod tests {
             Request::Mine { app: "a".into() },
             Request::Ladder { app: "a".into() },
             Request::DomainPe { domain: "d".into() },
+            Request::Layout { domain: "imaging".into() },
             Request::Reproduce { target: "fig9".into() },
             Request::Stress {
                 profiles: "all".into(),

@@ -583,6 +583,9 @@ fn compute(req: &Request, session: &DseSession) -> Result<String, String> {
             let (_text, rows) = coordinator::domain_fig_for(session, dom.key);
             Ok(sjson::domain_json(fig.pe_name, &rows).render())
         }
+        // The domain was canonicalized and validated at decode time
+        // (`Envelope::from_json` via `layout::resolve_domain`).
+        Request::Layout { domain } => Ok(sjson::layout_json(&session.layout(domain)).render()),
         // Target and profiles were canonicalized and validated when the
         // envelope decoded (`Envelope::from_json`) — compute trusts them.
         Request::Reproduce { target } => {

@@ -7,6 +7,8 @@
 //!   mine ──> ranked ──> variants ──> evaluate (per variant, parallel) ──> sweep
 //!              │
 //!              └──────> domain_pe (cross-app merge, reuses every app's ranked stage)
+//!                          │
+//!                          └──────> layout (fabric PnR + Pareto front, crate::layout)
 //! ```
 //!
 //! A session owns a set of applications, one [`DseConfig`], and a worker
@@ -79,18 +81,22 @@ pub enum Stage {
     Sweep,
     /// Cross-application domain-PE merge (PE IP / PE ML).
     Domain,
+    /// Spatial layout exploration past the domain stage (the Pareto-front
+    /// artifact of [`crate::layout`]).
+    Layout,
 }
 
 impl Stage {
     /// Every stage, in pipeline order (the service `stats` request reports
     /// compute counters in this order).
-    pub const ALL: [Stage; 6] = [
+    pub const ALL: [Stage; 7] = [
         Stage::Mine,
         Stage::Rank,
         Stage::Variants,
         Stage::Evaluate,
         Stage::Sweep,
         Stage::Domain,
+        Stage::Layout,
     ];
 
     /// Stable lowercase key for reporting.
@@ -102,6 +108,7 @@ impl Stage {
             Stage::Evaluate => "evaluate",
             Stage::Sweep => "sweep",
             Stage::Domain => "domain",
+            Stage::Layout => "layout",
         }
     }
 }
@@ -142,6 +149,8 @@ enum Key {
     Sweep(String, Vec<u64>),
     /// Domain PE keyed by (name, per_app, member app names).
     Domain(String, usize, Vec<String>),
+    /// Layout front keyed by domain registry key.
+    Layout(String),
 }
 
 #[derive(Clone)]
@@ -152,6 +161,7 @@ enum Value {
     Ladder(Arc<Vec<VariantEval>>),
     Sweep(Arc<Vec<(String, Vec<SweepPoint>)>>),
     Domain(Arc<PeSpec>),
+    Layout(Arc<crate::layout::LayoutFront>),
 }
 
 struct State {
@@ -168,6 +178,7 @@ struct Counters {
     evaluate: AtomicUsize,
     sweep: AtomicUsize,
     domain: AtomicUsize,
+    layout: AtomicUsize,
 }
 
 impl Counters {
@@ -179,6 +190,7 @@ impl Counters {
             Stage::Evaluate => &self.evaluate,
             Stage::Sweep => &self.sweep,
             Stage::Domain => &self.domain,
+            Stage::Layout => &self.layout,
         }
     }
 }
@@ -384,6 +396,55 @@ impl DseSession {
         match self.insert(key, Value::Domain(pe.clone()), fp) {
             Some(Value::Domain(v)) => v,
             _ => pe,
+        }
+    }
+
+    /// Spatial layout exploration for a registry domain ([`Stage::Layout`]):
+    /// the non-dominated `(energy, area, congestion)` front over
+    /// `(PE variant, topology, fabric size, mix)`, built on the cached
+    /// domain-PE stage. `domain` is a registry key whose descriptor drives a
+    /// domain-PE experiment (`"imaging"`, `"ml"`, `"dsp"` — canonicalize
+    /// user input with [`crate::layout::resolve_domain`] first).
+    ///
+    /// Panics on an unknown or fig-less domain, or when a member app is not
+    /// registered in the session — static registry data, so a miss is a
+    /// programming error.
+    pub fn layout(&self, domain: &str) -> Arc<crate::layout::LayoutFront> {
+        let key = Key::Layout(domain.to_string());
+        if let Some(Value::Layout(v)) = self.lookup(&key) {
+            return v;
+        }
+        let dom = DomainRegistry::domain(domain)
+            .unwrap_or_else(|| panic!("unknown layout domain `{domain}`"));
+        let fig = dom
+            .fig
+            .as_ref()
+            .unwrap_or_else(|| panic!("domain `{domain}` drives no domain-PE experiment"));
+        let members = dom.app_names();
+        let (cfg, fp) = self.snapshot_cfg();
+        let dom_pe = self.domain_pe(fig.pe_name, fig.per_app, &members);
+        if !self.fp_current(fp) {
+            return self.layout(domain);
+        }
+        self.counters.layout.fetch_add(1, Ordering::Relaxed);
+        let apps: Vec<App> = members
+            .iter()
+            .map(|m| {
+                self.find_app(m)
+                    .unwrap_or_else(|| panic!("app `{m}` not registered in this session"))
+                    .clone()
+            })
+            .collect();
+        let v = Arc::new(crate::layout::explore_with_pe(
+            &apps,
+            dom.key,
+            &dom_pe,
+            &cfg,
+            &crate::layout::default_spec(),
+        ));
+        match self.insert(key, Value::Layout(v.clone()), fp) {
+            Some(Value::Layout(canon)) => canon,
+            _ => v,
         }
     }
 
@@ -730,11 +791,11 @@ mod tests {
 
     #[test]
     fn stage_all_covers_every_counter() {
-        assert_eq!(Stage::ALL.len(), 6);
+        assert_eq!(Stage::ALL.len(), 7);
         let mut keys: Vec<&str> = Stage::ALL.iter().map(|s| s.key()).collect();
         keys.sort_unstable();
         keys.dedup();
-        assert_eq!(keys.len(), 6, "stage keys must be distinct");
+        assert_eq!(keys.len(), 7, "stage keys must be distinct");
     }
 
     #[test]

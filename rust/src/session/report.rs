@@ -258,6 +258,43 @@ pub fn io_sweep_json(rows: &[(usize, f64, f64)]) -> Json {
     )
 }
 
+/// JSON view of the layout exploration's Pareto front (the service
+/// `layout` request's artifact and the `fig_layout` section datum).
+pub fn layout_json(front: &crate::layout::LayoutFront) -> Json {
+    Json::obj(vec![
+        ("domain", Json::str(&front.domain)),
+        ("pe", Json::str(&front.pe)),
+        ("explored", Json::int(front.explored)),
+        ("infeasible", Json::int(front.infeasible)),
+        (
+            "front",
+            Json::Arr(
+                front
+                    .points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("pe", Json::str(&p.pe)),
+                            ("topology", Json::str(p.topology.key())),
+                            ("width", Json::int(p.width)),
+                            ("height", Json::int(p.height)),
+                            ("mix", Json::str(p.mix.key())),
+                            ("energy_per_op_fj", Json::num(p.energy_per_op_fj)),
+                            ("area_um2", Json::num(p.area_um2)),
+                            ("congestion", Json::num(p.congestion)),
+                            ("total_hops", Json::int(p.total_hops)),
+                            ("peak_utilization", Json::num(p.peak_utilization)),
+                            ("latency_cycles", Json::int(p.latency_cycles)),
+                            ("used_pes", Json::int(p.used_pes)),
+                            ("pe_tiles", Json::int(p.pe_tiles)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

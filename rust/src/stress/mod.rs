@@ -3,7 +3,7 @@
 //! For every `(profile, seed)` scenario the harness generates a synthetic
 //! application with [`crate::frontend::synth`], runs it through the whole
 //! toolchain (mining → MIS → merging → mapping → evaluation → reporting,
-//! via `DseSession` where the stage is session-shaped), and checks seven
+//! via `DseSession` where the stage is session-shaped), and checks eight
 //! invariants ([`INVARIANTS`]):
 //!
 //! 1. `canon_relabel` — canonical codes are invariant under node
@@ -26,6 +26,10 @@
 //!    after the wall.
 //! 7. `report_identity` — warm (cached) and cold (fresh-session) runs
 //!    render byte-identical machine-readable reports.
+//! 8. `pnr_legal` — on a sufficient fabric, `place_and_route` succeeds,
+//!    every routed net is a contiguous hop chain connecting the true
+//!    producer/consumer tiles of the mapping, and cycle-level `sim`
+//!    execution over the routed fabric equals `Graph::eval`.
 //!
 //! On failure the harness greedily **shrinks** the graph by node removal
 //! to a minimal reproduction and reports the `(profile, seed)` replay
@@ -58,10 +62,10 @@ use crate::runtime::{default_width, parallel_map};
 use crate::session::{report as sjson, DseSession};
 use crate::util::SplitMix64;
 
-/// The seven checked invariants, in run order. These names are the
+/// The eight checked invariants, in run order. These names are the
 /// `--inject` keys, the `STRESS.json` check-count keys, and the
 /// `Violation::invariant` values.
-pub const INVARIANTS: [&str; 7] = [
+pub const INVARIANTS: [&str; 8] = [
     "canon_relabel",
     "support_antimonotone",
     "mis_bound",
@@ -69,6 +73,7 @@ pub const INVARIANTS: [&str; 7] = [
     "eval_equiv",
     "ladder_monotone",
     "report_identity",
+    "pnr_legal",
 ];
 
 /// Fault injection: each variant corrupts the observation of exactly one
@@ -95,6 +100,9 @@ pub enum Mutation {
     LadderNegate,
     /// Append a byte to the warm report before the identity comparison.
     ReportStamp,
+    /// Shift one expected net endpoint by a column before the routed-net
+    /// endpoint comparison.
+    PnrMisroute,
 }
 
 impl Mutation {
@@ -108,6 +116,7 @@ impl Mutation {
             "eval_equiv" => Mutation::EvalBitflip,
             "ladder_monotone" => Mutation::LadderNegate,
             "report_identity" => Mutation::ReportStamp,
+            "pnr_legal" => Mutation::PnrMisroute,
             _ => return None,
         })
     }
@@ -124,6 +133,7 @@ impl Mutation {
             Mutation::EvalBitflip => "eval_equiv",
             Mutation::LadderNegate => "ladder_monotone",
             Mutation::ReportStamp => "report_identity",
+            Mutation::PnrMisroute => "pnr_legal",
         })
     }
 }
@@ -390,7 +400,7 @@ struct Ctx {
 }
 
 struct ScenarioResult {
-    checks: [usize; 7],
+    checks: [usize; 8],
     violations: Vec<Violation>,
 }
 
@@ -453,7 +463,7 @@ fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -
         mutation: cfg.mutation,
     };
     let mut out = ScenarioResult {
-        checks: [0; 7],
+        checks: [0; 8],
         violations: Vec::new(),
     };
     let built = catch_unwind(AssertUnwindSafe(|| {
@@ -521,6 +531,7 @@ fn check_one(inv: &str, g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, 
         "eval_equiv" => check_eval(g, ctx),
         "ladder_monotone" => check_ladder(g, ctx, cache),
         "report_identity" => check_report(g, ctx, cache),
+        "pnr_legal" => check_pnr(g, ctx),
         other => panic!("unknown invariant `{other}`"),
     }));
     match r {
@@ -906,6 +917,150 @@ fn check_report(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<S
                 first_diff(&warm1, &cold)
             )),
         );
+    }
+    (checks, None)
+}
+
+fn check_pnr(g: &Graph, ctx: &Ctx) -> (usize, Option<String>) {
+    use crate::arch::{Fabric, FabricConfig};
+    use crate::mapper::DataSrc;
+    use crate::pnr::place_and_route;
+
+    if !has_real_op(g) {
+        return (0, None);
+    }
+    let mut g2 = g.clone();
+    let pe = baseline_pe();
+    let mapping = match map_app(&mut g2, &pe) {
+        Ok(m) => m,
+        Err(e) => {
+            return (
+                1,
+                Some(format!("baseline PE cannot cover a synthetic app: {e}")),
+            )
+        }
+    };
+    // A *sufficient* fabric: grow an even square until PE tiles outnumber
+    // mapped instances 2:1 — PathFinder needs placement slack to resolve
+    // congestion, and the invariant is about routability on an adequate
+    // fabric, not about squeezing into a minimal one.
+    let mut w = 4usize;
+    let fabric = loop {
+        let f = Fabric::new(FabricConfig {
+            width: w,
+            height: w,
+            tracks: 6,
+            mem_column_period: 4,
+        });
+        if f.num_pe_tiles() >= 2 * mapping.num_pes() {
+            break f;
+        }
+        w += 2;
+    };
+    let mut checks = 1usize; // the PnR attempt itself
+    let (pl, rt) = match place_and_route(&mapping, &fabric, ctx.seed) {
+        Ok(x) => x,
+        Err(e) => {
+            return (
+                checks,
+                Some(format!(
+                    "place_and_route failed on a sufficient {w}x{w} fabric \
+                     ({} PE tiles for {} instances): {e}",
+                    fabric.num_pe_tiles(),
+                    mapping.num_pes()
+                )),
+            )
+        }
+    };
+    // Reconstruct the expected net endpoints exactly as the router derives
+    // them from the mapping (instance-by-instance, input-by-input,
+    // constants served from config registers).
+    let mut expected: Vec<((usize, usize), (usize, usize))> = Vec::new();
+    for (idx, inst) in mapping.instances.iter().enumerate() {
+        for src in &inst.inputs {
+            let from = match src {
+                DataSrc::AppInput(nid) => pl.input_mems[&nid.0],
+                DataSrc::Instance { inst: j, .. } => pl.slots[*j],
+                DataSrc::Constant(_) => continue,
+            };
+            expected.push((from, pl.slots[idx]));
+        }
+    }
+    if ctx.mutation == Mutation::PnrMisroute {
+        if let Some(first) = expected.first_mut() {
+            first.1 .1 += 1;
+        }
+    }
+    checks += 1;
+    if rt.nets.len() != expected.len() {
+        return (
+            checks,
+            Some(format!(
+                "routing carries {} nets but the mapping implies {}",
+                rt.nets.len(),
+                expected.len()
+            )),
+        );
+    }
+    for (k, (net, &(src, dst))) in rt.nets.iter().zip(expected.iter()).enumerate() {
+        checks += 1;
+        if net.src != src || net.dst != dst {
+            return (
+                checks,
+                Some(format!(
+                    "net {k} connects {:?} -> {:?} but the mapping requires \
+                     {src:?} -> {dst:?}",
+                    net.src, net.dst
+                )),
+            );
+        }
+        if src == dst {
+            if !net.hops.is_empty() {
+                return (
+                    checks,
+                    Some(format!("net {k} is tile-local yet routes {} hops", net.hops.len())),
+                );
+            }
+            continue;
+        }
+        if net.hops.first().map(|h| h.0) != Some(src)
+            || net.hops.last().map(|h| h.1) != Some(dst)
+        {
+            return (
+                checks,
+                Some(format!(
+                    "net {k} hop chain does not span its endpoints \
+                     ({src:?} -> {dst:?}): {:?}",
+                    net.hops
+                )),
+            );
+        }
+        if net.hops.windows(2).any(|pair| pair[0].1 != pair[1].0) {
+            return (
+                checks,
+                Some(format!("net {k} hop chain is discontiguous: {:?}", net.hops)),
+            );
+        }
+    }
+    // Differential execution: the routed fabric must compute exactly what
+    // the dataflow graph computes.
+    let n_in = g2.input_ids().len();
+    let mut rng = SplitMix64::new(ctx.seed ^ 0x9A7_0003);
+    for k in 0..ctx.stimuli {
+        let xs: Vec<i64> = (0..n_in).map(|_| rng.word()).collect();
+        let want = g2.eval(&xs);
+        let sim = crate::sim::simulate(&mut g2, &pe, &mapping, &pl, &rt, &[xs.clone()]);
+        checks += 1;
+        if sim.outputs[0] != want {
+            return (
+                checks,
+                Some(format!(
+                    "routed-fabric simulation != Graph::eval on stimulus {k}: \
+                     got {:?}, want {want:?}, inputs {xs:?}",
+                    sim.outputs[0]
+                )),
+            );
+        }
     }
     (checks, None)
 }

@@ -10,6 +10,7 @@
 use cgra_dse::coordinator;
 use cgra_dse::dse::{self, DseConfig, SweepPoint, VariantEval};
 use cgra_dse::frontend::{App, AppSuite};
+use cgra_dse::layout;
 use cgra_dse::mining::MinerConfig;
 use cgra_dse::report;
 use cgra_dse::session::DseSession;
@@ -165,6 +166,12 @@ fn legacy_io_sweep(cfg: &DseConfig) -> String {
     text
 }
 
+fn legacy_fig_layout(cfg: &DseConfig) -> String {
+    let apps = AppSuite::imaging();
+    let front = layout::explore(&apps, "imaging", "pe_ip", 1, cfg, &layout::default_spec());
+    layout::render(&front)
+}
+
 // ---- the byte-identity assertions --------------------------------------
 
 #[test]
@@ -225,9 +232,16 @@ fn io_sweep_is_byte_identical() {
 }
 
 #[test]
+fn fig_layout_is_byte_identical() {
+    let s = session();
+    let (text, _) = coordinator::fig_layout(&s);
+    assert_eq!(text, legacy_fig_layout(&cfg()));
+}
+
+#[test]
 fn reproduce_all_is_byte_identical() {
-    // The CLI's `reproduce all` path: one shared session, seven sections,
-    // printed in canonical order — against the seven sequential pipelines
+    // The CLI's `reproduce all` path: one shared session, eight sections,
+    // printed in canonical order — against the eight sequential pipelines
     // run back to back, each from scratch.
     let s = session();
     let rep = coordinator::reproduce(&s, &coordinator::REPRODUCE_TARGETS);
@@ -240,6 +254,7 @@ fn reproduce_all_is_byte_identical() {
         legacy_domain_fig(&AppSuite::dsp(), "pe_dsp", 1, FIG_DSP_TITLE, &cfg()),
         legacy_table1(&cfg()),
         legacy_io_sweep(&cfg()),
+        legacy_fig_layout(&cfg()),
     ] {
         legacy.push_str(&text);
         legacy.push('\n');

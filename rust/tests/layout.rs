@@ -1,0 +1,313 @@
+//! Integration tests for the spatial layout explorer (`cgra_dse::layout`):
+//!
+//! * seeded placement determinism — the same `(mapping, fabric, seed)`
+//!   triple produces byte-identical placement and routing;
+//! * Pareto-front invariants on a real domain front — no member point is
+//!   dominated, the sort order is the stable report order, and the front
+//!   spans both topologies and both fabric sizes;
+//! * the mesh-vs-1-hop trade — at matched `(pe, size, mix)` coordinates
+//!   the 1-hop point buys lower routing energy with higher switch area;
+//! * `fig_layout` structure + `DseSession::layout` memoization (one stage
+//!   compute no matter how often the front is asked for);
+//! * `layout_json` warm-vs-cold byte-identity through the PR-5 service
+//!   cache, plus `parse(render(x)) == x` on the JSON artifact itself.
+
+use std::collections::BTreeSet;
+
+use cgra_dse::arch::{Fabric, FabricConfig};
+use cgra_dse::coordinator;
+use cgra_dse::dse::DseConfig;
+use cgra_dse::frontend::AppSuite;
+use cgra_dse::layout::{self, default_spec, dominates, LayoutSpec, Mix, Topology};
+use cgra_dse::mapper::map_app;
+use cgra_dse::mining::MinerConfig;
+use cgra_dse::pe::baseline::baseline_pe;
+use cgra_dse::pnr::{place_and_route, Routing};
+use cgra_dse::report::json::Json;
+use cgra_dse::service::protocol::{self, parse};
+use cgra_dse::service::server::{request_once, ServeConfig, Server, ServerStats};
+use cgra_dse::session::{report as sjson, DseSession, Stage};
+
+fn small_cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 400,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+// ---- seeded determinism -------------------------------------------------
+
+#[test]
+fn place_and_route_is_seed_deterministic() {
+    let app = AppSuite::by_name("conv1d").unwrap();
+    let mut g = app.graph.clone();
+    let pe = baseline_pe();
+    let mapping = map_app(&mut g, &pe).expect("baseline PE covers conv1d");
+    let fabric = Fabric::new(FabricConfig {
+        width: 8,
+        height: 8,
+        tracks: 5,
+        mem_column_period: 4,
+    });
+    let (pl_a, rt_a) = place_and_route(&mapping, &fabric, 0xD5E).expect("pnr");
+    let (pl_b, rt_b) = place_and_route(&mapping, &fabric, 0xD5E).expect("pnr");
+    assert_eq!(pl_a.slots, pl_b.slots, "same seed must place identically");
+    assert_eq!(pl_a.input_mems, pl_b.input_mems);
+    let nets = |r: &Routing| {
+        r.nets
+            .iter()
+            .map(|n| (n.src, n.dst, n.hops.clone()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(nets(&rt_a), nets(&rt_b), "same seed must route identically");
+    assert_eq!(rt_a.total_hops, rt_b.total_hops);
+    assert_eq!(rt_a.peak_utilization, rt_b.peak_utilization);
+}
+
+// ---- Pareto-front invariants on a real domain ---------------------------
+
+/// Shared structural checks: finite positive objectives, occupancy within
+/// the fabric, pairwise non-domination, stable energy-major sort.
+fn assert_front_wellformed(points: &[layout::LayoutPoint]) {
+    assert!(!points.is_empty(), "empty Pareto front");
+    for (i, p) in points.iter().enumerate() {
+        assert!(
+            p.energy_per_op_fj.is_finite() && p.energy_per_op_fj > 0.0,
+            "point {i}: bad energy {}",
+            p.energy_per_op_fj
+        );
+        assert!(p.area_um2 > 0.0, "point {i}: bad area {}", p.area_um2);
+        assert!(
+            p.congestion > 0.0 && p.congestion <= 1.0,
+            "point {i}: congestion {} out of (0, 1]",
+            p.congestion
+        );
+        assert!(p.used_pes <= p.pe_tiles);
+        for (j, q) in points.iter().enumerate() {
+            if i != j {
+                assert!(!dominates(q, p), "front point {j} dominates point {i}");
+            }
+        }
+    }
+    for w in points.windows(2) {
+        assert!(
+            w[0].energy_per_op_fj <= w[1].energy_per_op_fj,
+            "front not sorted energy-major"
+        );
+    }
+}
+
+#[test]
+fn dsp_front_spans_both_axes_and_exposes_the_mesh_vs_onehop_trade() {
+    let apps = AppSuite::dsp();
+    let cfg = small_cfg();
+    let front = layout::explore(&apps, "dsp", "pe_dsp", 1, &cfg, &default_spec());
+    assert_eq!(front.domain, "dsp");
+    assert_eq!(front.pe, "pe_dsp");
+    // 2 variants x 2 topologies x 2 sizes x 2 mixes.
+    assert_eq!(front.explored, 16);
+    assert_eq!(front.infeasible, 0, "every DSP app must map, place, route");
+    assert_front_wellformed(&front.points);
+
+    // The front spans both topologies and both fabric sizes.
+    assert!(front.points.iter().any(|p| p.topology == Topology::Mesh));
+    assert!(front.points.iter().any(|p| p.topology == Topology::OneHop));
+    assert!(front.points.iter().any(|p| p.width == 20));
+    assert!(front.points.iter().any(|p| p.width == 24));
+
+    // At matched (pe, size, mix) coordinates the 1-hop fabric folds mesh
+    // hops into express traversals: strictly less routing energy, strictly
+    // more switch-box area — the trade that keeps both on the front.
+    let mut matched = 0usize;
+    for p in &front.points {
+        if p.topology != Topology::Mesh {
+            continue;
+        }
+        if let Some(q) = front.points.iter().find(|q| {
+            q.topology == Topology::OneHop
+                && q.pe == p.pe
+                && q.width == p.width
+                && q.height == p.height
+                && q.mix == p.mix
+        }) {
+            matched += 1;
+            assert!(
+                q.energy_per_op_fj < p.energy_per_op_fj,
+                "1-hop must cut energy vs mesh at {} {}x{} {}",
+                p.pe,
+                p.width,
+                p.height,
+                p.mix.key()
+            );
+            assert!(
+                q.area_um2 > p.area_um2,
+                "1-hop must pay area vs mesh at {} {}x{} {}",
+                p.pe,
+                p.width,
+                p.height,
+                p.mix.key()
+            );
+        }
+    }
+    assert!(matched >= 1, "no matched mesh/1-hop pair on the front");
+}
+
+// ---- fig_layout structure + session memoization -------------------------
+
+#[test]
+fn fig_layout_front_spans_axes_and_session_memoizes() {
+    let session = DseSession::builder()
+        .registry_suite()
+        .config(small_cfg())
+        .build();
+    let (text, front) = coordinator::fig_layout(&session);
+    assert_eq!(text, layout::render(&front));
+    assert!(text.starts_with("Layout exploration — `imaging` domain"));
+    assert_eq!(front.domain, "imaging");
+    assert_eq!(front.pe, "pe_ip");
+    assert_front_wellformed(&front.points);
+
+    let topos: BTreeSet<&str> = front.points.iter().map(|p| p.topology.key()).collect();
+    let widths: BTreeSet<usize> = front.points.iter().map(|p| p.width).collect();
+    assert!(topos.len() >= 2, "imaging front must span >= 2 topologies: {topos:?}");
+    assert!(widths.len() >= 2, "imaging front must span >= 2 fabric sizes: {widths:?}");
+
+    // Memoized: asking again (directly or via the coordinator) reuses the
+    // cached front — exactly one Layout stage compute.
+    let again = session.layout("imaging");
+    let (text2, _) = coordinator::fig_layout(&session);
+    assert_eq!(layout::render(&again), text);
+    assert_eq!(text2, text);
+    assert_eq!(
+        session.stage_computes(Stage::Layout),
+        1,
+        "layout stage must compute once per (domain, config)"
+    );
+}
+
+// ---- layout_json: round-trip + determinism ------------------------------
+
+#[test]
+fn layout_json_parses_back_and_is_deterministic() {
+    let apps = vec![AppSuite::by_name("conv1d").unwrap()];
+    let cfg = DseConfig {
+        miner: MinerConfig {
+            min_support: 2,
+            max_nodes: 3,
+            max_patterns: 100,
+            ..Default::default()
+        },
+        max_merged: 1,
+        ..Default::default()
+    };
+    let spec = LayoutSpec {
+        topologies: vec![Topology::Mesh, Topology::OneHop],
+        sizes: vec![(8, 8)],
+        mixes: vec![Mix::Uniform, Mix::Hetero],
+    };
+    let front = layout::explore(&apps, "micro", "pe_micro", 1, &cfg, &spec);
+    let j = sjson::layout_json(&front);
+    let rendered = j.render();
+    assert_eq!(
+        parse(&rendered).expect("layout_json renders valid JSON"),
+        j,
+        "layout_json must survive a parse/render round-trip"
+    );
+    // Same inputs, byte-identical artifact — the property the service
+    // cache's byte-identity contract rests on.
+    let again = layout::explore(&apps, "micro", "pe_micro", 1, &cfg, &spec);
+    assert_eq!(sjson::layout_json(&again).render(), rendered);
+}
+
+// ---- warm-vs-cold byte identity through the service cache ---------------
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        cache_dir: None,
+        cfg: small_cfg(),
+        fast_cfg: small_cfg(),
+        session_threads: 2,
+        ..Default::default()
+    }
+}
+
+type ServerHandle = std::thread::JoinHandle<std::io::Result<ServerStats>>;
+
+fn spawn_server(sc: ServeConfig) -> (String, ServerHandle) {
+    let server = Server::bind(sc).expect("bind 127.0.0.1:0");
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn req(addr: &str, line: &str) -> protocol::ResponseView {
+    let raw = request_once(addr, line, 30_000).expect("request");
+    protocol::parse_response(&raw).expect("well-formed response line")
+}
+
+fn stats_total(addr: &str) -> usize {
+    let view = req(addr, "{\"req\":\"stats\"}");
+    assert!(view.ok);
+    view.body
+        .as_ref()
+        .and_then(|b| b.get("stage_computes"))
+        .and_then(|s| s.get("total"))
+        .and_then(Json::as_usize)
+        .expect("stats body missing stage_computes.total")
+}
+
+#[test]
+fn serve_layout_warm_hit_is_byte_identical_with_zero_recompute() {
+    let (addr, handle) = spawn_server(serve_cfg());
+    let line = "{\"req\":\"layout\",\"domain\":\"dsp\"}";
+
+    let first = req(&addr, line);
+    assert!(first.ok, "{:?}", first.error);
+    assert_eq!(first.cached.as_deref(), Some("miss"));
+    let body = first.body_raw.as_deref().unwrap_or("");
+    assert!(body.contains("\"front\""), "layout body must carry the front");
+    assert!(body.contains("dsp"));
+    let computes = stats_total(&addr);
+    assert!(computes > 0, "the cold layout request must compute stages");
+
+    let second = req(&addr, line);
+    assert!(second.ok);
+    assert_eq!(second.cached.as_deref(), Some("mem"));
+    assert_eq!(
+        first.body_raw, second.body_raw,
+        "warm layout body must be byte-identical"
+    );
+    assert_eq!(
+        stats_total(&addr),
+        computes,
+        "a warm layout hit must not recompute any stage"
+    );
+
+    // Figless domains are rejected at decode time with a typed error.
+    let bad = req(&addr, "{\"req\":\"layout\",\"domain\":\"micro\"}");
+    assert!(!bad.ok);
+    assert!(
+        bad.error
+            .as_deref()
+            .unwrap_or("")
+            .contains("unknown layout domain"),
+        "{:?}",
+        bad.error
+    );
+
+    let view = req(&addr, "{\"req\":\"shutdown\"}");
+    assert!(view.ok, "shutdown must succeed");
+    let stats = handle.join().expect("server thread").expect("clean exit");
+    assert!(stats.hits_mem >= 1);
+    assert_eq!(
+        stats.errors, 1,
+        "only the deliberate bad-domain request may error"
+    );
+}

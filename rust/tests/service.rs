@@ -230,6 +230,7 @@ fn malformed_and_unknown_requests_get_error_lines_not_hangups() {
         ("{\"req\":\"ladder\",\"app\":\"nope\"}", "unknown app"),
         ("{\"req\":\"reproduce\",\"target\":\"nope\"}", "unknown reproduce target"),
         ("{\"req\":\"domain_pe\",\"domain\":\"micro\"}", "drives no domain-PE"),
+        ("{\"req\":\"layout\",\"domain\":\"micro\"}", "unknown layout domain"),
         ("{\"req\":\"stress\",\"profiles\":\"nope\"}", "unknown stress profile"),
     ] {
         let view = req(&addr, line);
@@ -421,6 +422,8 @@ fn request_envelopes_roundtrip_through_encode_decode() {
         Request::Mine { app: "camera".into() },
         Request::Ladder { app: "gaussian".into() },
         Request::DomainPe { domain: "imaging".into() },
+        // Canonical domain key — decode canonicalizes aliases (`image`).
+        Request::Layout { domain: "imaging".into() },
         Request::Reproduce { target: "all".into() },
         // Profiles in canonical (sorted) form — decode canonicalizes, so
         // only canonical envelopes round-trip exactly.

@@ -3,7 +3,7 @@
 //! through the `Mutation` hook and assert the checker (a) catches it, (b)
 //! shrinks the scenario to a minimal reproduction, and (c) reports a
 //! replayable `(profile, seed)` line including the injection flag — so a
-//! green stress run means seven demonstrably-firing oracles, not seven
+//! green stress run means eight demonstrably-firing oracles, not eight
 //! no-ops.
 
 use cgra_dse::frontend::synth;
@@ -107,6 +107,13 @@ fn mutation_fires_ladder_monotone() {
 #[test]
 fn mutation_fires_report_identity() {
     assert_mutation_fires("report_identity", "const_heavy");
+}
+
+#[test]
+fn mutation_fires_pnr_legal() {
+    // deep_chain always yields instance-to-instance nets, so the shifted
+    // expected endpoint is guaranteed to mismatch a routed net.
+    assert_mutation_fires("pnr_legal", "deep_chain");
 }
 
 #[test]
