@@ -5,7 +5,10 @@
 //!   * **cold**: first-ever request, full pipeline compute;
 //!   * **warm-cache**: repeated request answered from the memory tier;
 //!   * **single-flight-duplicate**: N concurrent identical requests
-//!     deduplicated onto one pipeline execution.
+//!     deduplicated onto one pipeline execution;
+//!   * **chaos-soak**: the warm mix under the full fault-injection preset
+//!     with the retrying client — the cost of surviving disk faults,
+//!     corrupt artifacts, panics, and disconnects.
 //!
 //! Machine-readable results via `bench_util::write_json` →
 //! `BENCH_service.json` (run with `--json` or `BENCH_JSON=1`).
@@ -15,7 +18,10 @@ mod bench_util;
 use std::sync::{Arc, Barrier};
 
 use cgra_dse::service::protocol;
-use cgra_dse::service::server::{fast_config, request_once, ServeConfig, Server};
+use cgra_dse::service::server::{
+    fast_config, request_once, request_with_retry, RetryPolicy, ServeConfig, Server,
+};
+use cgra_dse::service::FaultPlan;
 
 const LADDER_GAUSSIAN: &str = "{\"req\":\"ladder\",\"app\":\"gaussian\"}";
 const REPRODUCE_FIG9: &str = "{\"req\":\"reproduce\",\"target\":\"fig9\"}";
@@ -119,6 +125,51 @@ fn main() {
         "single-flight amortization: 16 duplicate requests in {:.1} ms (~{:.1} ms/req)",
         t_flight.median_ms,
         t_flight.median_ms / 16.0
+    );
+
+    // --- Chaos soak: the warm mix under the full fault-injection preset,
+    // driven through the retrying client. Measures the resilience tax:
+    // injected disk faults, corrupt artifacts, panics, and disconnects,
+    // all absorbed into well-formed (possibly typed-error) responses.
+    let t_chaos = bench_util::time_ms(3, || {
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            cfg: fast_config(),
+            session_threads: 0,
+            mem_cache_entries: 8,
+            faults: Arc::new(
+                FaultPlan::chaos(0xC0FFEE)
+                    .delays(std::time::Duration::from_millis(1), std::time::Duration::from_millis(5)),
+            ),
+            ..Default::default()
+        })
+        .expect("bind 127.0.0.1:0");
+        let addr = server.local_addr().to_string();
+        let handle = std::thread::spawn(move || server.run());
+        let policy = RetryPolicy { attempts: 4, base_ms: 5, cap_ms: 100, seed: 7 };
+        let mut bytes = 0usize;
+        for line in (0..8).flat_map(|_| MIX.iter()) {
+            if let Ok(resp) = request_with_retry(&addr, line, 30_000, &policy) {
+                let view = protocol::parse_response(&resp).expect("well-formed under chaos");
+                if !view.ok {
+                    let code = view.code.as_deref().unwrap_or("<none>");
+                    assert!(
+                        matches!(code, "deadline_exceeded" | "overloaded" | "internal"),
+                        "{line}: untyped error `{code}`"
+                    );
+                }
+                bytes += resp.len();
+            }
+        }
+        let _ = request_with_retry(&addr, "{\"req\":\"shutdown\"}", 5_000, &policy);
+        let _ = handle.join();
+        bytes
+    });
+    bench_util::report("chaos_soak_mix_x64", t_chaos);
+    println!(
+        "chaos-soak mix: 64 requests under fault injection in {:.1} ms (retrying client)",
+        t_chaos.median_ms
     );
 
     // Machine-readable results (BENCH_JSON=1 or --json): BENCH_service.json.

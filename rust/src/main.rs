@@ -12,7 +12,9 @@ use cgra_dse::frontend::{self, AppSuite};
 use cgra_dse::mining::MinerConfig;
 use cgra_dse::pe::verilog::emit_verilog;
 use cgra_dse::runtime;
-use cgra_dse::service::{protocol, server::request_once, ServeConfig, Server};
+use cgra_dse::service::{
+    protocol, server::request_with_retry, FaultPlan, RetryPolicy, ServeConfig, Server,
+};
 use cgra_dse::session::{report as sjson, AppStages, DseSession, FINGERPRINT_SCHEMA_VERSION};
 use cgra_dse::stress::{self, Mutation, StressConfig};
 use cgra_dse::util::SplitMix64;
@@ -48,7 +50,8 @@ USAGE:
                   [--inject <invariant>] [--shrink-budget N]
   cgra-dse serve [--addr HOST:PORT] [--workers N] [--cache-dir DIR]
                  [--mem-cache N] [--threads N] [--fast]
-  cgra-dse request '<json>' [--addr HOST:PORT] [--timeout MS]
+                 [--deadline-ms N] [--queue-max N] [--chaos SEED]
+  cgra-dse request '<json>' [--addr HOST:PORT] [--timeout MS] [--retries N]
   cgra-dse validate [--app gaussian|conv|block] [--items N]
   cgra-dse version
   cgra-dse apps
@@ -517,8 +520,29 @@ fn cmd_stress(flags: &Flags) -> i32 {
 
 /// `serve`: run the JSON-lines DSE server until a `shutdown` request
 /// arrives (clean exit 0), printing the final cache/single-flight counters
-/// to stderr. Exit 1 on bind failure.
+/// to stderr. Exit 1 on bind failure, 2 on a malformed flag. `--chaos
+/// SEED` arms the deterministic fault-injection plane (see
+/// `service::fault`) — for soak tests only, never production serving.
 fn cmd_serve(flags: &Flags) -> i32 {
+    let faults = match flags.get("chaos") {
+        None => FaultPlan::none(),
+        Some(v) => match v.parse::<u64>() {
+            Ok(seed) => FaultPlan::chaos(seed),
+            Err(_) => {
+                eprintln!("invalid --chaos `{v}` (expected an unsigned integer seed)");
+                return 2;
+            }
+        },
+    };
+    let chaos_enabled = faults.enabled();
+    let defaults = ServeConfig::default();
+    let deadline_ms = flags.get_usize(
+        "deadline-ms",
+        defaults
+            .deadline
+            .map(|d| d.as_millis() as usize)
+            .unwrap_or(0),
+    );
     let sc = ServeConfig {
         addr: flags.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
         workers: flags.get_usize("workers", 4),
@@ -526,6 +550,9 @@ fn cmd_serve(flags: &Flags) -> i32 {
         mem_cache_entries: flags.get_usize("mem-cache", 256),
         cfg: dse_config(flags),
         session_threads: flags.get_usize("threads", 0),
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms as u64)),
+        compute_queue_max: flags.get_usize("queue-max", defaults.compute_queue_max),
+        faults: std::sync::Arc::new(faults),
         ..Default::default()
     };
     let cache_desc = sc
@@ -541,24 +568,37 @@ fn cmd_serve(flags: &Flags) -> i32 {
             return 1;
         }
     };
+    let chaos_note = if chaos_enabled {
+        " [CHAOS: fault injection armed]"
+    } else {
+        ""
+    };
     eprintln!(
-        "cgra-dse serving on {} ({} workers, cache: {})",
+        "cgra-dse serving on {} ({} workers, cache: {}){}",
         server.local_addr(),
         workers,
-        cache_desc
+        cache_desc,
+        chaos_note
     );
     match server.run() {
         Ok(st) => {
             eprintln!(
                 "shutdown: {} requests ({} errors), cache hits {} mem / {} disk, \
-                 {} misses, {} single-flight waits, {} stage computes",
+                 {} misses, {} single-flight waits, {} stage computes; \
+                 shed {}, deadline_exceeded {}, degraded {}, quarantined {}, \
+                 compute replacements {}",
                 st.requests,
                 st.errors,
                 st.hits_mem,
                 st.hits_disk,
                 st.misses,
                 st.single_flight_waits,
-                st.stage_computes_total
+                st.stage_computes_total,
+                st.shed,
+                st.deadline_exceeded,
+                st.degraded,
+                st.quarantined,
+                st.compute_replacements
             );
             0
         }
@@ -569,16 +609,20 @@ fn cmd_serve(flags: &Flags) -> i32 {
     }
 }
 
-/// `request`: loopback scripting client. Sends one JSON-lines request,
-/// prints the response line to stdout. Exit 0 when the response parses and
-/// carries `ok:true`; 1 on transport failure, server error, or an
-/// unparseable response; 2 on a locally malformed request. `--timeout`
-/// bounds connection establishment; the response wait is unbounded (cold
-/// computes can be long).
+/// `request`: loopback scripting client. Sends one JSON-lines request
+/// (with capped jittered exponential-backoff retries on transport
+/// failures and retryable typed errors — `overloaded` honors the server's
+/// `retry_after_ms` hint), prints the final response line to stdout. Exit
+/// 0 when the response parses and carries `ok:true`; 1 on transport
+/// failure, server error, or an unparseable response; 2 on a locally
+/// malformed request. `--timeout` is a true end-to-end deadline per
+/// attempt (connect + send + response wait) — size it to the request: a
+/// cold `reproduce all` legitimately computes for minutes. `--retries 0`
+/// disables retrying.
 fn cmd_request(rest: &[String], flags: &Flags) -> i32 {
     let Some(json) = rest.first().filter(|s| !s.starts_with("--")) else {
         eprintln!(
-            "usage: cgra-dse request '<json>' [--addr HOST:PORT] [--timeout CONNECT_MS]"
+            "usage: cgra-dse request '<json>' [--addr HOST:PORT] [--timeout MS] [--retries N]"
         );
         return 2;
     };
@@ -589,14 +633,24 @@ fn cmd_request(rest: &[String], flags: &Flags) -> i32 {
         return 2;
     }
     let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
-    let timeout = flags.get_usize("timeout", 10_000) as u64;
-    match request_once(addr, json, timeout) {
+    let timeout = flags.get_usize("timeout", 600_000) as u64;
+    let policy = RetryPolicy {
+        attempts: flags.get_usize("retries", 2) + 1,
+        // Spread synchronized clients: jitter differs per process.
+        seed: 0x5eed ^ std::process::id() as u64,
+        ..Default::default()
+    };
+    match request_with_retry(addr, json, timeout, &policy) {
         Ok(line) => {
             println!("{line}");
             match protocol::parse_response(&line) {
                 Ok(view) if view.ok => 0,
                 Ok(view) => {
-                    eprintln!("server error: {}", view.error.unwrap_or_default());
+                    eprintln!(
+                        "server error [{}]: {}",
+                        view.code.unwrap_or_else(|| "unknown".to_string()),
+                        view.error.unwrap_or_default()
+                    );
                     1
                 }
                 Err(e) => {

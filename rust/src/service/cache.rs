@@ -12,21 +12,42 @@
 //!                      └ versioned invalidation: a schema bump orphans every old artifact
 //! ```
 //!
-//! The disk tier lives under `<cache-dir>/v{N}/` and stores one file per
-//! artifact, named by a 128-bit hash of the canonical key. Each file
-//! carries the canonical key as its first line and the artifact bytes
-//! (always a single-line JSON document — the renderer escapes every
-//! newline) after it; a read whose stored key line does not match the
-//! probe key is treated as a miss, so hash collisions and stale schemas
-//! degrade to recomputation, never to a wrong answer. Writes go through a
-//! temp file + rename so concurrent readers never observe a partial
-//! artifact. Round-trips are byte-identical: the artifact is stored and
-//! served as the exact rendered bytes.
+//! # Disk artifact format (schema v2)
+//!
+//! The disk tier lives under `<cache-dir>/v{N}/`, one file per artifact,
+//! named by a 128-bit hash of the canonical key:
+//!
+//! ```text
+//!   <canonical key>\n
+//!   <artifact bytes — a single-line JSON document>\n
+//!   #t:<body length in bytes>:<FNV-1a of the body, 16 hex digits>
+//! ```
+//!
+//! A read validates *all three* layers before serving: the stored key line
+//! must match the probe key (hash collisions and stale schemas degrade to
+//! recomputation), and the integrity trailer's length + checksum must
+//! match the body (a truncated, bit-flipped, or partially written file is
+//! **never** served and never panics the server). A file failing key or
+//! integrity validation is moved to `<cache-dir>/quarantine/` — preserved
+//! for post-mortem, counted in [`CacheStats::quarantined`], and out of the
+//! read path so the next request recomputes and rewrites a clean artifact.
+//! An *absent* file is a plain miss: absence is not evidence of
+//! corruption.
+//!
+//! Writes go through a temp file + rename so concurrent readers never
+//! observe a partial artifact even mid-crash. Round-trips are
+//! byte-identical: the artifact is stored and served as the exact rendered
+//! bytes.
 //!
 //! The memory tier is sharded ([`SHARDS`] shards, each its own mutex +
 //! LRU clock) so concurrent workers rarely contend on one lock. Eviction
 //! scans the shard for the lowest stamp — O(entries/shard), fine for the
 //! small per-shard capacities a serving cache uses.
+//!
+//! Both disk paths are instrumented with [`fault`](super::fault) sites
+//! (slow/failed reads and writes, truncated/bit-flipped artifacts) so the
+//! chaos harness can prove the quarantine machinery end-to-end; with the
+//! default disabled [`FaultPlan`] every site is a single dead branch.
 
 use std::collections::HashMap;
 use std::io;
@@ -34,16 +55,23 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use super::fault::{FaultPlan, Site};
+
 /// Version of the on-disk artifact layout **and** of everything folded
 /// into the canonical key (fingerprint schema, request grammar, artifact
 /// JSON shapes). Bump it whenever any of those changes shape — see
 /// [`crate::session::FINGERPRINT_SCHEMA_VERSION`] for the bump procedure —
 /// and old artifacts become unreachable (a later `v{N-1}` cleanup is
 /// harmless but never required for correctness).
-pub const CACHE_SCHEMA_VERSION: u32 = 1;
+///
+/// v2: artifacts gained the length+checksum integrity trailer.
+pub const CACHE_SCHEMA_VERSION: u32 = 2;
 
 /// Memory-tier shard count (keys are distributed by hash).
 pub const SHARDS: usize = 8;
+
+/// Prefix of the integrity trailer line.
+const TRAILER_TAG: &str = "#t:";
 
 fn fnv1a(bytes: &[u8], seed: u64) -> u64 {
     let mut h = seed;
@@ -94,6 +122,60 @@ impl CacheKey {
     }
 }
 
+/// Render the integrity trailer for a body.
+fn trailer(body: &[u8]) -> String {
+    format!(
+        "{TRAILER_TAG}{}:{:016x}",
+        body.len(),
+        fnv1a(body, 0xcbf29ce484222325)
+    )
+}
+
+/// Why a disk artifact was rejected and quarantined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Defect {
+    /// Not valid UTF-8 (bit flips can corrupt multibyte sequences).
+    Encoding,
+    /// No key line / no trailer line (truncated or zero-length file).
+    Structure,
+    /// The stored key line does not match the probe key.
+    KeyMismatch,
+    /// The trailer's length or checksum does not match the body.
+    Integrity,
+}
+
+impl Defect {
+    fn tag(self) -> &'static str {
+        match self {
+            Defect::Encoding => "encoding",
+            Defect::Structure => "structure",
+            Defect::KeyMismatch => "key-mismatch",
+            Defect::Integrity => "integrity",
+        }
+    }
+}
+
+/// Validate one disk artifact's bytes against the probe key. `Ok` carries
+/// the body slice's owned copy; `Err` names the defect.
+fn validate_artifact(bytes: Vec<u8>, canon: &str) -> Result<String, Defect> {
+    let text = String::from_utf8(bytes).map_err(|_| Defect::Encoding)?;
+    let (stored_key, rest) = text.split_once('\n').ok_or(Defect::Structure)?;
+    let (body, tail) = rest.rsplit_once('\n').ok_or(Defect::Structure)?;
+    let spec = tail.strip_prefix(TRAILER_TAG).ok_or(Defect::Structure)?;
+    let (len_s, sum_s) = spec.split_once(':').ok_or(Defect::Structure)?;
+    let len: usize = len_s.parse().map_err(|_| Defect::Structure)?;
+    let sum = u64::from_str_radix(sum_s, 16).map_err(|_| Defect::Structure)?;
+    if len != body.len() || sum != fnv1a(body.as_bytes(), 0xcbf29ce484222325) {
+        return Err(Defect::Integrity);
+    }
+    // Key check last: an artifact failing integrity is quarantined as
+    // corrupt even when its key line also drifted.
+    if stored_key != canon {
+        return Err(Defect::KeyMismatch);
+    }
+    Ok(body.to_string())
+}
+
 /// Which tier answered a [`TieredCache::get`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Tier {
@@ -130,6 +212,8 @@ pub struct CacheStats {
     pub misses: usize,
     pub stores: usize,
     pub mem_entries: usize,
+    /// Disk artifacts rejected by validation and moved to quarantine.
+    pub quarantined: usize,
 }
 
 /// The two-tier cache. All methods are `&self` and thread-safe.
@@ -138,10 +222,15 @@ pub struct TieredCache {
     per_shard_cap: usize,
     /// `<cache-dir>/v{CACHE_SCHEMA_VERSION}`, when a disk tier is enabled.
     disk: Option<PathBuf>,
+    /// `<cache-dir>/quarantine`, created lazily at first quarantine.
+    quarantine: Option<PathBuf>,
+    faults: Arc<FaultPlan>,
     hits_mem: AtomicUsize,
     hits_disk: AtomicUsize,
     misses: AtomicUsize,
     stores: AtomicUsize,
+    quarantined: AtomicUsize,
+    quarantine_seq: AtomicUsize,
 }
 
 impl TieredCache {
@@ -150,22 +239,37 @@ impl TieredCache {
     /// versioned subdirectory is created eagerly so a bad path fails at
     /// startup, not on the first store.
     pub fn new(mem_capacity: usize, cache_dir: Option<&Path>) -> io::Result<TieredCache> {
-        let disk = match cache_dir {
+        TieredCache::with_faults(mem_capacity, cache_dir, Arc::new(FaultPlan::none()))
+    }
+
+    /// [`Self::new`] with a fault-injection plan threaded through the disk
+    /// paths (the server passes its `--chaos` plan; tests pass targeted
+    /// plans).
+    pub fn with_faults(
+        mem_capacity: usize,
+        cache_dir: Option<&Path>,
+        faults: Arc<FaultPlan>,
+    ) -> io::Result<TieredCache> {
+        let (disk, quarantine) = match cache_dir {
             Some(d) => {
                 let v = d.join(format!("v{CACHE_SCHEMA_VERSION}"));
                 std::fs::create_dir_all(&v)?;
-                Some(v)
+                (Some(v), Some(d.join("quarantine")))
             }
-            None => None,
+            None => (None, None),
         };
         Ok(TieredCache {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             per_shard_cap: (mem_capacity / SHARDS).max(1),
             disk,
+            quarantine,
+            faults,
             hits_mem: AtomicUsize::new(0),
             hits_disk: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             stores: AtomicUsize::new(0),
+            quarantined: AtomicUsize::new(0),
+            quarantine_seq: AtomicUsize::new(0),
         })
     }
 
@@ -202,14 +306,20 @@ impl TieredCache {
             }
         }
         if let Some(dir) = &self.disk {
-            let path = dir.join(format!("{}.art", key.file_stem()));
-            if let Ok(text) = std::fs::read_to_string(&path) {
-                if let Some((stored_key, body)) = text.split_once('\n') {
-                    if stored_key == canon {
-                        let val = Arc::new(body.to_string());
-                        self.insert_mem(&canon, val.clone());
-                        self.hits_disk.fetch_add(1, Ordering::Relaxed);
-                        return Some((val, Tier::Disk));
+            self.faults.sleep_if(Site::DiskReadSlow);
+            // An injected read failure is an I/O error, not corruption:
+            // degrade to a miss without touching the file.
+            if !self.faults.fire(Site::DiskReadFail) {
+                let path = dir.join(format!("{}.art", key.file_stem()));
+                if let Ok(bytes) = std::fs::read(&path) {
+                    match validate_artifact(bytes, &canon) {
+                        Ok(body) => {
+                            let val = Arc::new(body);
+                            self.insert_mem(&canon, val.clone());
+                            self.hits_disk.fetch_add(1, Ordering::Relaxed);
+                            return Some((val, Tier::Disk));
+                        }
+                        Err(defect) => self.quarantine_file(&path, defect),
                     }
                 }
             }
@@ -220,6 +330,35 @@ impl TieredCache {
         None
     }
 
+    /// Move a failed-validation artifact out of the read path, preserving
+    /// it for post-mortem. Fallback is plain removal; either way the next
+    /// lookup misses cleanly and the artifact gets recomputed.
+    fn quarantine_file(&self, path: &Path, defect: Defect) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        let seq = self.quarantine_seq.fetch_add(1, Ordering::Relaxed);
+        let moved = self.quarantine.as_ref().and_then(|qdir| {
+            std::fs::create_dir_all(qdir).ok()?;
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("artifact");
+            let dest = qdir.join(format!("{stem}.{}.{seq}.art", std::process::id()));
+            std::fs::rename(path, &dest).ok().map(|_| dest)
+        });
+        match moved {
+            Some(dest) => eprintln!(
+                "cgra-dse: quarantined corrupt cache artifact ({}): {}",
+                defect.tag(),
+                dest.display()
+            ),
+            None => {
+                let _ = std::fs::remove_file(path);
+                eprintln!(
+                    "cgra-dse: removed corrupt cache artifact ({}): {}",
+                    defect.tag(),
+                    path.display()
+                );
+            }
+        }
+    }
+
     /// Store an artifact in both tiers. Disk write failures are silently
     /// tolerated (the cache is an accelerator, not a source of truth); the
     /// memory tier always takes the entry.
@@ -228,13 +367,31 @@ impl TieredCache {
         let canon = key.canonical();
         self.insert_mem(&canon, val.clone());
         if let Some(dir) = &self.disk {
+            self.faults.sleep_if(Site::DiskWriteSlow);
+            if self.faults.fire(Site::DiskWriteFail) {
+                return;
+            }
             let stem = key.file_stem();
             let path = dir.join(format!("{stem}.art"));
             let tmp = dir.join(format!("{stem}.tmp{}", std::process::id()));
-            let mut content = String::with_capacity(canon.len() + 1 + val.len());
-            content.push_str(&canon);
-            content.push('\n');
-            content.push_str(&val);
+            let mut content = Vec::with_capacity(canon.len() + val.len() + 32);
+            content.extend_from_slice(canon.as_bytes());
+            content.push(b'\n');
+            content.extend_from_slice(val.as_bytes());
+            content.push(b'\n');
+            content.extend_from_slice(trailer(val.as_bytes()).as_bytes());
+            // Chaos corruption sites: a truncated write models a crash
+            // mid-write that beat the rename barrier; a bit flip models
+            // silent media corruption under a still-plausible trailer.
+            if self.faults.fire(Site::ArtifactTruncate) {
+                content.truncate(content.len() * 2 / 3);
+            }
+            if self.faults.fire(Site::ArtifactBitflip) {
+                let i = canon.len() + 1 + val.len() / 2;
+                if i < content.len() {
+                    content[i] ^= 0x01;
+                }
+            }
             if std::fs::write(&tmp, &content).is_ok() {
                 let _ = std::fs::rename(&tmp, &path);
             }
@@ -270,6 +427,7 @@ impl TieredCache {
                 .iter()
                 .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len())
                 .sum(),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
         }
     }
 }
@@ -291,6 +449,16 @@ mod tests {
         d
     }
 
+    /// The one disk artifact file of a single-entry cache dir.
+    fn sole_artifact(dir: &Path) -> PathBuf {
+        let vdir = dir.join(format!("v{CACHE_SCHEMA_VERSION}"));
+        std::fs::read_dir(&vdir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .find(|p| p.extension().is_some_and(|x| x == "art"))
+            .expect("one .art file")
+    }
+
     #[test]
     fn memory_tier_hits_and_counts() {
         let c = TieredCache::new(64, None).unwrap();
@@ -303,6 +471,7 @@ mod tests {
         let st = c.stats();
         assert_eq!((st.hits_mem, st.misses, st.stores), (1, 1, 1));
         assert_eq!(st.mem_entries, 1);
+        assert_eq!(st.quarantined, 0);
     }
 
     #[test]
@@ -362,31 +531,146 @@ mod tests {
         // Promoted: second read is a memory hit.
         let (_, tier2) = c.get(&key(7, "camera")).unwrap();
         assert_eq!(tier2, Tier::Mem);
+        assert_eq!(c.stats().quarantined, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn corrupt_or_mismatched_disk_artifacts_degrade_to_misses() {
-        let dir = tmpdir("corrupt");
+    fn stored_artifacts_carry_a_verifiable_trailer() {
+        let dir = tmpdir("trailer");
+        let body = "{\"n\":1}";
         let c = TieredCache::new(64, Some(&dir)).unwrap();
-        let k = key(9, "camera");
-        c.put(&k, Arc::new("body".into()));
-        // Overwrite the artifact with a mismatched key line (simulating a
-        // hash collision or a stale schema's leftover file).
-        let vdir = dir.join(format!("v{CACHE_SCHEMA_VERSION}"));
-        let file = std::fs::read_dir(&vdir)
-            .unwrap()
-            .next()
-            .unwrap()
-            .unwrap()
-            .path();
-        std::fs::write(&file, "v0:dead:ladder:other\nbody").unwrap();
-        let cold = TieredCache::new(64, Some(&dir)).unwrap();
-        assert!(cold.get(&k).is_none(), "mismatched key line must miss");
-        // And a keyless file (no newline) must miss too, not panic.
-        std::fs::write(&file, "garbage-without-newline").unwrap();
-        let cold2 = TieredCache::new(64, Some(&dir)).unwrap();
-        assert!(cold2.get(&k).is_none());
+        c.put(&key(5, "camera"), Arc::new(body.to_string()));
+        let text = std::fs::read_to_string(sole_artifact(&dir)).unwrap();
+        let expect = format!("{}\n{body}\n{}", key(5, "camera").canonical(), trailer(body.as_bytes()));
+        assert_eq!(text, expect);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_disk_artifacts_quarantine_to_misses() {
+        // Every corruption class must degrade to a miss + quarantine —
+        // never a panic, never a served corrupt body. A mutator returning
+        // `false` leaves no file (absence = plain miss, no quarantine).
+        let cases: Vec<(&str, Box<dyn Fn(&Path) -> bool>)> = vec![
+            ("truncated", Box::new(|p: &Path| {
+                let b = std::fs::read(p).unwrap();
+                std::fs::write(p, &b[..b.len() / 2]).unwrap();
+                true
+            })),
+            ("flipped-body-byte", Box::new(|p: &Path| {
+                let mut b = std::fs::read(p).unwrap();
+                let i = b.iter().position(|&x| x == b'\n').unwrap() + 3;
+                b[i] ^= 0x20;
+                std::fs::write(p, &b).unwrap();
+                true
+            })),
+            // A valid trailer under a stale key line: the key check, not
+            // the checksum, must reject it.
+            ("wrong-schema-version", Box::new(|p: &Path| {
+                let file = format!("v0:dead:ladder:other\nbody\n{}", trailer(b"body"));
+                std::fs::write(p, file).unwrap();
+                true
+            })),
+            ("zero-length", Box::new(|p: &Path| {
+                std::fs::write(p, "").unwrap();
+                true
+            })),
+            ("keyless-no-newline", Box::new(|p: &Path| {
+                std::fs::write(p, "garbage-without-newline").unwrap();
+                true
+            })),
+            ("invalid-utf8", Box::new(|p: &Path| {
+                let mut b = std::fs::read(p).unwrap();
+                let i = b.iter().position(|&x| x == b'\n').unwrap() + 1;
+                b[i] = 0xFF;
+                std::fs::write(p, &b).unwrap();
+                true
+            })),
+            ("absent", Box::new(|p: &Path| {
+                std::fs::remove_file(p).unwrap();
+                false
+            })),
+        ];
+        for (tag, mutate) in cases {
+            let dir = tmpdir(&format!("corrupt_{tag}"));
+            let k = key(9, "camera");
+            {
+                let c = TieredCache::new(64, Some(&dir)).unwrap();
+                c.put(&k, Arc::new("{\"app\":\"camera\"}".into()));
+            }
+            let expect_quarantine = mutate(&sole_artifact(&dir));
+            let cold = TieredCache::new(64, Some(&dir)).unwrap();
+            assert!(cold.get(&k).is_none(), "{tag}: must miss");
+            let st = cold.stats();
+            assert_eq!(st.misses, 1, "{tag}");
+            if expect_quarantine {
+                assert_eq!(st.quarantined, 1, "{tag}: must quarantine");
+                let qdir = dir.join("quarantine");
+                assert_eq!(
+                    std::fs::read_dir(&qdir).unwrap().count(),
+                    1,
+                    "{tag}: quarantine dir must hold the moved artifact"
+                );
+                // The corrupt file is out of the read path: a recompute's
+                // put + get round-trips cleanly.
+                cold.put(&k, Arc::new("{\"app\":\"camera\"}".into()));
+                let fresh = TieredCache::new(64, Some(&dir)).unwrap();
+                assert!(fresh.get(&k).is_some(), "{tag}: recompute must land");
+                assert_eq!(fresh.stats().quarantined, 0, "{tag}");
+            } else {
+                assert_eq!(st.quarantined, 0, "{tag}: absence must not quarantine");
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn injected_truncation_and_bitflips_are_caught_and_quarantined() {
+        // End-to-end through the fault plane: every write corrupted, every
+        // read must reject — the memory tier is the only server.
+        for site in [Site::ArtifactTruncate, Site::ArtifactBitflip] {
+            let dir = tmpdir(&format!("chaos_{}", site.key()));
+            let plan = Arc::new(FaultPlan::new(1).with(site, 1.0));
+            let k = key(11, "camera");
+            {
+                let c = TieredCache::with_faults(64, Some(&dir), plan.clone()).unwrap();
+                c.put(&k, Arc::new("{\"app\":\"camera\",\"n\":12345}".into()));
+                assert_eq!(plan.injected(site), 1);
+            }
+            let cold = TieredCache::new(64, Some(&dir)).unwrap();
+            assert!(cold.get(&k).is_none(), "{}: corrupt write must miss", site.key());
+            assert_eq!(cold.stats().quarantined, 1, "{}", site.key());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn injected_read_and_write_failures_degrade_without_quarantine() {
+        let dir = tmpdir("chaos_io");
+        let k = key(13, "camera");
+        // A dropped write: the memory tier still serves, disk stays empty.
+        let plan = Arc::new(FaultPlan::new(2).with(Site::DiskWriteFail, 1.0));
+        let c = TieredCache::with_faults(64, Some(&dir), plan).unwrap();
+        c.put(&k, Arc::new("x".into()));
+        assert!(c.get(&k).is_some(), "memory tier must still serve");
+        assert!(
+            std::fs::read_dir(dir.join(format!("v{CACHE_SCHEMA_VERSION}")))
+                .unwrap()
+                .next()
+                .is_none(),
+            "injected write failure must leave no artifact"
+        );
+        // A failed read over a *good* artifact: miss, but never quarantine
+        // (the file is fine — the I/O failed).
+        TieredCache::new(64, Some(&dir)).unwrap().put(&k, Arc::new("x".into()));
+        let plan = Arc::new(FaultPlan::new(3).with(Site::DiskReadFail, 1.0));
+        let c = TieredCache::with_faults(64, Some(&dir), plan).unwrap();
+        assert!(c.get(&k).is_none(), "injected read failure must miss");
+        assert_eq!(c.stats().quarantined, 0, "a read failure is not corruption");
+        // And with faults off again the artifact is still intact.
+        let c = TieredCache::new(64, Some(&dir)).unwrap();
+        assert_eq!(c.get(&k).unwrap().0.as_str(), "x");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,346 @@
+//! Deterministic fault-injection plane for the serving layer.
+//!
+//! A [`FaultPlan`] decides, at named [`Site`]s threaded through
+//! [`super::cache`] and [`super::server`], whether to inject a fault on
+//! the current call: a failed or slow disk read/write, a truncated or
+//! bit-flipped artifact, a compute panic, an artificially slow compute,
+//! or a mid-response client disconnect. Decisions are **seeded and
+//! deterministic per site-call sequence**: the `n`-th probe of a given
+//! site under a given seed always returns the same verdict (a SplitMix64
+//! hash of `(seed, site, n)`, the same generator `frontend/synth.rs`
+//! uses), so a serial request trace replays its exact fault schedule and
+//! CI soaks are reproducible by seed.
+//!
+//! The disabled plan ([`FaultPlan::none`], the default everywhere) is a
+//! single branch on a plain bool at every call site — no atomics, no
+//! hashing — so production paths pay nothing for the instrumentation.
+//!
+//! Enable from the CLI with `cgra-dse serve --chaos <seed>`
+//! ([`FaultPlan::chaos`] mixes every site at soak-tuned probabilities),
+//! or construct targeted plans in tests with [`FaultPlan::new`] +
+//! [`FaultPlan::with`]/[`FaultPlan::budget`] (e.g. "panic exactly the
+//! first compute" = `with(ComputePanic, 1.0).budget(ComputePanic, 1)`).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::util::SplitMix64;
+
+/// Number of named injection sites ([`Site::ALL`]).
+pub const SITES: usize = 9;
+
+/// A named fault-injection site. Each site is probed by exactly one code
+/// path in `cache.rs`/`server.rs` (see the variant docs), so a plan's
+/// per-site probabilities map one-to-one onto observable failure modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Disk-tier lookup behaves as an I/O read error (plain miss — a read
+    /// *failure* is not evidence of corruption, so nothing is quarantined).
+    DiskReadFail,
+    /// Disk-tier lookup stalls for the plan's I/O delay before answering.
+    DiskReadSlow,
+    /// Disk-tier store is silently dropped (memory tier still takes it).
+    DiskWriteFail,
+    /// Disk-tier store stalls for the plan's I/O delay before writing.
+    DiskWriteSlow,
+    /// The artifact file is written truncated (tail of the body and the
+    /// integrity trailer lost — as after a crash mid-write).
+    ArtifactTruncate,
+    /// One body byte of the written artifact is bit-flipped (as after
+    /// silent media corruption); the checksum trailer stays computed over
+    /// the true body, so a later read must detect the mismatch.
+    ArtifactBitflip,
+    /// The pipeline compute panics ("chaos: injected compute panic").
+    ComputePanic,
+    /// The pipeline compute stalls for the plan's compute delay first.
+    ComputeSlow,
+    /// The server drops the connection after computing a response but
+    /// before writing it — the client observes a mid-response disconnect.
+    ClientDisconnect,
+}
+
+impl Site {
+    /// Every site, in probe-salt order.
+    pub const ALL: [Site; SITES] = [
+        Site::DiskReadFail,
+        Site::DiskReadSlow,
+        Site::DiskWriteFail,
+        Site::DiskWriteSlow,
+        Site::ArtifactTruncate,
+        Site::ArtifactBitflip,
+        Site::ComputePanic,
+        Site::ComputeSlow,
+        Site::ClientDisconnect,
+    ];
+
+    /// Stable key (used in `stats` bodies and soak logs).
+    pub fn key(self) -> &'static str {
+        match self {
+            Site::DiskReadFail => "disk_read_fail",
+            Site::DiskReadSlow => "disk_read_slow",
+            Site::DiskWriteFail => "disk_write_fail",
+            Site::DiskWriteSlow => "disk_write_slow",
+            Site::ArtifactTruncate => "artifact_truncate",
+            Site::ArtifactBitflip => "artifact_bitflip",
+            Site::ComputePanic => "compute_panic",
+            Site::ComputeSlow => "compute_slow",
+            Site::ClientDisconnect => "client_disconnect",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        match self {
+            Site::DiskReadFail => 0,
+            Site::DiskReadSlow => 1,
+            Site::DiskWriteFail => 2,
+            Site::DiskWriteSlow => 3,
+            Site::ArtifactTruncate => 4,
+            Site::ArtifactBitflip => 5,
+            Site::ComputePanic => 6,
+            Site::ComputeSlow => 7,
+            Site::ClientDisconnect => 8,
+        }
+    }
+}
+
+/// Per-site salts so the same seed yields independent decision streams at
+/// every site (arbitrary odd constants).
+const SITE_SALT: [u64; SITES] = [
+    0x9b97_17a3_5c6b_0e21,
+    0x517c_c1b7_2722_0a95,
+    0x2545_f491_4f6c_dd1d,
+    0x6a09_e667_f3bc_c909,
+    0xbb67_ae85_84ca_a73b,
+    0x3c6e_f372_fe94_f82b,
+    0xa54f_f53a_5f1d_36f1,
+    0x510e_527f_ade6_82d1,
+    0x9b05_688c_2b3e_6c1f,
+];
+
+/// A seeded, thread-safe fault plan. Probe with [`FaultPlan::fire`] (or
+/// [`FaultPlan::sleep_if`] for the slow sites); share via `Arc`.
+#[derive(Debug)]
+pub struct FaultPlan {
+    enabled: bool,
+    seed: u64,
+    prob: [f64; SITES],
+    /// Per-site injection cap; `usize::MAX` = unlimited.
+    cap: [usize; SITES],
+    calls: [AtomicU64; SITES],
+    injected: [AtomicUsize; SITES],
+    io_delay: Duration,
+    compute_delay: Duration,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The disabled plan: every probe is a single `false` branch.
+    pub fn none() -> FaultPlan {
+        let mut p = FaultPlan::new(0);
+        p.enabled = false;
+        p
+    }
+
+    /// An enabled plan with every probability at zero — the starting point
+    /// for targeted test plans (chain [`Self::with`] / [`Self::budget`] /
+    /// [`Self::delays`]).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            enabled: true,
+            seed,
+            prob: [0.0; SITES],
+            cap: [usize::MAX; SITES],
+            calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicUsize::new(0)),
+            io_delay: Duration::from_millis(20),
+            compute_delay: Duration::from_millis(60),
+        }
+    }
+
+    /// The `serve --chaos <seed>` preset: every site armed at soak-tuned
+    /// probabilities. Artifact corruption is deliberately the hottest pair
+    /// so a bounded soak over a small memory tier provably exercises the
+    /// quarantine path; delays are short enough that an injected stall
+    /// never approaches a production deadline.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan::new(seed)
+            .with(Site::DiskReadFail, 0.10)
+            .with(Site::DiskReadSlow, 0.10)
+            .with(Site::DiskWriteFail, 0.05)
+            .with(Site::DiskWriteSlow, 0.10)
+            .with(Site::ArtifactTruncate, 0.25)
+            .with(Site::ArtifactBitflip, 0.25)
+            .with(Site::ComputePanic, 0.10)
+            .with(Site::ComputeSlow, 0.15)
+            .with(Site::ClientDisconnect, 0.05)
+    }
+
+    /// Set one site's injection probability (builder style).
+    pub fn with(mut self, site: Site, prob: f64) -> FaultPlan {
+        self.prob[site.idx()] = prob.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Cap one site's total injections (builder style) — e.g. a budget of
+    /// 1 makes `with(site, 1.0)` fire exactly once, then never again.
+    pub fn budget(mut self, site: Site, cap: usize) -> FaultPlan {
+        self.cap[site.idx()] = cap;
+        self
+    }
+
+    /// Override the stall durations of the slow sites (builder style):
+    /// `io` for `Disk{Read,Write}Slow`, `compute` for `ComputeSlow`.
+    pub fn delays(mut self, io: Duration, compute: Duration) -> FaultPlan {
+        self.io_delay = io;
+        self.compute_delay = compute;
+        self
+    }
+
+    /// Whether this plan can inject anything at all.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Probe a site: `true` means *inject now*. Deterministic per
+    /// `(seed, site, nth-call-at-site)`; counts the injection against the
+    /// site's budget. The disabled plan returns `false` after one branch.
+    #[inline]
+    pub fn fire(&self, site: Site) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        self.fire_enabled(site)
+    }
+
+    fn fire_enabled(&self, site: Site) -> bool {
+        let i = site.idx();
+        if self.prob[i] <= 0.0 {
+            return false;
+        }
+        let n = self.calls[i].fetch_add(1, Ordering::Relaxed);
+        let mut rng =
+            SplitMix64::new(self.seed ^ SITE_SALT[i] ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        if rng.f64() >= self.prob[i] {
+            return false;
+        }
+        // Budgeted claim: only a successful reservation injects, so a
+        // budget of K yields exactly K injections even under concurrency.
+        self.injected[i]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                if v < self.cap[i] {
+                    Some(v + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Probe a slow site and, when it fires, sleep its configured delay.
+    /// Returns whether the stall was injected.
+    pub fn sleep_if(&self, site: Site) -> bool {
+        if !self.fire(site) {
+            return false;
+        }
+        let d = match site {
+            Site::ComputeSlow => self.compute_delay,
+            _ => self.io_delay,
+        };
+        std::thread::sleep(d);
+        true
+    }
+
+    /// The stall injected by [`Site::ComputeSlow`].
+    pub fn compute_delay(&self) -> Duration {
+        self.compute_delay
+    }
+
+    /// How many times a site has actually injected.
+    pub fn injected(&self, site: Site) -> usize {
+        self.injected[site.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Total injections across every site.
+    pub fn injected_total(&self) -> usize {
+        Site::ALL.iter().map(|&s| self.injected(s)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let p = FaultPlan::none();
+        assert!(!p.enabled());
+        for _ in 0..64 {
+            for &s in &Site::ALL {
+                assert!(!p.fire(s));
+            }
+        }
+        assert_eq!(p.injected_total(), 0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed_and_site_sequence() {
+        let trace = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::new(seed).with(Site::ComputePanic, 0.5);
+            (0..256).map(|_| p.fire(Site::ComputePanic)).collect()
+        };
+        assert_eq!(trace(7), trace(7), "same seed must replay identically");
+        assert_ne!(trace(7), trace(8), "different seeds must diverge");
+        let t = trace(7);
+        let fired = t.iter().filter(|&&b| b).count();
+        // ~0.5 probability over 256 calls: both outcomes well represented.
+        assert!(fired > 64 && fired < 192, "fired {fired}/256");
+    }
+
+    #[test]
+    fn sites_have_independent_decision_streams() {
+        let p = FaultPlan::new(3)
+            .with(Site::DiskReadFail, 0.5)
+            .with(Site::DiskWriteFail, 0.5);
+        let a: Vec<bool> = (0..128).map(|_| p.fire(Site::DiskReadFail)).collect();
+        let b: Vec<bool> = (0..128).map(|_| p.fire(Site::DiskWriteFail)).collect();
+        assert_ne!(a, b, "site salts must decorrelate the streams");
+    }
+
+    #[test]
+    fn budget_caps_injections_exactly() {
+        let p = FaultPlan::new(11)
+            .with(Site::ComputePanic, 1.0)
+            .budget(Site::ComputePanic, 2);
+        let fired: usize = (0..64).filter(|_| p.fire(Site::ComputePanic)).count();
+        assert_eq!(fired, 2, "budget must cap at exactly 2 injections");
+        assert_eq!(p.injected(Site::ComputePanic), 2);
+    }
+
+    #[test]
+    fn chaos_preset_arms_every_site() {
+        let p = FaultPlan::chaos(42);
+        assert!(p.enabled());
+        for &s in &Site::ALL {
+            let fired = (0..4096).filter(|_| p.fire(s)).count();
+            assert!(fired > 0, "site {} never fired under chaos", s.key());
+        }
+    }
+
+    #[test]
+    fn sleep_if_injects_the_configured_stall() {
+        let p = FaultPlan::new(1)
+            .with(Site::ComputeSlow, 1.0)
+            .delays(Duration::from_millis(1), Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        assert!(p.sleep_if(Site::ComputeSlow));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert!(!FaultPlan::none().sleep_if(Site::ComputeSlow));
+    }
+}

@@ -8,28 +8,44 @@
 //!
 //! * [`protocol`] — a strict recursive-descent JSON parser (the read-side
 //!   twin of [`crate::report::json`]) plus the typed request/response
-//!   envelopes of the JSON-lines wire protocol.
+//!   envelopes of the JSON-lines wire protocol, including the typed
+//!   service-error codes ([`protocol::ErrorCode`]) every failure maps to.
 //! * [`cache`] — a two-tier artifact cache: sharded in-memory LRU in front
 //!   of an on-disk store, keyed by
 //!   `(session::config_fingerprint, request kind, request detail)` with
-//!   versioned invalidation and byte-identical round-trips.
+//!   versioned invalidation, byte-identical round-trips, and crash-safe
+//!   recovery: every disk artifact carries a length+checksum trailer, and
+//!   corrupt/truncated files are quarantined and recomputed, never served.
 //! * [`server`] — a `std::net::TcpListener` JSON-lines server: fixed
 //!   worker-thread pool over a shared per-fingerprint [`DseSession`] pool,
-//!   single-flight deduplication of identical in-flight requests,
-//!   per-request timing, graceful shutdown, and the loopback client behind
-//!   `cgra-dse request`.
+//!   single-flight deduplication of identical in-flight requests, a
+//!   bounded compute pool with per-request deadlines (wedged computes are
+//!   abandoned and their threads replaced), admission control with load
+//!   shedding (`overloaded` + `retry_after_ms`), opt-in graceful
+//!   degradation to the fast configuration, per-request timing, graceful
+//!   shutdown, and the retrying loopback client behind `cgra-dse request`.
+//! * [`fault`] — the deterministic fault-injection plane behind
+//!   `serve --chaos <seed>`: a seeded [`fault::FaultPlan`] fires faults at
+//!   named sites (disk I/O, artifact corruption, compute panics/stalls,
+//!   client disconnects) so every defense above is testable on demand and
+//!   zero-cost when disabled.
 //!
-//! CLI: `cgra-dse serve --addr HOST:PORT --workers N --cache-dir DIR` and
-//! `cgra-dse request '<json>'`. See README §Serving for the quickstart and
-//! DESIGN.md §2b for the architecture (cache-key diagram, single-flight
-//! semantics, schema versioning).
+//! CLI: `cgra-dse serve --addr HOST:PORT --workers N --cache-dir DIR
+//! [--chaos SEED]` and `cgra-dse request '<json>' [--retries N]`. See
+//! README §Serving for the quickstart and DESIGN.md §2b for the
+//! architecture (cache-key diagram, single-flight semantics, schema
+//! versioning, failure envelope).
 //!
 //! [`DseSession`]: crate::session::DseSession
 
 pub mod cache;
+pub mod fault;
 pub mod protocol;
 pub mod server;
 
 pub use cache::{CacheKey, TieredCache, CACHE_SCHEMA_VERSION};
-pub use protocol::{parse, Envelope, ParseError, Request};
-pub use server::{request_once, ServeConfig, Server, ServerStats};
+pub use fault::{FaultPlan, Site};
+pub use protocol::{parse, Envelope, ErrorCode, ParseError, Request, ServiceError};
+pub use server::{
+    request_once, request_with_retry, RetryPolicy, ServeConfig, Server, ServerStats,
+};

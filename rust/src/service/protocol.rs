@@ -39,12 +39,22 @@
 //!
 //! ```json
 //! {"ok":true,"kind":"ladder","cached":"mem","elapsed_us":312,"body":{...}}
-//! {"ok":false,"error":"unknown app `nope`"}
+//! {"ok":false,"code":"bad_request","error":"unknown app `nope`"}
+//! {"ok":false,"code":"overloaded","retry_after_ms":100,"error":"compute queue full"}
 //! ```
 //!
 //! `cached` is one of `miss` (computed here), `mem`/`disk` (cache tier
 //! that answered), `flight` (deduplicated onto a concurrent identical
 //! in-flight request), or `live` (uncacheable: stats/version/shutdown).
+//!
+//! Error lines carry a typed [`ErrorCode`] in `code` (the failure
+//! envelope's contract: `bad_request`, `internal`, `deadline_exceeded`,
+//! `overloaded`), and `overloaded` additionally carries a
+//! `retry_after_ms` backoff hint honored by the retrying client. A
+//! request may opt into graceful degradation with `"degrade":true`: if
+//! its full-configuration compute would be load-shed, the server answers
+//! from the fast configuration instead and marks the response
+//! `"degraded":true`.
 
 use std::fmt;
 
@@ -380,7 +390,7 @@ impl Request {
     }
 }
 
-/// A request plus its envelope fields (`id`, `fast`).
+/// A request plus its envelope fields (`id`, `fast`, `degrade`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
     /// Opaque client tag, echoed back in the response.
@@ -388,6 +398,10 @@ pub struct Envelope {
     /// Serve under the server's fast configuration (separate fingerprint,
     /// separate cache entries).
     pub fast: bool,
+    /// Opt into graceful degradation: when this request's full-config
+    /// compute would be load-shed, serve the fast configuration instead
+    /// of answering `overloaded` (the response is marked `degraded`).
+    pub degrade: bool,
     pub req: Request,
 }
 
@@ -548,7 +562,18 @@ impl Envelope {
             None => false,
             Some(f) => f.as_bool().ok_or("envelope field `fast` must be a boolean")?,
         };
-        Ok(Envelope { id, fast, req })
+        let degrade = match v.get("degrade") {
+            None => false,
+            Some(d) => d
+                .as_bool()
+                .ok_or("envelope field `degrade` must be a boolean")?,
+        };
+        Ok(Envelope {
+            id,
+            fast,
+            degrade,
+            req,
+        })
     }
 
     /// Parse + decode one request line.
@@ -586,24 +611,133 @@ impl Envelope {
         if self.fast {
             pairs.push(("fast", Json::Bool(true)));
         }
+        if self.degrade {
+            pairs.push(("degrade", Json::Bool(true)));
+        }
         Json::obj(pairs)
     }
 }
 
 // ---- response envelope -------------------------------------------------
 
+/// The typed failure classes of the serving protocol — every error line
+/// carries exactly one in its `code` field. Clients branch on the code,
+/// not the human-readable `error` message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request itself is invalid (parse failure, unknown kind or
+    /// argument, capped parameter). Retrying the same line cannot help.
+    BadRequest,
+    /// The compute failed server-side (a panic, an I/O fault). The
+    /// request is well-formed; an identical retry recomputes fresh.
+    Internal,
+    /// The compute exceeded the server's per-request deadline and was
+    /// abandoned (its thread replaced). Retrying may hit a warm cache.
+    DeadlineExceeded,
+    /// Load-shed by admission control; `retry_after_ms` carries the
+    /// backoff hint. Retrying after the hint (or with `degrade`) helps.
+    Overloaded,
+}
+
+impl ErrorCode {
+    /// Stable wire tag.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Internal => "internal",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::Overloaded => "overloaded",
+        }
+    }
+}
+
+/// A typed service failure: code, human-readable message, and (for
+/// `overloaded`) the backoff hint. This is what the server's compute path
+/// returns on failure and what [`ServiceError::line`] renders on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceError {
+    pub code: ErrorCode,
+    pub msg: String,
+    /// Backoff hint in milliseconds (only set for [`ErrorCode::Overloaded`]).
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServiceError {
+    pub fn bad_request(msg: impl Into<String>) -> ServiceError {
+        ServiceError {
+            code: ErrorCode::BadRequest,
+            msg: msg.into(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn internal(msg: impl Into<String>) -> ServiceError {
+        ServiceError {
+            code: ErrorCode::Internal,
+            msg: msg.into(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn deadline_exceeded(msg: impl Into<String>) -> ServiceError {
+        ServiceError {
+            code: ErrorCode::DeadlineExceeded,
+            msg: msg.into(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn overloaded(msg: impl Into<String>, retry_after_ms: u64) -> ServiceError {
+        ServiceError {
+            code: ErrorCode::Overloaded,
+            msg: msg.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// Render the wire line for this failure.
+    pub fn line(&self, id: Option<&str>) -> String {
+        let mut s = String::with_capacity(self.msg.len() + 64);
+        s.push_str("{\"ok\":false");
+        if let Some(id) = id {
+            s.push_str(",\"id\":");
+            s.push_str(&Json::str(id).render());
+        }
+        s.push_str(",\"code\":\"");
+        s.push_str(self.code.as_str());
+        s.push('"');
+        if let Some(ms) = self.retry_after_ms {
+            s.push_str(",\"retry_after_ms\":");
+            s.push_str(&ms.to_string());
+        }
+        s.push_str(",\"error\":");
+        s.push_str(&Json::str(&self.msg).render());
+        s.push('}');
+        s
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.msg)
+    }
+}
+
 /// Render a success line. `body` is spliced in raw as the **last** field —
 /// cached artifacts are served byte-for-byte, and [`parse_response`] can
 /// recover the exact body slice (the byte sequence `,"body":` cannot occur
 /// inside any rendered string, since `"` is always escaped there).
+/// `degraded` marks a response served from the fast configuration because
+/// the requested full-config compute was load-shed.
 pub fn ok_line(
     id: Option<&str>,
     kind: &str,
     cached: &str,
     elapsed_us: u128,
+    degraded: bool,
     body: &str,
 ) -> String {
-    let mut s = String::with_capacity(body.len() + 80);
+    let mut s = String::with_capacity(body.len() + 96);
     s.push_str("{\"ok\":true");
     if let Some(id) = id {
         s.push_str(",\"id\":");
@@ -615,24 +749,19 @@ pub fn ok_line(
     s.push_str(&Json::str(cached).render());
     s.push_str(",\"elapsed_us\":");
     s.push_str(&elapsed_us.to_string());
+    if degraded {
+        s.push_str(",\"degraded\":true");
+    }
     s.push_str(",\"body\":");
     s.push_str(body);
     s.push('}');
     s
 }
 
-/// Render an error line.
+/// Render a `bad_request` error line (the framing-layer shim: malformed
+/// lines never decode far enough to carry a finer code).
 pub fn err_line(id: Option<&str>, msg: &str) -> String {
-    let mut s = String::with_capacity(msg.len() + 32);
-    s.push_str("{\"ok\":false");
-    if let Some(id) = id {
-        s.push_str(",\"id\":");
-        s.push_str(&Json::str(id).render());
-    }
-    s.push_str(",\"error\":");
-    s.push_str(&Json::str(msg).render());
-    s.push('}');
-    s
+    ServiceError::bad_request(msg).line(id)
 }
 
 /// A decoded response line.
@@ -644,7 +773,15 @@ pub struct ResponseView {
     /// `miss` | `mem` | `disk` | `flight` | `live` (absent on errors).
     pub cached: Option<String>,
     pub elapsed_us: Option<f64>,
+    /// Typed failure class (`bad_request` | `internal` |
+    /// `deadline_exceeded` | `overloaded`; errors only).
+    pub code: Option<String>,
+    /// Backoff hint in milliseconds (`overloaded` errors only).
+    pub retry_after_ms: Option<f64>,
     pub error: Option<String>,
+    /// Whether the server degraded this response to its fast
+    /// configuration because the full compute would have been shed.
+    pub degraded: bool,
     /// Parsed body value (success only).
     pub body: Option<Json>,
     /// The body's exact raw bytes as they appeared on the wire — the
@@ -681,7 +818,10 @@ pub fn parse_response(line: &str) -> Result<ResponseView, String> {
         kind: v.get("kind").and_then(Json::as_str).map(str::to_string),
         cached: v.get("cached").and_then(Json::as_str).map(str::to_string),
         elapsed_us: v.get("elapsed_us").and_then(Json::as_f64),
+        code: v.get("code").and_then(Json::as_str).map(str::to_string),
+        retry_after_ms: v.get("retry_after_ms").and_then(Json::as_f64),
         error: v.get("error").and_then(Json::as_str).map(str::to_string),
+        degraded: v.get("degraded").and_then(Json::as_bool).unwrap_or(false),
         body,
         body_raw,
     })
@@ -876,20 +1016,77 @@ mod tests {
     #[test]
     fn response_lines_roundtrip_with_raw_body() {
         let body = "{\"app\":\"camera\",\"n\":3}";
-        let line = ok_line(Some("id,\"body\":x"), "ladder", "mem", 1234, body);
+        let line = ok_line(Some("id,\"body\":x"), "ladder", "mem", 1234, false, body);
         let view = parse_response(&line).unwrap();
         assert!(view.ok);
         assert_eq!(view.id.as_deref(), Some("id,\"body\":x"));
         assert_eq!(view.kind.as_deref(), Some("ladder"));
         assert_eq!(view.cached.as_deref(), Some("mem"));
         assert_eq!(view.elapsed_us, Some(1234.0));
+        assert!(!view.degraded);
+        assert!(view.code.is_none());
         assert_eq!(view.body_raw.as_deref(), Some(body));
         assert_eq!(view.body, Some(parse(body).unwrap()));
 
         let e = parse_response(&err_line(None, "nope `x`")).unwrap();
         assert!(!e.ok);
+        assert_eq!(e.code.as_deref(), Some("bad_request"));
         assert_eq!(e.error.as_deref(), Some("nope `x`"));
         assert!(e.body_raw.is_none());
+    }
+
+    #[test]
+    fn degraded_responses_carry_the_flag_and_the_raw_body() {
+        let body = "{\"n\":1}";
+        let line = ok_line(None, "ladder", "miss", 7, true, body);
+        let view = parse_response(&line).unwrap();
+        assert!(view.ok);
+        assert!(view.degraded);
+        assert_eq!(view.body_raw.as_deref(), Some(body));
+        // The flag sits *before* the body so body-last splicing still holds.
+        assert!(line.contains(",\"degraded\":true,\"body\":"), "{line}");
+    }
+
+    #[test]
+    fn typed_error_lines_carry_code_and_retry_hint() {
+        let e = ServiceError::overloaded("compute queue full", 150);
+        let view = parse_response(&e.line(Some("7"))).unwrap();
+        assert!(!view.ok);
+        assert_eq!(view.id.as_deref(), Some("7"));
+        assert_eq!(view.code.as_deref(), Some("overloaded"));
+        assert_eq!(view.retry_after_ms, Some(150.0));
+        assert_eq!(view.error.as_deref(), Some("compute queue full"));
+
+        for (err, code) in [
+            (ServiceError::bad_request("b"), "bad_request"),
+            (ServiceError::internal("i"), "internal"),
+            (ServiceError::deadline_exceeded("d"), "deadline_exceeded"),
+        ] {
+            let view = parse_response(&err.line(None)).unwrap();
+            assert_eq!(view.code.as_deref(), Some(code));
+            assert!(view.retry_after_ms.is_none(), "{code}");
+            // Every typed line is itself strictly valid JSON.
+            assert!(parse(&err.line(None)).is_ok());
+        }
+        assert_eq!(ErrorCode::DeadlineExceeded.as_str(), "deadline_exceeded");
+        assert_eq!(
+            ServiceError::internal("boom").to_string(),
+            "internal: boom"
+        );
+    }
+
+    #[test]
+    fn degrade_flag_roundtrips_and_rejects_wrong_types() {
+        let env = Envelope::parse_line(r#"{"req":"ladder","app":"fft","degrade":true}"#).unwrap();
+        assert!(env.degrade);
+        let rendered = env.to_json().render();
+        assert_eq!(Envelope::parse_line(&rendered).unwrap(), env);
+        // Absent defaults to false and stays off the wire.
+        let plain = Envelope::parse_line(r#"{"req":"ladder","app":"fft"}"#).unwrap();
+        assert!(!plain.degrade);
+        assert!(!plain.to_json().render().contains("degrade"));
+        // Present-but-mistyped is an error, never a silent default.
+        assert!(Envelope::parse_line(r#"{"req":"ladder","app":"fft","degrade":"y"}"#).is_err());
     }
 
     #[test]

@@ -1,29 +1,55 @@
 //! The JSON-lines TCP server: a fixed worker-thread pool over a shared
 //! [`DseSession`] pool, fronted by the two-tier artifact cache
 //! ([`super::cache`]) with **single-flight deduplication** of identical
-//! in-flight requests, per-request timing, and graceful shutdown.
+//! in-flight requests, per-request timing, a bounded **compute pool** with
+//! per-request deadlines, admission control with load shedding, graceful
+//! degradation, and graceful shutdown.
 //!
 //! # Request lifecycle
 //!
 //! ```text
-//!   accept ──> worker ──> parse line ──> cache.get ──hit──> reply (mem|disk)
-//!                                          │ miss
-//!                                          ▼
-//!                                   flights: first?
-//!                                    │yes        │no
-//!                                    ▼           ▼
-//!                              compute once   wait on the leader's
-//!                              (session pool) condvar ("flight")
-//!                                    │           │
-//!                                    └── cache.put ──> reply
+//!   accept ──> backlog gauge ──full──> overloaded + retry_after_ms, drop
+//!      │ admitted
+//!      ▼
+//!   worker ──> parse line ──> cache.get ──hit──> reply (mem|disk)
+//!                                │ miss
+//!                                ▼
+//!                         flights: first?
+//!                          │yes        │no
+//!                          ▼           ▼
+//!                    compute pool   wait on the leader's
+//!                    (bounded queue,  condvar ("flight")
+//!                     deadline watch)   │
+//!                          │            │
+//!                          └── cache.put ──> reply
 //! ```
 //!
 //! Single-flight means N concurrent identical requests trigger exactly one
 //! pipeline execution: the first becomes the *leader* and computes; the
 //! rest block on the leader's flight and are answered from the same
-//! rendered artifact (`cached:"flight"`). Combined with the session's own
-//! stage memoization this gives the strong guarantee the integration tests
-//! pin: repeated or concurrent identical requests never recompute a stage.
+//! rendered artifact (`cached:"flight"`) — or the same **typed error**
+//! ([`ServiceError`]) when the leader's compute fails, so an injected
+//! panic broadcasts an `internal` error to every follower instead of
+//! hanging them. Combined with the session's own stage memoization this
+//! gives the strong guarantee the integration tests pin: repeated or
+//! concurrent identical requests never recompute a stage.
+//!
+//! # Failure envelope
+//!
+//! Pipeline computes run on a dedicated detached **compute pool**, not on
+//! the connection workers. The connection worker that submitted a job
+//! plays watchdog: it waits at most [`ServeConfig::deadline`] for the
+//! result; past it, the job is *abandoned* — the client gets a typed
+//! `deadline_exceeded` error immediately, and if a compute thread was
+//! actually wedged on the job a **replacement thread is spawned** before
+//! the wedged one retires, so the pool never shrinks. Admission control
+//! bounds both the compute queue ([`ServeConfig::compute_queue_max`]) and
+//! the accept backlog ([`ServeConfig::conn_backlog_max`]); both shed with
+//! a typed `overloaded` error carrying `retry_after_ms`. A request marked
+//! `degrade:true` whose full-config compute would be shed is served from
+//! the fast configuration instead (response marked `degraded:true`).
+//! Every counter is visible in `stats`, and the whole plane is
+//! chaos-testable via [`ServeConfig::faults`].
 //!
 //! Sessions are pooled per config fingerprint (the default config and the
 //! `fast:true` config each get one), so every worker shares one memoized
@@ -34,18 +60,22 @@
 //! A `shutdown` request flips the stop flag, wakes the accept loop with a
 //! loopback connection, and lets every worker drain its queue before the
 //! listener returns the final [`ServerStats`] — the CLI then exits 0.
+//! In-flight computes are bounded by the deadline, so the drain always
+//! terminates; abandoned compute threads are detached and cannot block
+//! exit.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::cache::{CacheKey, CacheStats, TieredCache, CACHE_SCHEMA_VERSION};
-use super::protocol::{self, Envelope, Request};
+use super::fault::{FaultPlan, Site};
+use super::protocol::{self, Envelope, ErrorCode, Request, ServiceError};
 use crate::coordinator;
 use crate::dse::DseConfig;
 use crate::frontend::DomainRegistry;
@@ -56,6 +86,7 @@ use crate::session::{
     config_fingerprint, report as sjson, DseSession, Stage, FINGERPRINT_SCHEMA_VERSION,
 };
 use crate::stress::{self, Mutation, StressConfig};
+use crate::util::SplitMix64;
 
 /// The reduced-effort configuration served for `fast:true` requests (and
 /// the CLI's `--fast` flag): coarser mining bounds, smaller merge ladder.
@@ -98,6 +129,28 @@ pub struct ServeConfig {
     /// Also bounds how long an idle persistent connection can delay a
     /// graceful shutdown's worker drain; `None` removes that bound.
     pub read_timeout: Option<Duration>,
+    /// Per-connection write timeout on the response path — a dead or
+    /// stalled reader trips it and is treated as a client disconnect, so
+    /// it can never wedge a worker mid-write. `None` removes the bound.
+    pub write_timeout: Option<Duration>,
+    /// Per-request compute budget. A compute still running past it is
+    /// abandoned: the client gets `deadline_exceeded`, and the wedged
+    /// compute thread is replaced so the pool never shrinks. `None`
+    /// removes the bound (and with it the drain-termination guarantee).
+    pub deadline: Option<Duration>,
+    /// Compute-pool thread count (0 = same as `workers`).
+    pub compute_threads: usize,
+    /// Admission bound on queued (not yet running) computes; at the bound
+    /// new computes are shed with `overloaded` + `retry_after_ms`.
+    pub compute_queue_max: usize,
+    /// Admission bound on accepted connections waiting for a worker; at
+    /// the bound new connections get one `overloaded` line and are closed.
+    pub conn_backlog_max: usize,
+    /// The `retry_after_ms` hint attached to `overloaded` responses.
+    pub shed_retry_ms: u64,
+    /// Fault-injection plan (`serve --chaos <seed>`); the default
+    /// disabled plan makes every injection site a dead branch.
+    pub faults: Arc<FaultPlan>,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +165,15 @@ impl Default for ServeConfig {
             session_threads: 0,
             max_line_bytes: 1 << 20,
             read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            // Generous: a cold `reproduce all` legitimately computes for
+            // minutes; the deadline exists to bound *wedged* computes.
+            deadline: Some(Duration::from_secs(600)),
+            compute_threads: 0,
+            compute_queue_max: 64,
+            conn_backlog_max: 128,
+            shed_retry_ms: 100,
+            faults: Arc::new(FaultPlan::none()),
         }
     }
 }
@@ -128,11 +190,22 @@ pub struct ServerStats {
     pub single_flight_waits: usize,
     /// Total stage computes across every pooled session.
     pub stage_computes_total: usize,
+    /// Requests shed by admission control (compute queue or accept
+    /// backlog at bound).
+    pub shed: usize,
+    /// Computes abandoned at the deadline.
+    pub deadline_exceeded: usize,
+    /// Requests served degraded (fast config after a would-be shed).
+    pub degraded: usize,
+    /// Corrupt disk artifacts detected and quarantined.
+    pub quarantined: usize,
+    /// Compute threads replaced after a deadline abandonment.
+    pub compute_replacements: usize,
 }
 
 enum FlightState {
     Pending,
-    Done(Result<Arc<String>, String>),
+    Done(Result<Arc<String>, ServiceError>),
 }
 
 struct Flight {
@@ -149,9 +222,87 @@ impl Flight {
     }
 }
 
+// ---- compute pool ------------------------------------------------------
+
+// Job lifecycle: QUEUED ──claim──> RUNNING ──> DONE
+//                   │                 │
+//                   └──── ABANDONED ──┘  (deadline: requester walked away)
+const JOB_QUEUED: u8 = 0;
+const JOB_RUNNING: u8 = 1;
+const JOB_ABANDONED: u8 = 2;
+const JOB_DONE: u8 = 3;
+
+type ComputeResult = Result<Arc<String>, ServiceError>;
+
+struct ComputeJob {
+    state: Arc<AtomicU8>,
+    run: Box<dyn FnOnce() -> ComputeResult + Send + 'static>,
+    done: mpsc::Sender<ComputeResult>,
+}
+
+/// State shared with the detached compute threads. Deliberately does NOT
+/// hold the job sender: the threads exit when the channel closes, which
+/// requires every sender to live outside this Arc (in [`Shared`]).
+struct ComputePoolState {
+    rx: Mutex<mpsc::Receiver<ComputeJob>>,
+    queued: AtomicUsize,
+    running: AtomicUsize,
+    threads: AtomicUsize,
+    replacements: AtomicUsize,
+}
+
+/// One detached compute thread: claim jobs, convert panics to typed
+/// errors, retire if abandoned mid-job (a replacement already exists).
+/// Detached rather than scoped on purpose — a wedged abandoned thread
+/// must not be joined by shutdown.
+fn spawn_compute_thread(state: Arc<ComputePoolState>) {
+    state.threads.fetch_add(1, Ordering::SeqCst);
+    std::thread::spawn(move || {
+        loop {
+            let job = {
+                let rx = state.rx.lock().unwrap_or_else(|e| e.into_inner());
+                rx.recv()
+            };
+            let Ok(job) = job else { break }; // channel closed: shutdown
+            state.queued.fetch_sub(1, Ordering::SeqCst);
+            let ComputeJob {
+                state: jstate,
+                run,
+                done,
+            } = job;
+            // Claim the job; a failure means the requester abandoned it
+            // while it was still queued — skip without running (nobody
+            // will read the result, and no thread was wedged).
+            if jstate
+                .compare_exchange(JOB_QUEUED, JOB_RUNNING, Ordering::SeqCst, Ordering::SeqCst)
+                .is_err()
+            {
+                continue;
+            }
+            state.running.fetch_add(1, Ordering::SeqCst);
+            // Panics inside the pipeline (coordinator `expect`s,
+            // worker-pool joins, injected chaos panics) become typed
+            // internal errors, never a dead compute thread.
+            let result = std::panic::catch_unwind(AssertUnwindSafe(run))
+                .unwrap_or_else(|p| Err(ServiceError::internal(panic_message(&p))));
+            state.running.fetch_sub(1, Ordering::SeqCst);
+            let prev = jstate.swap(JOB_DONE, Ordering::SeqCst);
+            let _ = done.send(result);
+            if prev == JOB_ABANDONED {
+                // The requester hit its deadline and spawned a replacement
+                // for this thread; retire so the pool size stays constant.
+                break;
+            }
+        }
+        state.threads.fetch_sub(1, Ordering::SeqCst);
+    });
+}
+
+// ---- shared server state -----------------------------------------------
+
 struct Shared {
     sc: ServeConfig,
-    cache: TieredCache,
+    cache: Arc<TieredCache>,
     /// Sessions are fixed at bind time (one per distinct config
     /// fingerprint — default and fast, shared when they coincide), so the
     /// per-request path never takes a pool lock or re-derives a
@@ -159,10 +310,22 @@ struct Shared {
     session_default: Arc<DseSession>,
     session_fast: Arc<DseSession>,
     flights: Mutex<HashMap<String, Arc<Flight>>>,
+    /// Job sender for the compute pool (mutex for `Sync`; `send` is brief).
+    /// Lives here — not in [`ComputePoolState`] — so dropping `Shared`
+    /// closes the channel and the detached compute threads exit.
+    compute_tx: Mutex<mpsc::Sender<ComputeJob>>,
+    compute: Arc<ComputePoolState>,
     stop: AtomicBool,
     requests: AtomicUsize,
     errors: AtomicUsize,
     flight_waits: AtomicUsize,
+    shed: AtomicUsize,
+    deadline_hits: AtomicUsize,
+    degraded: AtomicUsize,
+    /// Accepted connections queued for a worker (admission gauge).
+    conn_backlog: AtomicUsize,
+    /// Connections currently being served by a worker.
+    in_flight: AtomicUsize,
     started: Instant,
     local_addr: SocketAddr,
 }
@@ -212,6 +375,11 @@ impl Shared {
             misses: cs.misses,
             single_flight_waits: self.flight_waits.load(Ordering::Relaxed),
             stage_computes_total: total,
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_hits.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            quarantined: cs.quarantined,
+            compute_replacements: self.compute.replacements.load(Ordering::Relaxed),
         }
     }
 
@@ -249,7 +417,11 @@ impl Server {
     pub fn bind(sc: ServeConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(&sc.addr)?;
         let local_addr = listener.local_addr()?;
-        let cache = TieredCache::new(sc.mem_cache_entries, sc.cache_dir.as_deref())?;
+        let cache = Arc::new(TieredCache::with_faults(
+            sc.mem_cache_entries,
+            sc.cache_dir.as_deref(),
+            sc.faults.clone(),
+        )?);
         let threads = if sc.session_threads == 0 {
             default_width()
         } else {
@@ -270,6 +442,22 @@ impl Server {
         } else {
             build(sc.fast_cfg.clone())
         };
+        let (compute_tx, compute_rx) = mpsc::channel::<ComputeJob>();
+        let compute = Arc::new(ComputePoolState {
+            rx: Mutex::new(compute_rx),
+            queued: AtomicUsize::new(0),
+            running: AtomicUsize::new(0),
+            threads: AtomicUsize::new(0),
+            replacements: AtomicUsize::new(0),
+        });
+        let n_compute = if sc.compute_threads == 0 {
+            sc.workers.max(1)
+        } else {
+            sc.compute_threads
+        };
+        for _ in 0..n_compute {
+            spawn_compute_thread(compute.clone());
+        }
         Ok(Server {
             listener,
             shared: Arc::new(Shared {
@@ -278,10 +466,17 @@ impl Server {
                 session_default,
                 session_fast,
                 flights: Mutex::new(HashMap::new()),
+                compute_tx: Mutex::new(compute_tx),
+                compute,
                 stop: AtomicBool::new(false),
                 requests: AtomicUsize::new(0),
                 errors: AtomicUsize::new(0),
                 flight_waits: AtomicUsize::new(0),
+                shed: AtomicUsize::new(0),
+                deadline_hits: AtomicUsize::new(0),
+                degraded: AtomicUsize::new(0),
+                conn_backlog: AtomicUsize::new(0),
+                in_flight: AtomicUsize::new(0),
                 started: Instant::now(),
                 local_addr,
             }),
@@ -308,12 +503,29 @@ impl Server {
             }
             loop {
                 match self.listener.accept() {
-                    Ok((stream, _)) => {
+                    Ok((mut stream, _)) => {
                         if shared.stop.load(Ordering::SeqCst) {
                             break; // the wake connection (or a racing client)
                         }
                         let _ = stream.set_read_timeout(shared.sc.read_timeout);
-                        let _ = tx.send(stream);
+                        let _ = stream.set_write_timeout(shared.sc.write_timeout);
+                        // Accept-path admission: at the backlog bound, shed
+                        // with one typed line instead of queueing unboundedly.
+                        if shared.conn_backlog.load(Ordering::SeqCst)
+                            >= shared.sc.conn_backlog_max
+                        {
+                            shared.shed.fetch_add(1, Ordering::Relaxed);
+                            let err = ServiceError::overloaded(
+                                "connection backlog full",
+                                shared.sc.shed_retry_ms,
+                            );
+                            let _ = writeln!(stream, "{}", err.line(None));
+                            continue; // drop the connection
+                        }
+                        shared.conn_backlog.fetch_add(1, Ordering::SeqCst);
+                        if tx.send(stream).is_err() {
+                            shared.conn_backlog.fetch_sub(1, Ordering::SeqCst);
+                        }
                     }
                     Err(_) if shared.stop.load(Ordering::SeqCst) => break,
                     Err(e) => {
@@ -344,14 +556,21 @@ fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, shared: Arc<Shared>) {
             guard.recv()
         };
         match stream {
-            Ok(s) => handle_conn(s, &shared),
+            Ok(s) => {
+                shared.conn_backlog.fetch_sub(1, Ordering::SeqCst);
+                shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                handle_conn(s, &shared);
+                shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
             Err(_) => return, // channel closed: shutdown
         }
     }
 }
 
 /// Serve one connection: JSON-lines, one response line per request line,
-/// until EOF, a write failure, or an oversized/undecodable frame.
+/// until EOF, a write failure (including a write *timeout* — a stalled
+/// reader is treated as a disconnected client, never a wedged worker), or
+/// an oversized/undecodable frame.
 fn handle_conn(stream: TcpStream, shared: &Shared) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
@@ -399,6 +618,13 @@ fn handle_conn(stream: TcpStream, shared: &Shared) {
             continue;
         }
         let reply = handle_line(line, shared);
+        // Chaos: a mid-response client disconnect — half the line goes
+        // out, then the connection drops. The retrying client must treat
+        // the truncated frame as a transport failure and try again.
+        if shared.sc.faults.fire(Site::ClientDisconnect) {
+            let _ = out.write_all(&reply.as_bytes()[..reply.len() / 2]);
+            return;
+        }
         if writeln!(out, "{reply}").is_err() || out.flush().is_err() {
             return;
         }
@@ -422,32 +648,38 @@ fn handle_line(line: &str, shared: &Shared) -> String {
         Ok(e) => e,
         Err(msg) => {
             shared.errors.fetch_add(1, Ordering::Relaxed);
-            return protocol::err_line(id.as_deref(), &msg);
+            return ServiceError::bad_request(msg).line(id.as_deref());
         }
     };
     match serve_request(&env, shared) {
-        Ok((body, cached)) => protocol::ok_line(
+        Ok((body, cached, degraded)) => protocol::ok_line(
             id.as_deref(),
             env.req.kind(),
             cached,
             t0.elapsed().as_micros(),
+            degraded,
             &body,
         ),
-        Err(msg) => {
+        Err(err) => {
             shared.errors.fetch_add(1, Ordering::Relaxed);
-            protocol::err_line(id.as_deref(), &msg)
+            err.line(id.as_deref())
         }
     }
 }
 
-fn serve_request(env: &Envelope, shared: &Shared) -> Result<(Arc<String>, &'static str), String> {
+/// Serve one decoded request. The `bool` in the success triple marks a
+/// degraded (fast-config fallback) response.
+fn serve_request(
+    env: &Envelope,
+    shared: &Shared,
+) -> Result<(Arc<String>, &'static str, bool), ServiceError> {
     match &env.req {
-        Request::Stats => Ok((Arc::new(stats_body(shared)), "live")),
-        Request::Version => Ok((Arc::new(version_body()), "live")),
+        Request::Stats => Ok((Arc::new(stats_body(shared)), "live", false)),
+        Request::Version => Ok((Arc::new(version_body()), "live", false)),
         Request::Shutdown => {
             shared.stop.store(true, Ordering::SeqCst);
             shared.wake_acceptor();
-            Ok((Arc::new("{\"stopping\":true}".to_string()), "live"))
+            Ok((Arc::new("{\"stopping\":true}".to_string()), "live", false))
         }
         req => {
             let session = shared.session_for(env.fast);
@@ -462,8 +694,26 @@ fn serve_request(env: &Envelope, shared: &Shared) -> Result<(Arc<String>, &'stat
                 Request::Stress { .. } => stress_fingerprint(),
                 _ => session.fingerprint(),
             };
-            let key = CacheKey::new(fingerprint, req.kind(), detail);
-            serve_cached(shared, session, &key, req)
+            let key = CacheKey::new(fingerprint, req.kind(), detail.clone());
+            match serve_cached(shared, session, &key, req, false) {
+                // Graceful degradation: a shed full-config compute falls
+                // back to the fast pipeline when the client opted in (an
+                // already-fast request has nowhere lower to go). The
+                // fallback bypasses compute admission — it exists to
+                // answer *during* overload — but keeps the deadline.
+                Err(e) if e.code == ErrorCode::Overloaded && env.degrade && !env.fast => {
+                    shared.degraded.fetch_add(1, Ordering::Relaxed);
+                    let fsession = &shared.session_fast;
+                    let ffp = match req {
+                        Request::Stress { .. } => stress_fingerprint(),
+                        _ => fsession.fingerprint(),
+                    };
+                    let fkey = CacheKey::new(ffp, req.kind(), detail);
+                    serve_cached(shared, fsession, &fkey, req, true)
+                        .map(|(v, tag)| (v, tag, true))
+                }
+                other => other.map(|(v, tag)| (v, tag, false)),
+            }
         }
     }
 }
@@ -478,13 +728,15 @@ fn stress_fingerprint() -> u64 {
 }
 
 /// Cache lookup + single-flight compute. Exactly one leader per canonical
-/// key computes; concurrent identical requests wait and share its result.
+/// key computes; concurrent identical requests wait and share its result —
+/// or its typed error.
 fn serve_cached(
     shared: &Shared,
-    session: &DseSession,
+    session: &Arc<DseSession>,
     key: &CacheKey,
     req: &Request,
-) -> Result<(Arc<String>, &'static str), String> {
+    bypass_admission: bool,
+) -> Result<(Arc<String>, &'static str), ServiceError> {
     if let Some((val, tier)) = shared.cache.get(key) {
         return Ok((val, tier.tag()));
     }
@@ -506,23 +758,13 @@ fn serve_cached(
         // flights map empty right after a completion finds the artifact
         // here — no second pipeline execution, ever. (`recheck` skips miss
         // accounting; this key's miss was already counted above.)
-        let (result, tag): (Result<Arc<String>, String>, &'static str) =
-            match shared.cache.recheck(key) {
-                Some((val, tier)) => (Ok(val), tier.tag()),
-                None => {
-                    // Panics inside the pipeline (coordinator `expect`s,
-                    // worker-pool joins) become error responses, never a
-                    // dead worker thread.
-                    let result =
-                        std::panic::catch_unwind(AssertUnwindSafe(|| compute(req, session)))
-                            .unwrap_or_else(|p| Err(panic_message(&p)))
-                            .map(Arc::new);
-                    if let Ok(val) = &result {
-                        shared.cache.put(key, val.clone());
-                    }
-                    (result, "miss")
-                }
-            };
+        let (result, tag): (ComputeResult, &'static str) = match shared.cache.recheck(key) {
+            Some((val, tier)) => (Ok(val), tier.tag()),
+            None => (
+                submit_compute(shared, session, key, req, bypass_admission),
+                "miss",
+            ),
+        };
         shared
             .flights
             .lock()
@@ -549,6 +791,99 @@ fn serve_cached(
     }
 }
 
+/// Admission check + job submission + deadline watch. The calling
+/// connection worker is the watchdog for its own job: past the deadline it
+/// abandons the job, returns `deadline_exceeded`, and — when a compute
+/// thread was genuinely wedged running it — spawns the replacement.
+fn submit_compute(
+    shared: &Shared,
+    session: &Arc<DseSession>,
+    key: &CacheKey,
+    req: &Request,
+    bypass_admission: bool,
+) -> ComputeResult {
+    let pool = &shared.compute;
+    if !bypass_admission {
+        let queued = pool.queued.load(Ordering::SeqCst);
+        if queued >= shared.sc.compute_queue_max {
+            shared.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::overloaded(
+                format!("compute queue full ({queued} queued)"),
+                shared.sc.shed_retry_ms,
+            ));
+        }
+    }
+    let jstate = Arc::new(AtomicU8::new(JOB_QUEUED));
+    let (done_tx, done_rx) = mpsc::channel::<ComputeResult>();
+    // The job owns everything it touches (the compute pool outlives any
+    // single request, and an abandoned job may finish arbitrarily late).
+    // A late-finishing abandoned compute still publishes to the cache:
+    // the *next* identical request gets the artifact for free.
+    let faults = shared.sc.faults.clone();
+    let session = session.clone();
+    let cache = shared.cache.clone();
+    let key = key.clone();
+    let req = req.clone();
+    let run = Box::new(move || {
+        faults.sleep_if(Site::ComputeSlow);
+        if faults.fire(Site::ComputePanic) {
+            panic!("chaos: injected compute panic");
+        }
+        let body = Arc::new(compute(&req, &session)?);
+        cache.put(&key, body.clone());
+        Ok(body)
+    });
+    pool.queued.fetch_add(1, Ordering::SeqCst);
+    let sent = shared
+        .compute_tx
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .send(ComputeJob {
+            state: jstate.clone(),
+            run,
+            done: done_tx,
+        });
+    if sent.is_err() {
+        pool.queued.fetch_sub(1, Ordering::SeqCst);
+        return Err(ServiceError::internal("compute pool is shut down"));
+    }
+    let waited = match shared.sc.deadline {
+        Some(d) => done_rx.recv_timeout(d),
+        None => done_rx
+            .recv()
+            .map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+    };
+    match waited {
+        Ok(result) => result,
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            match jstate.swap(JOB_ABANDONED, Ordering::SeqCst) {
+                // Raced with completion: the result is on the channel (or
+                // a send away) — salvage it rather than waste the compute.
+                JOB_DONE => done_rx
+                    .recv_timeout(Duration::from_secs(1))
+                    .unwrap_or_else(|_| Err(ServiceError::internal("compute result lost"))),
+                prev => {
+                    if prev == JOB_RUNNING {
+                        // A thread is wedged on this job: replace it now;
+                        // the wedged one retires when (if) it finishes.
+                        pool.replacements.fetch_add(1, Ordering::SeqCst);
+                        spawn_compute_thread(pool.clone());
+                    }
+                    shared.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                    let d = shared.sc.deadline.unwrap_or_default();
+                    Err(ServiceError::deadline_exceeded(format!(
+                        "compute exceeded the {} ms deadline",
+                        d.as_millis()
+                    )))
+                }
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err(ServiceError::internal("compute pool is shut down"))
+        }
+    }
+}
+
 fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
     let msg = p
         .downcast_ref::<&str>()
@@ -560,25 +895,27 @@ fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
 
 /// Execute one cacheable request against a pooled session and render its
 /// artifact body (a single-line JSON document).
-fn compute(req: &Request, session: &DseSession) -> Result<String, String> {
+fn compute(req: &Request, session: &DseSession) -> Result<String, ServiceError> {
     match req {
         Request::Mine { app } => {
             let stages = session
                 .app(app)
-                .ok_or_else(|| format!("unknown app `{app}`"))?;
+                .ok_or_else(|| ServiceError::bad_request(format!("unknown app `{app}`")))?;
             Ok(sjson::ranked_json(app, &stages.ranked()).render())
         }
         Request::Ladder { app } => {
             let stages = session
                 .app(app)
-                .ok_or_else(|| format!("unknown app `{app}`"))?;
+                .ok_or_else(|| ServiceError::bad_request(format!("unknown app `{app}`")))?;
             Ok(sjson::ladder_json(app, &stages.ladder()).render())
         }
         Request::DomainPe { domain } => {
             let dom = DomainRegistry::domain(domain)
-                .ok_or_else(|| format!("unknown domain `{domain}`"))?;
+                .ok_or_else(|| ServiceError::bad_request(format!("unknown domain `{domain}`")))?;
             let fig = dom.fig.as_ref().ok_or_else(|| {
-                format!("domain `{domain}` drives no domain-PE experiment")
+                ServiceError::bad_request(format!(
+                    "domain `{domain}` drives no domain-PE experiment"
+                ))
             })?;
             let (_text, rows) = coordinator::domain_fig_for(session, dom.key);
             Ok(sjson::domain_json(fig.pe_name, &rows).render())
@@ -629,7 +966,7 @@ fn stats_body(shared: &Shared) -> String {
         .map(|(k, n)| (k.to_string(), Json::int(n)))
         .collect();
     stage_pairs.push(("total".to_string(), Json::int(total)));
-    Json::obj(vec![
+    let mut pairs = vec![
         (
             "uptime_ms",
             Json::num(shared.started.elapsed().as_millis() as f64),
@@ -641,9 +978,37 @@ fn stats_body(shared: &Shared) -> String {
         ("misses", Json::int(cs.misses)),
         ("stores", Json::int(cs.stores)),
         ("mem_entries", Json::int(cs.mem_entries)),
+        ("quarantined", Json::int(cs.quarantined)),
         (
             "single_flight_waits",
             Json::int(shared.flight_waits.load(Ordering::Relaxed)),
+        ),
+        ("shed", Json::int(shared.shed.load(Ordering::Relaxed))),
+        (
+            "deadline_exceeded",
+            Json::int(shared.deadline_hits.load(Ordering::Relaxed)),
+        ),
+        ("degraded", Json::int(shared.degraded.load(Ordering::Relaxed))),
+        (
+            "conn_backlog",
+            Json::int(shared.conn_backlog.load(Ordering::SeqCst)),
+        ),
+        ("in_flight", Json::int(shared.in_flight.load(Ordering::SeqCst))),
+        (
+            "compute_queued",
+            Json::int(shared.compute.queued.load(Ordering::SeqCst)),
+        ),
+        (
+            "compute_running",
+            Json::int(shared.compute.running.load(Ordering::SeqCst)),
+        ),
+        (
+            "compute_threads",
+            Json::int(shared.compute.threads.load(Ordering::SeqCst)),
+        ),
+        (
+            "compute_replacements",
+            Json::int(shared.compute.replacements.load(Ordering::SeqCst)),
         ),
         ("sessions", Json::int(sessions)),
         ("stage_computes", Json::Obj(stage_pairs)),
@@ -652,8 +1017,17 @@ fn stats_body(shared: &Shared) -> String {
             Json::int(FINGERPRINT_SCHEMA_VERSION as usize),
         ),
         ("cache_schema", Json::int(CACHE_SCHEMA_VERSION as usize)),
-    ])
-    .render()
+    ];
+    // Under chaos, surface per-site injection counts so soaks can assert
+    // the plan actually exercised what it claims to.
+    if shared.sc.faults.enabled() {
+        let sites: Vec<(String, Json)> = Site::ALL
+            .iter()
+            .map(|&s| (s.key().to_string(), Json::int(shared.sc.faults.injected(s))))
+            .collect();
+        pairs.push(("chaos", Json::Obj(sites)));
+    }
+    Json::obj(pairs).render()
 }
 
 /// Body of the `version` request (the CLI `version` subcommand prints the
@@ -670,15 +1044,27 @@ pub fn version_body() -> String {
     .render()
 }
 
-/// Loopback client: connect (retrying until `timeout_ms` — the server may
+// ---- loopback client ---------------------------------------------------
+
+/// Loopback client: connect (retrying until the deadline — the server may
 /// still be starting), send one request line, return the raw response
-/// line. `timeout_ms` bounds **connection establishment only**; the wait
-/// for the response is deliberately unbounded, because a cold
-/// `reproduce all` legitimately computes for minutes. Used by `cgra-dse
+/// line. `timeout_ms` is a true **end-to-end deadline**: it bounds
+/// connection establishment, the request write, and the response wait
+/// (via socket read/write timeouts set from the remaining budget), so a
+/// stalled or wedged server can never hang the caller. Used by `cgra-dse
 /// request`, the CI smoke job, the throughput bench, and the integration
-/// tests.
+/// tests. Size `timeout_ms` to the request: a cold `reproduce all`
+/// legitimately computes for minutes.
 pub fn request_once(addr: &str, line: &str, timeout_ms: u64) -> Result<String, String> {
     let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    let remaining = |what: &str| -> Result<Duration, String> {
+        let now = Instant::now();
+        if now >= deadline {
+            Err(format!("{what}: end-to-end timeout ({timeout_ms} ms) exhausted"))
+        } else {
+            Ok(deadline - now)
+        }
+    };
     let stream = loop {
         match TcpStream::connect(addr) {
             Ok(s) => break s,
@@ -690,18 +1076,132 @@ pub fn request_once(addr: &str, line: &str, timeout_ms: u64) -> Result<String, S
             }
         }
     };
+    stream
+        .set_write_timeout(Some(remaining("send")?))
+        .map_err(|e| format!("set write timeout: {e}"))?;
     let mut out = stream.try_clone().map_err(|e| format!("clone: {e}"))?;
-    writeln!(out, "{line}").map_err(|e| format!("send: {e}"))?;
-    out.flush().map_err(|e| format!("flush: {e}"))?;
+    writeln!(out, "{line}").map_err(|e| io_deadline_err("send", e))?;
+    out.flush().map_err(|e| io_deadline_err("flush", e))?;
+    stream
+        .set_read_timeout(Some(remaining("recv")?))
+        .map_err(|e| format!("set read timeout: {e}"))?;
     let mut reader = BufReader::new(stream);
     let mut resp = String::new();
     reader
         .read_line(&mut resp)
-        .map_err(|e| format!("recv: {e}"))?;
+        .map_err(|e| io_deadline_err("recv", e))?;
     if resp.is_empty() {
         return Err("server closed the connection without a response".to_string());
     }
+    if !resp.ends_with('\n') {
+        // A frame without its newline means the connection died
+        // mid-response — surface it as the transport failure it is, so
+        // the retry layer re-asks instead of parsing half a line.
+        return Err("connection closed mid-response (truncated line)".to_string());
+    }
     Ok(resp.trim_end().to_string())
+}
+
+fn io_deadline_err(what: &str, e: std::io::Error) -> String {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            format!("{what}: timed out (end-to-end deadline)")
+        }
+        _ => format!("{what}: {e}"),
+    }
+}
+
+/// Client retry policy: capped exponential backoff with deterministic
+/// jitter, honoring the server's `retry_after_ms` hint as a floor.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts (first try + retries); min 1.
+    pub attempts: usize,
+    /// Backoff base: retry k (1-based) waits ~`base_ms << (k-1)`.
+    pub base_ms: u64,
+    /// Ceiling on any single wait.
+    pub cap_ms: u64,
+    /// Jitter seed (vary per process so synchronized clients spread out).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 3,
+            base_ms: 50,
+            cap_ms: 2000,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The wait before retry `retry` (1-based), given the server's
+    /// `retry_after_ms` hint from the previous response. Deterministic in
+    /// `(seed, retry)`: jittered into `[raw/2, raw]`, floored at the hint,
+    /// capped at `cap_ms`.
+    pub fn delay_ms(&self, retry: usize, hint: Option<u64>) -> u64 {
+        let shift = (retry.saturating_sub(1)).min(16) as u32;
+        let exp = self.base_ms.saturating_mul(1u64 << shift);
+        let hint = hint.unwrap_or(0);
+        let raw = exp.max(hint).min(self.cap_ms.max(1));
+        let mut rng = SplitMix64::new(self.seed ^ (retry as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let jittered = raw / 2 + rng.below((raw / 2 + 1) as usize) as u64;
+        jittered.max(hint.min(self.cap_ms))
+    }
+}
+
+/// [`request_once`] under a [`RetryPolicy`]: transport failures (connect,
+/// timeout, mid-response disconnect), garbled response lines, and the
+/// retryable typed errors (`overloaded` — honoring its `retry_after_ms` —
+/// plus `internal` and `deadline_exceeded`, which an identical retry may
+/// recompute or find warm in cache) are retried with backoff. Success and
+/// `bad_request` return immediately. When every attempt fails, the last
+/// response line (if any attempt got one) is returned `Ok` so the caller
+/// still sees the typed error; otherwise the last transport error.
+pub fn request_with_retry(
+    addr: &str,
+    line: &str,
+    timeout_ms: u64,
+    policy: &RetryPolicy,
+) -> Result<String, String> {
+    let attempts = policy.attempts.max(1);
+    let mut hint: Option<u64> = None;
+    let mut last: Result<String, String> = Err("no attempts made".to_string());
+    for attempt in 1..=attempts {
+        if attempt > 1 {
+            std::thread::sleep(Duration::from_millis(policy.delay_ms(attempt - 1, hint)));
+        }
+        match request_once(addr, line, timeout_ms) {
+            Ok(resp) => {
+                let retryable = match protocol::parse_response(&resp) {
+                    Ok(view) => {
+                        hint = view.retry_after_ms.map(|ms| ms as u64);
+                        !view.ok
+                            && matches!(
+                                view.code.as_deref(),
+                                Some("overloaded") | Some("internal") | Some("deadline_exceeded")
+                            )
+                    }
+                    // A garbled line is a transport-class failure.
+                    Err(_) => {
+                        hint = None;
+                        true
+                    }
+                };
+                if !retryable {
+                    return Ok(resp);
+                }
+                last = Ok(resp);
+            }
+            Err(e) => {
+                hint = None;
+                last = Err(e);
+            }
+        }
+    }
+    last
 }
 
 #[cfg(test)]
@@ -727,5 +1227,29 @@ mod tests {
             v.get("fingerprint_schema").and_then(Json::as_usize),
             Some(FINGERPRINT_SCHEMA_VERSION as usize)
         );
+    }
+
+    #[test]
+    fn retry_delays_backoff_cap_and_honor_the_hint() {
+        let p = RetryPolicy {
+            attempts: 5,
+            base_ms: 50,
+            cap_ms: 1000,
+            seed: 9,
+        };
+        // Deterministic per (seed, retry).
+        assert_eq!(p.delay_ms(1, None), p.delay_ms(1, None));
+        // Jitter stays within [raw/2, raw].
+        for retry in 1..=6 {
+            let exp = 50u64 << (retry - 1).min(16);
+            let raw = exp.min(1000);
+            let d = p.delay_ms(retry as usize, None);
+            assert!(d >= raw / 2 && d <= raw, "retry {retry}: {d} vs raw {raw}");
+        }
+        // The cap bounds every wait, even deep retries.
+        assert!(p.delay_ms(60, None) <= 1000);
+        // The server hint floors the wait (up to the cap).
+        assert!(p.delay_ms(1, Some(400)) >= 400);
+        assert!(p.delay_ms(1, Some(30_000)) <= 1000, "cap beats the hint");
     }
 }

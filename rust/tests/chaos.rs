@@ -1,0 +1,466 @@
+//! Chaos tests for the serving layer's failure envelope: each defense the
+//! fault-injection plane (`service::fault`) exists to prove is exercised
+//! here with the fault armed — every one of these fails without its
+//! defense:
+//!
+//! * **deadlines** — an injected compute stall gets a typed
+//!   `deadline_exceeded` error and the compute pool never shrinks;
+//! * **admission control** — a full compute queue or accept backlog sheds
+//!   with `overloaded` + `retry_after_ms` instead of queueing unboundedly;
+//! * **graceful degradation** — a `degrade:true` request that would be
+//!   shed is served from the fast configuration, marked `degraded:true`;
+//! * **crash-safe cache** — an injected truncated artifact write is
+//!   detected on the next cold read, quarantined, and recomputed
+//!   byte-identically;
+//! * **client retry** — an injected mid-response disconnect surfaces as a
+//!   transport error from `request_once` and is absorbed by
+//!   `request_with_retry`;
+//! * **single-flight error broadcast** — an injected leader panic answers
+//!   every follower with a typed `internal` error, never a hang;
+//! * and the end-to-end client deadline (a server that accepts and never
+//!   responds cannot hang `request_once`).
+//!
+//! Everything runs on loopback with ephemeral ports and per-test temp
+//! dirs, like `rust/tests/service.rs`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use cgra_dse::dse::DseConfig;
+use cgra_dse::mining::MinerConfig;
+use cgra_dse::report::json::Json;
+use cgra_dse::service::protocol::{self, ResponseView};
+use cgra_dse::service::server::{
+    request_once, request_with_retry, RetryPolicy, ServeConfig, Server, ServerStats,
+};
+use cgra_dse::service::{FaultPlan, Site};
+
+/// Cheap full-effort config (distinct fingerprint from `fast_cfg`, so the
+/// degraded fallback demonstrably serves a *different* configuration).
+fn full_cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 500,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+fn fast_cfg() -> DseConfig {
+    DseConfig {
+        miner: MinerConfig {
+            min_support: 3,
+            max_nodes: 4,
+            max_patterns: 400,
+            ..Default::default()
+        },
+        max_merged: 2,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg(faults: FaultPlan) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        cfg: full_cfg(),
+        fast_cfg: fast_cfg(),
+        session_threads: 2,
+        faults: Arc::new(faults),
+        ..Default::default()
+    }
+}
+
+type ServerHandle = std::thread::JoinHandle<std::io::Result<ServerStats>>;
+
+fn spawn_server(sc: ServeConfig) -> (String, ServerHandle) {
+    let server = Server::bind(sc).expect("bind 127.0.0.1:0");
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn req(addr: &str, line: &str) -> ResponseView {
+    let raw = request_once(addr, line, 30_000).expect("request");
+    protocol::parse_response(&raw).expect("well-formed response line")
+}
+
+fn shutdown(addr: &str, handle: ServerHandle) -> ServerStats {
+    // Under chaos the shutdown response itself can be disconnect-injected;
+    // the stop flag is set server-side regardless, so tolerate a failed
+    // reply and insist only on the clean join.
+    let _ = request_with_retry(
+        addr,
+        "{\"req\":\"shutdown\"}",
+        10_000,
+        &RetryPolicy { attempts: 3, ..Default::default() },
+    );
+    handle
+        .join()
+        .expect("server thread")
+        .expect("clean server exit")
+}
+
+fn stats_field(addr: &str, field: &str) -> usize {
+    let view = req(addr, "{\"req\":\"stats\"}");
+    assert!(view.ok);
+    view.body
+        .as_ref()
+        .and_then(|b| b.get(field))
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("stats body missing `{field}`"))
+}
+
+// ---- defense 1: deadlines ------------------------------------------------
+
+#[test]
+fn over_deadline_compute_gets_typed_error_and_the_pool_never_shrinks() {
+    // One injected 1500 ms stall against a 150 ms deadline. Without the
+    // watchdog this request blocks its worker for the stall's full length
+    // and the client sees nothing for 1.5 s; with it, the client gets a
+    // typed `deadline_exceeded` promptly and a replacement compute thread
+    // keeps the pool at full strength.
+    let faults = FaultPlan::new(7)
+        .with(Site::ComputeSlow, 1.0)
+        .budget(Site::ComputeSlow, 1)
+        .delays(Duration::from_millis(5), Duration::from_millis(1500));
+    let sc = ServeConfig {
+        deadline: Some(Duration::from_millis(150)),
+        ..serve_cfg(faults)
+    };
+    let workers = sc.workers;
+    let (addr, handle) = spawn_server(sc);
+
+    let t0 = Instant::now();
+    let view = req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\",\"id\":\"dl\"}");
+    assert!(!view.ok, "the stalled compute must not succeed");
+    assert_eq!(view.code.as_deref(), Some("deadline_exceeded"));
+    assert_eq!(view.id.as_deref(), Some("dl"), "id echoed on typed errors");
+    assert!(
+        t0.elapsed() < Duration::from_millis(1200),
+        "the client must be answered at the deadline, not the stall length"
+    );
+    assert_eq!(stats_field(&addr, "deadline_exceeded"), 1);
+    assert!(stats_field(&addr, "compute_replacements") >= 1);
+
+    // Let the abandoned compute finish and its thread retire, then verify
+    // the pool is back at (at least) full strength and still serves.
+    std::thread::sleep(Duration::from_millis(2000));
+    assert!(
+        stats_field(&addr, "compute_threads") >= workers,
+        "the compute pool must never shrink below its configured size"
+    );
+    let again = req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}");
+    assert!(again.ok, "after the deadline hit, identical requests succeed");
+    shutdown(&addr, handle);
+}
+
+// ---- defenses 2+3: admission control and graceful degradation -----------
+
+#[test]
+fn full_compute_queue_sheds_with_retry_hint_and_degrade_serves_fast() {
+    // One compute thread, queue bound 1: two slow computes saturate the
+    // pool (one running, one queued), so a third full request is shed with
+    // `overloaded` + `retry_after_ms` — and the same request with
+    // `degrade:true` is answered from the fast configuration instead.
+    let faults = FaultPlan::new(11)
+        .with(Site::ComputeSlow, 1.0)
+        .budget(Site::ComputeSlow, 2)
+        .delays(Duration::from_millis(5), Duration::from_millis(900));
+    let sc = ServeConfig {
+        compute_threads: 1,
+        compute_queue_max: 1,
+        shed_retry_ms: 250,
+        ..serve_cfg(faults)
+    };
+    let (addr, handle) = spawn_server(sc);
+
+    let saturate: Vec<_> = ["gaussian", "conv"]
+        .into_iter()
+        .map(|app| {
+            let addr = addr.clone();
+            let line = format!("{{\"req\":\"ladder\",\"app\":\"{app}\"}}");
+            std::thread::spawn(move || req(&addr, &line))
+        })
+        .collect();
+    // Let both saturating computes reach the pool (one running, one queued).
+    std::thread::sleep(Duration::from_millis(300));
+
+    let shed = req(&addr, "{\"req\":\"ladder\",\"app\":\"block\"}");
+    assert!(!shed.ok, "the third compute must be shed, not queued");
+    assert_eq!(shed.code.as_deref(), Some("overloaded"));
+    assert_eq!(
+        shed.retry_after_ms.map(|ms| ms as u64),
+        Some(250),
+        "overloaded must carry the configured retry_after_ms hint"
+    );
+
+    let degraded = req(&addr, "{\"req\":\"ladder\",\"app\":\"block\",\"degrade\":true}");
+    assert!(
+        degraded.ok,
+        "degrade:true must be served, not shed: {:?}",
+        degraded.error
+    );
+    assert!(degraded.degraded, "the response must be marked degraded");
+
+    for t in saturate {
+        let v = t.join().unwrap();
+        assert!(v.ok, "saturating computes finish normally: {:?}", v.error);
+    }
+    assert!(stats_field(&addr, "shed") >= 2, "both full requests counted");
+    assert_eq!(stats_field(&addr, "degraded"), 1);
+    let stats = shutdown(&addr, handle);
+    assert!(stats.shed >= 2);
+    assert_eq!(stats.degraded, 1);
+}
+
+// ---- defense: single-flight error broadcast (leader panic) --------------
+
+#[test]
+fn injected_leader_panic_broadcasts_typed_errors_then_recovers() {
+    // Satellite: a single-flight leader killed by an injected panic must
+    // answer every follower with a typed `internal` error — not strand
+    // them on the condvar — and the next identical request recomputes.
+    let faults = FaultPlan::new(5)
+        .with(Site::ComputePanic, 1.0)
+        .budget(Site::ComputePanic, 1);
+    let (addr, handle) = spawn_server(serve_cfg(faults));
+
+    const N: usize = 4;
+    let barrier = Arc::new(Barrier::new(N));
+    let clients: Vec<_> = (0..N)
+        .map(|_| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}")
+            })
+        })
+        .collect();
+    let views: Vec<ResponseView> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let panicked: Vec<&ResponseView> = views.iter().filter(|v| !v.ok).collect();
+    assert!(
+        !panicked.is_empty(),
+        "the injected panic must surface to the flight's requests"
+    );
+    for v in &panicked {
+        assert_eq!(v.code.as_deref(), Some("internal"));
+        assert!(
+            v.error.as_deref().unwrap_or("").contains("injected compute panic"),
+            "the panic payload is carried in the error: {:?}",
+            v.error
+        );
+    }
+    // Requests that arrived after the failed flight dissolved may have
+    // recomputed successfully (the panic budget is 1) — both outcomes are
+    // legal; a hang or a non-typed reply is not.
+
+    // The panic was caught inside the compute thread: no replacement
+    // machinery fired, and the next identical request recomputes cleanly.
+    assert_eq!(stats_field(&addr, "compute_replacements"), 0);
+    let retry = req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}");
+    assert!(retry.ok, "after the panic, recompute succeeds: {:?}", retry.error);
+    shutdown(&addr, handle);
+}
+
+// ---- defense 4: crash-safe cache under injected corruption --------------
+
+#[test]
+fn injected_artifact_truncation_is_quarantined_and_recomputed_on_restart() {
+    let dir = std::env::temp_dir().join(format!("cgra_chaos_trunc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let line = "{\"req\":\"mine\",\"app\":\"gaussian\"}";
+
+    // The chaos server truncates the one artifact it writes to disk; its
+    // own reply is healthy (served from the in-memory value).
+    let faults = FaultPlan::new(3)
+        .with(Site::ArtifactTruncate, 1.0)
+        .budget(Site::ArtifactTruncate, 1);
+    let sc = ServeConfig { cache_dir: Some(dir.clone()), ..serve_cfg(faults) };
+    let (addr, handle) = spawn_server(sc);
+    let golden = req(&addr, line);
+    assert!(golden.ok, "{:?}", golden.error);
+    shutdown(&addr, handle);
+
+    // A chaos-free restart cold-reads the truncated file: it must be
+    // quarantined and the artifact recomputed byte-identically — never
+    // served corrupt, never panicked on.
+    let sc = ServeConfig { cache_dir: Some(dir.clone()), ..serve_cfg(FaultPlan::none()) };
+    let (addr, handle) = spawn_server(sc);
+    let healed = req(&addr, line);
+    assert!(healed.ok, "{:?}", healed.error);
+    assert_eq!(healed.cached.as_deref(), Some("miss"));
+    assert_eq!(healed.body_raw, golden.body_raw, "recompute is byte-identical");
+    assert_eq!(stats_field(&addr, "quarantined"), 1);
+    assert!(
+        dir.join("quarantine").read_dir().map(|d| d.count()).unwrap_or(0) == 1,
+        "the truncated file is preserved for post-mortem"
+    );
+    let stats = shutdown(&addr, handle);
+    assert_eq!(stats.quarantined, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- defense 5: client retry vs injected disconnects --------------------
+
+#[test]
+fn mid_response_disconnect_fails_request_once_and_is_absorbed_by_retry() {
+    let faults = FaultPlan::new(13)
+        .with(Site::ClientDisconnect, 1.0)
+        .budget(Site::ClientDisconnect, 1);
+    let (addr, handle) = spawn_server(serve_cfg(faults));
+
+    // The injected disconnect truncates the first response mid-line:
+    // request_once must surface a transport error, not half a frame.
+    let first = request_once(&addr, "{\"req\":\"version\"}", 10_000);
+    assert!(
+        first.is_err(),
+        "a truncated response must be a transport error, got {first:?}"
+    );
+
+    // The retrying client absorbs it (the disconnect budget is spent).
+    let policy = RetryPolicy { attempts: 3, base_ms: 20, ..Default::default() };
+    let raw = request_with_retry(&addr, "{\"req\":\"version\"}", 10_000, &policy)
+        .expect("retry succeeds after the injected disconnect");
+    let view = protocol::parse_response(&raw).expect("parse");
+    assert!(view.ok);
+    shutdown(&addr, handle);
+}
+
+// ---- satellite: request_once end-to-end deadline ------------------------
+
+#[test]
+fn request_once_timeout_is_end_to_end_not_just_connect() {
+    // A server that accepts and never responds: before the fix,
+    // `timeout_ms` only bounded connect and this hung forever.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let hold = std::thread::spawn(move || {
+        // Hold the connection open, read nothing, answer nothing.
+        let conn = listener.accept().map(|(s, _)| s);
+        std::thread::sleep(Duration::from_millis(3000));
+        drop(conn);
+    });
+
+    let t0 = Instant::now();
+    let res = request_once(&addr, "{\"req\":\"stats\"}", 400);
+    let elapsed = t0.elapsed();
+    assert!(res.is_err(), "a silent server must time out, got {res:?}");
+    let msg = res.unwrap_err();
+    assert!(
+        msg.contains("timed out") || msg.contains("timeout"),
+        "the error names the deadline: {msg}"
+    );
+    assert!(
+        elapsed >= Duration::from_millis(300) && elapsed < Duration::from_millis(2500),
+        "bounded by the end-to-end deadline, not the server: {elapsed:?}"
+    );
+    hold.join().unwrap();
+}
+
+// ---- accept-path admission control --------------------------------------
+
+#[test]
+fn accept_backlog_overflow_sheds_connections_with_a_typed_line() {
+    // One worker, backlog bound 1: the first connection occupies the
+    // worker, the second fills the backlog, the third must be answered
+    // `overloaded` immediately by the acceptor and closed.
+    let sc = ServeConfig {
+        workers: 1,
+        conn_backlog_max: 1,
+        shed_retry_ms: 123,
+        ..serve_cfg(FaultPlan::none())
+    };
+    let (addr, handle) = spawn_server(sc);
+
+    let s1 = TcpStream::connect(&addr).expect("conn 1");
+    std::thread::sleep(Duration::from_millis(200)); // worker takes s1
+    let _s2 = TcpStream::connect(&addr).expect("conn 2"); // queued
+    std::thread::sleep(Duration::from_millis(200));
+
+    let s3 = TcpStream::connect(&addr).expect("conn 3");
+    let mut line = String::new();
+    BufReader::new(&s3)
+        .read_line(&mut line)
+        .expect("the shed line arrives without sending anything");
+    let view = protocol::parse_response(&line).expect("typed shed line");
+    assert!(!view.ok);
+    assert_eq!(view.code.as_deref(), Some("overloaded"));
+    assert_eq!(view.retry_after_ms.map(|ms| ms as u64), Some(123));
+    drop(s3);
+
+    // The admitted connections still work: drive shutdown over s1.
+    let mut out = s1.try_clone().unwrap();
+    writeln!(out, "{{\"req\":\"shutdown\"}}").unwrap();
+    let mut resp = String::new();
+    BufReader::new(&s1).read_line(&mut resp).unwrap();
+    assert!(protocol::parse_response(&resp).expect("shutdown reply").ok);
+    let stats = handle.join().expect("server thread").expect("clean exit");
+    assert!(stats.shed >= 1, "the acceptor counted the shed connection");
+}
+
+// ---- the whole envelope: mixed soak under full chaos ---------------------
+
+#[test]
+fn chaos_soak_answers_every_request_well_formed_and_shuts_down_cleanly() {
+    // The acceptance invariant in miniature (CI runs the 256-request
+    // version against the real binary): under the full chaos preset every
+    // request gets a well-formed response — success or a typed error —
+    // and the server drains and exits cleanly.
+    let dir = std::env::temp_dir().join(format!("cgra_chaos_soak_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let faults = FaultPlan::chaos(0xC0FFEE)
+        .delays(Duration::from_millis(2), Duration::from_millis(10));
+    let sc = ServeConfig {
+        cache_dir: Some(dir.clone()),
+        mem_cache_entries: 4, // force disk reads so corruption sites matter
+        deadline: Some(Duration::from_secs(5)),
+        ..serve_cfg(faults)
+    };
+    let (addr, handle) = spawn_server(sc);
+
+    let mix = [
+        "{\"req\":\"stats\"}",
+        "{\"req\":\"version\"}",
+        "{\"req\":\"ladder\",\"app\":\"gaussian\"}",
+        "{\"req\":\"ladder\",\"app\":\"conv\",\"degrade\":true}",
+        "{\"req\":\"mine\",\"app\":\"block\"}",
+        "{\"req\":\"mine\",\"app\":\"gaussian\",\"fast\":true}",
+    ];
+    let policy = RetryPolicy { attempts: 4, base_ms: 10, cap_ms: 200, seed: 1 };
+    let mut answered = 0usize;
+    for i in 0..48 {
+        let line = mix[i % mix.len()];
+        match request_with_retry(&addr, line, 15_000, &policy) {
+            Ok(raw) => {
+                let view = protocol::parse_response(&raw)
+                    .unwrap_or_else(|e| panic!("request {i} malformed ({e}): {raw}"));
+                if !view.ok {
+                    let code = view.code.as_deref().unwrap_or("<none>");
+                    assert!(
+                        matches!(code, "deadline_exceeded" | "overloaded" | "internal"),
+                        "request {i}: error must be typed, got `{code}`: {raw}"
+                    );
+                }
+                answered += 1;
+            }
+            // Exhausted retries against injected disconnects: legal, as
+            // long as it is a clean transport error, not a hang.
+            Err(e) => assert!(!e.is_empty(), "request {i}"),
+        }
+    }
+    assert!(
+        answered >= 40,
+        "the retry client must get through almost always ({answered}/48)"
+    );
+    let stats = shutdown(&addr, handle);
+    assert!(stats.requests > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

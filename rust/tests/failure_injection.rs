@@ -237,7 +237,7 @@ fn version_prints_crate_and_schema_versions() {
     assert_eq!(code, 0);
     assert!(stdout.contains(env!("CARGO_PKG_VERSION")), "{stdout}");
     assert!(stdout.contains("fingerprint-schema 1"), "{stdout}");
-    assert!(stdout.contains("cache-schema 1"), "{stdout}");
+    assert!(stdout.contains("cache-schema 2"), "{stdout}");
 }
 
 #[test]
