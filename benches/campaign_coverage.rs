@@ -1,0 +1,58 @@
+//! Campaign-coverage bench: spend the same seed budget two ways — the
+//! fixed sweep (static profiles, uniform seeds) and the coverage-guided
+//! adaptive campaign — and measure both the wall-clock and the coverage
+//! return. Expected shape: the adaptive campaign's coverage strictly
+//! exceeds the sweep's at equal budget (mutated profiles reach op
+//! alphabets and graph shapes the seven static profiles never emit), its
+//! curve is monotone with per-seed novelty summing to the total, and the
+//! adaptive overhead (mutation + novelty scoring) stays a small fraction
+//! of scenario-evaluation cost.
+
+mod bench_util;
+
+use cgra_dse::stress::campaign::{self, CampaignConfig};
+
+const BUDGET: usize = 48;
+
+fn cfg() -> CampaignConfig {
+    CampaignConfig {
+        budget: BUDGET,
+        stimuli: 2,
+        shrink_budget: 48,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let cfg = cfg();
+
+    let rep = campaign::run_shard(&cfg);
+    assert!(rep.passed(), "{}", rep.render());
+    assert_eq!(rep.seeds_run, BUDGET);
+    // Monotone curve: the coverage total is exactly the sum of per-seed
+    // novelty (no item is ever counted twice, none is lost).
+    let sum: usize = rep.curve.iter().map(|p| p.new_items.len()).sum();
+    assert_eq!(sum, rep.coverage.len(), "curve does not sum to the total");
+
+    let base = campaign::fixed_sweep(&cfg);
+    assert_eq!(base.seeds, BUDGET);
+    assert!(
+        rep.coverage.len() > base.coverage_total,
+        "adaptive coverage {} did not beat the fixed sweep's {}",
+        rep.coverage.len(),
+        base.coverage_total
+    );
+    println!(
+        "coverage at {BUDGET} seeds: adaptive {} vs fixed sweep {}",
+        rep.coverage.len(),
+        base.coverage_total
+    );
+
+    let t_adaptive = bench_util::time_ms(3, || campaign::run_shard(&cfg));
+    bench_util::report("campaign_adaptive_x48", t_adaptive);
+
+    let t_fixed = bench_util::time_ms(3, || campaign::fixed_sweep(&cfg));
+    bench_util::report("campaign_fixed_sweep_x48", t_fixed);
+
+    bench_util::write_json("campaign");
+}

@@ -25,6 +25,8 @@
 //! domains; the domain drives no `reproduce` figure (`fig: None`, like
 //! `micro`).
 
+use std::borrow::Cow;
+
 use super::{App, AppDescriptor, Domain};
 use crate::ir::{Graph, NodeId, Op};
 use crate::util::SplitMix64;
@@ -43,17 +45,23 @@ pub enum OperandBias {
 }
 
 /// A named synthetic-workload profile: a pure data descriptor the
-/// generator interprets. All fields are `'static` so profiles can live in
-/// the registry statics below.
-#[derive(Debug)]
+/// generator interprets.
+///
+/// Profiles are plain **values**: the seven registry entries below are
+/// `static`s built from `Cow::Borrowed` fields (const-constructible), and
+/// the campaign engine ([`crate::stress::campaign`]) derives *owned*
+/// mutants from them by `clone()` + field edits — same generator, same
+/// determinism, unbounded parameter space.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SynthProfile {
     /// Unique profile name (the `stress --profiles` / registry app key).
-    pub name: &'static str,
+    pub name: Cow<'static, str>,
     /// One-line description (docs, `stress` output, registry summary).
-    pub summary: &'static str,
+    pub summary: Cow<'static, str>,
     /// Weighted compute-op alphabet. Every op must be baseline-supported
-    /// (pinned by `tests::alphabets_are_baseline_only`).
-    pub ops: &'static [(Op, u32)],
+    /// (pinned by `tests::alphabets_are_baseline_only` for the statics and
+    /// by construction for campaign mutants).
+    pub ops: Cow<'static, [(Op, u32)]>,
     /// Inclusive range of `Input` nodes.
     pub inputs: (usize, usize),
     /// Inclusive range of compute ops (excluding consts).
@@ -88,11 +96,27 @@ impl SynthProfile {
 
     /// The generated graph wrapped as a registry-style [`App`] (domain
     /// `synth`), ready for a `DseSession`.
-    pub fn app(&'static self, seed: u64) -> App {
+    pub fn app(&self, seed: u64) -> App {
         App {
-            name: self.name,
+            name: self.static_name(),
             domain: Domain::SYNTH,
             graph: self.build(seed),
+        }
+    }
+
+    /// The `&'static str` name backing [`App::name`]: the registry literal
+    /// for the seven statics, and the fixed `"synth_mutant"` handle for
+    /// owned campaign mutants. Mutants only ever flow through
+    /// one-app-per-scenario sessions (see `stress`), so the shared handle
+    /// never collides inside a session; the mutant's real name lives in
+    /// `self.name` and in every report.
+    pub fn static_name(&self) -> &'static str {
+        match PROFILES.iter().find(|p| p.name == self.name) {
+            Some(SynthProfile {
+                name: Cow::Borrowed(s),
+                ..
+            }) => s,
+            _ => "synth_mutant",
         }
     }
 
@@ -114,7 +138,7 @@ impl SynthProfile {
         for _ in 0..n_ops {
             let mut r = (rng.next_u64() % total_w) as i64;
             let mut op = self.ops[0].0;
-            for &(o, w) in self.ops {
+            for &(o, w) in self.ops.iter() {
                 r -= w as i64;
                 if r < 0 {
                     op = o;
@@ -173,9 +197,9 @@ const S_CONST: &str = "adversarial: constant-dominated graphs (const-register/me
 
 static PROFILES: [SynthProfile; 7] = [
     SynthProfile {
-        name: "imaging_like",
-        summary: S_IMAGING,
-        ops: &[
+        name: Cow::Borrowed("imaging_like"),
+        summary: Cow::Borrowed(S_IMAGING),
+        ops: Cow::Borrowed(&[
             (Op::Mul, 4),
             (Op::Add, 5),
             (Op::Sub, 1),
@@ -183,77 +207,77 @@ static PROFILES: [SynthProfile; 7] = [
             (Op::Min, 1),
             (Op::Max, 1),
             (Op::Clamp, 1),
-        ],
+        ]),
         inputs: (3, 6),
         ops_range: (16, 40),
         consts_per_16: 4,
         bias: OperandBias::Recent { pct: 30, window: 8 },
     },
     SynthProfile {
-        name: "ml_like",
-        summary: S_ML,
-        ops: &[
+        name: Cow::Borrowed("ml_like"),
+        summary: Cow::Borrowed(S_ML),
+        ops: Cow::Borrowed(&[
             (Op::Mul, 5),
             (Op::Add, 5),
             (Op::Max, 2),
             (Op::Ashr, 1),
             (Op::Clamp, 1),
-        ],
+        ]),
         inputs: (4, 8),
         ops_range: (20, 48),
         consts_per_16: 4,
         bias: OperandBias::Recent { pct: 40, window: 6 },
     },
     SynthProfile {
-        name: "dsp_like",
-        summary: S_DSP,
-        ops: &[
+        name: Cow::Borrowed("dsp_like"),
+        summary: Cow::Borrowed(S_DSP),
+        ops: Cow::Borrowed(&[
             (Op::Mul, 4),
             (Op::Add, 3),
             (Op::Sub, 3),
             (Op::Ashr, 1),
             (Op::Abs, 1),
-        ],
+        ]),
         inputs: (4, 8),
         ops_range: (16, 40),
         consts_per_16: 5,
         bias: OperandBias::Recent { pct: 35, window: 6 },
     },
     SynthProfile {
-        name: "deep_chain",
-        summary: S_DEEP,
-        ops: &[
+        name: Cow::Borrowed("deep_chain"),
+        summary: Cow::Borrowed(S_DEEP),
+        ops: Cow::Borrowed(&[
             (Op::Add, 3),
             (Op::Sub, 2),
             (Op::Mul, 2),
             (Op::Xor, 1),
             (Op::Ashr, 1),
-        ],
+        ]),
         inputs: (2, 4),
         ops_range: (24, 48),
         consts_per_16: 2,
         bias: OperandBias::Recent { pct: 90, window: 2 },
     },
     SynthProfile {
-        name: "wide_fanout",
-        summary: S_WIDE,
-        ops: &[
+        name: Cow::Borrowed("wide_fanout"),
+        summary: Cow::Borrowed(S_WIDE),
+        ops: Cow::Borrowed(&[
             (Op::Add, 3),
             (Op::Mul, 2),
             (Op::Min, 1),
             (Op::Max, 1),
             (Op::And, 1),
             (Op::Or, 1),
-        ],
+        ]),
         inputs: (2, 4),
         ops_range: (16, 40),
         consts_per_16: 2,
         bias: OperandBias::Hub { pct: 70, window: 3 },
     },
     SynthProfile {
-        name: "commutative_heavy",
-        summary: S_COMM,
-        ops: &[
+        name: Cow::Borrowed("commutative_heavy"),
+        summary: Cow::Borrowed(S_COMM),
+        ops: Cow::Borrowed(&[
             (Op::Add, 3),
             (Op::Mul, 3),
             (Op::Min, 2),
@@ -262,16 +286,16 @@ static PROFILES: [SynthProfile; 7] = [
             (Op::Or, 1),
             (Op::Xor, 1),
             (Op::Eq, 1),
-        ],
+        ]),
         inputs: (3, 6),
         ops_range: (14, 32),
         consts_per_16: 3,
         bias: OperandBias::Uniform,
     },
     SynthProfile {
-        name: "const_heavy",
-        summary: S_CONST,
-        ops: &[(Op::Add, 3), (Op::Mul, 3), (Op::Sub, 1), (Op::Ashr, 1)],
+        name: Cow::Borrowed("const_heavy"),
+        summary: Cow::Borrowed(S_CONST),
+        ops: Cow::Borrowed(&[(Op::Add, 3), (Op::Mul, 3), (Op::Sub, 1), (Op::Ashr, 1)]),
         inputs: (2, 4),
         ops_range: (12, 32),
         consts_per_16: 12,
@@ -441,7 +465,7 @@ mod tests {
     fn alphabets_are_baseline_only() {
         let allowed: Vec<&str> = baseline_ops().iter().map(|o| o.label()).collect();
         for p in profiles() {
-            for &(op, w) in p.ops {
+            for &(op, w) in p.ops.iter() {
                 assert!(w > 0, "{}: zero weight", p.name);
                 assert!(
                     allowed.contains(&op.label()),
@@ -480,7 +504,7 @@ mod tests {
         assert_eq!(profiles().len(), 7);
         assert!(profile("deep_chain").is_some());
         assert!(profile("nope").is_none());
-        let names: Vec<_> = profiles().iter().map(|p| p.name).collect();
+        let names: Vec<_> = profiles().iter().map(|p| p.name.as_ref()).collect();
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();

@@ -16,6 +16,7 @@ use cgra_dse::service::{
     protocol, server::request_with_retry, FaultPlan, RetryPolicy, ServeConfig, Server,
 };
 use cgra_dse::session::{report as sjson, AppStages, DseSession, FINGERPRINT_SCHEMA_VERSION};
+use cgra_dse::stress::campaign::{self, CampaignConfig, CampaignReport};
 use cgra_dse::stress::{self, Mutation, StressConfig};
 use cgra_dse::util::SplitMix64;
 
@@ -48,6 +49,11 @@ USAGE:
   cgra-dse stress [--seeds N] [--seed0 N] [--profiles all|p1,p2,...]
                   [--stimuli N] [--out FILE] [--json]
                   [--inject <invariant>] [--shrink-budget N]
+  cgra-dse campaign [--seeds N] [--seed0 N] [--profiles all|p1,p2,...]
+                    [--shards N] [--mutseed N] [--stimuli N] [--baseline]
+                    [--inject <invariant>] [--out FILE] [--json]
+                    [--addr HOST:PORT]
+  cgra-dse campaign --replay FILE [--entry N]
   cgra-dse serve [--addr HOST:PORT] [--workers N] [--cache-dir DIR]
                  [--mem-cache N] [--threads N] [--fast]
                  [--deadline-ms N] [--queue-max N] [--chaos SEED]
@@ -70,7 +76,7 @@ Apps: {apps}
         apps = apps.join(" | "),
         profiles = frontend::synth::profiles()
             .iter()
-            .map(|p| p.name)
+            .map(|p| p.name.as_ref())
             .collect::<Vec<_>>()
             .join(" "),
         invariants = stress::INVARIANTS.join(" "),
@@ -94,6 +100,7 @@ fn main() {
         "reproduce" => cmd_reproduce(&args[1..], &flags),
         "layout" => cmd_layout(&flags),
         "stress" => cmd_stress(&flags),
+        "campaign" => cmd_campaign(&flags),
         "serve" => cmd_serve(&flags),
         "request" => cmd_request(&args[1..], &flags),
         "validate" => cmd_validate(&flags),
@@ -425,7 +432,7 @@ fn cmd_stress(flags: &Flags) -> i32 {
                             "unknown profile `{name}`; valid: all {}",
                             frontend::synth::profiles()
                                 .iter()
-                                .map(|p| p.name)
+                                .map(|p| p.name.as_ref())
                                 .collect::<Vec<_>>()
                                 .join(" ")
                         );
@@ -514,6 +521,283 @@ fn cmd_stress(flags: &Flags) -> i32 {
     if report.passed() && wrote {
         0
     } else {
+        1
+    }
+}
+
+/// `campaign`: run a coverage-guided adaptive stress campaign
+/// (`cgra_dse::stress::campaign`) — locally, or fanned out shard-by-shard
+/// to a running server with `--addr` — and persist the merged
+/// machine-readable summary as `CAMPAIGN.json` (or `--out FILE`).
+/// `--baseline` additionally runs the equal-budget fixed profile sweep
+/// for the adaptive-vs-fixed coverage comparison. `--replay FILE` re-runs
+/// the distilled corpus of a previous campaign and demands byte-identical
+/// violations. Exit 0 on a clean run (or a fully reproducing replay) with
+/// the summary written, 1 when any invariant fired or a replay diverged,
+/// 2 on bad arguments.
+fn cmd_campaign(flags: &Flags) -> i32 {
+    // Same strictness rule as `stress`: malformed numeric flags error
+    // instead of silently running under defaults.
+    fn strict<T: std::str::FromStr>(flags: &Flags, key: &str, default: T) -> Result<T, i32> {
+        match flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                eprintln!("invalid --{key} `{v}` (expected an unsigned integer)");
+                2
+            }),
+        }
+    }
+    if let Some(path) = flags.get("replay") {
+        return cmd_campaign_replay(path, flags);
+    }
+    let spec = flags.get("profiles").unwrap_or("all");
+    let profiles: Vec<frontend::synth::SynthProfile> = if spec == "all" {
+        frontend::synth::profiles().to_vec()
+    } else {
+        let mut v = Vec::new();
+        for name in spec.split(',').filter(|s| !s.is_empty()) {
+            match frontend::synth::profile(name) {
+                Some(p) => v.push(p.clone()),
+                None => {
+                    eprintln!(
+                        "unknown profile `{name}`; valid: all {}",
+                        frontend::synth::profiles()
+                            .iter()
+                            .map(|p| p.name.as_ref())
+                            .collect::<Vec<_>>()
+                            .join(" ")
+                    );
+                    return 2;
+                }
+            }
+        }
+        if v.is_empty() {
+            eprintln!("--profiles must name at least one profile");
+            return 2;
+        }
+        v
+    };
+    let mutation = match flags.get("inject") {
+        None => Mutation::None,
+        Some(key) => match Mutation::for_invariant(key) {
+            Some(m) => m,
+            None => {
+                eprintln!(
+                    "unknown invariant `{key}`; valid --inject keys: {}",
+                    stress::INVARIANTS.join(" ")
+                );
+                return 2;
+            }
+        },
+    };
+    let seed0: u64 = match strict(flags, "seed0", 1) {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    if seed0 > (1u64 << 53) {
+        eprintln!("--seed0 {seed0} exceeds 2^53 (not exactly representable in CAMPAIGN.json)");
+        return 2;
+    }
+    let mut_seed: u64 = match strict(flags, "mutseed", campaign::DEFAULT_MUT_SEED) {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    let cfg = match (
+        strict(flags, "seeds", campaign::DEFAULT_BUDGET),
+        strict(flags, "shards", 1usize),
+        strict(flags, "stimuli", stress::DEFAULT_STIMULI),
+        strict(flags, "threads", 0usize),
+        strict(flags, "shrink-budget", 256usize),
+    ) {
+        (Ok(budget), Ok(shards), Ok(stimuli), Ok(threads), Ok(shrink_budget)) => {
+            if shards == 0 {
+                eprintln!("--shards must be at least 1");
+                return 2;
+            }
+            CampaignConfig {
+                budget,
+                seed0,
+                mut_seed,
+                shards,
+                shard: 0,
+                profiles,
+                stimuli,
+                threads,
+                shrink_budget,
+                mutation,
+                // An injected campaign is a detection race: stop at the
+                // first firing repro instead of spending the budget.
+                stop_on_detection: mutation != Mutation::None,
+                ..Default::default()
+            }
+        }
+        _ => return 2,
+    };
+    let shard_reports: Vec<CampaignReport> = match flags.get("addr") {
+        // Fleet mode: one `campaign` request per shard against a running
+        // server; the merge happens client-side.
+        Some(addr) => {
+            if mutation != Mutation::None {
+                eprintln!(
+                    "--inject campaigns run locally only (the service executes clean \
+                     campaigns; drop --addr)"
+                );
+                return 2;
+            }
+            let timeout = flags.get_usize("timeout", 600_000) as u64;
+            let policy = RetryPolicy {
+                attempts: flags.get_usize("retries", 2) + 1,
+                seed: 0x5eed ^ std::process::id() as u64,
+                ..Default::default()
+            };
+            let mut reports = Vec::with_capacity(cfg.shards);
+            for shard in 0..cfg.shards {
+                let env = protocol::Envelope {
+                    id: Some(format!("campaign-{shard}")),
+                    fast: false,
+                    degrade: false,
+                    req: protocol::Request::Campaign {
+                        profiles: spec.to_string(),
+                        seeds: cfg.budget,
+                        seed0: cfg.seed0,
+                        shards: cfg.shards,
+                        shard,
+                    },
+                };
+                let line = env.to_json().render();
+                let reply = match request_with_retry(addr, &line, timeout, &policy) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("shard {shard}: request failed: {e}");
+                        return 1;
+                    }
+                };
+                let view = match protocol::parse_response(&reply) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        eprintln!("shard {shard}: unparseable response: {e}");
+                        return 1;
+                    }
+                };
+                if !view.ok {
+                    eprintln!(
+                        "shard {shard}: server error [{}]: {}",
+                        view.code.unwrap_or_else(|| "unknown".to_string()),
+                        view.error.unwrap_or_default()
+                    );
+                    return 1;
+                }
+                let body = view.body.unwrap_or(cgra_dse::report::json::Json::Null);
+                match CampaignReport::from_json(&body) {
+                    Some(r) => reports.push(r),
+                    None => {
+                        eprintln!("shard {shard}: response body is not a campaign report");
+                        return 1;
+                    }
+                }
+            }
+            reports
+        }
+        None => (0..cfg.shards)
+            .map(|shard| campaign::run_shard(&CampaignConfig { shard, ..cfg.clone() }))
+            .collect(),
+    };
+    let mut report = if shard_reports.len() == 1 {
+        shard_reports.into_iter().next().expect("one shard")
+    } else {
+        campaign::merge(&shard_reports)
+    };
+    if flags.has("baseline") {
+        // The equal-budget fixed sweep always runs locally — it is the
+        // comparison yardstick, not a serving workload.
+        report.baseline = Some(campaign::fixed_sweep(&cfg));
+    }
+    let json = report.to_json().render();
+    if flags.has("json") {
+        println!("{json}");
+    } else {
+        print!("{}", report.render());
+    }
+    let out = flags.get("out").unwrap_or("CAMPAIGN.json");
+    let wrote = match std::fs::write(out, &json) {
+        Ok(()) => {
+            eprintln!("[wrote {out}]");
+            true
+        }
+        Err(e) => {
+            eprintln!("write {out}: {e}");
+            false
+        }
+    };
+    if report.passed() && wrote {
+        0
+    } else {
+        1
+    }
+}
+
+/// `campaign --replay`: re-run every distilled corpus entry of a saved
+/// `CAMPAIGN.json` (or one entry with `--entry N`) and demand the
+/// byte-identical violation.
+fn cmd_campaign_replay(path: &str, flags: &Flags) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 2;
+        }
+    };
+    let doc = match protocol::parse(text.trim()) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 2;
+        }
+    };
+    let Some(report) = CampaignReport::from_json(&doc) else {
+        eprintln!("{path} is not a campaign report (expected the CAMPAIGN.json schema)");
+        return 2;
+    };
+    let entries: Vec<usize> = match flags.get("entry") {
+        None => (0..report.corpus.len()).collect(),
+        Some(v) => match v.parse::<usize>() {
+            Ok(i) if i < report.corpus.len() => vec![i],
+            Ok(i) => {
+                eprintln!(
+                    "--entry {i} out of range (corpus has {} entries)",
+                    report.corpus.len()
+                );
+                return 2;
+            }
+            Err(_) => {
+                eprintln!("invalid --entry `{v}` (expected an unsigned integer)");
+                return 2;
+            }
+        },
+    };
+    if entries.is_empty() {
+        println!("campaign replay: corpus is empty (nothing to replay)");
+        return 0;
+    }
+    let dse = CampaignConfig::default().dse;
+    let mut failures = 0;
+    for i in entries {
+        let e = &report.corpus[i];
+        match campaign::replay_entry(e, &dse, report.mutation) {
+            Ok(()) => println!(
+                "[{i}] `{}` profile `{}` seed {}: reproduced byte-identically",
+                e.violation.invariant, e.violation.profile, e.violation.seed
+            ),
+            Err(msg) => {
+                eprintln!("[{i}] `{}`: {msg}", e.violation.invariant);
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        0
+    } else {
+        eprintln!("campaign replay: {failures} entr(y/ies) diverged");
         1
     }
 }

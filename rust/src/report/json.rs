@@ -46,6 +46,21 @@ impl Json {
         }
     }
 
+    /// A ratio clamped against empty denominators: `num / den` when
+    /// `den > 0`, else exactly `0`. Campaign/stress statistics divide by
+    /// seed or check counts that are legitimately zero for empty runs —
+    /// this is the one constructor that may see that shape, and it must
+    /// emit `0`, not the `null` that [`Self::num`] would degrade NaN/Inf
+    /// to (a `null` rate poisons downstream arithmetic over the
+    /// artifact).
+    pub fn rate(num: f64, den: f64) -> Json {
+        if den > 0.0 {
+            Json::num(num / den)
+        } else {
+            Json::Num(0.0)
+        }
+    }
+
     /// An object from `(key, value)` pairs, preserving order.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -293,6 +308,22 @@ mod tests {
             Json::Num(((1u64 << 53) - 1) as f64).as_u64(),
             Some((1u64 << 53) - 1)
         );
+    }
+
+    #[test]
+    fn rate_clamps_empty_denominators() {
+        // The empty-campaign shape: 0 seeds must yield a numeric 0, never
+        // NaN (which `num` would turn into null) and never a div-by-zero
+        // Inf.
+        assert_eq!(Json::rate(0.0, 0.0).render(), "0");
+        assert_eq!(Json::rate(5.0, 0.0).render(), "0");
+        assert_eq!(Json::rate(5.0, -1.0).render(), "0");
+        // Healthy denominators divide as usual.
+        assert_eq!(Json::rate(3.0, 2.0).render(), "1.5");
+        assert_eq!(Json::rate(0.0, 8.0).render(), "0");
+        // Non-finite numerators still degrade through `num`'s guard
+        // rather than rendering invalid JSON.
+        assert_eq!(Json::rate(f64::NAN, 2.0).render(), "null");
     }
 
     #[test]

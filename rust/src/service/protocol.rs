@@ -25,6 +25,7 @@
 //! {"req":"layout","domain":"imaging"}
 //! {"req":"reproduce","target":"fig9","fast":true}
 //! {"req":"stress","profiles":"deep_chain","seeds":2,"seed0":1}
+//! {"req":"campaign","seeds":64,"shards":4,"shard":0}
 //! {"req":"stats"}
 //! {"req":"version"}
 //! {"req":"shutdown"}
@@ -338,6 +339,17 @@ pub enum Request {
         seeds: usize,
         seed0: u64,
     },
+    /// One shard of a coverage-guided adaptive stress campaign
+    /// ([`crate::stress::campaign`]): the fleet client fans one campaign
+    /// out as `shards` requests (`shard` = 0..shards) and merges the
+    /// returned per-shard reports.
+    Campaign {
+        profiles: String,
+        seeds: usize,
+        seed0: u64,
+        shards: usize,
+        shard: usize,
+    },
     /// Live server statistics (uncacheable).
     Stats,
     /// Crate + schema versions (uncacheable).
@@ -356,6 +368,22 @@ pub const STRESS_SEEDS_DEFAULT: usize = 4;
 /// workers) unreachable. Batch-scale runs belong to `cgra-dse stress`.
 pub const STRESS_SEEDS_MAX: usize = 4096;
 
+/// Default **total** seed budget for a service `campaign` request (split
+/// across its shards — the adaptive engine needs more than a spot-check
+/// `stress` to warm its frontier, but serving stays bounded).
+pub const CAMPAIGN_SEEDS_DEFAULT: usize = 32;
+
+/// Hard cap on a `campaign` request's total seed budget, same rationale
+/// as [`STRESS_SEEDS_MAX`]: untrusted lines must not pin a worker
+/// indefinitely. Batch-scale campaigns belong to `cgra-dse campaign`.
+pub const CAMPAIGN_SEEDS_MAX: usize = 4096;
+
+/// Hard cap on a `campaign` request's declared shard count. The shard
+/// count shapes the seed partition (`seed0 + shard + k·shards`), so it is
+/// part of the request identity; bounding it keeps the fleet fan-out and
+/// the cache-key space sane.
+pub const CAMPAIGN_SHARDS_MAX: usize = 64;
+
 impl Request {
     /// Stable kind tag (the `req` field, the response `kind` field, and
     /// one component of the cache key).
@@ -367,6 +395,7 @@ impl Request {
             Request::Layout { .. } => "layout",
             Request::Reproduce { .. } => "reproduce",
             Request::Stress { .. } => "stress",
+            Request::Campaign { .. } => "campaign",
             Request::Stats => "stats",
             Request::Version => "version",
             Request::Shutdown => "shutdown",
@@ -385,6 +414,13 @@ impl Request {
                 seeds,
                 seed0,
             } => Some(format!("{profiles}:{seeds}:{seed0}")),
+            Request::Campaign {
+                profiles,
+                seeds,
+                seed0,
+                shards,
+                shard,
+            } => Some(format!("{profiles}:{seeds}:{seed0}:{shards}:{shard}")),
             Request::Stats | Request::Version | Request::Shutdown => None,
         }
     }
@@ -405,30 +441,31 @@ pub struct Envelope {
     pub req: Request,
 }
 
-/// Canonical form of a `stress` profiles spec: validated names, duplicates
-/// rejected, sorted, and the full set normalized to `"all"` — so every
-/// spelling of one workload shares one cache entry and one single-flight
-/// (the same principle as `reproduce` target canonicalization).
-fn canonical_profiles(spec: &str) -> Result<String, String> {
+/// Canonical form of a `stress`/`campaign` profiles spec: validated names,
+/// duplicates rejected, sorted, and the full set normalized to `"all"` —
+/// so every spelling of one workload shares one cache entry and one
+/// single-flight (the same principle as `reproduce` target
+/// canonicalization). `kind` only flavors the error messages.
+fn canonical_profiles(spec: &str, kind: &str) -> Result<String, String> {
     if spec == "all" {
         return Ok("all".to_string());
     }
     let mut names: Vec<&'static str> = Vec::new();
     for name in spec.split(',').filter(|s| !s.is_empty()) {
         let p = crate::frontend::synth::profile(name)
-            .ok_or_else(|| format!("unknown stress profile `{name}`"))?;
-        if names.contains(&p.name) {
-            return Err(format!("duplicate stress profile `{name}`"));
+            .ok_or_else(|| format!("unknown {kind} profile `{name}`"))?;
+        if names.contains(&p.static_name()) {
+            return Err(format!("duplicate {kind} profile `{name}`"));
         }
-        names.push(p.name);
+        names.push(p.static_name());
     }
     if names.is_empty() {
-        return Err("`stress` field `profiles` must name at least one profile".to_string());
+        return Err(format!("`{kind}` field `profiles` must name at least one profile"));
     }
     names.sort_unstable();
     let mut all: Vec<&str> = crate::frontend::synth::profiles()
         .iter()
-        .map(|p| p.name)
+        .map(|p| p.name.as_ref())
         .collect();
     all.sort_unstable();
     if names == all {
@@ -516,6 +553,7 @@ impl Envelope {
                     None => "all".to_string(),
                     Some(p) => canonical_profiles(
                         p.as_str().ok_or("`stress` field `profiles` must be a string")?,
+                        kind,
                     )?,
                 },
                 seeds: match v.get("seeds") {
@@ -540,13 +578,77 @@ impl Envelope {
                         .ok_or("`stress` field `seed0` must be a non-negative integer < 2^53")?,
                 },
             },
+            "campaign" => {
+                let shards = match v.get("shards") {
+                    None => 1,
+                    Some(s) => {
+                        let n = s
+                            .as_usize()
+                            .ok_or("`campaign` field `shards` must be a positive integer")?;
+                        if n == 0 || n > CAMPAIGN_SHARDS_MAX {
+                            return Err(format!(
+                                "`campaign` field `shards` must be in 1..={CAMPAIGN_SHARDS_MAX}"
+                            ));
+                        }
+                        n
+                    }
+                };
+                let shard = match v.get("shard") {
+                    None => 0,
+                    Some(s) => {
+                        let i = s
+                            .as_usize()
+                            .ok_or("`campaign` field `shard` must be a non-negative integer")?;
+                        if i >= shards {
+                            return Err(format!(
+                                "`campaign` field `shard` ({i}) must be < `shards` ({shards})"
+                            ));
+                        }
+                        i
+                    }
+                };
+                Request::Campaign {
+                    profiles: match v.get("profiles") {
+                        None => "all".to_string(),
+                        Some(p) => canonical_profiles(
+                            p.as_str()
+                                .ok_or("`campaign` field `profiles` must be a string")?,
+                            kind,
+                        )?,
+                    },
+                    seeds: match v.get("seeds") {
+                        None => CAMPAIGN_SEEDS_DEFAULT,
+                        Some(s) => {
+                            let n = s.as_usize().ok_or(
+                                "`campaign` field `seeds` must be a non-negative integer",
+                            )?;
+                            if n > CAMPAIGN_SEEDS_MAX {
+                                return Err(format!(
+                                    "`campaign` field `seeds` exceeds the serving cap of \
+                                     {CAMPAIGN_SEEDS_MAX} (use `cgra-dse campaign` for \
+                                     batch runs)"
+                                ));
+                            }
+                            n
+                        }
+                    },
+                    seed0: match v.get("seed0") {
+                        None => 1,
+                        Some(s) => s.as_u64().ok_or(
+                            "`campaign` field `seed0` must be a non-negative integer < 2^53",
+                        )?,
+                    },
+                    shards,
+                    shard,
+                }
+            }
             "stats" => Request::Stats,
             "version" => Request::Version,
             "shutdown" => Request::Shutdown,
             other => {
                 return Err(format!(
                     "unknown request kind `{other}` (valid: mine ladder domain_pe \
-                     layout reproduce stress stats version shutdown)"
+                     layout reproduce stress campaign stats version shutdown)"
                 ))
             }
         };
@@ -602,6 +704,19 @@ impl Envelope {
                 pairs.push(("profiles", Json::str(profiles)));
                 pairs.push(("seeds", Json::int(*seeds)));
                 pairs.push(("seed0", Json::int(*seed0 as usize)));
+            }
+            Request::Campaign {
+                profiles,
+                seeds,
+                seed0,
+                shards,
+                shard,
+            } => {
+                pairs.push(("profiles", Json::str(profiles)));
+                pairs.push(("seeds", Json::int(*seeds)));
+                pairs.push(("seed0", Json::int(*seed0 as usize)));
+                pairs.push(("shards", Json::int(*shards)));
+                pairs.push(("shard", Json::int(*shard)));
             }
             Request::Stats | Request::Version | Request::Shutdown => {}
         }
@@ -949,7 +1064,7 @@ mod tests {
         // The explicit full set normalizes to "all".
         let full = crate::frontend::synth::profiles()
             .iter()
-            .map(|p| p.name)
+            .map(|p| p.name.as_ref())
             .collect::<Vec<_>>()
             .join(",");
         assert_eq!(get(&format!(r#"{{"req":"stress","profiles":"{full}"}}"#)), "all");
@@ -1102,6 +1217,13 @@ mod tests {
                 seeds: 1,
                 seed0: 1,
             },
+            Request::Campaign {
+                profiles: "all".into(),
+                seeds: 8,
+                seed0: 1,
+                shards: 2,
+                shard: 1,
+            },
         ];
         for r in &cacheable {
             assert!(r.cache_detail().is_some(), "{:?}", r.kind());
@@ -1109,5 +1231,105 @@ mod tests {
         for r in [Request::Stats, Request::Version, Request::Shutdown] {
             assert!(r.cache_detail().is_none(), "{:?}", r.kind());
         }
+    }
+
+    #[test]
+    fn campaign_decode_defaults_and_roundtrips() {
+        let env = Envelope::parse_line(r#"{"req":"campaign"}"#).unwrap();
+        assert_eq!(
+            env.req,
+            Request::Campaign {
+                profiles: "all".into(),
+                seeds: CAMPAIGN_SEEDS_DEFAULT,
+                seed0: 1,
+                shards: 1,
+                shard: 0,
+            }
+        );
+        let full = Envelope::parse_line(
+            r#"{"req":"campaign","profiles":"deep_chain","seeds":64,"seed0":9,"shards":4,"shard":3,"id":"c1"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            full.req,
+            Request::Campaign {
+                profiles: "deep_chain".into(),
+                seeds: 64,
+                seed0: 9,
+                shards: 4,
+                shard: 3,
+            }
+        );
+        // Envelope round-trip through the writer.
+        assert_eq!(Envelope::parse_line(&full.to_json().render()).unwrap(), full);
+        // Shard identity is part of the cache key — distinct shards must
+        // never collide on one cached artifact.
+        let d3 = full.req.cache_detail().unwrap();
+        assert_eq!(d3, "deep_chain:64:9:4:3");
+    }
+
+    #[test]
+    fn campaign_fields_of_the_wrong_type_or_range_are_rejected() {
+        for bad in [
+            r#"{"req":"campaign","profiles":123}"#,
+            r#"{"req":"campaign","profiles":"nope"}"#,
+            r#"{"req":"campaign","profiles":"deep_chain,deep_chain"}"#,
+            r#"{"req":"campaign","seeds":"8"}"#,
+            r#"{"req":"campaign","seeds":-1}"#,
+            r#"{"req":"campaign","seeds":1.5}"#,
+            r#"{"req":"campaign","seed0":1e20}"#,
+            r#"{"req":"campaign","shards":0}"#,
+            r#"{"req":"campaign","shards":"2"}"#,
+            r#"{"req":"campaign","shard":-1}"#,
+            // shard must be < shards (including the implicit shards=1).
+            r#"{"req":"campaign","shard":1}"#,
+            r#"{"req":"campaign","shards":2,"shard":2}"#,
+        ] {
+            assert!(Envelope::parse_line(bad).is_err(), "accepted {bad}");
+        }
+        // Boundary acceptance.
+        assert!(Envelope::parse_line(
+            &format!(r#"{{"req":"campaign","shards":{CAMPAIGN_SHARDS_MAX}}}"#)
+        )
+        .is_ok());
+        assert!(Envelope::parse_line(
+            &format!(r#"{{"req":"campaign","shards":{}}}"#, CAMPAIGN_SHARDS_MAX + 1)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn campaign_seed_budget_is_capped_at_decode_time() {
+        let line = format!(r#"{{"req":"campaign","seeds":{CAMPAIGN_SEEDS_MAX}}}"#);
+        assert!(Envelope::parse_line(&line).is_ok());
+        let line = format!(r#"{{"req":"campaign","seeds":{}}}"#, CAMPAIGN_SEEDS_MAX + 1);
+        let err = Envelope::parse_line(&line).unwrap_err();
+        assert!(err.contains("serving cap"), "{err}");
+        assert!(err.contains("cgra-dse campaign"), "{err}");
+    }
+
+    #[test]
+    fn campaign_profiles_canonicalize_like_stress() {
+        let get = |line: &str| match Envelope::parse_line(line).unwrap().req {
+            Request::Campaign { profiles, .. } => profiles,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            get(r#"{"req":"campaign","profiles":"deep_chain,const_heavy"}"#),
+            "const_heavy,deep_chain"
+        );
+        let full = crate::frontend::synth::profiles()
+            .iter()
+            .map(|p| p.name.as_ref())
+            .collect::<Vec<_>>()
+            .join(",");
+        assert_eq!(
+            get(&format!(r#"{{"req":"campaign","profiles":"{full}"}}"#)),
+            "all"
+        );
+        // Errors carry the campaign kind, not stress.
+        let err =
+            Envelope::parse_line(r#"{"req":"campaign","profiles":"nope"}"#).unwrap_err();
+        assert!(err.contains("unknown campaign profile"), "{err}");
     }
 }

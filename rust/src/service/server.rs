@@ -85,6 +85,7 @@ use crate::runtime::default_width;
 use crate::session::{
     config_fingerprint, report as sjson, DseSession, Stage, FINGERPRINT_SCHEMA_VERSION,
 };
+use crate::stress::campaign::{self, CampaignConfig};
 use crate::stress::{self, Mutation, StressConfig};
 use crate::util::SplitMix64;
 
@@ -684,14 +685,14 @@ fn serve_request(
         req => {
             let session = shared.session_for(env.fast);
             let detail = req.cache_detail().expect("non-live requests are cacheable");
-            // Stress artifacts don't depend on the serving session's
-            // config (the harness runs its own pipeline config), so they
-            // are keyed by the harness fingerprint instead: editing
-            // `stress_dse_config()`/`DEFAULT_STIMULI` re-keys (recompute,
-            // never stale), and `fast` vs default requests share one
-            // artifact.
+            // Stress and campaign artifacts don't depend on the serving
+            // session's config (the harness runs its own pipeline config),
+            // so they are keyed by the harness fingerprint instead:
+            // editing `stress_dse_config()`/`DEFAULT_STIMULI` re-keys
+            // (recompute, never stale), and `fast` vs default requests
+            // share one artifact.
             let fingerprint = match req {
-                Request::Stress { .. } => stress_fingerprint(),
+                Request::Stress { .. } | Request::Campaign { .. } => stress_fingerprint(),
                 _ => session.fingerprint(),
             };
             let key = CacheKey::new(fingerprint, req.kind(), detail.clone());
@@ -705,7 +706,7 @@ fn serve_request(
                     shared.degraded.fetch_add(1, Ordering::Relaxed);
                     let fsession = &shared.session_fast;
                     let ffp = match req {
-                        Request::Stress { .. } => stress_fingerprint(),
+                        Request::Stress { .. } | Request::Campaign { .. } => stress_fingerprint(),
                         _ => fsession.fingerprint(),
                     };
                     let fkey = CacheKey::new(ffp, req.kind(), detail);
@@ -950,6 +951,30 @@ fn compute(req: &Request, session: &DseSession) -> Result<String, ServiceError> 
                 ..Default::default()
             };
             Ok(stress::run(&cfg).to_json().render())
+        }
+        Request::Campaign {
+            profiles,
+            seeds,
+            seed0,
+            shards,
+            shard,
+        } => {
+            let cfg = CampaignConfig {
+                budget: *seeds,
+                seed0: *seed0,
+                shards: *shards,
+                shard: *shard,
+                profiles: protocol::resolve_profiles(profiles)
+                    .into_iter()
+                    .cloned()
+                    .collect(),
+                // Same width rule as stress: the server's configured
+                // width bounds in-round scenario fan-out (results are
+                // width-independent by construction).
+                threads: session.threads(),
+                ..Default::default()
+            };
+            Ok(campaign::run_shard(&cfg).to_json().render())
         }
         Request::Stats | Request::Version | Request::Shutdown => {
             unreachable!("live requests are served before the cache layer")

@@ -1,0 +1,311 @@
+//! Scenario-coverage accounting for the stress harness: what has a run
+//! actually *seen*?
+//!
+//! Every stress scenario is reduced to a set of string-coded **coverage
+//! items**, and a [`CoverageMap`] is the deduplicated union of every item
+//! a campaign has observed. The item vocabulary (one prefix per source):
+//!
+//! * `alpha:<op+op+…>` — the scenario profile's op *set* (sorted labels).
+//!   Two profiles with different alphabets always differ here, which is
+//!   what makes alphabet mutations reliably score as novel.
+//! * `shape:n<b>:d<b>:f<b>:i<k>:o<b>` — log2 buckets of the generated
+//!   graph's node count, dataflow depth, and max fanout, plus its exact
+//!   input count and bucketed output count.
+//! * `census:<label>:<b>` — per-op-label node counts, log2-bucketed.
+//! * `canon:<key>` — the canonical code of every pattern the miner found
+//!   in the scenario graph (the paper's own notion of structural novelty).
+//! * `inv:<name>:c<b>` — per-invariant executed-check counts, bucketed:
+//!   a scenario that drives a checker through 40 sub-checks covers a
+//!   branch profile a 2-check scenario does not.
+//! * `inv:<name>:fail` — the invariant fired (violation outcome
+//!   signature; `generate` counts as a pseudo-invariant here).
+//!
+//! Buckets are `log2`-style ([`bucket`]) so coverage saturates instead of
+//! growing linearly with graph size — novelty means a new *regime*, not
+//! one more node. The campaign engine ([`super::campaign`]) keeps a
+//! mutated profile only when its scenario adds at least one item to the
+//! map, and merges per-shard maps into fleet-level coverage.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::frontend::synth::SynthProfile;
+use crate::ir::Graph;
+use crate::mining::MinedPattern;
+use crate::report::json::Json;
+
+/// Log2-style count bucket: `0 → 0`, otherwise `floor(log2(n)) + 1`
+/// (`1 → 1`, `2..=3 → 2`, `4..=7 → 3`, …). Two counts bucket equal iff
+/// they share a binary order of magnitude.
+pub fn bucket(n: usize) -> u32 {
+    if n == 0 {
+        0
+    } else {
+        usize::BITS - n.leading_zeros()
+    }
+}
+
+/// A deduplicated set of coverage items — the campaign's novelty oracle
+/// and its merged fleet-level coverage measure. Internally a `BTreeSet`,
+/// so iteration (and the serialized form) is deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CoverageMap {
+    items: BTreeSet<String>,
+}
+
+impl CoverageMap {
+    /// An empty map.
+    pub fn new() -> Self {
+        CoverageMap::default()
+    }
+
+    /// Total distinct items covered.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing has been covered yet.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Is this exact item already covered?
+    pub fn contains(&self, item: &str) -> bool {
+        self.items.contains(item)
+    }
+
+    /// Insert every item, returning the ones that were **new** (input
+    /// order, duplicates collapsed). The returned novelty list is what
+    /// campaign curve points record, so a merged curve can be rebuilt
+    /// exactly from per-shard curves.
+    pub fn absorb(&mut self, items: Vec<String>) -> Vec<String> {
+        let mut novel = Vec::new();
+        for it in items {
+            if self.items.insert(it.clone()) {
+                novel.push(it);
+            }
+        }
+        novel
+    }
+
+    /// Union another map into this one; returns how many of its items
+    /// were new here.
+    pub fn merge(&mut self, other: &CoverageMap) -> usize {
+        let mut added = 0;
+        for it in &other.items {
+            if self.items.insert(it.clone()) {
+                added += 1;
+            }
+        }
+        added
+    }
+
+    /// Iterate the covered items in sorted order.
+    pub fn items(&self) -> impl Iterator<Item = &str> {
+        self.items.iter().map(|s| s.as_str())
+    }
+
+    /// Item counts per category prefix (the text before the first `:`),
+    /// sorted by category.
+    pub fn by_category(&self) -> Vec<(String, usize)> {
+        let mut map: BTreeMap<&str, usize> = BTreeMap::new();
+        for it in &self.items {
+            let cat = it.split(':').next().unwrap_or("");
+            *map.entry(cat).or_insert(0) += 1;
+        }
+        map.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    /// Serialize as a sorted JSON string array (the `CAMPAIGN.json`
+    /// `coverage.items` field).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.items.iter().map(|s| Json::str(s.as_str())).collect())
+    }
+
+    /// Parse the [`Self::to_json`] form. `None` on any non-string entry.
+    pub fn from_json(j: &Json) -> Option<CoverageMap> {
+        let mut items = BTreeSet::new();
+        for e in j.as_arr()? {
+            items.insert(e.as_str()?.to_string());
+        }
+        Some(CoverageMap { items })
+    }
+}
+
+// ---- item extraction ----------------------------------------------------
+
+/// Profile-level items: the op-set signature (`alpha:`).
+pub fn profile_items(p: &SynthProfile) -> Vec<String> {
+    let mut labels: Vec<&str> = p.ops.iter().map(|&(o, _)| o.label()).collect();
+    labels.sort_unstable();
+    labels.dedup();
+    vec![format!("alpha:{}", labels.join("+"))]
+}
+
+/// Graph-level items: the `shape:` bucket signature plus one `census:`
+/// item per op label.
+pub fn graph_items(g: &Graph) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut fanout = vec![0usize; g.len()];
+    for e in &g.edges {
+        fanout[e.src.index()] += 1;
+    }
+    out.push(format!(
+        "shape:n{}:d{}:f{}:i{}:o{}",
+        bucket(g.len()),
+        bucket(dag_depth(g)),
+        bucket(fanout.iter().copied().max().unwrap_or(0)),
+        g.input_ids().len(),
+        bucket(g.output_ids().len()),
+    ));
+    let mut census: BTreeMap<&str, usize> = BTreeMap::new();
+    for n in &g.nodes {
+        *census.entry(n.op.label()).or_insert(0) += 1;
+    }
+    for (label, count) in census {
+        out.push(format!("census:{label}:{}", bucket(count)));
+    }
+    out
+}
+
+/// Mining-level items: one `canon:` item per mined pattern.
+pub fn pattern_items(mined: &[MinedPattern]) -> Vec<String> {
+    mined
+        .iter()
+        .map(|p| format!("canon:{}", p.canon))
+        .collect()
+}
+
+/// The per-invariant executed-check signature (`inv:<name>:c<bucket>`).
+pub fn invariant_item(inv: &str, checks: usize) -> String {
+    format!("inv:{inv}:c{}", bucket(checks))
+}
+
+/// The per-invariant violation signature (`inv:<name>:fail`).
+pub fn violation_item(inv: &str) -> String {
+    format!("inv:{inv}:fail")
+}
+
+/// Longest dataflow path in a DAG (edge relaxation to fixpoint; graphs
+/// here are stress-scale, so the quadratic worst case is irrelevant).
+fn dag_depth(g: &Graph) -> usize {
+    let n = g.len();
+    let mut depth = vec![0usize; n];
+    let mut changed = true;
+    let mut guard = 0usize;
+    while changed && guard <= n {
+        changed = false;
+        guard += 1;
+        for e in &g.edges {
+            let d = depth[e.src.index()] + 1;
+            if d > depth[e.dst.index()] {
+                depth[e.dst.index()] = d;
+                changed = true;
+            }
+        }
+    }
+    depth.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::synth;
+
+    #[test]
+    fn bucket_is_log2_style() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(2), 2);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 3);
+        assert_eq!(bucket(7), 3);
+        assert_eq!(bucket(8), 4);
+        assert_eq!(bucket(1 << 20), 21);
+    }
+
+    #[test]
+    fn absorb_reports_exactly_the_novel_items() {
+        let mut m = CoverageMap::new();
+        let novel = m.absorb(vec!["a:1".into(), "a:2".into(), "a:1".into()]);
+        assert_eq!(novel, vec!["a:1".to_string(), "a:2".to_string()]);
+        assert_eq!(m.len(), 2);
+        let again = m.absorb(vec!["a:2".into(), "b:1".into()]);
+        assert_eq!(again, vec!["b:1".to_string()]);
+        assert_eq!(m.len(), 3);
+        assert!(m.contains("a:1") && !m.contains("c:9"));
+    }
+
+    #[test]
+    fn merge_counts_new_items_only() {
+        let mut a = CoverageMap::new();
+        a.absorb(vec!["x:1".into(), "x:2".into()]);
+        let mut b = CoverageMap::new();
+        b.absorb(vec!["x:2".into(), "y:1".into()]);
+        assert_eq!(a.merge(&b), 1);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.merge(&b), 0, "merge must be idempotent");
+    }
+
+    #[test]
+    fn by_category_splits_on_first_colon() {
+        let mut m = CoverageMap::new();
+        m.absorb(vec!["canon:ab:cd".into(), "canon:ef".into(), "inv:x:c1".into()]);
+        assert_eq!(
+            m.by_category(),
+            vec![("canon".to_string(), 2), ("inv".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = CoverageMap::new();
+        m.absorb(vec!["b:2".into(), "a:1".into()]);
+        let j = m.to_json();
+        // Sorted, deterministic rendering.
+        assert_eq!(j.render(), "[\"a:1\",\"b:2\"]");
+        assert_eq!(CoverageMap::from_json(&j), Some(m));
+        assert_eq!(CoverageMap::from_json(&Json::Null), None);
+        assert_eq!(
+            CoverageMap::from_json(&Json::Arr(vec![Json::int(1)])),
+            None
+        );
+    }
+
+    #[test]
+    fn profile_items_are_alphabet_order_independent() {
+        let p = synth::profile("dsp_like").unwrap();
+        let items = profile_items(p);
+        assert_eq!(items.len(), 1);
+        assert!(items[0].starts_with("alpha:"), "{}", items[0]);
+        // Sorted labels: abs < add < ashr < mul < sub.
+        assert_eq!(items[0], "alpha:abs+add+ashr+mul+sub");
+    }
+
+    #[test]
+    fn graph_items_are_deterministic_and_prefixed() {
+        let p = synth::profile("deep_chain").unwrap();
+        let g = p.build(7);
+        let a = graph_items(&g);
+        let b = graph_items(&g);
+        assert_eq!(a, b);
+        assert!(a[0].starts_with("shape:n"), "{}", a[0]);
+        assert!(a.iter().skip(1).all(|i| i.starts_with("census:")));
+        // deep_chain really is deep: its depth bucket outranks a chain's
+        // node-count bucket floor of 1.
+        assert!(a[0].contains(":d"), "{}", a[0]);
+    }
+
+    #[test]
+    fn invariant_items_separate_outcomes_from_counts() {
+        assert_eq!(invariant_item("eval_equiv", 5), "inv:eval_equiv:c3");
+        assert_eq!(invariant_item("eval_equiv", 0), "inv:eval_equiv:c0");
+        assert_eq!(violation_item("eval_equiv"), "inv:eval_equiv:fail");
+    }
+
+    #[test]
+    fn chain_depth_matches_construction() {
+        // chain(5): Input -> 5 adds -> Output is 6 edges deep.
+        let g = synth::chain(5);
+        assert_eq!(super::dag_depth(&g), 6);
+    }
+}

@@ -45,6 +45,18 @@
 //! and the CLI-level checks in `rust/tests/failure_injection.rs` pin
 //! this). A machine-readable summary is emitted as `STRESS.json` through
 //! [`crate::report::json`].
+//!
+//! On top of the fixed profiles × seeds sweep, the [`coverage`] module
+//! measures scenario diversity (mined canonical patterns, op census /
+//! shape buckets, invariant outcome signatures) and the [`campaign`]
+//! module turns the harness into a coverage-guided fuzzer: seeded
+//! mutations over [`SynthProfile`] values, mutants kept only when they
+//! add coverage, a distilled corpus of minimal repros, and sharded
+//! execution through the service layer (`campaign` request kind /
+//! `cgra-dse campaign` CLI, `CAMPAIGN.json` artifact).
+
+pub mod campaign;
+pub mod coverage;
 
 use std::cell::OnceCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -204,8 +216,9 @@ pub struct Violation {
     /// Which invariant fired (an [`INVARIANTS`] entry, or `"generate"`
     /// when the generator itself produced an invalid graph).
     pub invariant: &'static str,
-    /// Profile of the failing scenario.
-    pub profile: &'static str,
+    /// Profile of the failing scenario. Owned: campaign scenarios run on
+    /// mutated profiles whose names exist nowhere in the registry.
+    pub profile: String,
     /// Seed of the failing scenario.
     pub seed: u64,
     /// Node count of the originally failing graph.
@@ -228,7 +241,7 @@ pub struct StressReport {
     /// Seeds run per profile.
     pub seeds: usize,
     /// Profile names, in run order.
-    pub profiles: Vec<&'static str>,
+    pub profiles: Vec<String>,
     /// Total scenarios (`profiles × seeds`).
     pub scenarios: usize,
     /// Fault injection the run executed under.
@@ -305,7 +318,7 @@ impl StressReport {
             ("seeds", Json::int(self.seeds)),
             (
                 "profiles",
-                Json::Arr(self.profiles.iter().map(|p| Json::str(*p)).collect()),
+                Json::Arr(self.profiles.iter().map(|p| Json::str(p.as_str())).collect()),
             ),
             ("scenarios", Json::int(self.scenarios)),
             (
@@ -333,7 +346,7 @@ impl StressReport {
                         .map(|v| {
                             Json::obj(vec![
                                 ("invariant", Json::str(v.invariant)),
-                                ("profile", Json::str(v.profile)),
+                                ("profile", Json::str(v.profile.as_str())),
                                 ("seed", Json::int(v.seed as usize)),
                                 ("nodes_original", Json::int(v.nodes_original)),
                                 ("nodes_shrunk", Json::int(v.nodes_shrunk)),
@@ -381,7 +394,7 @@ pub fn run(cfg: &StressConfig) -> StressReport {
     StressReport {
         seed0: cfg.seed0,
         seeds: cfg.seeds,
-        profiles: cfg.profiles.iter().map(|p| p.name).collect(),
+        profiles: cfg.profiles.iter().map(|p| p.name.to_string()).collect(),
         scenarios: cfg.profiles.len() * cfg.seeds,
         mutation: cfg.mutation,
         checks,
@@ -391,17 +404,21 @@ pub fn run(cfg: &StressConfig) -> StressReport {
 
 // ---- scenario execution ------------------------------------------------
 
-struct Ctx {
-    profile: &'static SynthProfile,
+struct Ctx<'a> {
+    profile: &'a SynthProfile,
     seed: u64,
     dse: DseConfig,
     stimuli: usize,
     mutation: Mutation,
 }
 
-struct ScenarioResult {
-    checks: [usize; 8],
-    violations: Vec<Violation>,
+/// Per-scenario outcome. `coverage` carries the scenario's coverage items
+/// (see [`coverage`]) so the campaign engine can score novelty without
+/// re-running anything; the plain sweep ignores it.
+pub(crate) struct ScenarioResult {
+    pub(crate) checks: [usize; 8],
+    pub(crate) violations: Vec<Violation>,
+    pub(crate) coverage: Vec<String>,
 }
 
 /// Lazily computed per-graph pipeline state shared by the checkers: one
@@ -454,7 +471,11 @@ fn replay_line(profile: &SynthProfile, seed: u64, stimuli: usize, mutation: Muta
     s
 }
 
-fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -> ScenarioResult {
+/// Run one `(profile, seed)` scenario: generate, validate, check every
+/// invariant, shrink failures, and collect the scenario's coverage items.
+/// `cfg.profiles` is ignored — the campaign engine drives this directly
+/// with owned mutant profiles the config could never hold.
+pub(crate) fn run_scenario(profile: &SynthProfile, seed: u64, cfg: &StressConfig) -> ScenarioResult {
     let ctx = Ctx {
         profile,
         seed,
@@ -465,6 +486,7 @@ fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -
     let mut out = ScenarioResult {
         checks: [0; 8],
         violations: Vec::new(),
+        coverage: coverage::profile_items(profile),
     };
     let built = catch_unwind(AssertUnwindSafe(|| {
         let mut g = profile.build(seed);
@@ -473,9 +495,10 @@ fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -
     let g = match built {
         Ok(Ok(g)) => g,
         Ok(Err(e)) => {
+            out.coverage.push(coverage::violation_item("generate"));
             out.violations.push(Violation {
                 invariant: "generate",
-                profile: profile.name,
+                profile: profile.name.to_string(),
                 seed,
                 nodes_original: 0,
                 nodes_shrunk: 0,
@@ -486,9 +509,10 @@ fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -
             return out;
         }
         Err(p) => {
+            out.coverage.push(coverage::violation_item("generate"));
             out.violations.push(Violation {
                 invariant: "generate",
-                profile: profile.name,
+                profile: profile.name.to_string(),
                 seed,
                 nodes_original: 0,
                 nodes_shrunk: 0,
@@ -499,15 +523,23 @@ fn run_scenario(profile: &'static SynthProfile, seed: u64, cfg: &StressConfig) -
             return out;
         }
     };
+    out.coverage.extend(coverage::graph_items(&g));
     let cache = ScenarioCache::new();
+    // Force the shared mining pass up front so its canonical keys land in
+    // the coverage items even for scenarios whose checkers skip (the
+    // checkers would compute it lazily anyway).
+    out.coverage
+        .extend(coverage::pattern_items(cache.mined(&g, &ctx)));
     for (i, &inv) in INVARIANTS.iter().enumerate() {
         let (n, fail) = check_one(inv, &g, &ctx, &cache);
         out.checks[i] += n;
+        out.coverage.push(coverage::invariant_item(inv, n));
         if let Some(detail) = fail {
+            out.coverage.push(coverage::violation_item(inv));
             let (min_g, min_detail) = shrink(&g, detail, inv, &ctx, cfg.shrink_budget);
             out.violations.push(Violation {
                 invariant: inv,
-                profile: profile.name,
+                profile: profile.name.to_string(),
                 seed,
                 nodes_original: g.len(),
                 nodes_shrunk: min_g.len(),
@@ -724,7 +756,9 @@ fn check_merged(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<S
         return (0, None);
     }
     let session = cache.session(g, ctx);
-    let stages = session.app(ctx.profile.name).expect("registered above");
+    let stages = session
+        .app(ctx.profile.static_name())
+        .expect("registered above");
     let variants = stages.variants();
     // The most-merged ladder entry; always at least ["base", "pe1"].
     let (vname, pe) = variants.last().expect("ladder never empty");
@@ -794,7 +828,9 @@ fn check_ladder(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<S
         return (0, None);
     }
     let session = cache.session(g, ctx);
-    let stages = session.app(ctx.profile.name).expect("registered above");
+    let stages = session
+        .app(ctx.profile.static_name())
+        .expect("registered above");
     let ladder = stages.ladder();
     if ladder.is_empty() {
         return (
@@ -881,9 +917,10 @@ fn check_report(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<S
     // earlier checkers (its ladder is a cache hit here). Rendered twice
     // to also pin render idempotency.
     let s1 = cache.session(g, ctx);
-    let st1 = s1.app(ctx.profile.name).expect("registered above");
-    let warm1 = sjson::ladder_json(ctx.profile.name, &st1.ladder()).render();
-    let mut warm2 = sjson::ladder_json(ctx.profile.name, &st1.ladder()).render();
+    let name = ctx.profile.static_name();
+    let st1 = s1.app(name).expect("registered above");
+    let warm1 = sjson::ladder_json(name, &st1.ladder()).render();
+    let mut warm2 = sjson::ladder_json(name, &st1.ladder()).render();
     if ctx.mutation == Mutation::ReportStamp {
         warm2.push('!');
     }
@@ -903,8 +940,7 @@ fn check_report(g: &Graph, ctx: &Ctx, cache: &ScenarioCache) -> (usize, Option<S
     // Cold side: a genuinely fresh session over the same graph must
     // render byte-identically to the warm one.
     let s2 = one_app_session(as_app(ctx.profile, g), &ctx.dse);
-    let cold = sjson::ladder_json(ctx.profile.name, &s2.app(ctx.profile.name).unwrap().ladder())
-        .render();
+    let cold = sjson::ladder_json(name, &s2.app(name).unwrap().ladder()).render();
     checks += 1;
     if cold != warm1 {
         return (
@@ -1161,9 +1197,12 @@ fn remove_rewire(g: &Graph, id: NodeId) -> Option<Graph> {
 
 // ---- helpers -----------------------------------------------------------
 
-fn as_app(profile: &'static SynthProfile, g: &Graph) -> App {
+fn as_app(profile: &SynthProfile, g: &Graph) -> App {
     App {
-        name: profile.name,
+        // `App::name` is a `&'static str`; mutants share the fixed
+        // `"synth_mutant"` handle (safe: every stress session holds
+        // exactly one app — see `one_app_session`).
+        name: profile.static_name(),
         domain: Domain::SYNTH,
         graph: g.clone(),
     }

@@ -32,6 +32,69 @@ fn prop_every_profile_generates_valid_apps() {
 }
 
 #[test]
+fn prop_profile_mutation_is_closed_over_validity() {
+    // The campaign engine's profile mutator must be closed over the
+    // generator's validity guarantee: whatever chain of seeded edits
+    // produced a mutant, its graphs still pass `validate` and the pinned
+    // port/arity invariants. 64 sampled (mutant, seed) pairs, with kept
+    // mutants re-entering the parent pool so deep mutation chains are
+    // exercised too.
+    use cgra_dse::ir::Op;
+    use cgra_dse::stress::campaign::mutate;
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    let mut parents: Vec<SynthProfile> = synth::profiles().to_vec();
+    for tag in 0..64u64 {
+        let parent = parents[rng.below(parents.len())].clone();
+        let m = mutate(&parent, &mut rng, tag);
+        let seed = rng.next_u64() & 0xFFFF;
+        let mut g = m.build(seed);
+        g.validate()
+            .unwrap_or_else(|e| panic!("mutant `{}` seed {seed}: {e}", m.name));
+        // Port/arity: every node's in-degree equals its op's arity (no
+        // dangling or double-driven ports survive validate, but pin it
+        // explicitly so a validate regression can't mask a generator one).
+        for (i, n) in g.nodes.iter().enumerate() {
+            let indeg = g.edges.iter().filter(|e| e.dst.index() == i).count();
+            assert_eq!(
+                indeg,
+                n.op.arity(),
+                "mutant `{}` seed {seed}: node {i} ({}) in-degree",
+                m.name,
+                n.op.label()
+            );
+        }
+        // I/O pins: at least one input and one output, and the input
+        // count respects the mutated profile's declared range.
+        let n_in = g.input_ids().len();
+        assert!(
+            n_in >= m.inputs.0 && n_in <= m.inputs.1,
+            "mutant `{}` seed {seed}: {n_in} inputs outside {:?}",
+            m.name,
+            m.inputs
+        );
+        assert!(
+            !g.output_ids().is_empty(),
+            "mutant `{}` seed {seed}: no outputs",
+            m.name
+        );
+        // Alphabet closure: every compute op was drawn from the mutant's
+        // own (baseline-only) alphabet.
+        let alphabet: Vec<&str> = m.ops.iter().map(|&(o, _)| o.label()).collect();
+        for n in &g.nodes {
+            if !matches!(n.op, Op::Input | Op::Output | Op::Const(_)) {
+                assert!(
+                    alphabet.contains(&n.op.label()),
+                    "mutant `{}` seed {seed}: op `{}` outside the alphabet {alphabet:?}",
+                    m.name,
+                    n.op.label()
+                );
+            }
+        }
+        parents.push(m);
+    }
+}
+
+#[test]
 fn prop_mapping_preserves_semantics_on_baseline() {
     // THE core invariant: covering + PE configuration never changes the
     // computed function.

@@ -22,6 +22,7 @@ use cgra_dse::service::protocol::{self, parse, Envelope, Request};
 use cgra_dse::service::server::{request_once, ServeConfig, Server, ServerStats};
 use cgra_dse::service::CACHE_SCHEMA_VERSION;
 use cgra_dse::session::{report as sjson, DseSession, FINGERPRINT_SCHEMA_VERSION};
+use cgra_dse::stress::campaign::{self, CampaignConfig, CampaignReport};
 use cgra_dse::stress::{self, StressConfig};
 
 fn fast_cfg() -> DseConfig {
@@ -492,6 +493,74 @@ fn stress_json_roundtrips_through_the_parser() {
     };
     let j = stress::run(&cfg).to_json();
     assert_roundtrip("STRESS.json", &j);
+}
+
+#[test]
+fn campaign_json_roundtrips_through_the_parser() {
+    let cfg = CampaignConfig {
+        budget: 4,
+        profiles: vec![synth::profile("const_heavy").unwrap().clone()],
+        stimuli: 2,
+        threads: 2,
+        shrink_budget: 48,
+        ..Default::default()
+    };
+    let mut rep = campaign::run_shard(&cfg);
+    // The coverage map is rendered as an explicit item array — a campaign
+    // that covered nothing would make this test vacuous.
+    assert!(!rep.coverage.is_empty());
+    assert_roundtrip("CAMPAIGN.json", &rep.to_json());
+    // With a fixed-sweep baseline attached (the `--baseline` shape).
+    rep.baseline = Some(campaign::fixed_sweep(&CampaignConfig {
+        budget: 2,
+        ..cfg
+    }));
+    let j = rep.to_json();
+    assert_roundtrip("CAMPAIGN.json+baseline", &j);
+    // The typed reader must agree with the writer: parse → re-render is a
+    // fixpoint, and the coverage map and curve survive intact.
+    let back = CampaignReport::from_json(&j).expect("typed CAMPAIGN.json parse");
+    assert_eq!(back.coverage, rep.coverage);
+    assert_eq!(back.curve, rep.curve);
+    assert_eq!(back.to_json(), j);
+}
+
+#[test]
+fn campaign_requests_are_served_sharded_and_cached() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    let line = "{\"req\":\"campaign\",\"profiles\":\"const_heavy\",\
+                \"seeds\":3,\"seed0\":5,\"shards\":2,\"shard\":1}";
+
+    let first = req(&addr, line);
+    assert!(first.ok, "{:?}", first.error);
+    assert_eq!(first.cached.as_deref(), Some("miss"));
+    let body = first.body.as_ref().expect("campaign body");
+    let rep = CampaignReport::from_json(body).expect("typed campaign body");
+    assert_eq!(rep.shards, 2);
+    assert_eq!(rep.shard, Some(1));
+    // budget 3 over 2 shards: shard 1 gets floor(3/2) = 1 scenario, and
+    // without an injection it runs its full share.
+    assert_eq!(rep.seeds_run, 1);
+    assert!(rep.passed());
+
+    // Warm repeat: byte-identical from cache.
+    let second = req(&addr, line);
+    assert!(second.ok);
+    assert_eq!(second.cached.as_deref(), Some("mem"));
+    assert_eq!(first.body_raw, second.body_raw);
+
+    // A different shard of the same campaign is a distinct artifact.
+    let other = req(
+        &addr,
+        "{\"req\":\"campaign\",\"profiles\":\"const_heavy\",\
+         \"seeds\":3,\"seed0\":5,\"shards\":2,\"shard\":0}",
+    );
+    assert!(other.ok, "{:?}", other.error);
+    assert_eq!(other.cached.as_deref(), Some("miss"));
+    assert_ne!(first.body_raw, other.body_raw);
+
+    let stats = shutdown(&addr, handle);
+    assert_eq!(stats.errors, 0);
 }
 
 #[test]

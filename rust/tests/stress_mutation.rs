@@ -4,9 +4,13 @@
 //! shrinks the scenario to a minimal reproduction, and (c) reports a
 //! replayable `(profile, seed)` line including the injection flag — so a
 //! green stress run means eight demonstrably-firing oracles, not eight
-//! no-ops.
+//! no-ops. The campaign-side tests repeat the exercise through the
+//! coverage-guided engine: every injection must also be reached by an
+//! adaptive campaign in fewer seeds than the fixed sweep's budget, and
+//! the distilled corpus repro must replay byte-identically.
 
 use cgra_dse::frontend::synth;
+use cgra_dse::stress::campaign::{self, CampaignConfig, CampaignReport};
 use cgra_dse::stress::{run, Mutation, StressConfig, INVARIANTS};
 
 /// Run single-seed scenarios with `mutation` injected until the target
@@ -114,6 +118,109 @@ fn mutation_fires_pnr_legal() {
     // deep_chain always yields instance-to-instance nets, so the shifted
     // expected endpoint is guaranteed to mismatch a routed net.
     assert_mutation_fires("pnr_legal", "deep_chain");
+}
+
+/// Campaign-side liveness: the same injected fault must also be found by
+/// an adaptive campaign run, in strictly fewer scenarios than the
+/// equal-budget fixed sweep would spend — a fixed sweep has no
+/// detection-aware exit, so it always runs all `budget` scenarios, while
+/// `stop_on_detection` cuts the campaign at its first firing repro. The
+/// distilled corpus entry must then replay the violation byte-identically
+/// through the same code path `cgra-dse campaign --replay` uses, and its
+/// replay field must be that one-line CLI repro.
+fn assert_campaign_detects(invariant: &'static str, profile_name: &str) {
+    let mutation = Mutation::for_invariant(invariant)
+        .unwrap_or_else(|| panic!("no mutation for `{invariant}`"));
+    let profile = synth::profile(profile_name).unwrap().clone();
+    // Seed corpus: the favorable profile pinned across the same 20-seed
+    // window the per-invariant tests above scan (warm-up runs the corpus
+    // in order on seeds seed0, seed0+1, …), so detection is guaranteed
+    // inside the window those tests establish.
+    let budget = 28;
+    let cfg = CampaignConfig {
+        budget,
+        seed0: 1,
+        profiles: vec![profile; 20],
+        stimuli: 2,
+        threads: 1,
+        shrink_budget: 48,
+        mutation,
+        stop_on_detection: true,
+        ..Default::default()
+    };
+    let rep = campaign::run_shard(&cfg);
+    let d = rep
+        .detection
+        .as_ref()
+        .unwrap_or_else(|| panic!("campaign never detected `{invariant}`"));
+    assert_eq!(d.invariant, invariant);
+    assert!(d.seeds_to_detection <= rep.seeds_run);
+    // Fewer total seeds than the fixed sweep at the same budget.
+    assert!(
+        rep.seeds_run < budget,
+        "`{invariant}`: campaign spent {} of {budget} seeds — no better than the fixed sweep",
+        rep.seeds_run
+    );
+    assert!(!rep.passed());
+    let idx = rep
+        .corpus
+        .iter()
+        .position(|e| e.violation.invariant == invariant)
+        .unwrap_or_else(|| panic!("no distilled corpus entry for `{invariant}`"));
+    let e = &rep.corpus[idx];
+    // The one-line CLI repro coordinates the corpus by entry index.
+    assert_eq!(
+        e.violation.replay,
+        format!("cgra-dse campaign --replay CAMPAIGN.json --entry {idx}")
+    );
+    // Byte-identical replay of the distilled repro (the `--replay` path).
+    campaign::replay_entry(e, &cfg.dse, mutation)
+        .unwrap_or_else(|msg| panic!("`{invariant}` replay diverged: {msg}"));
+    // And the entry survives the CAMPAIGN.json round-trip `--replay`
+    // actually consumes.
+    let back = CampaignReport::from_json(&rep.to_json()).expect("CAMPAIGN.json parses");
+    assert_eq!(back.corpus[idx].violation, e.violation);
+    assert_eq!(back.corpus[idx].profile, e.profile);
+}
+
+#[test]
+fn campaign_detects_canon_relabel() {
+    assert_campaign_detects("canon_relabel", "commutative_heavy");
+}
+
+#[test]
+fn campaign_detects_support_antimonotone() {
+    assert_campaign_detects("support_antimonotone", "const_heavy");
+}
+
+#[test]
+fn campaign_detects_mis_bound() {
+    assert_campaign_detects("mis_bound", "const_heavy");
+}
+
+#[test]
+fn campaign_detects_merged_remap() {
+    assert_campaign_detects("merged_remap", "dsp_like");
+}
+
+#[test]
+fn campaign_detects_eval_equiv() {
+    assert_campaign_detects("eval_equiv", "deep_chain");
+}
+
+#[test]
+fn campaign_detects_ladder_monotone() {
+    assert_campaign_detects("ladder_monotone", "const_heavy");
+}
+
+#[test]
+fn campaign_detects_report_identity() {
+    assert_campaign_detects("report_identity", "const_heavy");
+}
+
+#[test]
+fn campaign_detects_pnr_legal() {
+    assert_campaign_detects("pnr_legal", "deep_chain");
 }
 
 #[test]
