@@ -6,6 +6,10 @@
 //!   * **warm-cache**: repeated request answered from the memory tier;
 //!   * **single-flight-duplicate**: N concurrent identical requests
 //!     deduplicated onto one pipeline execution;
+//!   * **stage-prefix reuse**: `ladder` composed on a restarted server
+//!     whose disk cache holds only the app's mine/rank stage artifacts
+//!     (the stage-graph cache resumes below the cached prefix), vs the
+//!     same ladder fully cold;
 //!   * **chaos-soak**: the warm mix under the full fault-injection preset
 //!     with the retrying client — the cost of surviving disk faults,
 //!     corrupt artifacts, panics, and disconnects.
@@ -21,7 +25,7 @@ use cgra_dse::service::protocol;
 use cgra_dse::service::server::{
     fast_config, request_once, request_with_retry, RetryPolicy, ServeConfig, Server,
 };
-use cgra_dse::service::FaultPlan;
+use cgra_dse::service::{FaultPlan, CACHE_SCHEMA_VERSION};
 
 const LADDER_GAUSSIAN: &str = "{\"req\":\"ladder\",\"app\":\"gaussian\"}";
 const REPRODUCE_FIG9: &str = "{\"req\":\"reproduce\",\"target\":\"fig9\"}";
@@ -66,6 +70,27 @@ fn ask(addr: &str, line: &str) -> String {
 fn stop(addr: &str, handle: std::thread::JoinHandle<std::io::Result<cgra_dse::service::ServerStats>>) {
     let _ = request_once(addr, "{\"req\":\"shutdown\"}", 5_000);
     let _ = handle.join();
+}
+
+/// Strip a disk cache down to the gaussian mine/rank stage artifacts, so
+/// every timed iteration re-composes the ladder from exactly that prefix
+/// (response-level and downstream-stage artifacts published by a previous
+/// iteration must not short-circuit it).
+fn keep_only_stage_prefix(dir: &std::path::Path) {
+    let vdir = dir.join(format!("v{CACHE_SCHEMA_VERSION}"));
+    let Ok(entries) = std::fs::read_dir(&vdir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if !path.extension().is_some_and(|e| e == "art") {
+            continue;
+        }
+        let Ok(bytes) = std::fs::read(&path) else { continue };
+        let nl = bytes.iter().position(|&c| c == b'\n').unwrap_or(bytes.len());
+        let key = String::from_utf8_lossy(&bytes[..nl]).to_string();
+        if !key.contains(":stage.mine:") && !key.contains(":stage.rank:") {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
 }
 
 fn main() {
@@ -125,6 +150,54 @@ fn main() {
         "single-flight amortization: 16 duplicate requests in {:.1} ms (~{:.1} ms/req)",
         t_flight.median_ms,
         t_flight.median_ms / 16.0
+    );
+
+    // --- Stage-prefix reuse: the stage-graph cache lets a restarted
+    // server compose `ladder` from the persisted mine/rank stage
+    // artifacts a `mine` request left behind, computing only variants +
+    // evaluate — contrasted with the same ladder against an empty dir.
+    let stage_dir = std::env::temp_dir().join(format!("cgra_bench_stage_{}", std::process::id()));
+    let spawn_disk = |dir: std::path::PathBuf| {
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            cfg: fast_config(),
+            session_threads: 0,
+            cache_dir: Some(dir),
+            ..Default::default()
+        })
+        .expect("bind 127.0.0.1:0");
+        let addr = server.local_addr().to_string();
+        (addr, std::thread::spawn(move || server.run()))
+    };
+    let t_ladder_cold = bench_util::time_ms(2, || {
+        let _ = std::fs::remove_dir_all(&stage_dir);
+        let (addr, handle) = spawn_disk(stage_dir.clone());
+        let n = ask(&addr, LADDER_GAUSSIAN).len();
+        stop(&addr, handle);
+        n
+    });
+    bench_util::report("cold_ladder_gaussian", t_ladder_cold);
+    // Seed the mine/rank prefix once; each timed iteration restarts the
+    // server against a cache holding exactly that prefix.
+    let _ = std::fs::remove_dir_all(&stage_dir);
+    {
+        let (addr, handle) = spawn_disk(stage_dir.clone());
+        let _ = ask(&addr, "{\"req\":\"mine\",\"app\":\"gaussian\"}");
+        stop(&addr, handle);
+    }
+    let t_ladder_prefix = bench_util::time_ms(3, || {
+        keep_only_stage_prefix(&stage_dir);
+        let (addr, handle) = spawn_disk(stage_dir.clone());
+        let n = ask(&addr, LADDER_GAUSSIAN).len();
+        stop(&addr, handle);
+        n
+    });
+    bench_util::report("prefix_reuse_ladder_after_mine", t_ladder_prefix);
+    let _ = std::fs::remove_dir_all(&stage_dir);
+    println!(
+        "stage-prefix reuse: ladder-after-mine {:.1} ms vs cold ladder {:.1} ms",
+        t_ladder_prefix.median_ms, t_ladder_cold.median_ms
     );
 
     // --- Chaos soak: the warm mix under the full fault-injection preset,

@@ -234,22 +234,35 @@ pub fn ladder_from_ranked(
     ranked: &[RankedPattern],
     cfg: &DseConfig,
 ) -> Vec<(String, PeSpec)> {
+    ladder_from_chosen(app, &ladder_select(ranked, cfg))
+}
+
+/// The selection half of [`ladder_from_ranked`]: the complementary pattern
+/// graphs the ladder merges, in merge order. This is the *recipe* of a
+/// variant ladder — [`ladder_from_chosen`] rebuilds the full ladder from it
+/// deterministically, which is what the stage-artifact codec persists
+/// instead of the merged `PeSpec`s themselves.
+pub fn ladder_select(ranked: &[RankedPattern], cfg: &DseConfig) -> Vec<Graph> {
+    select_complementary(ranked, cfg.max_merged)
+        .into_iter()
+        .map(|r| r.pattern.graph.clone())
+        .collect()
+}
+
+/// The merge half of [`ladder_from_ranked`]: build the ladder from an
+/// already-selected list of complementary pattern graphs. Deterministic in
+/// `(app, chosen)` — byte-identical to the fused path for the same inputs.
+pub fn ladder_from_chosen(app: &App, chosen: &[Graph]) -> Vec<(String, PeSpec)> {
     let mut out = vec![
         ("base".to_string(), baseline_pe()),
         ("pe1".to_string(), pe1_for_app(&app.graph, format!("pe1_{}", app.name))),
     ];
     let singles = single_op_subs(&app.graph);
-    let selected = select_complementary(ranked, cfg.max_merged);
-    let mut chosen: Vec<Graph> = Vec::new();
-    for r in selected {
-        chosen.push(r.pattern.graph.clone());
-        let mut subs = chosen.clone();
+    for k in 1..=chosen.len() {
+        let mut subs: Vec<Graph> = chosen[..k].to_vec();
         subs.extend(singles.iter().cloned());
-        let name = format!("pe{}_{}", 1 + chosen.len(), app.name);
-        out.push((
-            format!("pe{}", 1 + chosen.len()),
-            PeSpec::from_subgraphs(name, &subs),
-        ));
+        let name = format!("pe{}_{}", 1 + k, app.name);
+        out.push((format!("pe{}", 1 + k), PeSpec::from_subgraphs(name, &subs)));
     }
     out
 }
@@ -272,6 +285,19 @@ pub fn domain_pe_from_ranked(
     name: &str,
     per_app: usize,
 ) -> PeSpec {
+    PeSpec::from_subgraphs(name, &domain_pe_subgraphs(apps, ranked, per_app))
+}
+
+/// The selection half of [`domain_pe_from_ranked`]: the deduplicated
+/// subgraph list (cross-app complementary patterns + the domain's single-op
+/// union) that the domain PE merges. This is the domain PE's *recipe* —
+/// `PeSpec::from_subgraphs(name, &subs)` rebuilds the merged PE
+/// deterministically, which is what the stage-artifact codec persists.
+pub fn domain_pe_subgraphs(
+    apps: &[&App],
+    ranked: &[&[RankedPattern]],
+    per_app: usize,
+) -> Vec<Graph> {
     let mut subs: Vec<Graph> = Vec::new();
     let mut seen_canon: Vec<CanonKey> = Vec::new();
     for app_ranked in ranked {
@@ -294,7 +320,7 @@ pub fn domain_pe_from_ranked(
             }
         }
     }
-    PeSpec::from_subgraphs(name, &subs)
+    subs
 }
 
 /// A cross-application domain PE (PE IP / PE ML / PE DSP of the domain

@@ -70,6 +70,18 @@ impl OccurrenceArena {
         debug_assert_eq!(row.len(), self.stride);
         self.data.extend_from_slice(row);
     }
+
+    /// Append one occurrence row. Public for artifact decoders that rebuild
+    /// an arena from persisted rows ([`crate::session::stagecodec`]);
+    /// returns `false` (and appends nothing) on a row-width mismatch so
+    /// corrupt artifacts degrade to a decode failure instead of a panic.
+    pub fn push_row(&mut self, row: &[NodeId]) -> bool {
+        if row.len() != self.stride {
+            return false;
+        }
+        self.data.extend_from_slice(row);
+        true
+    }
 }
 
 /// Search configuration.

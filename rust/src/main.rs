@@ -56,7 +56,7 @@ USAGE:
   cgra-dse campaign --replay FILE [--entry N]
   cgra-dse serve [--addr HOST:PORT] [--workers N] [--cache-dir DIR]
                  [--mem-cache N] [--threads N] [--fast]
-                 [--deadline-ms N] [--queue-max N] [--chaos SEED]
+                 [--deadline-ms N] [--queue-max N] [--chaos SEED] [--warm]
   cgra-dse request '<json>' [--addr HOST:PORT] [--timeout MS] [--retries N]
   cgra-dse validate [--app gaussian|conv|block] [--items N]
   cgra-dse version
@@ -656,6 +656,7 @@ fn cmd_campaign(flags: &Flags) -> i32 {
                     id: Some(format!("campaign-{shard}")),
                     fast: false,
                     degrade: false,
+                    warm: false,
                     req: protocol::Request::Campaign {
                         profiles: spec.to_string(),
                         seeds: cfg.budget,
@@ -836,6 +837,7 @@ fn cmd_serve(flags: &Flags) -> i32 {
         session_threads: flags.get_usize("threads", 0),
         deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms as u64)),
         compute_queue_max: flags.get_usize("queue-max", defaults.compute_queue_max),
+        warm: flags.has("warm"),
         faults: std::sync::Arc::new(faults),
         ..Default::default()
     };
@@ -868,7 +870,8 @@ fn cmd_serve(flags: &Flags) -> i32 {
         Ok(st) => {
             eprintln!(
                 "shutdown: {} requests ({} errors), cache hits {} mem / {} disk, \
-                 {} misses, {} single-flight waits, {} stage computes; \
+                 {} misses, {} single-flight waits, {} stage computes \
+                 ({} stage hits, {} stage joins, {} warmed, {} reclaimed); \
                  shed {}, deadline_exceeded {}, degraded {}, quarantined {}, \
                  compute replacements {}",
                 st.requests,
@@ -878,6 +881,10 @@ fn cmd_serve(flags: &Flags) -> i32 {
                 st.misses,
                 st.single_flight_waits,
                 st.stage_computes_total,
+                st.stage_hits_total,
+                st.stage_joins,
+                st.warmed,
+                st.reclaimed,
                 st.shed,
                 st.deadline_exceeded,
                 st.degraded,

@@ -214,6 +214,10 @@ pub struct CacheStats {
     pub mem_entries: usize,
     /// Disk artifacts rejected by validation and moved to quarantine.
     pub quarantined: usize,
+    /// Files deleted by the startup janitor from superseded `v*/` version
+    /// trees (a schema bump orphans the old tree; nothing ever reads it
+    /// again, so it is reclaimed on the next startup).
+    pub reclaimed: usize,
 }
 
 /// The two-tier cache. All methods are `&self` and thread-safe.
@@ -231,6 +235,56 @@ pub struct TieredCache {
     stores: AtomicUsize,
     quarantined: AtomicUsize,
     quarantine_seq: AtomicUsize,
+    /// Set once by the startup janitor; see [`CacheStats::reclaimed`].
+    reclaimed: usize,
+}
+
+/// Startup janitor: delete superseded `v*/` trees under the cache root,
+/// returning how many files were reclaimed. Only directories named
+/// `v<digits>` other than the current version are touched — `quarantine/`
+/// (and anything else) is preserved. Best-effort: an unreadable or
+/// half-deleted tree is simply retried on the next startup.
+fn reclaim_stale_versions(root: &Path, current_name: &str) -> usize {
+    let mut reclaimed = 0;
+    let Ok(entries) = std::fs::read_dir(root) else {
+        return 0;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if !path.is_dir() {
+            continue;
+        }
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(digits) = name.strip_prefix('v') else {
+            continue;
+        };
+        if name == current_name || digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit())
+        {
+            continue;
+        }
+        reclaimed += count_files(&path);
+        let _ = std::fs::remove_dir_all(&path);
+    }
+    reclaimed
+}
+
+fn count_files(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    entries
+        .flatten()
+        .map(|e| {
+            let p = e.path();
+            if p.is_dir() {
+                count_files(&p)
+            } else {
+                1
+            }
+        })
+        .sum()
 }
 
 impl TieredCache {
@@ -250,13 +304,21 @@ impl TieredCache {
         cache_dir: Option<&Path>,
         faults: Arc<FaultPlan>,
     ) -> io::Result<TieredCache> {
-        let (disk, quarantine) = match cache_dir {
+        let (disk, quarantine, reclaimed) = match cache_dir {
             Some(d) => {
-                let v = d.join(format!("v{CACHE_SCHEMA_VERSION}"));
+                let current = format!("v{CACHE_SCHEMA_VERSION}");
+                let v = d.join(&current);
                 std::fs::create_dir_all(&v)?;
-                (Some(v), Some(d.join("quarantine")))
+                let reclaimed = reclaim_stale_versions(d, &current);
+                if reclaimed > 0 {
+                    eprintln!(
+                        "cgra-dse: cache janitor reclaimed {reclaimed} file(s) from superseded version dirs under {}",
+                        d.display()
+                    );
+                }
+                (Some(v), Some(d.join("quarantine")), reclaimed)
             }
-            None => (None, None),
+            None => (None, None, 0),
         };
         Ok(TieredCache {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
@@ -270,6 +332,7 @@ impl TieredCache {
             stores: AtomicUsize::new(0),
             quarantined: AtomicUsize::new(0),
             quarantine_seq: AtomicUsize::new(0),
+            reclaimed,
         })
     }
 
@@ -428,6 +491,7 @@ impl TieredCache {
                 .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len())
                 .sum(),
             quarantined: self.quarantined.load(Ordering::Relaxed),
+            reclaimed: self.reclaimed,
         }
     }
 }
@@ -683,6 +747,57 @@ mod tests {
         c.put(&k, Arc::new("x".into()));
         assert!(c.recheck(&k).is_some());
         assert_eq!(c.stats().hits_mem, 1, "recheck hits still count");
+    }
+
+    #[test]
+    fn janitor_reclaims_stale_version_trees_and_preserves_quarantine() {
+        let dir = tmpdir("janitor");
+        // A superseded v1 tree with nested content, plus quarantine.
+        let v1 = dir.join("v1").join("nested");
+        std::fs::create_dir_all(&v1).unwrap();
+        std::fs::write(dir.join("v1").join("a.art"), "stale").unwrap();
+        std::fs::write(dir.join("v1").join("b.art"), "stale").unwrap();
+        std::fs::write(v1.join("c.art"), "stale").unwrap();
+        let qdir = dir.join("quarantine");
+        std::fs::create_dir_all(&qdir).unwrap();
+        std::fs::write(qdir.join("kept.art"), "post-mortem").unwrap();
+
+        let c = TieredCache::new(64, Some(&dir)).unwrap();
+        assert_eq!(c.stats().reclaimed, 3, "all three stale files counted");
+        assert!(!dir.join("v1").exists(), "stale version tree must be gone");
+        assert!(
+            qdir.join("kept.art").exists(),
+            "quarantine must never be reclaimed"
+        );
+        // The current version tree still works end-to-end.
+        c.put(&key(1, "camera"), Arc::new("x".into()));
+        let fresh = TieredCache::new(64, Some(&dir)).unwrap();
+        assert!(fresh.get(&key(1, "camera")).is_some());
+        assert_eq!(fresh.stats().reclaimed, 0, "nothing left to reclaim");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn janitor_spares_current_version_and_non_version_dirs() {
+        let dir = tmpdir("janitor_spares");
+        for name in ["vx", "v", "extra", "v1x"] {
+            let d = dir.join(name);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("f"), "keep").unwrap();
+        }
+        {
+            let c = TieredCache::new(64, Some(&dir)).unwrap();
+            assert_eq!(c.stats().reclaimed, 0);
+            c.put(&key(2, "camera"), Arc::new("y".into()));
+        }
+        for name in ["vx", "v", "extra", "v1x"] {
+            assert!(dir.join(name).join("f").exists(), "{name} must be spared");
+        }
+        // Re-opening never touches the current tree's artifacts.
+        let c = TieredCache::new(64, Some(&dir)).unwrap();
+        assert_eq!(c.stats().reclaimed, 0);
+        assert!(c.get(&key(2, "camera")).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

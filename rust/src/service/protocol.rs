@@ -55,7 +55,10 @@
 //! request may opt into graceful degradation with `"degrade":true`: if
 //! its full-configuration compute would be load-shed, the server answers
 //! from the fast configuration instead and marks the response
-//! `"degraded":true`.
+//! `"degraded":true`. A `mine` request may opt into speculative warm-up
+//! with `"warm":true` (or server-wide via `serve --warm`): after its mine
+//! stage lands cold, the downstream `ladder` artifact is enqueued
+//! fire-and-forget so the likely next request finds it warm.
 
 use std::fmt;
 
@@ -426,7 +429,7 @@ impl Request {
     }
 }
 
-/// A request plus its envelope fields (`id`, `fast`, `degrade`).
+/// A request plus its envelope fields (`id`, `fast`, `degrade`, `warm`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
     /// Opaque client tag, echoed back in the response.
@@ -438,6 +441,10 @@ pub struct Envelope {
     /// compute would be load-shed, serve the fast configuration instead
     /// of answering `overloaded` (the response is marked `degraded`).
     pub degrade: bool,
+    /// Opt into speculative warm-up: after this request's `mine` stage
+    /// lands cold, the server enqueues the downstream `ladder` artifact
+    /// fire-and-forget (also enabled server-wide by `serve --warm`).
+    pub warm: bool,
     pub req: Request,
 }
 
@@ -670,10 +677,15 @@ impl Envelope {
                 .as_bool()
                 .ok_or("envelope field `degrade` must be a boolean")?,
         };
+        let warm = match v.get("warm") {
+            None => false,
+            Some(w) => w.as_bool().ok_or("envelope field `warm` must be a boolean")?,
+        };
         Ok(Envelope {
             id,
             fast,
             degrade,
+            warm,
             req,
         })
     }
@@ -728,6 +740,9 @@ impl Envelope {
         }
         if self.degrade {
             pairs.push(("degrade", Json::Bool(true)));
+        }
+        if self.warm {
+            pairs.push(("warm", Json::Bool(true)));
         }
         Json::obj(pairs)
     }
@@ -1202,6 +1217,20 @@ mod tests {
         assert!(!plain.to_json().render().contains("degrade"));
         // Present-but-mistyped is an error, never a silent default.
         assert!(Envelope::parse_line(r#"{"req":"ladder","app":"fft","degrade":"y"}"#).is_err());
+    }
+
+    #[test]
+    fn warm_flag_roundtrips_and_rejects_wrong_types() {
+        let env = Envelope::parse_line(r#"{"req":"mine","app":"fft","warm":true}"#).unwrap();
+        assert!(env.warm);
+        let rendered = env.to_json().render();
+        assert_eq!(Envelope::parse_line(&rendered).unwrap(), env);
+        // Absent defaults to false and stays off the wire.
+        let plain = Envelope::parse_line(r#"{"req":"mine","app":"fft"}"#).unwrap();
+        assert!(!plain.warm);
+        assert!(!plain.to_json().render().contains("warm"));
+        // Present-but-mistyped is an error, never a silent default.
+        assert!(Envelope::parse_line(r#"{"req":"mine","app":"fft","warm":1}"#).is_err());
     }
 
     #[test]

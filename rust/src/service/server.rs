@@ -83,7 +83,8 @@ use crate::mining::MinerConfig;
 use crate::report::json::Json;
 use crate::runtime::default_width;
 use crate::session::{
-    config_fingerprint, report as sjson, DseSession, Stage, FINGERPRINT_SCHEMA_VERSION,
+    config_fingerprint, report as sjson, DseSession, Stage, StageStore,
+    FINGERPRINT_SCHEMA_VERSION,
 };
 use crate::stress::campaign::{self, CampaignConfig};
 use crate::stress::{self, Mutation, StressConfig};
@@ -149,6 +150,12 @@ pub struct ServeConfig {
     pub conn_backlog_max: usize,
     /// The `retry_after_ms` hint attached to `overloaded` responses.
     pub shed_retry_ms: u64,
+    /// Opt-in speculative warm-up (`serve --warm`): after a cold `mine`
+    /// compute lands, the downstream `ladder` artifact for the same app is
+    /// enqueued fire-and-forget on the compute pool (skipped when the
+    /// queue is at its admission bound). Individual requests can also opt
+    /// in with `warm:true` in the envelope.
+    pub warm: bool,
     /// Fault-injection plan (`serve --chaos <seed>`); the default
     /// disabled plan makes every injection site a dead branch.
     pub faults: Arc<FaultPlan>,
@@ -174,6 +181,7 @@ impl Default for ServeConfig {
             compute_queue_max: 64,
             conn_backlog_max: 128,
             shed_retry_ms: 100,
+            warm: false,
             faults: Arc::new(FaultPlan::none()),
         }
     }
@@ -202,6 +210,14 @@ pub struct ServerStats {
     pub quarantined: usize,
     /// Compute threads replaced after a deadline abandonment.
     pub compute_replacements: usize,
+    /// Session stages hydrated from persisted stage artifacts.
+    pub stage_hits_total: usize,
+    /// Requests that coalesced onto an in-flight stage compute.
+    pub stage_joins: usize,
+    /// Speculative downstream warm-ups enqueued.
+    pub warmed: usize,
+    /// Files reclaimed from superseded cache version dirs at startup.
+    pub reclaimed: usize,
 }
 
 enum FlightState {
@@ -299,6 +315,46 @@ fn spawn_compute_thread(state: Arc<ComputePoolState>) {
     });
 }
 
+// ---- stage-graph cache adapter -----------------------------------------
+
+/// The artifact kind under which one [`Stage`]'s output is cached. The
+/// `stage.` prefix keeps stage artifacts disjoint from whole-response
+/// kinds (`"ladder"`, `"mine"`, …) in the canonical key space, so no
+/// schema bump is needed: both families coexist under v2.
+fn stage_kind(stage: Stage) -> &'static str {
+    match stage {
+        Stage::Mine => "stage.mine",
+        Stage::Rank => "stage.rank",
+        Stage::Variants => "stage.variants",
+        Stage::Evaluate => "stage.evaluate",
+        Stage::Sweep => "stage.sweep",
+        Stage::Domain => "stage.domain",
+        Stage::Layout => "stage.layout",
+    }
+}
+
+/// [`StageStore`] over the server's tiered cache: every session stage
+/// output becomes a first-class disk artifact with the same
+/// checksum-trailer/quarantine discipline as whole responses, keyed
+/// `(fingerprint, stage.<name>, detail)`. Loads use `recheck` so cold
+/// stage probes don't inflate the response-level miss counter (stage
+/// *hits* still count — the tier did answer).
+struct CacheStageStore {
+    cache: Arc<TieredCache>,
+}
+
+impl StageStore for CacheStageStore {
+    fn load(&self, fingerprint: u64, stage: Stage, detail: &str) -> Option<String> {
+        let key = CacheKey::new(fingerprint, stage_kind(stage), detail);
+        self.cache.recheck(&key).map(|(v, _)| (*v).clone())
+    }
+
+    fn publish(&self, fingerprint: u64, stage: Stage, detail: &str, body: &str) {
+        let key = CacheKey::new(fingerprint, stage_kind(stage), detail);
+        self.cache.put(&key, Arc::new(body.to_string()));
+    }
+}
+
 // ---- shared server state -----------------------------------------------
 
 struct Shared {
@@ -323,6 +379,8 @@ struct Shared {
     shed: AtomicUsize,
     deadline_hits: AtomicUsize,
     degraded: AtomicUsize,
+    /// Speculative downstream warm-ups enqueued after a cold `mine`.
+    warmed: AtomicUsize,
     /// Accepted connections queued for a worker (admission gauge).
     conn_backlog: AtomicUsize,
     /// Connections currently being served by a worker.
@@ -365,9 +423,34 @@ impl Shared {
         (per, total)
     }
 
+    /// Per-stage cache-hydration counters summed over the session pool
+    /// (stages answered from persisted stage artifacts instead of
+    /// computing).
+    fn stage_hits(&self) -> (Vec<(&'static str, usize)>, usize) {
+        let pool = self.sessions();
+        let per: Vec<(&'static str, usize)> = Stage::ALL
+            .iter()
+            .map(|&st| {
+                (
+                    st.key(),
+                    pool.iter().map(|s| s.stage_hydrates(st)).sum::<usize>(),
+                )
+            })
+            .collect();
+        let total = per.iter().map(|(_, n)| n).sum();
+        (per, total)
+    }
+
+    /// Stage-flight joins summed over the session pool (requests that
+    /// coalesced onto another request's in-flight stage compute).
+    fn stage_joins(&self) -> usize {
+        self.sessions().iter().map(|s| s.stage_joins()).sum()
+    }
+
     fn final_stats(&self) -> ServerStats {
         let cs: CacheStats = self.cache.stats();
         let (_, total) = self.stage_computes();
+        let (_, hit_total) = self.stage_hits();
         ServerStats {
             requests: self.requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -381,6 +464,10 @@ impl Shared {
             degraded: self.degraded.load(Ordering::Relaxed),
             quarantined: cs.quarantined,
             compute_replacements: self.compute.replacements.load(Ordering::Relaxed),
+            stage_hits_total: hit_total,
+            stage_joins: self.stage_joins(),
+            warmed: self.warmed.load(Ordering::Relaxed),
+            reclaimed: cs.reclaimed,
         }
     }
 
@@ -434,6 +521,9 @@ impl Server {
                     .registry_suite()
                     .config(cfg)
                     .threads(threads)
+                    .stage_store(Arc::new(CacheStageStore {
+                        cache: cache.clone(),
+                    }))
                     .build(),
             )
         };
@@ -476,6 +566,7 @@ impl Server {
                 shed: AtomicUsize::new(0),
                 deadline_hits: AtomicUsize::new(0),
                 degraded: AtomicUsize::new(0),
+                warmed: AtomicUsize::new(0),
                 conn_backlog: AtomicUsize::new(0),
                 in_flight: AtomicUsize::new(0),
                 started: Instant::now(),
@@ -696,7 +787,19 @@ fn serve_request(
                 _ => session.fingerprint(),
             };
             let key = CacheKey::new(fingerprint, req.kind(), detail.clone());
-            match serve_cached(shared, session, &key, req, false) {
+            let result = serve_cached(shared, session, &key, req, false);
+            // Opt-in speculative warm-up: a cold `mine` means the ladder's
+            // downstream stages are likely next — enqueue the ladder
+            // artifact fire-and-forget while this response goes out.
+            if shared.sc.warm || env.warm {
+                let cold = matches!(&result, Ok((_, tag)) if *tag == "miss");
+                if cold {
+                    if let Request::Mine { app } = req {
+                        spawn_warmup(shared, session, app);
+                    }
+                }
+            }
+            match result {
                 // Graceful degradation: a shed full-config compute falls
                 // back to the fast pipeline when the client opted in (an
                 // already-fast request has nowhere lower to go). The
@@ -790,6 +893,52 @@ fn serve_cached(
             }
         }
     }
+}
+
+/// Fire-and-forget speculative warm-up of the `ladder` artifact for `app`
+/// after its `mine` stage landed cold. Best-effort by design: skipped when
+/// the artifact is already cached or the compute queue is at its admission
+/// bound, and nobody waits on the result (the done receiver is dropped) —
+/// the artifact simply lands in the cache for the next request. The
+/// session's stage flights make a racing real `ladder` request join the
+/// warm-up's stage computes rather than duplicate them.
+fn spawn_warmup(shared: &Shared, session: &Arc<DseSession>, app: &str) {
+    let req = Request::Ladder {
+        app: app.to_string(),
+    };
+    let detail = req.cache_detail().expect("ladder requests are cacheable");
+    let key = CacheKey::new(session.fingerprint(), req.kind(), detail);
+    if shared.cache.recheck(&key).is_some() {
+        return;
+    }
+    let pool = &shared.compute;
+    if pool.queued.load(Ordering::SeqCst) >= shared.sc.compute_queue_max {
+        return; // never compete with admitted foreground work
+    }
+    let (done_tx, _) = mpsc::channel::<ComputeResult>();
+    let session = session.clone();
+    let cache = shared.cache.clone();
+    let jkey = key.clone();
+    let run = Box::new(move || {
+        let body = Arc::new(compute(&req, &session)?);
+        cache.put(&jkey, body.clone());
+        Ok(body)
+    });
+    pool.queued.fetch_add(1, Ordering::SeqCst);
+    let sent = shared
+        .compute_tx
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .send(ComputeJob {
+            state: Arc::new(AtomicU8::new(JOB_QUEUED)),
+            run,
+            done: done_tx,
+        });
+    if sent.is_err() {
+        pool.queued.fetch_sub(1, Ordering::SeqCst);
+        return;
+    }
+    shared.warmed.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Admission check + job submission + deadline watch. The calling
@@ -991,6 +1140,12 @@ fn stats_body(shared: &Shared) -> String {
         .map(|(k, n)| (k.to_string(), Json::int(n)))
         .collect();
     stage_pairs.push(("total".to_string(), Json::int(total)));
+    let (per_hit, hit_total) = shared.stage_hits();
+    let mut hit_pairs: Vec<(String, Json)> = per_hit
+        .into_iter()
+        .map(|(k, n)| (k.to_string(), Json::int(n)))
+        .collect();
+    hit_pairs.push(("total".to_string(), Json::int(hit_total)));
     let mut pairs = vec![
         (
             "uptime_ms",
@@ -1037,6 +1192,10 @@ fn stats_body(shared: &Shared) -> String {
         ),
         ("sessions", Json::int(sessions)),
         ("stage_computes", Json::Obj(stage_pairs)),
+        ("stage_hits", Json::Obj(hit_pairs)),
+        ("stage_joins", Json::int(shared.stage_joins())),
+        ("warmed", Json::int(shared.warmed.load(Ordering::Relaxed))),
+        ("reclaimed", Json::int(cs.reclaimed)),
         (
             "fingerprint_schema",
             Json::int(FINGERPRINT_SCHEMA_VERSION as usize),
@@ -1177,6 +1336,21 @@ impl RetryPolicy {
     }
 }
 
+/// Sanitize the server's `retry_after_ms` hint before it feeds the
+/// backoff: a corrupt, adversarial, or buggy response can carry a NaN,
+/// infinite, negative, or astronomically large hint, and the hint floors
+/// the backoff — an unsanitized value could make the client sleep
+/// effectively forever, bypassing [`RetryPolicy::cap_ms`]. Non-finite and
+/// negative hints are dropped; finite ones are clamped to the cap (the
+/// `as u64` cast saturates, so huge finite values clamp rather than wrap).
+fn sanitize_hint(ms: Option<f64>, cap_ms: u64) -> Option<u64> {
+    let ms = ms?;
+    if !ms.is_finite() || ms < 0.0 {
+        return None;
+    }
+    Some((ms as u64).min(cap_ms))
+}
+
 /// [`request_once`] under a [`RetryPolicy`]: transport failures (connect,
 /// timeout, mid-response disconnect), garbled response lines, and the
 /// retryable typed errors (`overloaded` — honoring its `retry_after_ms` —
@@ -1185,24 +1359,41 @@ impl RetryPolicy {
 /// `bad_request` return immediately. When every attempt fails, the last
 /// response line (if any attempt got one) is returned `Ok` so the caller
 /// still sees the typed error; otherwise the last transport error.
+///
+/// `timeout_ms` is a true **end-to-end budget** across every attempt and
+/// backoff sleep (matching [`request_once`]'s own in-attempt semantics):
+/// each attempt runs under the *remaining* budget, and retrying stops
+/// early when the budget left after the backoff sleep could not cover
+/// even a `base_ms` attempt — a caller asking for a 2 s deadline waits
+/// ~2 s worst-case, never `attempts × 2 s` plus sleeps.
 pub fn request_with_retry(
     addr: &str,
     line: &str,
     timeout_ms: u64,
     policy: &RetryPolicy,
 ) -> Result<String, String> {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
     let attempts = policy.attempts.max(1);
     let mut hint: Option<u64> = None;
     let mut last: Result<String, String> = Err("no attempts made".to_string());
     for attempt in 1..=attempts {
         if attempt > 1 {
-            std::thread::sleep(Duration::from_millis(policy.delay_ms(attempt - 1, hint)));
+            let delay = Duration::from_millis(policy.delay_ms(attempt - 1, hint));
+            let earliest_retry = Instant::now() + delay + Duration::from_millis(policy.base_ms);
+            if earliest_retry >= deadline {
+                break; // a doomed attempt would only waste the caller's budget
+            }
+            std::thread::sleep(delay);
         }
-        match request_once(addr, line, timeout_ms) {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            break;
+        }
+        match request_once(addr, line, (remaining.as_millis() as u64).max(1)) {
             Ok(resp) => {
                 let retryable = match protocol::parse_response(&resp) {
                     Ok(view) => {
-                        hint = view.retry_after_ms.map(|ms| ms as u64);
+                        hint = sanitize_hint(view.retry_after_ms, policy.cap_ms);
                         !view.ok
                             && matches!(
                                 view.code.as_deref(),
@@ -1276,5 +1467,65 @@ mod tests {
         // The server hint floors the wait (up to the cap).
         assert!(p.delay_ms(1, Some(400)) >= 400);
         assert!(p.delay_ms(1, Some(30_000)) <= 1000, "cap beats the hint");
+    }
+
+    #[test]
+    fn pathological_retry_hints_are_sanitized() {
+        // Adversarial/corrupt `retry_after_ms` values must never reach the
+        // backoff as a floor: non-finite and negative drop, huge clamps.
+        assert_eq!(sanitize_hint(None, 1000), None);
+        assert_eq!(sanitize_hint(Some(f64::NAN), 1000), None);
+        assert_eq!(sanitize_hint(Some(f64::INFINITY), 1000), None);
+        assert_eq!(sanitize_hint(Some(f64::NEG_INFINITY), 1000), None);
+        assert_eq!(sanitize_hint(Some(-1.0), 1000), None);
+        assert_eq!(sanitize_hint(Some(-0.0), 1000), Some(0), "negative zero is zero");
+        assert_eq!(sanitize_hint(Some(1e300), 1000), Some(1000), "huge clamps to cap");
+        assert_eq!(sanitize_hint(Some(u64::MAX as f64 * 4.0), 1000), Some(1000));
+        assert_eq!(sanitize_hint(Some(250.7), 1000), Some(250));
+        assert_eq!(sanitize_hint(Some(0.0), 1000), Some(0));
+        // And through the policy: even a huge *sanitized* hint can never
+        // exceed the cap.
+        let p = RetryPolicy {
+            attempts: 3,
+            base_ms: 50,
+            cap_ms: 1000,
+            seed: 7,
+        };
+        let h = sanitize_hint(Some(f64::MAX), p.cap_ms);
+        assert!(p.delay_ms(1, h) <= p.cap_ms);
+        assert_eq!(p.delay_ms(1, sanitize_hint(Some(f64::NAN), p.cap_ms)), p.delay_ms(1, None));
+    }
+
+    #[test]
+    fn retry_honors_an_end_to_end_budget_against_a_stalling_server() {
+        // A server that accepts and then never responds: every attempt
+        // stalls until its read timeout. With per-attempt semantics this
+        // would take ~attempts × budget plus sleeps; the end-to-end budget
+        // must bound the whole call near `timeout_ms`.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let mut held = Vec::new();
+            for s in listener.incoming() {
+                match s {
+                    Ok(s) => held.push(s), // keep open, never reply
+                    Err(_) => break,
+                }
+            }
+        });
+        let policy = RetryPolicy {
+            attempts: 5,
+            base_ms: 20,
+            cap_ms: 100,
+            seed: 1,
+        };
+        let t0 = Instant::now();
+        let res = request_with_retry(&addr, "{\"req\":\"stats\"}", 400, &policy);
+        let elapsed = t0.elapsed();
+        assert!(res.is_err(), "a stalling server must surface a transport error");
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "budget must bound total elapsed, got {elapsed:?}"
+        );
     }
 }

@@ -1,0 +1,835 @@
+//! Stage-artifact codecs: lossless JSON persistence for every
+//! [`crate::session::Stage`] output, so the serving layer can cache the
+//! stage DAG itself instead of whole response bodies (DESIGN.md §2b).
+//!
+//! Two encoding strategies are used, picked per stage for fidelity and
+//! artifact size:
+//!
+//! - **Value codecs** (`mine`, `rank`, `evaluate`, `sweep`, `layout`)
+//!   persist the stage result itself. Every `f64` is stored as its exact
+//!   IEEE-754 bit pattern (16-hex-digit string), so a decoded value is
+//!   bit-identical to the computed one — byte-identity of rendered
+//!   responses composed from cached prefixes follows.
+//! - **Recipe codecs** (`variants`, `domain`) persist the *deterministic
+//!   inputs* of the stage's merge step (the selected subgraph lists)
+//!   instead of the merged [`crate::pe::PeSpec`], and rebuild the spec via
+//!   [`crate::pe::PeSpec::from_subgraphs`] /
+//!   [`crate::dse::ladder_from_chosen`] on hydration. The merge is cheap
+//!   and pure, so the rebuilt value is identical while the artifact stays
+//!   small and the codec stays decoupled from datapath internals.
+//!
+//! Decoding is strictly defensive: any structural mismatch, out-of-range
+//! index, or codec-version skew returns `None`, which callers treat as a
+//! plain cache miss (the artifact layer separately checksums bytes; this
+//! layer guards *semantic* corruption so a hostile artifact can never
+//! panic the pipeline). Derived fields of a [`MinedPattern`] (canonical
+//! key, distinct node sets, MNI support) are recomputed from the decoded
+//! graph + occurrences rather than trusted from disk.
+
+use crate::dse::{RankedPattern, SweepPoint, VariantEval};
+use crate::ir::{
+    canon_key, distinct_node_sets, mni_support, Graph, NodeId, OccurrenceArena, Op,
+};
+use crate::layout::{LayoutFront, LayoutPoint, Mix, Topology};
+use crate::mapper::{DataSrc, MappedPe, Mapping, OutSrc};
+use crate::mining::MinedPattern;
+use crate::power::PeEval;
+use crate::report::json::Json;
+use crate::service::protocol::parse;
+use std::collections::BTreeMap;
+
+/// Version of the stage-artifact encoding. Bumping it makes every
+/// persisted stage artifact decode as a miss (recompute + republish) —
+/// no cache-schema bump needed, because the byte format stays valid.
+pub const STAGE_CODEC_VERSION: u32 = 1;
+
+/// Node-id sanity bound for decoded occurrence rows: far above any real
+/// application (≤ ~10⁵ nodes) while keeping the bitsets
+/// [`mni_support`] allocates bounded even for hostile artifacts.
+const MAX_NODE_ID: u32 = 1 << 24;
+
+// ---- scalar helpers ----------------------------------------------------
+
+/// Exact f64: IEEE-754 bits as a fixed-width hex string (`Json::num`
+/// would degrade non-finite values to null and is not round-trip exact
+/// for every bit pattern).
+fn f64_json(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn f64_of(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+fn opt_f64_json(v: Option<f64>) -> Json {
+    match v {
+        Some(v) => f64_json(v),
+        None => Json::Null,
+    }
+}
+
+fn opt_f64_of(j: &Json) -> Option<Option<f64>> {
+    match j {
+        Json::Null => Some(None),
+        other => f64_of(other).map(Some),
+    }
+}
+
+fn i64_json(v: i64) -> Json {
+    debug_assert!(v.unsigned_abs() < (1 << 53));
+    Json::Num(v as f64)
+}
+
+fn i64_of(j: &Json) -> Option<i64> {
+    match j {
+        Json::Num(v) if v.fract() == 0.0 && v.abs() < (1u64 << 53) as f64 => Some(*v as i64),
+        _ => None,
+    }
+}
+
+// ---- graph codec -------------------------------------------------------
+
+fn op_json(op: Op) -> Json {
+    match op {
+        // The label alone erases const values; keep them.
+        Op::Const(v) => Json::Str(format!("const:{v}")),
+        other => Json::str(other.label()),
+    }
+}
+
+fn op_of(s: &str) -> Option<Op> {
+    if let Some(v) = s.strip_prefix("const:") {
+        return v.parse::<i64>().ok().map(Op::Const);
+    }
+    Some(match s {
+        "in" => Op::Input,
+        "out" => Op::Output,
+        "add" => Op::Add,
+        "sub" => Op::Sub,
+        "mul" => Op::Mul,
+        "shl" => Op::Shl,
+        "lshr" => Op::Lshr,
+        "ashr" => Op::Ashr,
+        "min" => Op::Min,
+        "max" => Op::Max,
+        "abs" => Op::Abs,
+        "lt" => Op::Lt,
+        "gt" => Op::Gt,
+        "eq" => Op::Eq,
+        "sel" => Op::Sel,
+        "and" => Op::And,
+        "or" => Op::Or,
+        "xor" => Op::Xor,
+        "not" => Op::Not,
+        "clamp" => Op::Clamp,
+        _ => return None,
+    })
+}
+
+fn graph_json(g: &Graph) -> Json {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| Json::Arr(vec![op_json(n.op), Json::str(n.name.clone())]))
+        .collect();
+    let edges: Vec<Json> = g
+        .edges
+        .iter()
+        .map(|e| {
+            Json::Arr(vec![
+                Json::int(e.src.index()),
+                Json::int(e.dst.index()),
+                Json::int(e.dst_port as usize),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(g.name.clone())),
+        ("nodes", Json::Arr(nodes)),
+        ("edges", Json::Arr(edges)),
+    ])
+}
+
+fn graph_of(j: &Json) -> Option<Graph> {
+    let name = j.get("name")?.as_str()?;
+    let mut g = Graph::new(name);
+    for n in j.get("nodes")?.as_arr()? {
+        let row = n.as_arr()?;
+        if row.len() != 2 {
+            return None;
+        }
+        let op = op_of(row[0].as_str()?)?;
+        g.add_node(op, row[1].as_str()?);
+    }
+    let len = g.len();
+    for e in j.get("edges")?.as_arr()? {
+        let row = e.as_arr()?;
+        if row.len() != 3 {
+            return None;
+        }
+        let (src, dst, port) = (row[0].as_usize()?, row[1].as_usize()?, row[2].as_usize()?);
+        // Validate before `connect`: its debug assertion would panic on a
+        // hostile artifact; a decode failure is the correct degradation.
+        if src >= len || dst >= len || port >= g.nodes[dst].op.arity() {
+            return None;
+        }
+        g.connect(NodeId(src as u32), NodeId(dst as u32), port as u8);
+    }
+    Some(g)
+}
+
+// ---- mined-pattern codec ----------------------------------------------
+
+fn pattern_json(p: &MinedPattern) -> Json {
+    let mut occ: Vec<Json> = Vec::with_capacity(p.occurrences.len() * p.occurrences.stride());
+    for row in p.occurrences.iter() {
+        occ.extend(row.iter().map(|id| Json::int(id.index())));
+    }
+    Json::obj(vec![
+        ("graph", graph_json(&p.graph)),
+        ("occ", Json::Arr(occ)),
+    ])
+}
+
+/// Decode a mined pattern; derived fields (canon key, distinct sets, MNI
+/// support) are recomputed, not trusted.
+fn pattern_of(j: &Json) -> Option<MinedPattern> {
+    let graph = graph_of(j.get("graph")?)?;
+    let stride = graph.len();
+    if stride == 0 {
+        return None;
+    }
+    let flat = j.get("occ")?.as_arr()?;
+    if flat.len() % stride != 0 {
+        return None;
+    }
+    let mut occurrences = OccurrenceArena::new(stride);
+    let mut row: Vec<NodeId> = Vec::with_capacity(stride);
+    for chunk in flat.chunks_exact(stride) {
+        row.clear();
+        for v in chunk {
+            let id = v.as_u64()?;
+            if id >= MAX_NODE_ID as u64 {
+                return None;
+            }
+            row.push(NodeId(id as u32));
+        }
+        if !occurrences.push_row(&row) {
+            return None;
+        }
+    }
+    let canon = canon_key(&graph);
+    let distinct = distinct_node_sets(&occurrences);
+    let support = mni_support(stride, &occurrences);
+    Some(MinedPattern {
+        graph,
+        canon,
+        occurrences,
+        distinct,
+        support,
+    })
+}
+
+// ---- stage envelopes ---------------------------------------------------
+
+fn envelope(stage: &str, payload: Json) -> String {
+    Json::obj(vec![
+        ("codec", Json::int(STAGE_CODEC_VERSION as usize)),
+        ("stage", Json::str(stage)),
+        ("payload", payload),
+    ])
+    .render()
+}
+
+fn open_envelope(body: &str, stage: &str) -> Option<Json> {
+    let v = parse(body).ok()?;
+    if v.get("codec")?.as_usize()? != STAGE_CODEC_VERSION as usize {
+        return None;
+    }
+    if v.get("stage")?.as_str()? != stage {
+        return None;
+    }
+    // Json has no owned-field extractor; clone the payload subtree.
+    Some(v.get("payload")?.clone())
+}
+
+// ---- mine --------------------------------------------------------------
+
+pub fn encode_mine(patterns: &[MinedPattern]) -> String {
+    envelope(
+        "mine",
+        Json::Arr(patterns.iter().map(pattern_json).collect()),
+    )
+}
+
+pub fn decode_mine(body: &str) -> Option<Vec<MinedPattern>> {
+    let payload = open_envelope(body, "mine")?;
+    payload.as_arr()?.iter().map(pattern_of).collect()
+}
+
+// ---- rank --------------------------------------------------------------
+
+pub fn encode_rank(ranked: &[RankedPattern]) -> String {
+    let rows: Vec<Json> = ranked
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("pattern", pattern_json(&r.pattern)),
+                ("mis", Json::int(r.mis_size)),
+                ("savings", Json::int(r.savings)),
+            ])
+        })
+        .collect();
+    envelope("rank", Json::Arr(rows))
+}
+
+pub fn decode_rank(body: &str) -> Option<Vec<RankedPattern>> {
+    let payload = open_envelope(body, "rank")?;
+    payload
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            Some(RankedPattern {
+                pattern: pattern_of(r.get("pattern")?)?,
+                mis_size: r.get("mis")?.as_usize()?,
+                savings: r.get("savings")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+// ---- variants (recipe: chosen complementary pattern graphs) ------------
+
+pub fn encode_variants(chosen: &[Graph]) -> String {
+    envelope(
+        "variants",
+        Json::Arr(chosen.iter().map(graph_json).collect()),
+    )
+}
+
+pub fn decode_variants(body: &str) -> Option<Vec<Graph>> {
+    let payload = open_envelope(body, "variants")?;
+    payload.as_arr()?.iter().map(graph_of).collect()
+}
+
+// ---- evaluate (full VariantEval value codec) ---------------------------
+
+fn datasrc_json(src: &DataSrc) -> Json {
+    match src {
+        DataSrc::AppInput(id) => Json::Arr(vec![Json::str("app"), Json::int(id.index())]),
+        DataSrc::Instance { inst, pos } => {
+            Json::Arr(vec![Json::str("inst"), Json::int(*inst), Json::int(*pos)])
+        }
+        DataSrc::Constant(v) => Json::Arr(vec![Json::str("const"), i64_json(*v)]),
+    }
+}
+
+fn datasrc_of(j: &Json) -> Option<DataSrc> {
+    let row = j.as_arr()?;
+    match row.first()?.as_str()? {
+        "app" if row.len() == 2 => Some(DataSrc::AppInput(node_id_of(&row[1])?)),
+        "inst" if row.len() == 3 => Some(DataSrc::Instance {
+            inst: row[1].as_usize()?,
+            pos: row[2].as_usize()?,
+        }),
+        "const" if row.len() == 2 => Some(DataSrc::Constant(i64_of(&row[1])?)),
+        _ => None,
+    }
+}
+
+fn outsrc_json(src: &OutSrc) -> Json {
+    match src {
+        OutSrc::Instance { inst, pos } => {
+            Json::Arr(vec![Json::str("inst"), Json::int(*inst), Json::int(*pos)])
+        }
+        OutSrc::Constant(v) => Json::Arr(vec![Json::str("const"), i64_json(*v)]),
+    }
+}
+
+fn outsrc_of(j: &Json) -> Option<OutSrc> {
+    let row = j.as_arr()?;
+    match row.first()?.as_str()? {
+        "inst" if row.len() == 3 => Some(OutSrc::Instance {
+            inst: row[1].as_usize()?,
+            pos: row[2].as_usize()?,
+        }),
+        "const" if row.len() == 2 => Some(OutSrc::Constant(i64_of(&row[1])?)),
+        _ => None,
+    }
+}
+
+fn node_id_of(j: &Json) -> Option<NodeId> {
+    let id = j.as_u64()?;
+    (id < MAX_NODE_ID as u64).then(|| NodeId(id as u32))
+}
+
+fn node_ids_json(ids: &[NodeId]) -> Json {
+    Json::Arr(ids.iter().map(|id| Json::int(id.index())).collect())
+}
+
+fn node_ids_of(j: &Json) -> Option<Vec<NodeId>> {
+    j.as_arr()?.iter().map(node_id_of).collect()
+}
+
+fn f64s_json(vs: &[f64]) -> Json {
+    Json::Arr(vs.iter().map(|&v| f64_json(v)).collect())
+}
+
+fn f64s_of(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(f64_of).collect()
+}
+
+fn mapping_json(m: &Mapping) -> Json {
+    let instances: Vec<Json> = m
+        .instances
+        .iter()
+        .map(|i| {
+            let consts: Vec<Json> = i
+                .const_values
+                .iter()
+                .map(|(&unit, &v)| Json::Arr(vec![Json::int(unit), i64_json(v)]))
+                .collect();
+            Json::obj(vec![
+                ("mode", Json::int(i.mode)),
+                ("occ", node_ids_json(&i.occ)),
+                ("consts", Json::Arr(consts)),
+                ("inputs", Json::Arr(i.inputs.iter().map(datasrc_json).collect())),
+                ("outputs", node_ids_json(&i.outputs)),
+            ])
+        })
+        .collect();
+    let outs: Vec<Json> = m
+        .app_outputs
+        .iter()
+        .map(|(id, src)| Json::Arr(vec![Json::int(id.index()), outsrc_json(src)]))
+        .collect();
+    Json::obj(vec![
+        ("instances", Json::Arr(instances)),
+        ("app_outputs", Json::Arr(outs)),
+        ("ops", Json::int(m.ops_covered)),
+    ])
+}
+
+fn mapping_of(j: &Json) -> Option<Mapping> {
+    let mut instances = Vec::new();
+    for i in j.get("instances")?.as_arr()? {
+        let mut const_values: BTreeMap<usize, i64> = BTreeMap::new();
+        for kv in i.get("consts")?.as_arr()? {
+            let row = kv.as_arr()?;
+            if row.len() != 2 {
+                return None;
+            }
+            const_values.insert(row[0].as_usize()?, i64_of(&row[1])?);
+        }
+        instances.push(MappedPe {
+            mode: i.get("mode")?.as_usize()?,
+            occ: node_ids_of(i.get("occ")?)?,
+            const_values,
+            inputs: i.get("inputs")?.as_arr()?.iter().map(datasrc_of).collect::<Option<_>>()?,
+            outputs: node_ids_of(i.get("outputs")?)?,
+        });
+    }
+    let mut app_outputs = Vec::new();
+    for o in j.get("app_outputs")?.as_arr()? {
+        let row = o.as_arr()?;
+        if row.len() != 2 {
+            return None;
+        }
+        app_outputs.push((node_id_of(&row[0])?, outsrc_of(&row[1])?));
+    }
+    Some(Mapping {
+        instances,
+        app_outputs,
+        ops_covered: j.get("ops")?.as_usize()?,
+    })
+}
+
+fn pe_eval_json(e: &PeEval) -> Json {
+    Json::obj(vec![
+        ("area", f64_json(e.area)),
+        ("delay_ps", f64_json(e.delay_ps)),
+        ("fmax_ghz", f64_json(e.fmax_ghz)),
+        ("mode_energy", f64s_json(&e.mode_energy)),
+        ("mode_energy_per_op", f64s_json(&e.mode_energy_per_op)),
+        ("config_bits", Json::int(e.config_bits)),
+    ])
+}
+
+fn pe_eval_of(j: &Json) -> Option<PeEval> {
+    Some(PeEval {
+        area: f64_of(j.get("area")?)?,
+        delay_ps: f64_of(j.get("delay_ps")?)?,
+        fmax_ghz: f64_of(j.get("fmax_ghz")?)?,
+        mode_energy: f64s_of(j.get("mode_energy")?)?,
+        mode_energy_per_op: f64s_of(j.get("mode_energy_per_op")?)?,
+        config_bits: j.get("config_bits")?.as_usize()?,
+    })
+}
+
+fn variant_eval_json(ve: &VariantEval) -> Json {
+    Json::obj(vec![
+        ("variant", Json::str(ve.variant.clone())),
+        ("app", Json::str(ve.app.clone())),
+        ("eval", pe_eval_json(&ve.eval)),
+        ("mapping", mapping_json(&ve.mapping)),
+        ("n_pes", Json::int(ve.n_pes)),
+        ("total_area", f64_json(ve.total_area)),
+        ("pe_energy_per_op", f64_json(ve.pe_energy_per_op)),
+        ("icn_energy_per_op", f64_json(ve.icn_energy_per_op)),
+        ("fmax_ghz", f64_json(ve.fmax_ghz)),
+    ])
+}
+
+fn variant_eval_of(j: &Json) -> Option<VariantEval> {
+    Some(VariantEval {
+        variant: j.get("variant")?.as_str()?.to_string(),
+        app: j.get("app")?.as_str()?.to_string(),
+        eval: pe_eval_of(j.get("eval")?)?,
+        mapping: mapping_of(j.get("mapping")?)?,
+        n_pes: j.get("n_pes")?.as_usize()?,
+        total_area: f64_of(j.get("total_area")?)?,
+        pe_energy_per_op: f64_of(j.get("pe_energy_per_op")?)?,
+        icn_energy_per_op: f64_of(j.get("icn_energy_per_op")?)?,
+        fmax_ghz: f64_of(j.get("fmax_ghz")?)?,
+    })
+}
+
+pub fn encode_evaluate(evals: &[VariantEval]) -> String {
+    envelope(
+        "evaluate",
+        Json::Arr(evals.iter().map(variant_eval_json).collect()),
+    )
+}
+
+pub fn decode_evaluate(body: &str) -> Option<Vec<VariantEval>> {
+    let payload = open_envelope(body, "evaluate")?;
+    payload.as_arr()?.iter().map(variant_eval_of).collect()
+}
+
+// ---- sweep -------------------------------------------------------------
+
+pub fn encode_sweep(rows: &[(String, Vec<SweepPoint>)]) -> String {
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|(variant, pts)| {
+            let pts: Vec<Json> = pts
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("variant", Json::str(p.variant.clone())),
+                        ("freq_ghz", f64_json(p.freq_ghz)),
+                        ("energy_per_op", opt_f64_json(p.energy_per_op)),
+                        ("total_area", opt_f64_json(p.total_area)),
+                    ])
+                })
+                .collect();
+            Json::Arr(vec![Json::str(variant.clone()), Json::Arr(pts)])
+        })
+        .collect();
+    envelope("sweep", Json::Arr(arr))
+}
+
+pub fn decode_sweep(body: &str) -> Option<Vec<(String, Vec<SweepPoint>)>> {
+    let payload = open_envelope(body, "sweep")?;
+    payload
+        .as_arr()?
+        .iter()
+        .map(|row| {
+            let pair = row.as_arr()?;
+            if pair.len() != 2 {
+                return None;
+            }
+            let pts = pair[1]
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Some(SweepPoint {
+                        variant: p.get("variant")?.as_str()?.to_string(),
+                        freq_ghz: f64_of(p.get("freq_ghz")?)?,
+                        energy_per_op: opt_f64_of(p.get("energy_per_op")?)?,
+                        total_area: opt_f64_of(p.get("total_area")?)?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?;
+            Some((pair[0].as_str()?.to_string(), pts))
+        })
+        .collect()
+}
+
+// ---- domain (recipe: merged subgraph list) -----------------------------
+
+pub fn encode_domain(name: &str, subs: &[Graph]) -> String {
+    envelope(
+        "domain",
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("subs", Json::Arr(subs.iter().map(graph_json).collect())),
+        ]),
+    )
+}
+
+pub fn decode_domain(body: &str) -> Option<(String, Vec<Graph>)> {
+    let payload = open_envelope(body, "domain")?;
+    let name = payload.get("name")?.as_str()?.to_string();
+    let subs = payload
+        .get("subs")?
+        .as_arr()?
+        .iter()
+        .map(graph_of)
+        .collect::<Option<Vec<_>>>()?;
+    Some((name, subs))
+}
+
+// ---- layout ------------------------------------------------------------
+
+fn topology_of(s: &str) -> Option<Topology> {
+    match s {
+        "mesh" => Some(Topology::Mesh),
+        "1hop" => Some(Topology::OneHop),
+        _ => None,
+    }
+}
+
+fn mix_of(s: &str) -> Option<Mix> {
+    match s {
+        "uniform" => Some(Mix::Uniform),
+        "het" => Some(Mix::Hetero),
+        _ => None,
+    }
+}
+
+pub fn encode_layout(front: &LayoutFront) -> String {
+    let points: Vec<Json> = front
+        .points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("pe", Json::str(p.pe.clone())),
+                ("topology", Json::str(p.topology.key())),
+                ("width", Json::int(p.width)),
+                ("height", Json::int(p.height)),
+                ("mix", Json::str(p.mix.key())),
+                ("energy_per_op_fj", f64_json(p.energy_per_op_fj)),
+                ("area_um2", f64_json(p.area_um2)),
+                ("congestion", f64_json(p.congestion)),
+                ("total_hops", Json::int(p.total_hops)),
+                ("peak_utilization", f64_json(p.peak_utilization)),
+                ("latency_cycles", Json::int(p.latency_cycles)),
+                ("used_pes", Json::int(p.used_pes)),
+                ("pe_tiles", Json::int(p.pe_tiles)),
+            ])
+        })
+        .collect();
+    envelope(
+        "layout",
+        Json::obj(vec![
+            ("domain", Json::str(front.domain.clone())),
+            ("pe", Json::str(front.pe.clone())),
+            ("points", Json::Arr(points)),
+            ("explored", Json::int(front.explored)),
+            ("infeasible", Json::int(front.infeasible)),
+        ]),
+    )
+}
+
+pub fn decode_layout(body: &str) -> Option<LayoutFront> {
+    let payload = open_envelope(body, "layout")?;
+    let points = payload
+        .get("points")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Some(LayoutPoint {
+                pe: p.get("pe")?.as_str()?.to_string(),
+                topology: topology_of(p.get("topology")?.as_str()?)?,
+                width: p.get("width")?.as_usize()?,
+                height: p.get("height")?.as_usize()?,
+                mix: mix_of(p.get("mix")?.as_str()?)?,
+                energy_per_op_fj: f64_of(p.get("energy_per_op_fj")?)?,
+                area_um2: f64_of(p.get("area_um2")?)?,
+                congestion: f64_of(p.get("congestion")?)?,
+                total_hops: p.get("total_hops")?.as_usize()?,
+                peak_utilization: f64_of(p.get("peak_utilization")?)?,
+                latency_cycles: p.get("latency_cycles")?.as_usize()?,
+                used_pes: p.get("used_pes")?.as_usize()?,
+                pe_tiles: p.get("pe_tiles")?.as_usize()?,
+            })
+        })
+        .collect::<Option<Vec<_>>>()?;
+    Some(LayoutFront {
+        domain: payload.get("domain")?.as_str()?.to_string(),
+        pe: payload.get("pe")?.as_str()?.to_string(),
+        points,
+        explored: payload.get("explored")?.as_usize()?,
+        infeasible: payload.get("infeasible")?.as_usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{self, DseConfig};
+    use crate::frontend::AppSuite;
+    use crate::mining::MinerConfig;
+
+    fn fast_cfg() -> DseConfig {
+        DseConfig {
+            miner: MinerConfig {
+                min_support: 3,
+                max_nodes: 3,
+                max_patterns: 200,
+                ..Default::default()
+            },
+            max_merged: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mine_roundtrips_exactly() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let cfg = fast_cfg();
+        let mined = dse::mine_patterns(&app, &cfg);
+        assert!(!mined.is_empty());
+        let decoded = decode_mine(&encode_mine(&mined)).expect("decode");
+        assert_eq!(decoded.len(), mined.len());
+        for (a, b) in mined.iter().zip(&decoded) {
+            assert_eq!(a.canon, b.canon);
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.distinct, b.distinct);
+            assert_eq!(a.graph.edges, b.graph.edges);
+            assert_eq!(a.occurrences.len(), b.occurrences.len());
+        }
+        // Re-encoding the decoded value is byte-identical: the codec is a
+        // fixed point, so republished artifacts never churn.
+        assert_eq!(encode_mine(&decoded), encode_mine(&mined));
+    }
+
+    #[test]
+    fn rank_and_variants_roundtrip_rebuild_identical_ladders() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let cfg = fast_cfg();
+        let mined = dse::mine_patterns(&app, &cfg);
+        let ranked = dse::rank_mined(&mined, &cfg);
+        let decoded = decode_rank(&encode_rank(&ranked)).expect("decode rank");
+        assert_eq!(decoded.len(), ranked.len());
+        for (a, b) in ranked.iter().zip(&decoded) {
+            assert_eq!(a.mis_size, b.mis_size);
+            assert_eq!(a.savings, b.savings);
+            assert_eq!(a.pattern.canon, b.pattern.canon);
+        }
+        let chosen = dse::ladder_select(&ranked, &cfg);
+        let rechosen = decode_variants(&encode_variants(&chosen)).expect("decode variants");
+        let direct = dse::ladder_from_ranked(&app, &ranked, &cfg);
+        let rebuilt = dse::ladder_from_chosen(&app, &rechosen);
+        assert_eq!(direct.len(), rebuilt.len());
+        for ((na, pa), (nb, pb)) in direct.iter().zip(&rebuilt) {
+            assert_eq!(na, nb);
+            assert_eq!(pa.name, pb.name);
+            assert_eq!(pa.num_inputs, pb.num_inputs);
+            assert_eq!(pa.mode_patterns.len(), pb.mode_patterns.len());
+        }
+    }
+
+    #[test]
+    fn evaluate_roundtrips_bit_exact() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let cfg = fast_cfg();
+        let evals = dse::evaluate_ladder(&app, &cfg);
+        assert!(!evals.is_empty());
+        let decoded = decode_evaluate(&encode_evaluate(&evals)).expect("decode");
+        assert_eq!(decoded.len(), evals.len());
+        for (a, b) in evals.iter().zip(&decoded) {
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.n_pes, b.n_pes);
+            assert_eq!(a.total_area.to_bits(), b.total_area.to_bits());
+            assert_eq!(a.pe_energy_per_op.to_bits(), b.pe_energy_per_op.to_bits());
+            assert_eq!(a.icn_energy_per_op.to_bits(), b.icn_energy_per_op.to_bits());
+            assert_eq!(a.fmax_ghz.to_bits(), b.fmax_ghz.to_bits());
+            assert_eq!(a.eval.mode_energy, b.eval.mode_energy);
+            assert_eq!(a.mapping.ops_covered, b.mapping.ops_covered);
+            assert_eq!(a.mapping.instances.len(), b.mapping.instances.len());
+        }
+        // Sweeps derived from decoded evals are bit-identical too.
+        let freqs = [0.8, 1.2, 2.0];
+        for (a, b) in evals.iter().zip(&decoded) {
+            let sa = dse::frequency_sweep(a, &freqs);
+            let sb = dse::frequency_sweep(b, &freqs);
+            let enc_a = encode_sweep(&[(a.variant.clone(), sa)]);
+            let enc_b = encode_sweep(&[(b.variant.clone(), sb)]);
+            assert_eq!(enc_a, enc_b);
+        }
+    }
+
+    #[test]
+    fn sweep_roundtrips_including_infeasible_points() {
+        let app = AppSuite::by_name("gaussian").unwrap();
+        let cfg = fast_cfg();
+        let evals = dse::evaluate_ladder(&app, &cfg);
+        let rows: Vec<(String, Vec<SweepPoint>)> = evals
+            .iter()
+            .map(|ve| (ve.variant.clone(), dse::frequency_sweep(ve, &[0.8, 5.0])))
+            .collect();
+        // 5 GHz is infeasible => None fields exercise the null arm.
+        assert!(rows.iter().any(|(_, pts)| pts.iter().any(|p| p.energy_per_op.is_none())));
+        let decoded = decode_sweep(&encode_sweep(&rows)).expect("decode");
+        assert_eq!(encode_sweep(&decoded), encode_sweep(&rows));
+    }
+
+    #[test]
+    fn corrupt_bodies_decode_as_miss_never_panic() {
+        let cases = [
+            "",
+            "not json",
+            "{}",
+            r#"{"codec":99,"stage":"mine","payload":[]}"#,
+            r#"{"codec":1,"stage":"rank","payload":[]}"#,
+            // Edge referencing a missing node.
+            r#"{"codec":1,"stage":"mine","payload":[{"graph":{"name":"g","nodes":[["add",""]],"edges":[[0,5,0]]},"occ":[]}]}"#,
+            // Port out of range for a unary op.
+            r#"{"codec":1,"stage":"mine","payload":[{"graph":{"name":"g","nodes":[["abs",""],["abs",""]],"edges":[[0,1,1]]},"occ":[]}]}"#,
+            // Occurrence row width mismatch.
+            r#"{"codec":1,"stage":"mine","payload":[{"graph":{"name":"g","nodes":[["add",""],["mul",""]],"edges":[]},"occ":[1,2,3]}]}"#,
+            // Hostile huge node id.
+            r#"{"codec":1,"stage":"mine","payload":[{"graph":{"name":"g","nodes":[["add",""]],"edges":[]},"occ":[999999999]}]}"#,
+            // Unknown op label.
+            r#"{"codec":1,"stage":"mine","payload":[{"graph":{"name":"g","nodes":[["fma",""]],"edges":[]},"occ":[]}]}"#,
+        ];
+        for c in &cases {
+            assert!(decode_mine(c).is_none(), "decode_mine({c:?}) must miss");
+        }
+        assert!(decode_rank(r#"{"codec":1,"stage":"mine","payload":[]}"#).is_none());
+        assert!(decode_evaluate("{broken").is_none());
+        assert!(decode_sweep(r#"{"codec":1,"stage":"sweep","payload":[["v",[{"variant":"v","freq_ghz":"zz","energy_per_op":null,"total_area":null}]]]}"#).is_none());
+        assert!(decode_layout(r#"{"codec":1,"stage":"layout","payload":{"domain":"d","pe":"p","points":[{"pe":"p","topology":"ring","width":4,"height":4,"mix":"uniform","energy_per_op_fj":"0000000000000000","area_um2":"0000000000000000","congestion":"0000000000000000","total_hops":0,"peak_utilization":"0000000000000000","latency_cycles":0,"used_pes":0,"pe_tiles":0}],"explored":0,"infeasible":0}}"#).is_none());
+        assert!(decode_domain(r#"{"codec":1,"stage":"domain","payload":{"name":"pe_x","subs":[{"name":"g","nodes":[["add",""]],"edges":[[0,0,9]]}]}}"#).is_none());
+    }
+
+    #[test]
+    fn domain_recipe_rebuilds_identical_pe() {
+        let apps = AppSuite::imaging();
+        let cfg = fast_cfg();
+        let ranked: Vec<Vec<RankedPattern>> = apps
+            .iter()
+            .map(|a| {
+                let mut g = a.graph.clone();
+                dse::rank_subgraphs(&mut g, &cfg)
+            })
+            .collect();
+        let app_refs: Vec<&crate::frontend::App> = apps.iter().collect();
+        let ranked_refs: Vec<&[RankedPattern]> = ranked.iter().map(|r| r.as_slice()).collect();
+        let subs = dse::domain_pe_subgraphs(&app_refs, &ranked_refs, 1);
+        let direct = dse::domain_pe_from_ranked(&app_refs, &ranked_refs, "pe_ip", 1);
+        let (name, resubs) = decode_domain(&encode_domain("pe_ip", &subs)).expect("decode");
+        let rebuilt = crate::pe::PeSpec::from_subgraphs(name, &resubs);
+        assert_eq!(direct.name, rebuilt.name);
+        assert_eq!(direct.num_inputs, rebuilt.num_inputs);
+        assert_eq!(direct.num_outputs, rebuilt.num_outputs);
+        assert_eq!(direct.mode_patterns.len(), rebuilt.mode_patterns.len());
+        assert_eq!(direct.modes.len(), rebuilt.modes.len());
+    }
+}

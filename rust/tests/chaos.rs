@@ -11,7 +11,10 @@
 //!   shed is served from the fast configuration, marked `degraded:true`;
 //! * **crash-safe cache** — an injected truncated artifact write is
 //!   detected on the next cold read, quarantined, and recomputed
-//!   byte-identically;
+//!   byte-identically — and the per-stage (`stage.*`) artifacts of the
+//!   stage-graph cache get the same discipline: corrupting a mid-DAG
+//!   stage invalidates only that stage down, never the cached prefix
+//!   above it;
 //! * **client retry** — an injected mid-response disconnect surfaces as a
 //!   transport error from `request_once` and is absorbed by
 //!   `request_with_retry`;
@@ -35,7 +38,7 @@ use cgra_dse::service::protocol::{self, ResponseView};
 use cgra_dse::service::server::{
     request_once, request_with_retry, RetryPolicy, ServeConfig, Server, ServerStats,
 };
-use cgra_dse::service::{FaultPlan, Site};
+use cgra_dse::service::{FaultPlan, Site, CACHE_SCHEMA_VERSION};
 
 /// Cheap full-effort config (distinct fingerprint from `fast_cfg`, so the
 /// degraded fallback demonstrably serves a *different* configuration).
@@ -278,18 +281,20 @@ fn injected_artifact_truncation_is_quarantined_and_recomputed_on_restart() {
     let _ = std::fs::remove_dir_all(&dir);
     let line = "{\"req\":\"mine\",\"app\":\"gaussian\"}";
 
-    // The chaos server truncates the one artifact it writes to disk; its
-    // own reply is healthy (served from the in-memory value).
+    // The chaos server truncates every artifact a cold `mine` writes to
+    // disk — the `stage.mine` and `stage.rank` publishes, then the
+    // response-level artifact (budget 3, in that write order); its own
+    // reply is healthy (served from the in-memory value).
     let faults = FaultPlan::new(3)
         .with(Site::ArtifactTruncate, 1.0)
-        .budget(Site::ArtifactTruncate, 1);
+        .budget(Site::ArtifactTruncate, 3);
     let sc = ServeConfig { cache_dir: Some(dir.clone()), ..serve_cfg(faults) };
     let (addr, handle) = spawn_server(sc);
     let golden = req(&addr, line);
     assert!(golden.ok, "{:?}", golden.error);
     shutdown(&addr, handle);
 
-    // A chaos-free restart cold-reads the truncated file: it must be
+    // A chaos-free restart cold-reads the truncated files: each must be
     // quarantined and the artifact recomputed byte-identically — never
     // served corrupt, never panicked on.
     let sc = ServeConfig { cache_dir: Some(dir.clone()), ..serve_cfg(FaultPlan::none()) };
@@ -298,14 +303,132 @@ fn injected_artifact_truncation_is_quarantined_and_recomputed_on_restart() {
     assert!(healed.ok, "{:?}", healed.error);
     assert_eq!(healed.cached.as_deref(), Some("miss"));
     assert_eq!(healed.body_raw, golden.body_raw, "recompute is byte-identical");
-    assert_eq!(stats_field(&addr, "quarantined"), 1);
+    assert_eq!(
+        stats_field(&addr, "quarantined"),
+        3,
+        "the response, stage.mine, and stage.rank artifacts all quarantine"
+    );
     assert!(
-        dir.join("quarantine").read_dir().map(|d| d.count()).unwrap_or(0) == 1,
-        "the truncated file is preserved for post-mortem"
+        dir.join("quarantine").read_dir().map(|d| d.count()).unwrap_or(0) == 3,
+        "every truncated file is preserved for post-mortem"
     );
     let stats = shutdown(&addr, handle);
-    assert_eq!(stats.quarantined, 1);
+    assert_eq!(stats.quarantined, 3);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- satellite: per-stage artifacts under corruption ---------------------
+
+/// The single on-disk artifact under `<dir>/v{N}/` whose embedded key
+/// carries `:{kind}:{detail}`.
+fn stage_artifact(dir: &std::path::Path, kind: &str, detail: &str) -> std::path::PathBuf {
+    let vdir = dir.join(format!("v{CACHE_SCHEMA_VERSION}"));
+    let needle = format!(":{kind}:{detail}");
+    let mut arts: Vec<_> = std::fs::read_dir(&vdir)
+        .expect("artifact dir")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|e| e == "art"))
+        .filter(|p| {
+            let bytes = std::fs::read(p).expect("read artifact");
+            let nl = bytes.iter().position(|&c| c == b'\n').unwrap_or(bytes.len());
+            String::from_utf8_lossy(&bytes[..nl]).contains(&needle)
+        })
+        .collect();
+    assert_eq!(arts.len(), 1, "expected one `{kind}:{detail}` artifact in {vdir:?}");
+    arts.pop().unwrap()
+}
+
+fn stage_stat(addr: &str, block: &str, stage: &str) -> usize {
+    let view = req(addr, "{\"req\":\"stats\"}");
+    assert!(view.ok);
+    view.body
+        .as_ref()
+        .and_then(|b| b.get(block))
+        .and_then(|s| s.get(stage))
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("stats body missing {block}.{stage}"))
+}
+
+#[test]
+fn corrupt_mid_dag_stage_artifact_recomputes_only_from_that_stage_down() {
+    // Per-stage artifacts get the exact quarantine discipline of response
+    // artifacts, and corruption invalidates only the corrupted stage
+    // *down*: the prefix above it stays hydratable. Seed gaussian's
+    // mine→rank chain via a ladder, flip a byte in the `stage.rank`
+    // artifact, then compose `domain_pe imaging` (which needs mine+rank
+    // for every member, gaussian included) on a restarted server — the
+    // corrupt rank quarantines and recomputes, the cached mine does not,
+    // and the composed body is byte-identical to a fully-cold run.
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("cgra_chaos_stage_rank_{pid}"));
+    let cold_dir = std::env::temp_dir().join(format!("cgra_chaos_stage_rank_cold_{pid}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+    let domain_line = "{\"req\":\"domain_pe\",\"domain\":\"imaging\"}";
+
+    // Server A (chaos-free): seed gaussian's stage prefix.
+    let sc = ServeConfig { cache_dir: Some(dir.clone()), ..serve_cfg(FaultPlan::none()) };
+    let (addr, handle) = spawn_server(sc);
+    let seeded = req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}");
+    assert!(seeded.ok, "{:?}", seeded.error);
+    shutdown(&addr, handle);
+
+    // Bit-rot the mid-DAG stage: flip one byte in gaussian's stage.rank.
+    let rank_art = stage_artifact(&dir, "stage.rank", "gaussian");
+    let mut bytes = std::fs::read(&rank_art).expect("read stage artifact");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&rank_art, bytes).expect("write corrupted stage artifact");
+
+    // Server B: compose from the damaged prefix.
+    let sc = ServeConfig { cache_dir: Some(dir.clone()), ..serve_cfg(FaultPlan::none()) };
+    let (addr_b, handle_b) = spawn_server(sc);
+    let dom_b = req(&addr_b, domain_line);
+    assert!(dom_b.ok, "{:?}", dom_b.error);
+    assert_eq!(dom_b.cached.as_deref(), Some("miss"));
+    assert_eq!(
+        stats_field(&addr_b, "quarantined"),
+        1,
+        "exactly the corrupt stage.rank artifact quarantines"
+    );
+    assert!(
+        stage_stat(&addr_b, "stage_hits", "mine") >= 1,
+        "gaussian's cached mine stage must hydrate despite the rank corruption"
+    );
+    let warm_mine = stage_stat(&addr_b, "stage_computes", "mine");
+    let warm_rank = stage_stat(&addr_b, "stage_computes", "rank");
+    assert_eq!(
+        dir.join("quarantine").read_dir().map(|d| d.count()).unwrap_or(0),
+        1,
+        "the corrupt stage file is preserved for post-mortem"
+    );
+    shutdown(&addr_b, handle_b);
+
+    // Server C: the same request against a fully-cold cache dir.
+    let sc = ServeConfig { cache_dir: Some(cold_dir.clone()), ..serve_cfg(FaultPlan::none()) };
+    let (addr_c, handle_c) = spawn_server(sc);
+    let dom_c = req(&addr_c, domain_line);
+    assert!(dom_c.ok, "{:?}", dom_c.error);
+    let cold_mine = stage_stat(&addr_c, "stage_computes", "mine");
+    let cold_rank = stage_stat(&addr_c, "stage_computes", "rank");
+    shutdown(&addr_c, handle_c);
+
+    // Warm byte-identity of the composed body, and the recompute scope:
+    // mine was saved by the cache (one fewer compute than cold), rank was
+    // not (the corrupted artifact bought nothing).
+    assert_eq!(dom_b.body_raw, dom_c.body_raw, "composed body is byte-identical");
+    assert!(cold_mine >= 1);
+    assert_eq!(
+        warm_mine,
+        cold_mine - 1,
+        "only gaussian's mine is served from the cache"
+    );
+    assert_eq!(
+        warm_rank, cold_rank,
+        "the corrupt rank stage recomputes exactly as a cold run would"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
 }
 
 // ---- defense 5: client retry vs injected disconnects --------------------

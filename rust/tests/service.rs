@@ -219,17 +219,120 @@ fn disk_cache_survives_a_server_restart_byte_identically() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---- acceptance: stage-graph cache (cross-request partial reuse) ---------
+
+fn stage_hit(view: &protocol::ResponseView, stage: &str) -> usize {
+    view.body
+        .as_ref()
+        .and_then(|b| b.get("stage_hits"))
+        .and_then(|s| s.get(stage))
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("stats body missing stage_hits.{stage}"))
+}
+
+#[test]
+fn cached_mine_stage_lets_downstream_requests_start_from_rank() {
+    // The PR acceptance invariant: a cold `mine` followed by `ladder`,
+    // `domain_pe`, and `layout` for the same fingerprint computes the mine
+    // stage for that app exactly once — even across a server restart,
+    // where only the persisted `stage.mine` artifact can carry it — and
+    // the composed responses are byte-identical to a fully-cold run.
+    let dir = std::env::temp_dir().join(format!("cgra_service_stage_{}", std::process::id()));
+    let cold_dir =
+        std::env::temp_dir().join(format!("cgra_service_stage_cold_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+    let downstream = [
+        "{\"req\":\"ladder\",\"app\":\"gaussian\"}",
+        "{\"req\":\"domain_pe\",\"domain\":\"imaging\"}",
+        "{\"req\":\"layout\",\"domain\":\"imaging\"}",
+    ];
+
+    // Server A: the cold mine. Exactly one mine-stage compute.
+    let (addr, handle) = spawn_server(serve_cfg(Some(dir.clone())));
+    let mined = req(&addr, "{\"req\":\"mine\",\"app\":\"gaussian\"}");
+    assert!(mined.ok, "{:?}", mined.error);
+    assert_eq!(mined.cached.as_deref(), Some("miss"));
+    let stats = req(&addr, "{\"req\":\"stats\"}");
+    assert_eq!(stage_compute(&stats, "mine"), 1);
+    shutdown(&addr, handle);
+
+    // Server B: same cache dir. Every response-level artifact below is
+    // cold, but the persisted `stage.mine` lets the ladder start at rank.
+    let (addr_b, handle_b) = spawn_server(serve_cfg(Some(dir.clone())));
+    let ladder_b = req(&addr_b, downstream[0]);
+    assert!(ladder_b.ok, "{:?}", ladder_b.error);
+    assert_eq!(ladder_b.cached.as_deref(), Some("miss"));
+    let stats = req(&addr_b, "{\"req\":\"stats\"}");
+    assert_eq!(
+        stage_compute(&stats, "mine"),
+        0,
+        "ladder-after-mine must reuse the cached mine stage, not recompute it"
+    );
+    // A `mine` request renders the *ranked* report, so its stage prefix
+    // covers mine and rank; the ladder resumes at the deepest cached
+    // stage and computes only variants + evaluate.
+    assert_eq!(stage_compute(&stats, "rank"), 0);
+    assert_eq!(stage_compute(&stats, "variants"), 1);
+    assert_eq!(stage_compute(&stats, "evaluate"), 1);
+    assert!(
+        stage_hit(&stats, "rank") >= 1,
+        "the deepest cached stage must be served as a stage hit"
+    );
+    let dom_b = req(&addr_b, downstream[1]);
+    assert!(dom_b.ok, "{:?}", dom_b.error);
+    let lay_b = req(&addr_b, downstream[2]);
+    assert!(lay_b.ok, "{:?}", lay_b.error);
+    let stats = req(&addr_b, "{\"req\":\"stats\"}");
+    let warm_mine = stage_compute(&stats, "mine");
+    shutdown(&addr_b, handle_b);
+
+    // Server C: identical request sequence, fully cold cache dir.
+    let (addr_c, handle_c) = spawn_server(serve_cfg(Some(cold_dir.clone())));
+    let ladder_c = req(&addr_c, downstream[0]);
+    let dom_c = req(&addr_c, downstream[1]);
+    let lay_c = req(&addr_c, downstream[2]);
+    let stats = req(&addr_c, "{\"req\":\"stats\"}");
+    let cold_mine = stage_compute(&stats, "mine");
+    shutdown(&addr_c, handle_c);
+
+    // Responses composed from the cached prefix are byte-identical to the
+    // fully-cold run.
+    assert_eq!(ladder_b.body_raw, ladder_c.body_raw, "ladder bytes");
+    assert_eq!(dom_b.body_raw, dom_c.body_raw, "domain_pe bytes");
+    assert_eq!(lay_b.body_raw, lay_c.body_raw, "layout bytes");
+    // `domain_pe imaging` mines the other member apps on both servers; the
+    // cached prefix saves exactly the one gaussian mine. Across servers
+    // A and B the gaussian mine therefore ran exactly once.
+    assert!(cold_mine >= 1);
+    assert_eq!(
+        warm_mine,
+        cold_mine - 1,
+        "the cached prefix must save exactly the gaussian mine"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+}
+
 // ---- crash-safe cache: corruption matrix over a live server -------------
 
-/// The single on-disk artifact under `<dir>/v{N}/`.
-fn sole_artifact(dir: &std::path::Path) -> std::path::PathBuf {
+/// The single *response-level* on-disk artifact under `<dir>/v{N}/`.
+/// Per-stage (`stage.*`) artifacts from the stage-graph cache share the
+/// directory; they are identified by the `:stage.` kind in the embedded
+/// key line and excluded here.
+fn response_artifact(dir: &std::path::Path) -> std::path::PathBuf {
     let vdir = dir.join(format!("v{CACHE_SCHEMA_VERSION}"));
     let mut arts: Vec<_> = std::fs::read_dir(&vdir)
         .expect("artifact dir")
         .map(|e| e.unwrap().path())
         .filter(|p| p.extension().is_some_and(|e| e == "art"))
+        .filter(|p| {
+            let bytes = std::fs::read(p).expect("read artifact");
+            let nl = bytes.iter().position(|&c| c == b'\n').unwrap_or(bytes.len());
+            !String::from_utf8_lossy(&bytes[..nl]).contains(":stage.")
+        })
         .collect();
-    assert_eq!(arts.len(), 1, "expected exactly one artifact in {vdir:?}");
+    assert_eq!(arts.len(), 1, "expected exactly one response artifact in {vdir:?}");
     arts.pop().unwrap()
 }
 
@@ -291,7 +394,7 @@ fn corrupt_disk_artifacts_quarantine_recompute_and_never_panic() {
         shutdown(&addr, handle);
 
         // Corrupt it the way this case says a crash would have.
-        let path = sole_artifact(&dir);
+        let path = response_artifact(&dir);
         let pristine = std::fs::read(&path).expect("read artifact");
         std::fs::write(&path, mutate(&pristine)).expect("write corrupted artifact");
 
@@ -396,6 +499,11 @@ fn version_and_stats_carry_schema_versions() {
         "compute_running",
         "compute_threads",
         "compute_replacements",
+        "stage_computes",
+        "stage_hits",
+        "stage_joins",
+        "warmed",
+        "reclaimed",
     ] {
         assert!(body.get(field).is_some(), "stats missing `{field}`");
     }
@@ -641,6 +749,7 @@ fn request_envelopes_roundtrip_through_encode_decode() {
             id: Some("id-1".into()),
             fast: true,
             degrade: true,
+            warm: true,
             req: r.clone(),
         };
         let decoded = Envelope::from_json(&env.to_json())
