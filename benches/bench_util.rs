@@ -49,6 +49,36 @@ fn log() -> &'static Mutex<Vec<(String, Stats)>> {
     LOG.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+/// One server-side latency quantile row (µs), as reported by the serving
+/// plane's metrics registry rather than measured client-side.
+#[derive(Debug, Clone)]
+pub struct Latency {
+    pub name: String,
+    pub count: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+fn latency_log() -> &'static Mutex<Vec<Latency>> {
+    static LOG: OnceLock<Mutex<Vec<Latency>>> = OnceLock::new();
+    LOG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Print one latency-quantile line and record it for [`write_json`]
+/// (emitted as the `latency` array alongside `cases`).
+pub fn report_latency(name: &str, count: u64, p50_us: f64, p99_us: f64) {
+    println!(
+        "latency {name:<26} p50 {:>9.0} µs  p99 {:>9.0} µs  (n={count})",
+        p50_us, p99_us
+    );
+    latency_log().lock().unwrap().push(Latency {
+        name: name.to_string(),
+        count,
+        p50_us,
+        p99_us,
+    });
+}
+
 /// Print one case line (same format as always) and record it for
 /// [`write_json`].
 pub fn report(name: &str, s: Stats) {
@@ -87,7 +117,25 @@ pub fn write_json(bench: &str) {
             if i + 1 == entries.len() { "" } else { "," }
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ]");
+    let lats = latency_log().lock().unwrap();
+    if lats.is_empty() {
+        s.push('\n');
+    } else {
+        s.push_str(",\n  \"latency\": [\n");
+        for (i, l) in lats.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"count\": {}, \"p50_us\": {}, \"p99_us\": {}}}{}\n",
+                l.name,
+                l.count,
+                l.p50_us,
+                l.p99_us,
+                if i + 1 == lats.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n");
+    }
+    s.push_str("}\n");
     let path = format!("BENCH_{bench}.json");
     match std::fs::write(&path, s) {
         Ok(()) => println!("wrote {path}"),

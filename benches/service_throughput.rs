@@ -21,6 +21,7 @@ mod bench_util;
 
 use std::sync::{Arc, Barrier};
 
+use cgra_dse::obs::metrics::Snapshot;
 use cgra_dse::service::protocol;
 use cgra_dse::service::server::{
     fast_config, request_once, request_with_retry, RetryPolicy, ServeConfig, Server,
@@ -124,6 +125,19 @@ fn main() {
             .sum::<usize>()
     });
     bench_util::report("warm_mix_x64", t_mix);
+
+    // Server-side latency quantiles after the warm mix: one P50/P99 row
+    // per request kind, straight from the serving plane's own histograms
+    // (so BENCH_service.json tracks the server's view, not the client's).
+    let resp = ask(&addr, "{\"req\":\"metrics\"}");
+    let view = protocol::parse_response(&resp).expect("metrics response");
+    let body = view.body.expect("metrics body");
+    let snap = Snapshot::from_json(&body).expect("metrics snapshot");
+    for (name, h) in &snap.histograms {
+        if h.count > 0 && name.starts_with("request.") {
+            bench_util::report_latency(name, h.count, h.quantile(0.50), h.quantile(0.99));
+        }
+    }
     stop(&addr, handle);
 
     // --- Single-flight duplicates: 16 concurrent identical requests on a

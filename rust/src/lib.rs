@@ -18,7 +18,10 @@
 //! The serving layer ([`service`], CLI `serve`/`request` subcommands)
 //! exposes the whole pipeline over a JSON-lines TCP protocol behind a
 //! two-tier fingerprint-keyed artifact cache with single-flight
-//! deduplication. Past the domain stage, the spatial layout explorer
+//! deduplication, instrumented end-to-end by the observability plane
+//! ([`obs`]: per-request span traces, a mergeable metrics registry with
+//! bucket-derived P50/P99, and a flight recorder of the slowest
+//! requests). Past the domain stage, the spatial layout explorer
 //! ([`layout`], CLI `layout` subcommand) places and routes every domain
 //! app on parameterized mesh / 1-hop fabrics and reports the non-dominated
 //! `(energy, area, congestion)` Pareto front.
@@ -50,6 +53,7 @@ pub mod power;
 
 pub mod coordinator;
 pub mod dse;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod service;

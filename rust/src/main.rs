@@ -10,6 +10,7 @@ use cgra_dse::coordinator;
 use cgra_dse::dse::DseConfig;
 use cgra_dse::frontend::{self, AppSuite};
 use cgra_dse::mining::MinerConfig;
+use cgra_dse::obs::metrics::Snapshot;
 use cgra_dse::pe::verilog::emit_verilog;
 use cgra_dse::runtime;
 use cgra_dse::service::{
@@ -57,7 +58,9 @@ USAGE:
   cgra-dse serve [--addr HOST:PORT] [--workers N] [--cache-dir DIR]
                  [--mem-cache N] [--threads N] [--fast]
                  [--deadline-ms N] [--queue-max N] [--chaos SEED] [--warm]
+                 [--flight N] [--slow-ms MS]
   cgra-dse request '<json>' [--addr HOST:PORT] [--timeout MS] [--retries N]
+  cgra-dse metrics [--addr HOST:PORT] [--timeout MS]
   cgra-dse validate [--app gaussian|conv|block] [--items N]
   cgra-dse version
   cgra-dse apps
@@ -103,6 +106,7 @@ fn main() {
         "campaign" => cmd_campaign(&flags),
         "serve" => cmd_serve(&flags),
         "request" => cmd_request(&args[1..], &flags),
+        "metrics" => cmd_metrics(&flags),
         "validate" => cmd_validate(&flags),
         "version" => {
             // Crate version + the schema versions baked into on-disk
@@ -657,6 +661,7 @@ fn cmd_campaign(flags: &Flags) -> i32 {
                     fast: false,
                     degrade: false,
                     warm: false,
+                    trace: false,
                     req: protocol::Request::Campaign {
                         profiles: spec.to_string(),
                         seeds: cfg.budget,
@@ -839,6 +844,8 @@ fn cmd_serve(flags: &Flags) -> i32 {
         compute_queue_max: flags.get_usize("queue-max", defaults.compute_queue_max),
         warm: flags.has("warm"),
         faults: std::sync::Arc::new(faults),
+        flight_capacity: flags.get_usize("flight", defaults.flight_capacity),
+        flight_slow_ms: flags.get_usize("slow-ms", defaults.flight_slow_ms as usize) as u64,
         ..Default::default()
     };
     let cache_desc = sc
@@ -955,6 +962,74 @@ fn cmd_request(rest: &[String], flags: &Flags) -> i32 {
             1
         }
     }
+}
+
+/// `metrics`: fetch a running server's observability snapshot and print a
+/// human-readable table — one row per histogram with nonzero count
+/// (count, mean, and bucket-derived P50/P90/P99 in µs) and one row per
+/// nonzero counter. Exit 0 on success, 1 on transport/server failure.
+fn cmd_metrics(flags: &Flags) -> i32 {
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
+    let timeout = flags.get_usize("timeout", 60_000) as u64;
+    let policy = RetryPolicy {
+        attempts: flags.get_usize("retries", 2) + 1,
+        seed: 0x5eed ^ std::process::id() as u64,
+        ..Default::default()
+    };
+    let line = match request_with_retry(addr, "{\"req\":\"metrics\"}", timeout, &policy) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("metrics: {e}");
+            return 1;
+        }
+    };
+    let view = match protocol::parse_response(&line) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("metrics: unparseable response: {e}");
+            return 1;
+        }
+    };
+    if !view.ok {
+        eprintln!(
+            "metrics: server error [{}]: {}",
+            view.code.unwrap_or_else(|| "unknown".to_string()),
+            view.error.unwrap_or_default()
+        );
+        return 1;
+    }
+    let body = view.body.unwrap_or(cgra_dse::report::json::Json::Null);
+    let Some(snap) = Snapshot::from_json(&body) else {
+        eprintln!("metrics: response body is not a metrics snapshot");
+        return 1;
+    };
+    println!(
+        "{:<24} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "histogram (µs)", "count", "mean", "p50", "p90", "p99"
+    );
+    for (name, h) in &snap.histograms {
+        if h.count == 0 {
+            continue;
+        }
+        println!(
+            "{:<24} {:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.0}",
+            name,
+            h.count,
+            h.mean(),
+            h.quantile(0.50),
+            h.quantile(0.90),
+            h.quantile(0.99)
+        );
+    }
+    println!();
+    println!("{:<40} {:>10}", "counter", "value");
+    for (name, v) in &snap.counters {
+        if *v == 0 {
+            continue;
+        }
+        println!("{:<40} {:>10}", name, v);
+    }
+    0
 }
 
 fn cmd_validate(flags: &Flags) -> i32 {

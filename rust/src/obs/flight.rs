@@ -1,0 +1,216 @@
+//! Flight recorder: a bounded ring of the last N completed request
+//! traces, with an optional `slow_ms` capture threshold.
+//!
+//! Every completed request *offers* its trace; the recorder keeps it only
+//! when the request's wall time reaches the threshold (`slow_ms = 0`
+//! captures everything), evicting the oldest entry at capacity. The
+//! `flight` request dumps the ring as a [`FlightDump`], and a graceful
+//! shutdown persists the same dump to `<cache-dir>/flight.json` — so a
+//! post-mortem of a chaos soak or a campaign run shows the actual worst
+//! requests, spans and all, not just aggregate counters.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::trace::Trace;
+use crate::report::json::Json;
+
+/// One captured request: outcome envelope plus the full span trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightEntry {
+    /// Whether the request succeeded.
+    pub ok: bool,
+    /// The `cached` tag of the response (`"mem"`, `"miss"`, …); the
+    /// error code for failed requests.
+    pub cached: String,
+    /// Total wall time, microseconds.
+    pub elapsed_us: u64,
+    pub trace: Trace,
+}
+
+impl FlightEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok)),
+            ("cached", Json::str(&self.cached)),
+            ("elapsed_us", Json::uint(self.elapsed_us)),
+            ("trace", self.trace.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<FlightEntry> {
+        Some(FlightEntry {
+            ok: v.get("ok")?.as_bool()?,
+            cached: v.get("cached")?.as_str()?.to_string(),
+            elapsed_us: v.get("elapsed_us")?.as_u64()?,
+            trace: Trace::from_json(v.get("trace")?)?,
+        })
+    }
+}
+
+/// Value dump of the recorder: capture policy, offer/capture totals, and
+/// the retained entries oldest-first. Round-trips exactly through JSON.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightDump {
+    pub capacity: usize,
+    pub slow_ms: u64,
+    /// Requests offered over the recorder's lifetime.
+    pub seen: u64,
+    /// Requests that met the capture policy (≥ entries retained; older
+    /// captures may have been evicted by the ring).
+    pub captured: u64,
+    pub entries: Vec<FlightEntry>,
+}
+
+impl FlightDump {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::int(self.capacity)),
+            ("slow_ms", Json::uint(self.slow_ms)),
+            ("seen", Json::uint(self.seen)),
+            ("captured", Json::uint(self.captured)),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(FlightEntry::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<FlightDump> {
+        let entries = v
+            .get("entries")?
+            .as_arr()?
+            .iter()
+            .map(FlightEntry::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(FlightDump {
+            capacity: v.get("capacity")?.as_usize()?,
+            slow_ms: v.get("slow_ms")?.as_u64()?,
+            seen: v.get("seen")?.as_u64()?,
+            captured: v.get("captured")?.as_u64()?,
+            entries,
+        })
+    }
+}
+
+/// The live recorder. All methods are `&self` and thread-safe.
+pub struct FlightRecorder {
+    capacity: usize,
+    slow_ms: u64,
+    seen: AtomicU64,
+    captured: AtomicU64,
+    ring: Mutex<VecDeque<FlightEntry>>,
+}
+
+impl FlightRecorder {
+    /// `capacity` is clamped to at least 1; `slow_ms = 0` captures every
+    /// offered request.
+    pub fn new(capacity: usize, slow_ms: u64) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            capacity,
+            slow_ms,
+            seen: AtomicU64::new(0),
+            captured: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+        }
+    }
+
+    /// Offer one completed request; captured iff its wall time reaches
+    /// the `slow_ms` threshold.
+    pub fn offer(&self, entry: FlightEntry) {
+        self.seen.fetch_add(1, Ordering::Relaxed);
+        if entry.elapsed_us < self.slow_ms.saturating_mul(1_000) {
+            return;
+        }
+        self.captured.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(entry);
+    }
+
+    /// Snapshot the ring (oldest first) and policy into a value.
+    pub fn dump(&self) -> FlightDump {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        FlightDump {
+            capacity: self.capacity,
+            slow_ms: self.slow_ms,
+            seen: self.seen.load(Ordering::Relaxed),
+            captured: self.captured.load(Ordering::Relaxed),
+            entries: ring.iter().cloned().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanCollector;
+
+    fn entry(elapsed_us: u64, kind: &str) -> FlightEntry {
+        let col = SpanCollector::new();
+        col.record("parse", "", std::time::Duration::from_micros(2));
+        let mut trace = col.finish(kind);
+        trace.total_us = elapsed_us;
+        FlightEntry {
+            ok: true,
+            cached: "miss".to_string(),
+            elapsed_us,
+            trace,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_the_last_n() {
+        let r = FlightRecorder::new(3, 0);
+        for i in 0..10u64 {
+            r.offer(entry(i, &format!("k{i}")));
+        }
+        let d = r.dump();
+        assert_eq!(d.seen, 10);
+        assert_eq!(d.captured, 10);
+        assert_eq!(d.entries.len(), 3);
+        let kinds: Vec<&str> = d.entries.iter().map(|e| e.trace.kind.as_str()).collect();
+        assert_eq!(kinds, vec!["k7", "k8", "k9"], "oldest evicted first");
+    }
+
+    #[test]
+    fn slow_threshold_filters_fast_requests() {
+        let r = FlightRecorder::new(8, 5); // capture ≥ 5 ms only
+        r.offer(entry(4_999, "fast"));
+        r.offer(entry(5_000, "slow"));
+        r.offer(entry(50_000, "slower"));
+        let d = r.dump();
+        assert_eq!(d.seen, 3);
+        assert_eq!(d.captured, 2);
+        assert_eq!(d.entries.len(), 2);
+        assert!(d.entries.iter().all(|e| e.elapsed_us >= 5_000));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let r = FlightRecorder::new(0, 0);
+        r.offer(entry(1, "a"));
+        r.offer(entry(2, "b"));
+        let d = r.dump();
+        assert_eq!(d.capacity, 1);
+        assert_eq!(d.entries.len(), 1);
+        assert_eq!(d.entries[0].trace.kind, "b");
+    }
+
+    #[test]
+    fn dump_json_round_trips_exactly() {
+        let r = FlightRecorder::new(4, 2);
+        r.offer(entry(1_000, "dropped"));
+        r.offer(entry(3_000, "kept"));
+        r.offer(entry(9_000, "kept2"));
+        let d = r.dump();
+        let j = d.to_json();
+        let back = FlightDump::from_json(&j).expect("decode");
+        assert_eq!(back, d);
+        assert_eq!(back.to_json(), j);
+    }
+}

@@ -1,0 +1,548 @@
+//! Sharded metrics registry: monotonic counters and fixed-bucket log₂
+//! histograms, snapshotted into a mergeable, exactly-round-tripping JSON
+//! value ([`Snapshot`]).
+//!
+//! # Recording
+//!
+//! The live [`Registry`] is sharded by instrument name; recording takes
+//! one brief shard lock to resolve the name to its `Arc`'d cell, then a
+//! single relaxed atomic op — workers recording different instruments
+//! rarely contend.
+//!
+//! # Buckets and quantiles
+//!
+//! Histograms use [`HIST_BUCKETS`] fixed log₂ buckets over non-negative
+//! integer observations (latencies in microseconds by convention; any
+//! u64-valued quantity works — the server also records queue depths).
+//! Bucket 0 holds exact zeros; bucket `b ≥ 1` holds values in
+//! `[2^(b-1), 2^b)`. A quantile estimate walks the cumulative counts to
+//! the bucket containing the requested rank and interpolates linearly
+//! inside that bucket's bounds — so P50/P90/P99 are approximations with
+//! relative error bounded by the bucket width (< 2×), which is exactly
+//! the resolution the latency-trajectory artifacts need
+//! (EXPERIMENTS.md §Latency protocol documents the contract).
+//!
+//! # Merge and round-trip
+//!
+//! [`Snapshot`] follows the `CoverageMap` discipline: `to_json`/
+//! `from_json` are exact inverses (property-tested), and
+//! [`Snapshot::merge`] is a lossless element-wise sum, so per-node
+//! snapshots can be combined by fleet tooling without re-observing
+//! anything.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::report::json::Json;
+
+/// Fixed histogram bucket count. Bucket 0 is exact zero; the last bucket
+/// is open-ended. With 40 buckets the top finite boundary is 2³⁹ µs
+/// (~6.4 days) — far beyond any request this server can serve.
+pub const HIST_BUCKETS: usize = 40;
+
+/// The bucket index an observation lands in.
+pub fn bucket_of(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        ((64 - value.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of a bucket.
+pub fn bucket_lo(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// Exclusive upper bound of a bucket (its lower bound for bucket 0 —
+/// bucket 0 holds only exact zeros).
+pub fn bucket_hi(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << b
+    }
+}
+
+/// A live log₂ histogram: lock-free recording into fixed buckets.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, value: u64) {
+        self.buckets[bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(b, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then_some((b, n))
+            })
+            .collect();
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Value snapshot of one histogram: total count, sum of observations, and
+/// the sparse non-empty buckets in index order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// `(bucket index, count)`, ascending, empty buckets omitted.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistSnapshot {
+    /// Quantile estimate at `q ∈ [0, 1]` by linear interpolation inside
+    /// the bucket containing the rank (see the module docs). Zero for an
+    /// empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for &(b, c) in &self.buckets {
+            let next = cum + c;
+            if next as f64 >= rank {
+                let lo = bucket_lo(b) as f64;
+                let hi = bucket_hi(b) as f64;
+                let frac = if c == 0 {
+                    0.0
+                } else {
+                    ((rank - cum as f64) / c as f64).clamp(0.0, 1.0)
+                };
+                return lo + (hi - lo) * frac;
+            }
+            cum = next;
+        }
+        self.buckets.last().map(|&(b, _)| bucket_hi(b) as f64).unwrap_or(0.0)
+    }
+
+    /// Mean of the recorded observations (exact — from the true sum, not
+    /// the buckets). Zero when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Element-wise sum — lossless: merged quantiles are exactly the
+    /// quantiles of the combined observation multiset's bucketing.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        let mut map: HashMap<usize, u64> = self.buckets.iter().copied().collect();
+        for &(b, c) in &other.buckets {
+            *map.entry(b).or_insert(0) += c;
+        }
+        let mut merged: Vec<(usize, u64)> = map.into_iter().collect();
+        merged.sort_unstable();
+        self.buckets = merged;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::uint(self.count)),
+            ("sum", Json::uint(self.sum)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(b, c)| Json::Arr(vec![Json::int(b), Json::uint(c)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<HistSnapshot> {
+        let buckets = v
+            .get("buckets")?
+            .as_arr()?
+            .iter()
+            .map(|pair| {
+                let pair = pair.as_arr()?;
+                if pair.len() != 2 {
+                    return None;
+                }
+                Some((pair[0].as_usize()?, pair[1].as_u64()?))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(HistSnapshot {
+            count: v.get("count")?.as_u64()?,
+            sum: v.get("sum")?.as_u64()?,
+            buckets,
+        })
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    counters: HashMap<String, Arc<AtomicU64>>,
+    histograms: HashMap<String, Arc<Histogram>>,
+}
+
+/// Registry shard count (instruments are distributed by name hash).
+const SHARDS: usize = 8;
+
+fn shard_of(name: &str) -> usize {
+    // FNV-1a; only the distribution matters here.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h ^ (h >> 29)) as usize % SHARDS
+}
+
+/// The live registry. All methods are `&self` and thread-safe; see the
+/// module docs for the locking discipline.
+pub struct Registry {
+    shards: Vec<Mutex<Shard>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+        }
+    }
+
+    fn shard(&self, name: &str) -> std::sync::MutexGuard<'_, Shard> {
+        self.shards[shard_of(name)]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The counter cell for `name`, created on first use. Callers on a
+    /// hot path can hold the `Arc` and skip the name lookup.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut sh = self.shard(name);
+        match sh.counters.get(name) {
+            Some(c) => c.clone(),
+            None => {
+                let c = Arc::new(AtomicU64::new(0));
+                sh.counters.insert(name.to_string(), c.clone());
+                c
+            }
+        }
+    }
+
+    /// The histogram for `name`, created on first use.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut sh = self.shard(name);
+        match sh.histograms.get(name) {
+            Some(h) => h.clone(),
+            None => {
+                let h = Arc::new(Histogram::new());
+                sh.histograms.insert(name.to_string(), h.clone());
+                h
+            }
+        }
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `n`.
+    pub fn add(&self, name: &str, n: u64) {
+        self.counter(name).fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one observation into a histogram.
+    pub fn observe(&self, name: &str, value: u64) {
+        self.histogram(name).record(value);
+    }
+
+    /// Snapshot every instrument into a value (names sorted, so the
+    /// rendering is deterministic).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut counters: Vec<(String, u64)> = Vec::new();
+        let mut histograms: Vec<(String, HistSnapshot)> = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap_or_else(|e| e.into_inner());
+            for (k, c) in &sh.counters {
+                counters.push((k.clone(), c.load(Ordering::Relaxed)));
+            }
+            for (k, h) in &sh.histograms {
+                histograms.push((k.clone(), h.snapshot()));
+            }
+        }
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        histograms.sort_by(|a, b| a.0.cmp(&b.0));
+        Snapshot {
+            counters,
+            histograms,
+        }
+    }
+}
+
+/// A point-in-time value snapshot of a [`Registry`]: the unit the
+/// `metrics` request serves, fleet tooling merges, and the benches mine
+/// for P50/P99.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Snapshot {
+    /// `(name, value)`, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, histogram)`, sorted by name.
+    pub histograms: Vec<(String, HistSnapshot)>,
+}
+
+impl Snapshot {
+    /// A counter's value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    /// A histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<&HistSnapshot> {
+        self.histograms
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, h)| h)
+    }
+
+    /// Set (or insert) a counter — used by the server to fold in counts
+    /// kept outside the registry (shed/degraded/fault-site firings).
+    pub fn set_counter(&mut self, name: &str, value: u64) {
+        match self.counters.iter_mut().find(|(k, _)| k == name) {
+            Some(slot) => slot.1 = value,
+            None => {
+                self.counters.push((name.to_string(), value));
+                self.counters.sort_by(|a, b| a.0.cmp(&b.0));
+            }
+        }
+    }
+
+    /// Lossless element-wise merge of another snapshot into this one.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (name, v) in &other.counters {
+            let cur = self.counter(name);
+            self.set_counter(name, cur + v);
+        }
+        for (name, h) in &other.histograms {
+            match self.histograms.iter_mut().find(|(k, _)| k == name) {
+                Some((_, mine)) => mine.merge(h),
+                None => {
+                    self.histograms.push((name.clone(), h.clone()));
+                    self.histograms.sort_by(|a, b| a.0.cmp(&b.0));
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::uint(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Snapshot> {
+        let Json::Obj(counter_pairs) = v.get("counters")? else {
+            return None;
+        };
+        let counters = counter_pairs
+            .iter()
+            .map(|(k, n)| Some((k.clone(), n.as_u64()?)))
+            .collect::<Option<Vec<_>>>()?;
+        let Json::Obj(hist_pairs) = v.get("histograms")? else {
+            return None;
+        };
+        let histograms = hist_pairs
+            .iter()
+            .map(|(k, h)| Some((k.clone(), HistSnapshot::from_json(h)?)))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Snapshot {
+            counters,
+            histograms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_value_space() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for v in [0u64, 1, 2, 3, 7, 8, 1023, 1024, 1 << 38] {
+            let b = bucket_of(v);
+            if b > 0 && b < HIST_BUCKETS - 1 {
+                assert!(bucket_lo(b) <= v && v < bucket_hi(b), "{v} in bucket {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_bucket_bounds() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(100); // bucket 7: [64, 128)
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 10_000);
+        for q in [0.5, 0.9, 0.99] {
+            let est = s.quantile(q);
+            assert!((64.0..128.0).contains(&est), "q{q}: {est}");
+        }
+        // Ordered observations order the quantiles.
+        let h = Histogram::new();
+        for v in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let (p50, p99) = (s.quantile(0.5), s.quantile(0.99));
+        assert!(p50 < p99, "p50 {p50} < p99 {p99}");
+        assert!(s.quantile(0.0) <= p50);
+        assert!(s.mean() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let s = HistSnapshot::default();
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_counts_and_snapshots_deterministically() {
+        let r = Registry::new();
+        r.inc("req.mine");
+        r.add("req.mine", 2);
+        r.inc("error.internal");
+        r.observe("stage.mine", 500);
+        r.observe("stage.mine", 700);
+        r.observe("queue_wait", 0);
+        let s = r.snapshot();
+        assert_eq!(s.counter("req.mine"), 3);
+        assert_eq!(s.counter("error.internal"), 1);
+        assert_eq!(s.counter("absent"), 0);
+        let h = s.histogram("stage.mine").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 1200);
+        assert_eq!(s.histogram("queue_wait").unwrap().buckets, vec![(0, 1)]);
+        // Sorted names → deterministic render.
+        assert_eq!(r.snapshot().to_json().render(), s.to_json().render());
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_exactly() {
+        let r = Registry::new();
+        r.add("cache.mem_hit", 41);
+        r.observe("request.ladder", 12_345);
+        r.observe("request.ladder", 7);
+        let s = r.snapshot();
+        let j = s.to_json();
+        let back = Snapshot::from_json(&j).expect("decode");
+        assert_eq!(back, s);
+        assert_eq!(back.to_json(), j);
+    }
+
+    #[test]
+    fn merge_is_a_lossless_elementwise_sum() {
+        let a_reg = Registry::new();
+        a_reg.add("shed", 2);
+        a_reg.observe("stage.rank", 10);
+        a_reg.observe("stage.rank", 1000);
+        let b_reg = Registry::new();
+        b_reg.add("shed", 3);
+        b_reg.add("degraded", 1);
+        b_reg.observe("stage.rank", 10);
+        b_reg.observe("queue_wait", 5);
+        let mut merged = a_reg.snapshot();
+        merged.merge(&b_reg.snapshot());
+        assert_eq!(merged.counter("shed"), 5);
+        assert_eq!(merged.counter("degraded"), 1);
+        let h = merged.histogram("stage.rank").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 1020);
+        // Equivalent to recording everything into one registry.
+        let all = Registry::new();
+        all.add("shed", 5);
+        all.add("degraded", 1);
+        for v in [10, 1000, 10] {
+            all.observe("stage.rank", v);
+        }
+        all.observe("queue_wait", 5);
+        assert_eq!(merged, all.snapshot());
+    }
+
+    #[test]
+    fn set_counter_inserts_sorted() {
+        let mut s = Snapshot::default();
+        s.set_counter("zeta", 1);
+        s.set_counter("alpha", 2);
+        s.set_counter("zeta", 7);
+        assert_eq!(
+            s.counters,
+            vec![("alpha".to_string(), 2), ("zeta".to_string(), 7)]
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability plane for the serving stack: request tracing, a
+//! mergeable metrics registry, and a flight recorder — all zero-dep and
+//! JSON-native, threaded through the session ([`crate::session`]), the
+//! server ([`crate::service::server`]), and the artifact cache
+//! ([`crate::service::cache`]).
+//!
+//! Three cooperating pieces:
+//!
+//! * [`trace`] — per-request span collection. The server attaches one
+//!   [`trace::SpanCollector`] per request to the handling thread (and to
+//!   the compute-pool thread running its pipeline job) via a thread-local;
+//!   instrumented code calls [`trace::emit`], which is a no-op when no
+//!   collector is attached, so library users pay nothing. A finished
+//!   [`trace::Trace`] serializes on demand when the request envelope
+//!   carries `"trace":true` — spliced into the response *after* `body`,
+//!   so cached body bytes are never perturbed.
+//! * [`metrics`] — a sharded registry of monotonic counters and
+//!   fixed-bucket log₂ histograms. Snapshots are plain values with an
+//!   exact `parse(render(x)) == x` JSON round-trip and a lossless
+//!   [`metrics::Snapshot::merge`] (the same discipline as
+//!   `stress::CoverageMap`), so per-node snapshots can be combined by
+//!   fleet tooling. Quantiles (P50/P90/P99) are derived from the bucket
+//!   boundaries by linear interpolation — see EXPERIMENTS.md §Latency
+//!   protocol.
+//! * [`flight`] — a bounded ring of the last N completed request traces
+//!   (optionally only those slower than `slow_ms`), dumped by the
+//!   `flight` request and to `<cache-dir>/flight.json` on graceful
+//!   shutdown, so a post-mortem of a chaos soak shows the actual worst
+//!   requests rather than an aggregate.
+
+pub mod flight;
+pub mod metrics;
+pub mod trace;

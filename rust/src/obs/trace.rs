@@ -1,0 +1,271 @@
+//! Per-request span tracing.
+//!
+//! A [`SpanCollector`] is created per request and *attached* to the
+//! current thread with [`attach`] (an RAII guard restores the previous
+//! collector on drop, so nesting and pooled threads are safe).
+//! Instrumented code anywhere below — the protocol parser, the session's
+//! stage loop via its `StageObserver` hook, the tiered cache's read/write
+//! paths — reports spans with [`emit`], which resolves the thread-local
+//! collector and is a dead branch when none is attached. The server
+//! attaches the *same* collector on the connection worker and on the
+//! compute-pool thread running the request's pipeline job, so one trace
+//! covers both sides of the queue hop. (Fan-out threads inside
+//! `parallel_map` are not attached; their work is accounted to the stage
+//! span that joins them.)
+//!
+//! Span `start_us` offsets are relative to the collector's creation
+//! instant, so a rendered [`Trace`] is self-contained and comparable
+//! across requests.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::report::json::Json;
+
+/// One timed event inside a request: a pipeline stage, a cache access, a
+/// queue wait, the parse, the render.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Span name (`"parse"`, `"stage.mine"`, `"cache.read"`,
+    /// `"queue.wait"`, `"flight.wait"`, `"render"`, …).
+    pub name: String,
+    /// How the span resolved: stage spans carry
+    /// `compute`/`memo`/`hydrate`/`join`, cache reads carry
+    /// `mem`/`disk`/`miss`; empty when there is nothing to say.
+    pub disp: String,
+    /// Start offset from the trace epoch, microseconds.
+    pub start_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("disp", Json::str(&self.disp)),
+            ("start_us", Json::uint(self.start_us)),
+            ("dur_us", Json::uint(self.dur_us)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Span> {
+        Some(Span {
+            name: v.get("name")?.as_str()?.to_string(),
+            disp: v.get("disp")?.as_str()?.to_string(),
+            start_us: v.get("start_us")?.as_u64()?,
+            dur_us: v.get("dur_us")?.as_u64()?,
+        })
+    }
+}
+
+/// A completed request trace: every span the collector saw, in completion
+/// order, plus the request kind and total wall time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    /// Request kind (`"ladder"`, `"mine"`, …).
+    pub kind: String,
+    /// Total request wall time, microseconds.
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// Count the stage spans with a given disposition — the number the
+    /// acceptance tests compare against the server's stage counters.
+    pub fn stage_spans(&self, disp: &str) -> usize {
+        self.spans
+            .iter()
+            .filter(|s| s.name.starts_with("stage.") && s.disp == disp)
+            .count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(&self.kind)),
+            ("total_us", Json::uint(self.total_us)),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(Span::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Trace> {
+        let spans = v
+            .get("spans")?
+            .as_arr()?
+            .iter()
+            .map(Span::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(Trace {
+            kind: v.get("kind")?.as_str()?.to_string(),
+            total_us: v.get("total_us")?.as_u64()?,
+            spans,
+        })
+    }
+}
+
+/// Accumulates spans for one request. Shared (`Arc`) between the
+/// connection worker and the compute thread; the mutex is uncontended in
+/// practice (the two sides work sequentially).
+pub struct SpanCollector {
+    epoch: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl SpanCollector {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> SpanCollector {
+        SpanCollector {
+            epoch: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record a span that just finished (duration `dur`, ending now).
+    pub fn record(&self, name: &str, disp: &str, dur: Duration) {
+        let end_us = self.epoch.elapsed().as_micros() as u64;
+        let dur_us = dur.as_micros() as u64;
+        let span = Span {
+            name: name.to_string(),
+            disp: disp.to_string(),
+            start_us: end_us.saturating_sub(dur_us),
+            dur_us,
+        };
+        self.spans
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(span);
+    }
+
+    /// Snapshot the collector into a completed [`Trace`].
+    pub fn finish(&self, kind: &str) -> Trace {
+        Trace {
+            kind: kind.to_string(),
+            total_us: self.epoch.elapsed().as_micros() as u64,
+            spans: self
+                .spans
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clone(),
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<SpanCollector>>> = RefCell::new(None);
+}
+
+/// RAII guard from [`attach`]: restores the previously attached collector
+/// (usually `None`) when dropped, so pooled threads never leak a stale
+/// collector into the next request.
+pub struct AttachGuard {
+    prev: Option<Arc<SpanCollector>>,
+    restored: bool,
+}
+
+impl Drop for AttachGuard {
+    fn drop(&mut self) {
+        if !self.restored {
+            self.restored = true;
+            let prev = self.prev.take();
+            let _ = CURRENT.try_with(|c| *c.borrow_mut() = prev);
+        }
+    }
+}
+
+/// Attach a collector to the current thread for the guard's lifetime;
+/// `None` detaches. Every [`emit`] on this thread lands in it.
+pub fn attach(collector: Option<Arc<SpanCollector>>) -> AttachGuard {
+    let prev = CURRENT.with(|c| c.replace(collector));
+    AttachGuard {
+        prev,
+        restored: false,
+    }
+}
+
+/// The collector attached to the current thread, if any — the server uses
+/// this to carry the worker's collector into the compute-pool closure.
+pub fn current() -> Option<Arc<SpanCollector>> {
+    CURRENT.try_with(|c| c.borrow().clone()).ok().flatten()
+}
+
+/// Report a just-finished span to the current thread's collector; a
+/// no-op (one thread-local read) when none is attached.
+pub fn emit(name: &str, disp: &str, dur: Duration) {
+    if let Ok(Some(col)) = CURRENT.try_with(|c| c.borrow().clone()) {
+        col.record(name, disp, dur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_without_collector_is_a_noop() {
+        emit("orphan", "", Duration::from_micros(5)); // must not panic
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn attach_collects_and_detaches_on_drop() {
+        let col = Arc::new(SpanCollector::new());
+        {
+            let _g = attach(Some(col.clone()));
+            emit("stage.mine", "compute", Duration::from_micros(40));
+            emit("cache.read", "mem", Duration::from_micros(2));
+            assert!(current().is_some());
+        }
+        assert!(current().is_none(), "guard drop must detach");
+        emit("late", "", Duration::from_micros(1)); // after detach: dropped
+        let t = col.finish("ladder");
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(t.spans[0].name, "stage.mine");
+        assert_eq!(t.spans[0].disp, "compute");
+        assert_eq!(t.spans[0].dur_us, 40);
+        assert_eq!(t.stage_spans("compute"), 1);
+        assert_eq!(t.stage_spans("memo"), 0);
+    }
+
+    #[test]
+    fn nested_attach_restores_the_outer_collector() {
+        let outer = Arc::new(SpanCollector::new());
+        let inner = Arc::new(SpanCollector::new());
+        let _g1 = attach(Some(outer.clone()));
+        {
+            let _g2 = attach(Some(inner.clone()));
+            emit("inner", "", Duration::ZERO);
+        }
+        emit("outer", "", Duration::ZERO);
+        assert_eq!(inner.finish("x").spans.len(), 1);
+        let t = outer.finish("x");
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].name, "outer");
+    }
+
+    #[test]
+    fn trace_json_round_trips() {
+        let col = SpanCollector::new();
+        col.record("parse", "", Duration::from_micros(3));
+        col.record("stage.rank", "hydrate", Duration::from_micros(120));
+        let t = col.finish("mine");
+        let j = t.to_json();
+        let back = Trace::from_json(&j).expect("decode");
+        assert_eq!(back, t);
+        assert_eq!(back.to_json(), j);
+    }
+
+    #[test]
+    fn start_offset_precedes_end() {
+        let col = SpanCollector::new();
+        std::thread::sleep(Duration::from_millis(2));
+        col.record("x", "", Duration::from_micros(1_000));
+        let t = col.finish("k");
+        let s = &t.spans[0];
+        assert!(s.start_us + s.dur_us <= t.total_us.max(s.start_us + s.dur_us));
+        assert!(s.dur_us >= 1_000);
+    }
+}

@@ -38,6 +38,14 @@ impl Json {
         Json::Num(v as f64)
     }
 
+    /// An integer-valued number from a `u64` counter (the observability
+    /// snapshots are u64-native). Values at or past 2^53 would drift in
+    /// f64; counters cannot realistically reach that, but saturate there
+    /// so a drifted value is visibly pinned rather than silently wrong.
+    pub fn uint(v: u64) -> Json {
+        Json::Num(v.min((1u64 << 53) - 1) as f64)
+    }
+
     /// An optional number (`None` renders as `null`).
     pub fn opt(v: Option<f64>) -> Json {
         match v {
@@ -222,6 +230,15 @@ mod tests {
     #[test]
     fn whole_floats_render_as_integers() {
         assert_eq!(Json::num(2.0).render(), "2");
+    }
+
+    #[test]
+    fn uint_round_trips_through_as_u64_and_saturates() {
+        assert_eq!(Json::uint(0).as_u64(), Some(0));
+        assert_eq!(Json::uint(12_345).render(), "12345");
+        let max = (1u64 << 53) - 1;
+        assert_eq!(Json::uint(max).as_u64(), Some(max));
+        assert_eq!(Json::uint(u64::MAX).as_u64(), Some(max), "saturates");
     }
 
     // ---- RFC 8259 conformance of the string escaper --------------------

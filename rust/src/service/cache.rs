@@ -54,8 +54,11 @@ use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 use super::fault::{FaultPlan, Site};
+use crate::obs::metrics::Registry;
+use crate::obs::trace as otrace;
 
 /// Version of the on-disk artifact layout **and** of everything folded
 /// into the canonical key (fingerprint schema, request grammar, artifact
@@ -229,6 +232,11 @@ pub struct TieredCache {
     /// `<cache-dir>/quarantine`, created lazily at first quarantine.
     quarantine: Option<PathBuf>,
     faults: Arc<FaultPlan>,
+    /// Optional metrics registry (the server passes its own): tier-outcome
+    /// counters (`cache.mem_hit`/`cache.disk_hit`/`cache.miss`/…) and
+    /// `cache.read`/`cache.write` latency histograms. `None` (library and
+    /// test use) makes every recording a dead branch.
+    metrics: Option<Arc<Registry>>,
     hits_mem: AtomicUsize,
     hits_disk: AtomicUsize,
     misses: AtomicUsize,
@@ -304,6 +312,18 @@ impl TieredCache {
         cache_dir: Option<&Path>,
         faults: Arc<FaultPlan>,
     ) -> io::Result<TieredCache> {
+        TieredCache::with_observability(mem_capacity, cache_dir, faults, None)
+    }
+
+    /// [`Self::with_faults`] with a metrics registry: every lookup and
+    /// store also records its latency and tier outcome there (and emits a
+    /// `cache.read`/`cache.write` span on the current request trace).
+    pub fn with_observability(
+        mem_capacity: usize,
+        cache_dir: Option<&Path>,
+        faults: Arc<FaultPlan>,
+        metrics: Option<Arc<Registry>>,
+    ) -> io::Result<TieredCache> {
         let (disk, quarantine, reclaimed) = match cache_dir {
             Some(d) => {
                 let current = format!("v{CACHE_SCHEMA_VERSION}");
@@ -326,6 +346,7 @@ impl TieredCache {
             disk,
             quarantine,
             faults,
+            metrics,
             hits_mem: AtomicUsize::new(0),
             hits_disk: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -356,6 +377,7 @@ impl TieredCache {
     }
 
     fn lookup(&self, key: &CacheKey, count_miss: bool) -> Option<(Arc<String>, Tier)> {
+        let t0 = Instant::now();
         let canon = key.canonical();
         {
             let mut sh = self.shard(&canon);
@@ -365,6 +387,7 @@ impl TieredCache {
                 e.stamp = clock;
                 let val = e.val.clone();
                 self.hits_mem.fetch_add(1, Ordering::Relaxed);
+                self.observe_read("cache.mem_hit", "mem", t0);
                 return Some((val, Tier::Mem));
             }
         }
@@ -380,6 +403,7 @@ impl TieredCache {
                             let val = Arc::new(body);
                             self.insert_mem(&canon, val.clone());
                             self.hits_disk.fetch_add(1, Ordering::Relaxed);
+                            self.observe_read("cache.disk_hit", "disk", t0);
                             return Some((val, Tier::Disk));
                         }
                         Err(defect) => self.quarantine_file(&path, defect),
@@ -390,7 +414,20 @@ impl TieredCache {
         if count_miss {
             self.misses.fetch_add(1, Ordering::Relaxed);
         }
+        self.observe_read("cache.miss", "miss", t0);
         None
+    }
+
+    /// Record one lookup outcome: a tier counter + a `cache.read` latency
+    /// sample in the registry (when attached), plus a span on the current
+    /// request trace either way.
+    fn observe_read(&self, counter: &str, disp: &str, t0: Instant) {
+        let dur = t0.elapsed();
+        if let Some(m) = &self.metrics {
+            m.inc(counter);
+            m.observe("cache.read", dur.as_micros() as u64);
+        }
+        otrace::emit("cache.read", disp, dur);
     }
 
     /// Move a failed-validation artifact out of the read path, preserving
@@ -398,6 +435,9 @@ impl TieredCache {
     /// lookup misses cleanly and the artifact gets recomputed.
     fn quarantine_file(&self, path: &Path, defect: Defect) {
         self.quarantined.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.inc("cache.quarantined");
+        }
         let seq = self.quarantine_seq.fetch_add(1, Ordering::Relaxed);
         let moved = self.quarantine.as_ref().and_then(|qdir| {
             std::fs::create_dir_all(qdir).ok()?;
@@ -426,9 +466,20 @@ impl TieredCache {
     /// tolerated (the cache is an accelerator, not a source of truth); the
     /// memory tier always takes the entry.
     pub fn put(&self, key: &CacheKey, val: Arc<String>) {
+        let t0 = Instant::now();
         self.stores.fetch_add(1, Ordering::Relaxed);
         let canon = key.canonical();
         self.insert_mem(&canon, val.clone());
+        self.write_both_tiers(key, &canon, &val);
+        let dur = t0.elapsed();
+        if let Some(m) = &self.metrics {
+            m.inc("cache.store");
+            m.observe("cache.write", dur.as_micros() as u64);
+        }
+        otrace::emit("cache.write", "store", dur);
+    }
+
+    fn write_both_tiers(&self, key: &CacheKey, canon: &str, val: &Arc<String>) {
         if let Some(dir) = &self.disk {
             self.faults.sleep_if(Site::DiskWriteSlow);
             if self.faults.fire(Site::DiskWriteFail) {
@@ -797,6 +848,43 @@ mod tests {
         let c = TieredCache::new(64, Some(&dir)).unwrap();
         assert_eq!(c.stats().reclaimed, 0);
         assert!(c.get(&key(2, "camera")).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn attached_registry_records_tier_outcomes_and_latencies() {
+        let dir = tmpdir("obs");
+        let m = Arc::new(Registry::new());
+        let c = TieredCache::with_observability(
+            64,
+            Some(&dir),
+            Arc::new(FaultPlan::none()),
+            Some(m.clone()),
+        )
+        .unwrap();
+        let k = key(21, "camera");
+        assert!(c.get(&k).is_none()); // miss
+        c.put(&k, Arc::new("{\"x\":1}".into())); // store
+        assert!(c.get(&k).is_some()); // mem hit
+        drop(c);
+        // Fresh cache over the same dir and registry: disk answers.
+        let c = TieredCache::with_observability(
+            64,
+            Some(&dir),
+            Arc::new(FaultPlan::none()),
+            Some(m.clone()),
+        )
+        .unwrap();
+        assert!(c.get(&k).is_some()); // disk hit
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("cache.miss"), 1);
+        assert_eq!(snap.counter("cache.store"), 1);
+        assert_eq!(snap.counter("cache.mem_hit"), 1);
+        assert_eq!(snap.counter("cache.disk_hit"), 1);
+        assert_eq!(snap.counter("cache.quarantined"), 0);
+        let reads = snap.histogram("cache.read").expect("read histogram");
+        assert_eq!(reads.count, 3, "miss + mem hit + disk hit");
+        assert_eq!(snap.histogram("cache.write").expect("write histogram").count, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -30,9 +30,18 @@
 //!   client disconnects) so every defense above is testable on demand and
 //!   zero-cost when disabled.
 //!
+//! The whole plane is instrumented by [`crate::obs`]: every request gets a
+//! span trace (returned inline with `"trace":true`, spliced **after**
+//! `body` so cached bytes stay identical), every stage/cache/queue event
+//! lands in a mergeable metrics registry (the `metrics` request and the
+//! `cgra-dse metrics` CLI, with bucket-derived P50/P90/P99), and a bounded
+//! flight recorder keeps the last N captured request traces (the `flight`
+//! request; dumped to `<cache-dir>/flight.json` on graceful shutdown).
+//!
 //! CLI: `cgra-dse serve --addr HOST:PORT --workers N --cache-dir DIR
-//! [--chaos SEED]` and `cgra-dse request '<json>' [--retries N]`. See
-//! README §Serving for the quickstart and DESIGN.md §2b for the
+//! [--chaos SEED] [--flight N] [--slow-ms MS]`, `cgra-dse request
+//! '<json>' [--retries N]`, and `cgra-dse metrics [--addr HOST:PORT]`.
+//! See README §Serving for the quickstart and DESIGN.md §2b for the
 //! architecture (cache-key diagram, single-flight semantics, schema
 //! versioning, failure envelope).
 //!

@@ -27,22 +27,32 @@
 //! {"req":"stress","profiles":"deep_chain","seeds":2,"seed0":1}
 //! {"req":"campaign","seeds":64,"shards":4,"shard":0}
 //! {"req":"stats"}
+//! {"req":"metrics"}
+//! {"req":"flight"}
 //! {"req":"version"}
 //! {"req":"shutdown"}
 //! ```
 //!
 //! # Responses
 //!
-//! One JSON object per line. `body` is always the **last** field, spliced
-//! in as raw pre-rendered bytes — a cached artifact is therefore served
-//! byte-identically, and [`parse_response`] can hand the raw body slice
-//! back without a re-render:
+//! One JSON object per line. `body` is spliced in as raw pre-rendered
+//! bytes — a cached artifact is therefore served byte-identically, and
+//! [`parse_response`] can hand the raw body slice back without a
+//! re-render. `body` is the last field except when the request opted into
+//! tracing with `"trace":true`: the span tree then follows it (after the
+//! body, so the body bytes of a traced response stay identical to the
+//! untraced response):
 //!
 //! ```json
 //! {"ok":true,"kind":"ladder","cached":"mem","elapsed_us":312,"body":{...}}
+//! {"ok":true,"kind":"ladder","cached":"miss","elapsed_us":9,"queue_us":2,"body":{...},"trace":{...}}
 //! {"ok":false,"code":"bad_request","error":"unknown app `nope`"}
 //! {"ok":false,"code":"overloaded","retry_after_ms":100,"error":"compute queue full"}
 //! ```
+//!
+//! `queue_us` (cold computes only) is the portion of `elapsed_us` the
+//! job spent waiting in the compute-pool queue before a worker claimed
+//! it — `elapsed_us` itself stays total wall time.
 //!
 //! `cached` is one of `miss` (computed here), `mem`/`disk` (cache tier
 //! that answered), `flight` (deduplicated onto a concurrent identical
@@ -355,6 +365,12 @@ pub enum Request {
     },
     /// Live server statistics (uncacheable).
     Stats,
+    /// Live metrics snapshot: counters + latency histograms from the
+    /// observability registry ([`crate::obs::metrics`]; uncacheable).
+    Metrics,
+    /// Live flight-recorder dump: the last N captured request traces
+    /// ([`crate::obs::flight`]; uncacheable).
+    Flight,
     /// Crate + schema versions (uncacheable).
     Version,
     /// Graceful shutdown: drain workers, then exit 0 (uncacheable).
@@ -400,6 +416,8 @@ impl Request {
             Request::Stress { .. } => "stress",
             Request::Campaign { .. } => "campaign",
             Request::Stats => "stats",
+            Request::Metrics => "metrics",
+            Request::Flight => "flight",
             Request::Version => "version",
             Request::Shutdown => "shutdown",
         }
@@ -424,12 +442,17 @@ impl Request {
                 shards,
                 shard,
             } => Some(format!("{profiles}:{seeds}:{seed0}:{shards}:{shard}")),
-            Request::Stats | Request::Version | Request::Shutdown => None,
+            Request::Stats
+            | Request::Metrics
+            | Request::Flight
+            | Request::Version
+            | Request::Shutdown => None,
         }
     }
 }
 
-/// A request plus its envelope fields (`id`, `fast`, `degrade`, `warm`).
+/// A request plus its envelope fields (`id`, `fast`, `degrade`, `warm`,
+/// `trace`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
     /// Opaque client tag, echoed back in the response.
@@ -445,6 +468,11 @@ pub struct Envelope {
     /// lands cold, the server enqueues the downstream `ladder` artifact
     /// fire-and-forget (also enabled server-wide by `serve --warm`).
     pub warm: bool,
+    /// Opt into per-request tracing: the response carries the request's
+    /// span tree (parse, queue wait, per-stage dispositions, cache I/O,
+    /// render) in a `trace` field spliced *after* `body` — the body bytes
+    /// stay identical to the untraced response.
+    pub trace: bool,
     pub req: Request,
 }
 
@@ -650,12 +678,15 @@ impl Envelope {
                 }
             }
             "stats" => Request::Stats,
+            "metrics" => Request::Metrics,
+            "flight" => Request::Flight,
             "version" => Request::Version,
             "shutdown" => Request::Shutdown,
             other => {
                 return Err(format!(
                     "unknown request kind `{other}` (valid: mine ladder domain_pe \
-                     layout reproduce stress campaign stats version shutdown)"
+                     layout reproduce stress campaign stats metrics flight version \
+                     shutdown)"
                 ))
             }
         };
@@ -681,11 +712,18 @@ impl Envelope {
             None => false,
             Some(w) => w.as_bool().ok_or("envelope field `warm` must be a boolean")?,
         };
+        let trace = match v.get("trace") {
+            None => false,
+            Some(t) => t
+                .as_bool()
+                .ok_or("envelope field `trace` must be a boolean")?,
+        };
         Ok(Envelope {
             id,
             fast,
             degrade,
             warm,
+            trace,
             req,
         })
     }
@@ -730,7 +768,11 @@ impl Envelope {
                 pairs.push(("shards", Json::int(*shards)));
                 pairs.push(("shard", Json::int(*shard)));
             }
-            Request::Stats | Request::Version | Request::Shutdown => {}
+            Request::Stats
+            | Request::Metrics
+            | Request::Flight
+            | Request::Version
+            | Request::Shutdown => {}
         }
         if let Some(id) = &self.id {
             pairs.push(("id", Json::str(id)));
@@ -743,6 +785,9 @@ impl Envelope {
         }
         if self.warm {
             pairs.push(("warm", Json::Bool(true)));
+        }
+        if self.trace {
+            pairs.push(("trace", Json::Bool(true)));
         }
         Json::obj(pairs)
     }
@@ -853,19 +898,26 @@ impl fmt::Display for ServiceError {
     }
 }
 
-/// Render a success line. `body` is spliced in raw as the **last** field —
-/// cached artifacts are served byte-for-byte, and [`parse_response`] can
-/// recover the exact body slice (the byte sequence `,"body":` cannot occur
-/// inside any rendered string, since `"` is always escaped there).
-/// `degraded` marks a response served from the fast configuration because
-/// the requested full-config compute was load-shed.
+/// Render a success line. `body` is spliced in raw after every envelope
+/// field — cached artifacts are served byte-for-byte, and
+/// [`parse_response`] can recover the exact body slice (the byte sequence
+/// `,"body":` cannot occur inside any rendered string, since `"` is always
+/// escaped there). `trace` (a pre-rendered span tree, requested with
+/// `"trace":true`) is the one field spliced *after* the body, so tracing
+/// never perturbs the body bytes. `queue_us` reports the compute-queue
+/// wait separately from `elapsed_us` (total wall time); `degraded` marks a
+/// response served from the fast configuration because the requested
+/// full-config compute was load-shed.
+#[allow(clippy::too_many_arguments)]
 pub fn ok_line(
     id: Option<&str>,
     kind: &str,
     cached: &str,
     elapsed_us: u128,
+    queue_us: Option<u64>,
     degraded: bool,
     body: &str,
+    trace: Option<&str>,
 ) -> String {
     let mut s = String::with_capacity(body.len() + 96);
     s.push_str("{\"ok\":true");
@@ -879,11 +931,19 @@ pub fn ok_line(
     s.push_str(&Json::str(cached).render());
     s.push_str(",\"elapsed_us\":");
     s.push_str(&elapsed_us.to_string());
+    if let Some(q) = queue_us {
+        s.push_str(",\"queue_us\":");
+        s.push_str(&q.to_string());
+    }
     if degraded {
         s.push_str(",\"degraded\":true");
     }
     s.push_str(",\"body\":");
     s.push_str(body);
+    if let Some(t) = trace {
+        s.push_str(",\"trace\":");
+        s.push_str(t);
+    }
     s.push('}');
     s
 }
@@ -912,11 +972,27 @@ pub struct ResponseView {
     /// Whether the server degraded this response to its fast
     /// configuration because the full compute would have been shed.
     pub degraded: bool,
+    /// Microseconds the compute job waited in the pool queue before a
+    /// worker claimed it (cold computes only; part of `elapsed_us`).
+    pub queue_us: Option<f64>,
     /// Parsed body value (success only).
     pub body: Option<Json>,
     /// The body's exact raw bytes as they appeared on the wire — the
     /// byte-identity invariant of the artifact cache is checked on this.
     pub body_raw: Option<String>,
+    /// Parsed span tree (present iff the request set `"trace":true`).
+    pub trace: Option<Json>,
+}
+
+/// Parse one JSON value starting at byte `start` of `src`; returns the
+/// value's exact byte extent `(value_start, end)` — the raw-slice
+/// extractor behind [`parse_response`]'s body recovery.
+fn value_extent(src: &str, start: usize) -> Result<(usize, usize), ParseError> {
+    let mut p = Parser { src, i: start };
+    p.skip_ws();
+    let vstart = p.i;
+    p.value(0)?;
+    Ok((vstart, p.i))
 }
 
 /// Parse and validate one response line.
@@ -933,12 +1009,14 @@ pub fn parse_response(line: &str) -> Result<ResponseView, String> {
         .ok_or_else(|| "response needs a bool `ok` field".to_string())?;
     let body = v.get("body").cloned();
     let body_raw = if body.is_some() {
-        // `body` is the last field: its raw bytes run from after the first
-        // `,"body":` marker to the closing `}` of the envelope.
+        // The body's raw bytes start after the first `,"body":` marker and
+        // span exactly one JSON value (an optional `trace` field may
+        // follow it, so "slice to the closing brace" would over-read).
         let idx = line
             .find(",\"body\":")
             .ok_or_else(|| "response body marker missing".to_string())?;
-        Some(line[idx + 8..line.len() - 1].to_string())
+        let (vstart, end) = value_extent(line, idx + 8).map_err(|e| e.to_string())?;
+        Some(line[vstart..end].to_string())
     } else {
         None
     };
@@ -952,8 +1030,10 @@ pub fn parse_response(line: &str) -> Result<ResponseView, String> {
         retry_after_ms: v.get("retry_after_ms").and_then(Json::as_f64),
         error: v.get("error").and_then(Json::as_str).map(str::to_string),
         degraded: v.get("degraded").and_then(Json::as_bool).unwrap_or(false),
+        queue_us: v.get("queue_us").and_then(Json::as_f64),
         body,
         body_raw,
+        trace: v.get("trace").cloned(),
     })
 }
 
@@ -1146,7 +1226,7 @@ mod tests {
     #[test]
     fn response_lines_roundtrip_with_raw_body() {
         let body = "{\"app\":\"camera\",\"n\":3}";
-        let line = ok_line(Some("id,\"body\":x"), "ladder", "mem", 1234, false, body);
+        let line = ok_line(Some("id,\"body\":x"), "ladder", "mem", 1234, None, false, body, None);
         let view = parse_response(&line).unwrap();
         assert!(view.ok);
         assert_eq!(view.id.as_deref(), Some("id,\"body\":x"));
@@ -1168,7 +1248,7 @@ mod tests {
     #[test]
     fn degraded_responses_carry_the_flag_and_the_raw_body() {
         let body = "{\"n\":1}";
-        let line = ok_line(None, "ladder", "miss", 7, true, body);
+        let line = ok_line(None, "ladder", "miss", 7, None, true, body, None);
         let view = parse_response(&line).unwrap();
         assert!(view.ok);
         assert!(view.degraded);
@@ -1234,6 +1314,57 @@ mod tests {
     }
 
     #[test]
+    fn trace_flag_roundtrips_and_rejects_wrong_types() {
+        let env = Envelope::parse_line(r#"{"req":"ladder","app":"fft","trace":true}"#).unwrap();
+        assert!(env.trace);
+        let rendered = env.to_json().render();
+        assert_eq!(Envelope::parse_line(&rendered).unwrap(), env);
+        // Absent defaults to false and stays off the wire.
+        let plain = Envelope::parse_line(r#"{"req":"ladder","app":"fft"}"#).unwrap();
+        assert!(!plain.trace);
+        assert!(!plain.to_json().render().contains("trace"));
+        // Present-but-mistyped is an error, never a silent default.
+        assert!(Envelope::parse_line(r#"{"req":"ladder","app":"fft","trace":1}"#).is_err());
+    }
+
+    #[test]
+    fn metrics_and_flight_decode_as_live_kinds() {
+        let m = Envelope::parse_line(r#"{"req":"metrics"}"#).unwrap();
+        assert_eq!(m.req, Request::Metrics);
+        assert_eq!(m.req.kind(), "metrics");
+        let f = Envelope::parse_line(r#"{"req":"flight","id":"7"}"#).unwrap();
+        assert_eq!(f.req, Request::Flight);
+        assert_eq!(f.id.as_deref(), Some("7"));
+        for env in [m, f] {
+            assert_eq!(Envelope::parse_line(&env.to_json().render()).unwrap(), env);
+        }
+        // The unknown-kind error advertises the new kinds.
+        let err = Envelope::parse_line(r#"{"req":"frobnicate"}"#).unwrap_err();
+        assert!(err.contains("metrics") && err.contains("flight"), "{err}");
+    }
+
+    #[test]
+    fn traced_responses_keep_body_bytes_and_carry_the_span_tree() {
+        let body = "{\"app\":\"camera\",\"n\":3}";
+        let trace = "{\"kind\":\"ladder\",\"total_us\":42,\"spans\":[]}";
+        let line = ok_line(Some("t1"), "ladder", "miss", 42, Some(5), false, body, Some(trace));
+        let view = parse_response(&line).unwrap();
+        assert!(view.ok);
+        // body_raw is the exact body slice even with a trailing trace.
+        assert_eq!(view.body_raw.as_deref(), Some(body));
+        assert_eq!(view.queue_us, Some(5.0));
+        assert_eq!(view.trace, Some(parse(trace).unwrap()));
+        assert!(line.contains(",\"body\":"), "{line}");
+        assert!(line.ends_with(&format!(",\"trace\":{trace}}}")), "{line}");
+        // A body that itself contains `,"trace":`-like content still
+        // parses: the extractor walks one JSON value, not a marker.
+        let tricky = "{\"s\":\"x\",\"trace\":{\"inner\":1}}";
+        let l2 = ok_line(None, "mine", "mem", 1, None, false, tricky, None);
+        assert_eq!(parse_response(&l2).unwrap().body_raw.as_deref(), Some(tricky));
+        assert!(parse_response(&l2).unwrap().trace.is_none());
+    }
+
+    #[test]
     fn cache_detail_covers_exactly_the_cacheable_kinds() {
         let cacheable = [
             Request::Mine { app: "a".into() },
@@ -1257,7 +1388,13 @@ mod tests {
         for r in &cacheable {
             assert!(r.cache_detail().is_some(), "{:?}", r.kind());
         }
-        for r in [Request::Stats, Request::Version, Request::Shutdown] {
+        for r in [
+            Request::Stats,
+            Request::Metrics,
+            Request::Flight,
+            Request::Version,
+            Request::Shutdown,
+        ] {
             assert!(r.cache_detail().is_none(), "{:?}", r.kind());
         }
     }

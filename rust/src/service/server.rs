@@ -69,7 +69,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -80,11 +80,14 @@ use crate::coordinator;
 use crate::dse::DseConfig;
 use crate::frontend::DomainRegistry;
 use crate::mining::MinerConfig;
+use crate::obs::flight::{FlightEntry, FlightRecorder};
+use crate::obs::metrics::Registry;
+use crate::obs::trace::{self as otrace, SpanCollector};
 use crate::report::json::Json;
 use crate::runtime::default_width;
 use crate::session::{
-    config_fingerprint, report as sjson, DseSession, Stage, StageStore,
-    FINGERPRINT_SCHEMA_VERSION,
+    config_fingerprint, report as sjson, DseSession, Stage, StageDisposition, StageObserver,
+    StageStore, FINGERPRINT_SCHEMA_VERSION,
 };
 use crate::stress::campaign::{self, CampaignConfig};
 use crate::stress::{self, Mutation, StressConfig};
@@ -159,6 +162,13 @@ pub struct ServeConfig {
     /// Fault-injection plan (`serve --chaos <seed>`); the default
     /// disabled plan makes every injection site a dead branch.
     pub faults: Arc<FaultPlan>,
+    /// Flight-recorder capacity (`serve --flight N`): the last N captured
+    /// request traces kept for the `flight` request and the shutdown dump.
+    pub flight_capacity: usize,
+    /// Flight-recorder capture threshold in milliseconds (`serve
+    /// --slow-ms T`): only requests at least this slow are captured; 0
+    /// captures every request.
+    pub flight_slow_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -183,6 +193,8 @@ impl Default for ServeConfig {
             shed_retry_ms: 100,
             warm: false,
             faults: Arc::new(FaultPlan::none()),
+            flight_capacity: 64,
+            flight_slow_ms: 0,
         }
     }
 }
@@ -253,6 +265,13 @@ type ComputeResult = Result<Arc<String>, ServiceError>;
 
 struct ComputeJob {
     state: Arc<AtomicU8>,
+    /// When the job entered the queue — the claiming thread derives the
+    /// queue wait from it.
+    queued_at: Instant,
+    /// Queue wait in µs, stored by the claiming compute thread
+    /// (`u64::MAX` until a thread claims the job), so the requester can
+    /// report the queued portion of `elapsed_us` separately.
+    wait_us: Arc<AtomicU64>,
     run: Box<dyn FnOnce() -> ComputeResult + Send + 'static>,
     done: mpsc::Sender<ComputeResult>,
 }
@@ -284,6 +303,8 @@ fn spawn_compute_thread(state: Arc<ComputePoolState>) {
             state.queued.fetch_sub(1, Ordering::SeqCst);
             let ComputeJob {
                 state: jstate,
+                queued_at,
+                wait_us,
                 run,
                 done,
             } = job;
@@ -296,6 +317,7 @@ fn spawn_compute_thread(state: Arc<ComputePoolState>) {
             {
                 continue;
             }
+            wait_us.store(queued_at.elapsed().as_micros() as u64, Ordering::SeqCst);
             state.running.fetch_add(1, Ordering::SeqCst);
             // Panics inside the pipeline (coordinator `expect`s,
             // worker-pool joins, injected chaos panics) become typed
@@ -355,6 +377,29 @@ impl StageStore for CacheStageStore {
     }
 }
 
+// ---- observability adapter ---------------------------------------------
+
+/// [`StageObserver`] wired into every pooled session: one latency sample
+/// per stage **compute** in the `stage.<name>` histogram, one counter
+/// bump per disposition event (`stage.<name>.<disposition>` — these match
+/// the session's own `stage_computes`/`stage_hydrates`/`stage_joins`
+/// counters one-to-one by the observer contract), and a span on whatever
+/// request trace is attached to the current thread.
+struct ServerObserver {
+    metrics: Arc<Registry>,
+}
+
+impl StageObserver for ServerObserver {
+    fn stage_event(&self, stage: Stage, disp: StageDisposition, elapsed: Duration) {
+        let name = stage_kind(stage);
+        self.metrics.inc(&format!("{}.{}", name, disp.key()));
+        if disp == StageDisposition::Compute {
+            self.metrics.observe(name, elapsed.as_micros() as u64);
+        }
+        otrace::emit(name, disp.key(), elapsed);
+    }
+}
+
 // ---- shared server state -----------------------------------------------
 
 struct Shared {
@@ -385,6 +430,12 @@ struct Shared {
     conn_backlog: AtomicUsize,
     /// Connections currently being served by a worker.
     in_flight: AtomicUsize,
+    /// Observability registry: per-stage latency histograms, per-kind
+    /// request histograms, cache/queue/error counters (`metrics` request).
+    metrics: Arc<Registry>,
+    /// Flight recorder of the last N captured request traces (`flight`
+    /// request; dumped to `<cache-dir>/flight.json` on shutdown).
+    flight: Arc<FlightRecorder>,
     started: Instant,
     local_addr: SocketAddr,
 }
@@ -505,10 +556,16 @@ impl Server {
     pub fn bind(sc: ServeConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(&sc.addr)?;
         let local_addr = listener.local_addr()?;
-        let cache = Arc::new(TieredCache::with_faults(
+        let metrics = Arc::new(Registry::new());
+        let flight = Arc::new(FlightRecorder::new(sc.flight_capacity, sc.flight_slow_ms));
+        let observer: Arc<dyn StageObserver> = Arc::new(ServerObserver {
+            metrics: metrics.clone(),
+        });
+        let cache = Arc::new(TieredCache::with_observability(
             sc.mem_cache_entries,
             sc.cache_dir.as_deref(),
             sc.faults.clone(),
+            Some(metrics.clone()),
         )?);
         let threads = if sc.session_threads == 0 {
             default_width()
@@ -524,6 +581,7 @@ impl Server {
                     .stage_store(Arc::new(CacheStageStore {
                         cache: cache.clone(),
                     }))
+                    .stage_observer(observer.clone())
                     .build(),
             )
         };
@@ -569,6 +627,8 @@ impl Server {
                 warmed: AtomicUsize::new(0),
                 conn_backlog: AtomicUsize::new(0),
                 in_flight: AtomicUsize::new(0),
+                metrics,
+                flight,
                 started: Instant::now(),
                 local_addr,
             }),
@@ -637,6 +697,14 @@ impl Server {
             Ok(())
         });
         res?;
+        // Persist the flight recorder next to the disk cache so a
+        // post-mortem of this run's slowest requests survives the process.
+        if let Some(dir) = &self.shared.sc.cache_dir {
+            let dump = self.shared.flight.dump().to_json().render();
+            if let Err(e) = std::fs::write(dir.join("flight.json"), dump + "\n") {
+                eprintln!("flight recorder dump failed: {e}");
+            }
+        }
         Ok(self.shared.final_stats())
     }
 }
@@ -723,10 +791,26 @@ fn handle_conn(stream: TcpStream, shared: &Shared) {
     }
 }
 
+/// Per-request observability context threaded through the serve path.
+#[derive(Default)]
+struct ReqCtx {
+    /// Compute-queue wait of this request's own cold compute, µs
+    /// (`None` for cache hits, live views, flight followers, and shed
+    /// requests — nothing of theirs ever queued).
+    queue_us: Option<u64>,
+}
+
 fn handle_line(line: &str, shared: &Shared) -> String {
     shared.requests.fetch_add(1, Ordering::Relaxed);
     let t0 = Instant::now();
+    // Every request gets a span collector attached to this worker thread
+    // (and propagated onto its compute thread): spans cost one thread-
+    // local lookup when nobody traces, and the flight recorder sees the
+    // full tree either way.
+    let collector = Arc::new(SpanCollector::new());
+    let trace_guard = otrace::attach(Some(collector.clone()));
     let parsed = protocol::parse(line);
+    otrace::emit("parse", "", t0.elapsed());
     // Echo the id even when the request fails to decode as an envelope —
     // clients correlate errors by it.
     let id: Option<String> = parsed
@@ -740,20 +824,64 @@ fn handle_line(line: &str, shared: &Shared) -> String {
         Ok(e) => e,
         Err(msg) => {
             shared.errors.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.inc("error.bad_request");
             return ServiceError::bad_request(msg).line(id.as_deref());
         }
     };
-    match serve_request(&env, shared) {
-        Ok((body, cached, degraded)) => protocol::ok_line(
-            id.as_deref(),
-            env.req.kind(),
-            cached,
-            t0.elapsed().as_micros(),
-            degraded,
-            &body,
-        ),
+    let kind = env.req.kind();
+    let mut ctx = ReqCtx::default();
+    let served = serve_request(&env, shared, &mut ctx);
+    let t_served = Instant::now();
+    match served {
+        Ok((body, cached, degraded)) => {
+            shared.metrics.inc(&format!("req.{kind}"));
+            if let Some(w) = ctx.queue_us {
+                shared.metrics.observe("queue_wait", w);
+            }
+            let elapsed = t0.elapsed();
+            shared
+                .metrics
+                .observe(&format!("request.{kind}"), elapsed.as_micros() as u64);
+            otrace::emit("render", "", t_served.elapsed());
+            drop(trace_guard);
+            let mut trace = collector.finish(kind);
+            trace.total_us = elapsed.as_micros() as u64;
+            let trace_json = if env.trace {
+                Some(trace.to_json().render())
+            } else {
+                None
+            };
+            let reply = protocol::ok_line(
+                id.as_deref(),
+                kind,
+                cached,
+                elapsed.as_micros(),
+                ctx.queue_us,
+                degraded,
+                &body,
+                trace_json.as_deref(),
+            );
+            shared.flight.offer(FlightEntry {
+                ok: true,
+                cached: cached.to_string(),
+                elapsed_us: elapsed.as_micros() as u64,
+                trace,
+            });
+            reply
+        }
         Err(err) => {
             shared.errors.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.inc(&format!("error.{}", err.code.as_str()));
+            let elapsed = t0.elapsed();
+            drop(trace_guard);
+            let mut trace = collector.finish(kind);
+            trace.total_us = elapsed.as_micros() as u64;
+            shared.flight.offer(FlightEntry {
+                ok: false,
+                cached: err.code.as_str().to_string(),
+                elapsed_us: elapsed.as_micros() as u64,
+                trace,
+            });
             err.line(id.as_deref())
         }
     }
@@ -764,9 +892,16 @@ fn handle_line(line: &str, shared: &Shared) -> String {
 fn serve_request(
     env: &Envelope,
     shared: &Shared,
+    ctx: &mut ReqCtx,
 ) -> Result<(Arc<String>, &'static str, bool), ServiceError> {
     match &env.req {
         Request::Stats => Ok((Arc::new(stats_body(shared)), "live", false)),
+        Request::Metrics => Ok((Arc::new(metrics_body(shared)), "live", false)),
+        Request::Flight => Ok((
+            Arc::new(shared.flight.dump().to_json().render()),
+            "live",
+            false,
+        )),
         Request::Version => Ok((Arc::new(version_body()), "live", false)),
         Request::Shutdown => {
             shared.stop.store(true, Ordering::SeqCst);
@@ -787,7 +922,7 @@ fn serve_request(
                 _ => session.fingerprint(),
             };
             let key = CacheKey::new(fingerprint, req.kind(), detail.clone());
-            let result = serve_cached(shared, session, &key, req, false);
+            let result = serve_cached(shared, session, &key, req, false, ctx);
             // Opt-in speculative warm-up: a cold `mine` means the ladder's
             // downstream stages are likely next — enqueue the ladder
             // artifact fire-and-forget while this response goes out.
@@ -813,7 +948,7 @@ fn serve_request(
                         _ => fsession.fingerprint(),
                     };
                     let fkey = CacheKey::new(ffp, req.kind(), detail);
-                    serve_cached(shared, fsession, &fkey, req, true)
+                    serve_cached(shared, fsession, &fkey, req, true, ctx)
                         .map(|(v, tag)| (v, tag, true))
                 }
                 other => other.map(|(v, tag)| (v, tag, false)),
@@ -840,6 +975,7 @@ fn serve_cached(
     key: &CacheKey,
     req: &Request,
     bypass_admission: bool,
+    ctx: &mut ReqCtx,
 ) -> Result<(Arc<String>, &'static str), ServiceError> {
     if let Some((val, tier)) = shared.cache.get(key) {
         return Ok((val, tier.tag()));
@@ -865,7 +1001,7 @@ fn serve_cached(
         let (result, tag): (ComputeResult, &'static str) = match shared.cache.recheck(key) {
             Some((val, tier)) => (Ok(val), tier.tag()),
             None => (
-                submit_compute(shared, session, key, req, bypass_admission),
+                submit_compute(shared, session, key, req, bypass_admission, ctx),
                 "miss",
             ),
         };
@@ -881,10 +1017,12 @@ fn serve_cached(
         result.map(|v| (v, tag))
     } else {
         shared.flight_waits.fetch_add(1, Ordering::Relaxed);
+        let tw = Instant::now();
         let mut st = flight.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             match &*st {
                 FlightState::Done(result) => {
+                    otrace::emit("flight.wait", "", tw.elapsed());
                     return result.clone().map(|v| (v, "flight"));
                 }
                 FlightState::Pending => {
@@ -931,6 +1069,8 @@ fn spawn_warmup(shared: &Shared, session: &Arc<DseSession>, app: &str) {
         .unwrap_or_else(|e| e.into_inner())
         .send(ComputeJob {
             state: Arc::new(AtomicU8::new(JOB_QUEUED)),
+            queued_at: Instant::now(),
+            wait_us: Arc::new(AtomicU64::new(u64::MAX)),
             run,
             done: done_tx,
         });
@@ -951,6 +1091,7 @@ fn submit_compute(
     key: &CacheKey,
     req: &Request,
     bypass_admission: bool,
+    ctx: &mut ReqCtx,
 ) -> ComputeResult {
     let pool = &shared.compute;
     if !bypass_admission {
@@ -964,6 +1105,7 @@ fn submit_compute(
         }
     }
     let jstate = Arc::new(AtomicU8::new(JOB_QUEUED));
+    let wait_us = Arc::new(AtomicU64::new(u64::MAX));
     let (done_tx, done_rx) = mpsc::channel::<ComputeResult>();
     // The job owns everything it touches (the compute pool outlives any
     // single request, and an abandoned job may finish arbitrarily late).
@@ -974,7 +1116,11 @@ fn submit_compute(
     let cache = shared.cache.clone();
     let key = key.clone();
     let req = req.clone();
+    // Propagate this request's span collector onto the compute thread so
+    // stage and cache-write spans land on the request's own trace.
+    let collector = otrace::current();
     let run = Box::new(move || {
+        let _trace = otrace::attach(collector);
         faults.sleep_if(Site::ComputeSlow);
         if faults.fire(Site::ComputePanic) {
             panic!("chaos: injected compute panic");
@@ -983,6 +1129,9 @@ fn submit_compute(
         cache.put(&key, body.clone());
         Ok(body)
     });
+    shared
+        .metrics
+        .observe("queue_depth", pool.queued.load(Ordering::SeqCst) as u64);
     pool.queued.fetch_add(1, Ordering::SeqCst);
     let sent = shared
         .compute_tx
@@ -990,6 +1139,8 @@ fn submit_compute(
         .unwrap_or_else(|e| e.into_inner())
         .send(ComputeJob {
             state: jstate.clone(),
+            queued_at: Instant::now(),
+            wait_us: wait_us.clone(),
             run,
             done: done_tx,
         });
@@ -1003,8 +1154,18 @@ fn submit_compute(
             .recv()
             .map_err(|_| mpsc::RecvTimeoutError::Disconnected),
     };
+    let record_wait = |ctx: &mut ReqCtx| {
+        let w = wait_us.load(Ordering::SeqCst);
+        if w != u64::MAX {
+            ctx.queue_us = Some(w);
+            otrace::emit("queue.wait", "", Duration::from_micros(w));
+        }
+    };
     match waited {
-        Ok(result) => result,
+        Ok(result) => {
+            record_wait(ctx);
+            result
+        }
         Err(mpsc::RecvTimeoutError::Timeout) => {
             match jstate.swap(JOB_ABANDONED, Ordering::SeqCst) {
                 // Raced with completion: the result is on the channel (or
@@ -1125,10 +1286,43 @@ fn compute(req: &Request, session: &DseSession) -> Result<String, ServiceError> 
             };
             Ok(campaign::run_shard(&cfg).to_json().render())
         }
-        Request::Stats | Request::Version | Request::Shutdown => {
+        Request::Stats
+        | Request::Metrics
+        | Request::Flight
+        | Request::Version
+        | Request::Shutdown => {
             unreachable!("live requests are served before the cache layer")
         }
     }
+}
+
+/// Body of the `metrics` request: the registry snapshot plus counters
+/// folded in from the pre-existing `Shared` atomics (shed, degraded,
+/// deadline hits, warmup, single-flight waits) and, under chaos, per-site
+/// injection counts. Folding at snapshot time keeps the hot path from
+/// double-counting what the serving plane already tracks.
+fn metrics_body(shared: &Shared) -> String {
+    let mut snap = shared.metrics.snapshot();
+    snap.set_counter("shed", shared.shed.load(Ordering::Relaxed) as u64);
+    snap.set_counter("degraded", shared.degraded.load(Ordering::Relaxed) as u64);
+    snap.set_counter(
+        "deadline_exceeded",
+        shared.deadline_hits.load(Ordering::Relaxed) as u64,
+    );
+    snap.set_counter("warmed", shared.warmed.load(Ordering::Relaxed) as u64);
+    snap.set_counter(
+        "single_flight_waits",
+        shared.flight_waits.load(Ordering::Relaxed) as u64,
+    );
+    if shared.sc.faults.enabled() {
+        for &s in Site::ALL.iter() {
+            snap.set_counter(
+                &format!("fault.{}", s.key()),
+                shared.sc.faults.injected(s) as u64,
+            );
+        }
+    }
+    snap.to_json().render()
 }
 
 fn stats_body(shared: &Shared) -> String {
@@ -1201,6 +1395,7 @@ fn stats_body(shared: &Shared) -> String {
             Json::int(FINGERPRINT_SCHEMA_VERSION as usize),
         ),
         ("cache_schema", Json::int(CACHE_SCHEMA_VERSION as usize)),
+        ("crate", Json::str(env!("CARGO_PKG_VERSION"))),
     ];
     // Under chaos, surface per-site injection counts so soaks can assert
     // the plan actually exercised what it claims to.

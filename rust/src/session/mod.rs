@@ -41,6 +41,7 @@ pub use report::{Section, SessionReport};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::dse::{self, DseConfig, RankedPattern, SweepPoint, VariantEval};
 use crate::frontend::{App, AppSuite, DomainRegistry};
@@ -157,6 +158,48 @@ pub trait StageStore: Send + Sync {
     fn publish(&self, fingerprint: u64, stage: Stage, detail: &str, body: &str);
 }
 
+/// How one stage request resolved, as reported to a [`StageObserver`].
+/// `Compute`/`Hydrate`/`Join` correspond one-to-one with the increments
+/// of [`DseSession::stage_computes`], [`DseSession::stage_hydrates`], and
+/// [`DseSession::stage_joins`] — an observer sees exactly one event per
+/// increment, at the same program point, so trace spans and the counters
+/// can never disagree. `Memo` events (in-memory hits, which no counter
+/// tracks) are additionally reported for trace completeness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageDisposition {
+    /// Answered by the in-memory memo.
+    Memo,
+    /// Hydrated from the attached [`StageStore`].
+    Hydrate,
+    /// Actually computed.
+    Compute,
+    /// Waited on another thread's in-flight compute of the same stage.
+    Join,
+}
+
+impl StageDisposition {
+    /// Stable lowercase key for reporting.
+    pub fn key(self) -> &'static str {
+        match self {
+            StageDisposition::Memo => "memo",
+            StageDisposition::Hydrate => "hydrate",
+            StageDisposition::Compute => "compute",
+            StageDisposition::Join => "join",
+        }
+    }
+}
+
+/// Observation hook for per-stage events, the tracing sibling of
+/// [`StageStore`]: the serving layer installs one to feed its metrics
+/// registry and per-request span traces. `elapsed` is the disposition's
+/// own cost — a `Compute` event times just the stage kernel (upstream
+/// stages report their own events), a `Hydrate` times the store load +
+/// decode, a `Join` times the wait. Sessions built without an observer
+/// pay nothing beyond a `None` check.
+pub trait StageObserver: Send + Sync {
+    fn stage_event(&self, stage: Stage, disposition: StageDisposition, elapsed: Duration);
+}
+
 /// In-flight marker for stage-level request coalescing: the first thread
 /// to need a missing stage becomes the leader and computes; concurrent
 /// threads needing the *same* stage (even from different entry points —
@@ -204,6 +247,21 @@ enum Key {
     Domain(String, usize, Vec<String>),
     /// Layout front keyed by domain registry key.
     Layout(String),
+}
+
+impl Key {
+    /// The pipeline stage this key memoizes (joins are attributed to it).
+    fn stage(&self) -> Stage {
+        match self {
+            Key::Mine(_) => Stage::Mine,
+            Key::Rank(_) => Stage::Rank,
+            Key::Variants(_) => Stage::Variants,
+            Key::Ladder(_) => Stage::Evaluate,
+            Key::Sweep(_, _) => Stage::Sweep,
+            Key::Domain(_, _, _) => Stage::Domain,
+            Key::Layout(_) => Stage::Layout,
+        }
+    }
 }
 
 #[derive(Clone)]
@@ -254,6 +312,7 @@ pub struct DseSessionBuilder {
     cfg: DseConfig,
     threads: usize,
     store: Option<Arc<dyn StageStore>>,
+    observer: Option<Arc<dyn StageObserver>>,
 }
 
 impl DseSessionBuilder {
@@ -326,6 +385,15 @@ impl DseSessionBuilder {
         self
     }
 
+    /// Attach a stage observer: every stage resolution (memo hit,
+    /// hydration, compute, flight join) is reported to it with its
+    /// disposition and cost — see [`StageObserver`] for the exact
+    /// counter correspondence.
+    pub fn stage_observer(mut self, observer: Arc<dyn StageObserver>) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
     /// Build the session. Duplicate app names keep the first registration.
     pub fn build(self) -> DseSession {
         let mut apps: Vec<App> = Vec::new();
@@ -347,6 +415,7 @@ impl DseSessionBuilder {
             hydrates: Counters::default(),
             joins: AtomicUsize::new(0),
             stage_store: self.store,
+            observer: self.observer,
             flights: Mutex::new(HashMap::new()),
         }
     }
@@ -359,6 +428,7 @@ impl Default for DseSessionBuilder {
             cfg: DseConfig::default(),
             threads: default_width(),
             store: None,
+            observer: None,
         }
     }
 }
@@ -378,6 +448,8 @@ pub struct DseSession {
     joins: AtomicUsize,
     /// Optional persistent per-stage artifact store.
     stage_store: Option<Arc<dyn StageStore>>,
+    /// Optional per-stage event observer (tracing/metrics hook).
+    observer: Option<Arc<dyn StageObserver>>,
     /// In-flight stage computations (stage-level single-flight).
     flights: Mutex<HashMap<Key, Arc<StageFlight>>>,
 }
@@ -459,19 +531,24 @@ impl DseSession {
         let detail = Self::domain_detail(name, per_app, &member_names);
         loop {
             let key = Key::Domain(name.to_string(), per_app, member_names.clone());
+            let t0 = Instant::now();
             if let Some(Value::Domain(v)) = self.lookup(&key) {
+                self.observe(Stage::Domain, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             if let Some(Value::Domain(v)) = self.lookup(&key) {
+                self.observe(Stage::Domain, StageDisposition::Memo, t0);
                 return v;
             }
             let fp = self.fingerprint();
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Domain, fp, &detail) {
                 if let Some((stored_name, subs)) = stagecodec::decode_domain(&body) {
                     if stored_name == name {
                         self.hydrates.domain.fetch_add(1, Ordering::Relaxed);
                         let pe = Arc::new(PeSpec::from_subgraphs(name.to_string(), &subs));
+                        self.observe(Stage::Domain, StageDisposition::Hydrate, th);
                         return match self.insert(key, Value::Domain(pe.clone()), fp) {
                             Some(Value::Domain(v)) => v,
                             _ => pe,
@@ -499,10 +576,12 @@ impl DseSession {
                 continue;
             }
             self.counters.domain.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             let ranked_refs: Vec<&[RankedPattern]> =
                 ranked.iter().map(|r| r.as_slice()).collect();
             let subs = dse::domain_pe_subgraphs(&apps, &ranked_refs, per_app);
             let pe = Arc::new(PeSpec::from_subgraphs(name.to_string(), &subs));
+            self.observe(Stage::Domain, StageDisposition::Compute, tc);
             return match self.insert(key, Value::Domain(pe.clone()), fp) {
                 Some(Value::Domain(v)) => {
                     self.stage_publish(Stage::Domain, fp, &detail, || {
@@ -528,11 +607,14 @@ impl DseSession {
     pub fn layout(&self, domain: &str) -> Arc<crate::layout::LayoutFront> {
         loop {
             let key = Key::Layout(domain.to_string());
+            let t0 = Instant::now();
             if let Some(Value::Layout(v)) = self.lookup(&key) {
+                self.observe(Stage::Layout, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             if let Some(Value::Layout(v)) = self.lookup(&key) {
+                self.observe(Stage::Layout, StageDisposition::Memo, t0);
                 return v;
             }
             let dom = DomainRegistry::domain(domain)
@@ -543,10 +625,12 @@ impl DseSession {
                 .unwrap_or_else(|| panic!("domain `{domain}` drives no domain-PE experiment"));
             let members = dom.app_names();
             let (cfg, fp) = self.snapshot_cfg();
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Layout, fp, domain) {
                 if let Some(front) = stagecodec::decode_layout(&body) {
                     if front.domain == dom.key {
                         self.hydrates.layout.fetch_add(1, Ordering::Relaxed);
+                        self.observe(Stage::Layout, StageDisposition::Hydrate, th);
                         let v = Arc::new(front);
                         return match self.insert(key, Value::Layout(v.clone()), fp) {
                             Some(Value::Layout(canon)) => canon,
@@ -560,6 +644,7 @@ impl DseSession {
                 continue;
             }
             self.counters.layout.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             let apps: Vec<App> = members
                 .iter()
                 .map(|m| {
@@ -575,6 +660,7 @@ impl DseSession {
                 &cfg,
                 &crate::layout::default_spec(),
             ));
+            self.observe(Stage::Layout, StageDisposition::Compute, tc);
             return match self.insert(key, Value::Layout(v.clone()), fp) {
                 Some(Value::Layout(canon)) => {
                     self.stage_publish(Stage::Layout, fp, domain, || {
@@ -599,6 +685,15 @@ impl DseSession {
 
     fn lookup(&self, key: &Key) -> Option<Value> {
         self.lock().store.get(key).cloned()
+    }
+
+    /// Report one stage resolution to the attached observer (a `None`
+    /// check without one). `since` is when the disposition's own work
+    /// began — see [`StageObserver`] for what each disposition times.
+    fn observe(&self, stage: Stage, disp: StageDisposition, since: Instant) {
+        if let Some(obs) = &self.observer {
+            obs.stage_event(stage, disp, since.elapsed());
+        }
     }
 
     /// Insert a freshly computed value unless the config changed while it
@@ -657,6 +752,7 @@ impl DseSession {
         };
         // Count the join up front (observable while the wait is still in
         // progress), then park until the leader's guard drops.
+        let t0 = Instant::now();
         self.joins.fetch_add(1, Ordering::Relaxed);
         let mut done = flight.done.lock().unwrap_or_else(|e| e.into_inner());
         while !*done {
@@ -665,6 +761,8 @@ impl DseSession {
                 .wait(done)
                 .unwrap_or_else(|e| e.into_inner());
         }
+        drop(done);
+        self.observe(key.stage(), StageDisposition::Join, t0);
         None
     }
 
@@ -695,13 +793,16 @@ impl DseSession {
     fn mine_cached(&self, app: &App) -> Arc<Vec<MinedPattern>> {
         loop {
             let key = Key::Mine(app.name.to_string());
+            let t0 = Instant::now();
             if let Some(Value::Mine(v)) = self.lookup(&key) {
+                self.observe(Stage::Mine, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             // Leadership double-check: a leader that finished between our
             // first lookup and the flight acquisition left the memo hot.
             if let Some(Value::Mine(v)) = self.lookup(&key) {
+                self.observe(Stage::Mine, StageDisposition::Memo, t0);
                 return v;
             }
             let (mut cfg, fp) = self.snapshot_cfg();
@@ -711,9 +812,11 @@ impl DseSession {
             if cfg.miner.threads == 0 {
                 cfg.miner.threads = self.threads;
             }
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Mine, fp, app.name) {
                 if let Some(decoded) = stagecodec::decode_mine(&body) {
                     self.hydrates.mine.fetch_add(1, Ordering::Relaxed);
+                    self.observe(Stage::Mine, StageDisposition::Hydrate, th);
                     let v = Arc::new(decoded);
                     return match self.insert(key, Value::Mine(v.clone()), fp) {
                         Some(Value::Mine(canon)) => canon,
@@ -722,7 +825,9 @@ impl DseSession {
                 }
             }
             self.counters.mine.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             let v = Arc::new(dse::mine_patterns(app, &cfg));
+            self.observe(Stage::Mine, StageDisposition::Compute, tc);
             return match self.insert(key, Value::Mine(v.clone()), fp) {
                 Some(Value::Mine(canon)) => {
                     self.stage_publish(Stage::Mine, fp, app.name, || {
@@ -738,17 +843,22 @@ impl DseSession {
     fn rank_cached(&self, app: &App) -> Arc<Vec<RankedPattern>> {
         loop {
             let key = Key::Rank(app.name.to_string());
+            let t0 = Instant::now();
             if let Some(Value::Rank(v)) = self.lookup(&key) {
+                self.observe(Stage::Rank, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             if let Some(Value::Rank(v)) = self.lookup(&key) {
+                self.observe(Stage::Rank, StageDisposition::Memo, t0);
                 return v;
             }
             let (cfg, fp) = self.snapshot_cfg();
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Rank, fp, app.name) {
                 if let Some(decoded) = stagecodec::decode_rank(&body) {
                     self.hydrates.rank.fetch_add(1, Ordering::Relaxed);
+                    self.observe(Stage::Rank, StageDisposition::Hydrate, th);
                     let v = Arc::new(decoded);
                     return match self.insert(key, Value::Rank(v.clone()), fp) {
                         Some(Value::Rank(canon)) => canon,
@@ -761,7 +871,9 @@ impl DseSession {
                 continue;
             }
             self.counters.rank.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             let v = Arc::new(dse::rank_mined(&mined, &cfg));
+            self.observe(Stage::Rank, StageDisposition::Compute, tc);
             return match self.insert(key, Value::Rank(v.clone()), fp) {
                 Some(Value::Rank(canon)) => {
                     self.stage_publish(Stage::Rank, fp, app.name, || {
@@ -777,11 +889,14 @@ impl DseSession {
     fn variants_cached(&self, app: &App) -> Arc<Vec<(String, PeSpec)>> {
         loop {
             let key = Key::Variants(app.name.to_string());
+            let t0 = Instant::now();
             if let Some(Value::Variants(v)) = self.lookup(&key) {
+                self.observe(Stage::Variants, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             if let Some(Value::Variants(v)) = self.lookup(&key) {
+                self.observe(Stage::Variants, StageDisposition::Memo, t0);
                 return v;
             }
             let (cfg, fp) = self.snapshot_cfg();
@@ -789,10 +904,12 @@ impl DseSession {
             // complementary pattern graphs. Rebuilding the ladder from it
             // is a cheap, pure merge (`ladder_from_chosen`) — identical
             // output, no upstream mine/rank needed.
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Variants, fp, app.name) {
                 if let Some(chosen) = stagecodec::decode_variants(&body) {
                     self.hydrates.variants.fetch_add(1, Ordering::Relaxed);
                     let v = Arc::new(dse::ladder_from_chosen(app, &chosen));
+                    self.observe(Stage::Variants, StageDisposition::Hydrate, th);
                     return match self.insert(key, Value::Variants(v.clone()), fp) {
                         Some(Value::Variants(canon)) => canon,
                         _ => v,
@@ -804,8 +921,10 @@ impl DseSession {
                 continue;
             }
             self.counters.variants.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             let chosen = dse::ladder_select(&ranked, &cfg);
             let v = Arc::new(dse::ladder_from_chosen(app, &chosen));
+            self.observe(Stage::Variants, StageDisposition::Compute, tc);
             return match self.insert(key, Value::Variants(v.clone()), fp) {
                 Some(Value::Variants(canon)) => {
                     self.stage_publish(Stage::Variants, fp, app.name, || {
@@ -821,17 +940,22 @@ impl DseSession {
     fn ladder_cached(&self, app: &App) -> Arc<Vec<VariantEval>> {
         loop {
             let key = Key::Ladder(app.name.to_string());
+            let t0 = Instant::now();
             if let Some(Value::Ladder(v)) = self.lookup(&key) {
+                self.observe(Stage::Evaluate, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             if let Some(Value::Ladder(v)) = self.lookup(&key) {
+                self.observe(Stage::Evaluate, StageDisposition::Memo, t0);
                 return v;
             }
             let (cfg, fp) = self.snapshot_cfg();
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Evaluate, fp, app.name) {
                 if let Some(decoded) = stagecodec::decode_evaluate(&body) {
                     self.hydrates.evaluate.fetch_add(1, Ordering::Relaxed);
+                    self.observe(Stage::Evaluate, StageDisposition::Hydrate, th);
                     let v = Arc::new(decoded);
                     return match self.insert(key, Value::Ladder(v.clone()), fp) {
                         Some(Value::Ladder(canon)) => canon,
@@ -844,6 +968,7 @@ impl DseSession {
                 continue;
             }
             self.counters.evaluate.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             // Fan independent variant evaluations out over the worker pool;
             // parallel_map preserves input order, so the result is identical
             // to a sequential filter_map.
@@ -860,6 +985,7 @@ impl DseSession {
                 .into_iter()
                 .flatten()
                 .collect();
+            self.observe(Stage::Evaluate, StageDisposition::Compute, tc);
             let v = Arc::new(evals);
             return match self.insert(key, Value::Ladder(v.clone()), fp) {
                 Some(Value::Ladder(canon)) => {
@@ -878,17 +1004,22 @@ impl DseSession {
         let detail = Self::sweep_detail(app.name, &bits);
         loop {
             let key = Key::Sweep(app.name.to_string(), bits.clone());
+            let t0 = Instant::now();
             if let Some(Value::Sweep(v)) = self.lookup(&key) {
+                self.observe(Stage::Sweep, StageDisposition::Memo, t0);
                 return v;
             }
             let Some(_guard) = self.join_or_lead(&key) else { continue };
             if let Some(Value::Sweep(v)) = self.lookup(&key) {
+                self.observe(Stage::Sweep, StageDisposition::Memo, t0);
                 return v;
             }
             let (_cfg, fp) = self.snapshot_cfg();
+            let th = Instant::now();
             if let Some(body) = self.stage_load(Stage::Sweep, fp, &detail) {
                 if let Some(decoded) = stagecodec::decode_sweep(&body) {
                     self.hydrates.sweep.fetch_add(1, Ordering::Relaxed);
+                    self.observe(Stage::Sweep, StageDisposition::Hydrate, th);
                     let v = Arc::new(decoded);
                     return match self.insert(key, Value::Sweep(v.clone()), fp) {
                         Some(Value::Sweep(canon)) => canon,
@@ -901,12 +1032,14 @@ impl DseSession {
                 continue;
             }
             self.counters.sweep.fetch_add(1, Ordering::Relaxed);
+            let tc = Instant::now();
             let v = Arc::new(
                 ladder
                     .iter()
                     .map(|ve| (ve.variant.clone(), dse::frequency_sweep(ve, freqs)))
                     .collect::<Vec<_>>(),
             );
+            self.observe(Stage::Sweep, StageDisposition::Compute, tc);
             return match self.insert(key, Value::Sweep(v.clone()), fp) {
                 Some(Value::Sweep(canon)) => {
                     self.stage_publish(Stage::Sweep, fp, &detail, || {
@@ -1098,6 +1231,73 @@ mod tests {
             config_fingerprint(&threaded),
             config_fingerprint(&DseConfig::default())
         );
+    }
+
+    #[test]
+    fn observer_events_match_stage_counters() {
+        use std::sync::Mutex as StdMutex;
+
+        // Records every event; the observer contract says Compute events
+        // correspond one-to-one with `stage_computes` increments and Memo
+        // events fire on memoized returns.
+        struct Recorder(StdMutex<Vec<(Stage, StageDisposition)>>);
+        impl StageObserver for Recorder {
+            fn stage_event(&self, stage: Stage, disp: StageDisposition, _elapsed: Duration) {
+                self.0
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push((stage, disp));
+            }
+        }
+
+        let rec = Arc::new(Recorder(StdMutex::new(Vec::new())));
+        let s = DseSession::builder()
+            .app(AppSuite::by_name("gaussian").unwrap())
+            .config(fast_cfg())
+            .threads(2)
+            .stage_observer(rec.clone())
+            .build();
+        let app = s.app("gaussian").unwrap();
+        let _ = app.ladder(); // cold: computes mine→rank→variants→evaluate
+        let _ = app.ladder(); // warm: memo hit on Evaluate only
+
+        let events = rec.0.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        for stage in [Stage::Mine, Stage::Rank, Stage::Variants, Stage::Evaluate] {
+            let computes = events
+                .iter()
+                .filter(|(st, d)| *st == stage && *d == StageDisposition::Compute)
+                .count();
+            assert_eq!(
+                computes as u64,
+                s.stage_computes(stage),
+                "compute events must match the {} counter",
+                stage.key()
+            );
+        }
+        let memos = events
+            .iter()
+            .filter(|(st, d)| *st == Stage::Evaluate && *d == StageDisposition::Memo)
+            .count();
+        assert_eq!(memos, 1, "second ladder() is a memo hit");
+        assert!(
+            !events
+                .iter()
+                .any(|(_, d)| *d == StageDisposition::Join || *d == StageDisposition::Hydrate),
+            "single-threaded, store-less session never joins or hydrates"
+        );
+    }
+
+    #[test]
+    fn stage_disposition_keys_are_distinct() {
+        let mut keys = vec![
+            StageDisposition::Memo.key(),
+            StageDisposition::Hydrate.key(),
+            StageDisposition::Compute.key(),
+            StageDisposition::Join.key(),
+        ];
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 4);
     }
 
     #[test]

@@ -529,6 +529,65 @@ fn accept_backlog_overflow_sheds_connections_with_a_typed_line() {
     assert!(stats.shed >= 1, "the acceptor counted the shed connection");
 }
 
+// ---- satellite: fault-site firings agree with the metrics registry -------
+
+#[test]
+fn metrics_fault_counters_match_the_injected_plan_budgets() {
+    // The `metrics` request folds `fault.<site>` counters from the armed
+    // plan's own injection counts — so what the observability plane
+    // reports must equal what the plan actually fired, and firing is
+    // bounded by the configured budgets.
+    let plan = Arc::new(
+        FaultPlan::new(17)
+            .with(Site::ComputeSlow, 1.0)
+            .budget(Site::ComputeSlow, 2)
+            .with(Site::ArtifactTruncate, 1.0)
+            .budget(Site::ArtifactTruncate, 1)
+            .delays(Duration::from_millis(1), Duration::from_millis(5)),
+    );
+    let dir = std::env::temp_dir().join(format!("cgra_chaos_metrics_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sc = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        cache_dir: Some(dir.clone()),
+        cfg: full_cfg(),
+        fast_cfg: fast_cfg(),
+        session_threads: 2,
+        faults: plan.clone(),
+        ..Default::default()
+    };
+    let (addr, handle) = spawn_server(sc);
+
+    // Two cold computes: each fires one ComputeSlow (budget 2); the first
+    // disk write of the first compute fires the one ArtifactTruncate.
+    assert!(req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}").ok);
+    assert!(req(&addr, "{\"req\":\"mine\",\"app\":\"conv\"}").ok);
+
+    let view = req(&addr, "{\"req\":\"metrics\"}");
+    assert!(view.ok, "{:?}", view.error);
+    let snap = cgra_dse::obs::metrics::Snapshot::from_json(&view.body.expect("metrics body"))
+        .expect("metrics snapshot decodes");
+    for site in [Site::ComputeSlow, Site::ArtifactTruncate] {
+        let name = format!("fault.{}", site.key());
+        assert_eq!(
+            snap.counter(&name) as usize,
+            plan.injected(site),
+            "{name} must equal the plan's own firing count"
+        );
+    }
+    assert_eq!(snap.counter("fault.compute_slow"), 2, "budget fully spent");
+    assert_eq!(snap.counter("fault.artifact_truncate"), 1, "budget fully spent");
+    assert_eq!(
+        snap.counter("fault.compute_panic"),
+        0,
+        "un-armed sites never fire"
+    );
+
+    shutdown(&addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ---- the whole envelope: mixed soak under full chaos ---------------------
 
 #[test]

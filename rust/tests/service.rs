@@ -16,6 +16,9 @@ use std::sync::{Arc, Barrier};
 use cgra_dse::dse::DseConfig;
 use cgra_dse::frontend::{synth, AppSuite};
 use cgra_dse::mining::MinerConfig;
+use cgra_dse::obs::flight::FlightDump;
+use cgra_dse::obs::metrics::Snapshot;
+use cgra_dse::obs::trace::Trace;
 use cgra_dse::report::json::Json;
 use cgra_dse::report::Table1Row;
 use cgra_dse::service::protocol::{self, parse, Envelope, Request};
@@ -504,9 +507,15 @@ fn version_and_stats_carry_schema_versions() {
         "stage_joins",
         "warmed",
         "reclaimed",
+        "crate",
     ] {
         assert!(body.get(field).is_some(), "stats missing `{field}`");
     }
+    assert_eq!(
+        body.get("crate").and_then(Json::as_str),
+        Some(env!("CARGO_PKG_VERSION")),
+        "stats must carry the crate version"
+    );
     // Chaos counters only appear when fault injection is armed.
     assert!(body.get("chaos").is_none(), "no chaos block when disabled");
     shutdown(&addr, handle);
@@ -741,6 +750,8 @@ fn request_envelopes_roundtrip_through_encode_decode() {
             seed0: 99,
         },
         Request::Stats,
+        Request::Metrics,
+        Request::Flight,
         Request::Version,
         Request::Shutdown,
     ];
@@ -750,6 +761,7 @@ fn request_envelopes_roundtrip_through_encode_decode() {
             fast: true,
             degrade: true,
             warm: true,
+            trace: true,
             req: r.clone(),
         };
         let decoded = Envelope::from_json(&env.to_json())
@@ -759,4 +771,148 @@ fn request_envelopes_roundtrip_through_encode_decode() {
         let wire = env.to_json().render();
         assert_eq!(Envelope::parse_line(&wire).unwrap(), env);
     }
+}
+
+// ---- observability: tracing, metrics, flight recorder -------------------
+
+#[test]
+fn traced_ladder_spans_match_stage_counters_with_identical_bytes() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    let traced = "{\"req\":\"ladder\",\"app\":\"gaussian\",\"trace\":true}";
+    let plain = "{\"req\":\"ladder\",\"app\":\"gaussian\"}";
+
+    let computes_before = stats_total(&addr);
+    let cold = req(&addr, traced);
+    assert!(cold.ok, "{:?}", cold.error);
+    assert_eq!(cold.cached.as_deref(), Some("miss"));
+    let trace = Trace::from_json(cold.trace.as_ref().expect("traced response carries a trace"))
+        .expect("trace decodes");
+    assert_eq!(trace.kind, "ladder");
+    assert!(trace.total_us > 0);
+    // The acceptance invariant: the span tree's stage dispositions match
+    // the server's stage counter deltas exactly.
+    let computes_delta = stats_total(&addr) - computes_before;
+    assert!(computes_delta > 0, "cold ladder must compute stages");
+    assert_eq!(
+        trace.stage_spans("compute"),
+        computes_delta,
+        "stage compute spans must equal the stage_computes delta"
+    );
+    assert_eq!(trace.stage_spans("join"), 0, "no concurrent twin to join");
+    assert_eq!(trace.stage_spans("hydrate"), 0, "no disk tier to hydrate from");
+    // The cold compute went through the pool: its queue wait is reported.
+    assert!(cold.queue_us.is_some(), "cold compute must report queue_us");
+
+    // Warm: tracing must not perturb the cached bytes.
+    let warm_plain = req(&addr, plain);
+    assert!(warm_plain.ok);
+    assert_eq!(warm_plain.cached.as_deref(), Some("mem"));
+    assert!(warm_plain.trace.is_none(), "untraced response carries no trace");
+    let warm_traced = req(&addr, traced);
+    assert!(warm_traced.ok);
+    assert_eq!(warm_traced.cached.as_deref(), Some("mem"));
+    assert_eq!(
+        warm_plain.body_raw, warm_traced.body_raw,
+        "tracing must not change the cached body bytes"
+    );
+    assert_eq!(cold.body_raw, warm_traced.body_raw);
+    let wtrace =
+        Trace::from_json(warm_traced.trace.as_ref().expect("trace")).expect("trace decodes");
+    assert_eq!(
+        wtrace.stage_spans("compute"),
+        0,
+        "a cache hit must not carry stage compute spans"
+    );
+    assert!(warm_traced.queue_us.is_none(), "a cache hit never queued");
+    // The typed trace round-trips through its own JSON.
+    assert_roundtrip("trace", &wtrace.to_json());
+    assert_eq!(Trace::from_json(&wtrace.to_json()), Some(wtrace));
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn metrics_request_exposes_stage_histograms_and_roundtrips() {
+    let (addr, handle) = spawn_server(serve_cfg(None));
+    let ladder = "{\"req\":\"ladder\",\"app\":\"gaussian\"}";
+    assert!(req(&addr, ladder).ok);
+    assert!(req(&addr, ladder).ok); // warm repeat
+    assert!(req(&addr, "{\"req\":\"stats\"}").ok);
+
+    let view = req(&addr, "{\"req\":\"metrics\"}");
+    assert!(view.ok, "{:?}", view.error);
+    assert_eq!(view.cached.as_deref(), Some("live"));
+    let body = view.body.expect("metrics body");
+    let snap = Snapshot::from_json(&body).expect("metrics snapshot decodes");
+
+    // Per-stage latency histograms: one sample per cold compute.
+    for stage in ["stage.mine", "stage.rank", "stage.variants", "stage.evaluate"] {
+        let h = snap
+            .histogram(stage)
+            .unwrap_or_else(|| panic!("missing histogram `{stage}`"));
+        assert_eq!(h.count, 1, "{stage}: one cold compute");
+        assert_eq!(snap.counter(&format!("{stage}.compute")), 1, "{stage}");
+        assert!(h.quantile(0.99) >= h.quantile(0.50), "{stage}: quantiles ordered");
+    }
+    // Request-level accounting: two ladders (cold + warm), each a success.
+    assert_eq!(snap.counter("req.ladder"), 2);
+    let rh = snap.histogram("request.ladder").expect("request.ladder histogram");
+    assert_eq!(rh.count, 2);
+    // Cache tier outcomes flow into the registry too.
+    assert!(snap.counter("cache.miss") >= 1);
+    assert!(snap.counter("cache.store") >= 1);
+    assert!(snap.counter("cache.mem_hit") >= 1);
+    // Nothing failed: no error counters anywhere.
+    for (name, v) in &snap.counters {
+        if name.starts_with("error.") {
+            assert_eq!(*v, 0, "unexplained error counter `{name}`");
+        }
+    }
+    // The snapshot JSON round-trips exactly, typed and untyped.
+    assert_roundtrip("metrics_snapshot", &snap.to_json());
+    assert_eq!(Snapshot::from_json(&snap.to_json()), Some(snap));
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn flight_recorder_serves_dumps_and_persists_on_shutdown() {
+    let dir = std::env::temp_dir().join(format!("cgra_flight_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (addr, handle) = spawn_server(serve_cfg(Some(dir.clone())));
+    assert!(req(&addr, "{\"req\":\"ladder\",\"app\":\"gaussian\"}").ok);
+    assert!(req(&addr, "{\"req\":\"version\"}").ok);
+    assert!(!req(&addr, "{\"req\":\"ladder\",\"app\":\"nope\"}").ok); // typed error
+
+    let view = req(&addr, "{\"req\":\"flight\"}");
+    assert!(view.ok, "{:?}", view.error);
+    let dump = FlightDump::from_json(&view.body.expect("flight body")).expect("dump decodes");
+    assert_eq!(dump.slow_ms, 0, "default threshold captures everything");
+    assert!(dump.seen >= 3, "recorder saw every request");
+    assert!(dump.captured >= 3);
+    assert!(!dump.entries.is_empty());
+    let lad = dump
+        .entries
+        .iter()
+        .find(|e| e.trace.kind == "ladder" && e.ok)
+        .expect("captured the successful ladder");
+    assert!(lad.trace.spans.iter().any(|s| s.name == "parse"));
+    assert!(lad.elapsed_us > 0);
+    let err = dump
+        .entries
+        .iter()
+        .find(|e| !e.ok)
+        .expect("captured the failed ladder");
+    assert_eq!(err.cached, "bad_request", "error entries carry the code");
+    // Typed + untyped JSON round-trip.
+    assert_roundtrip("flight_dump", &dump.to_json());
+    assert_eq!(FlightDump::from_json(&dump.to_json()), Some(dump));
+
+    shutdown(&addr, handle);
+    // Graceful shutdown persisted the dump next to the disk cache.
+    let text = std::fs::read_to_string(dir.join("flight.json")).expect("flight.json written");
+    let persisted = FlightDump::from_json(&parse(text.trim()).expect("flight.json parses"))
+        .expect("flight.json decodes");
+    assert!(persisted.seen >= 4, "includes the flight request itself");
+    let _ = std::fs::remove_dir_all(&dir);
 }
